@@ -1,0 +1,18 @@
+//! Bench: regenerate the Figs 5-8 case-analysis time series at bench
+//! scale. `cargo bench --bench bench_case_analysis`
+
+use ocl::bench_support::Bench;
+use ocl::config::{BenchmarkId, ExpertId};
+use ocl::eval::{case_analysis, Harness};
+
+fn main() {
+    let h = Harness::new(0.06, 4);
+    let mut b = Bench::new("figs 5-8 case analysis (scaled)", 0, 1);
+    for bench in BenchmarkId::ALL {
+        b.case(&format!("case {}", bench.name()), || {
+            let s = case_analysis(&h, bench, ExpertId::Gpt35).expect("case");
+            println!("{s}");
+        });
+    }
+    b.print();
+}

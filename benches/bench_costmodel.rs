@@ -1,0 +1,14 @@
+//! Bench: App. B.1 prefill-latency replay + C.1 cost equilibrium
+//! (analytic — included so every table/figure has a regenerator).
+//! `cargo bench --bench bench_costmodel`
+
+use ocl::bench_support::Bench;
+use ocl::eval::costmodel;
+
+fn main() {
+    let mut b = Bench::new("costmodel (B.1 + C.1)", 0, 3);
+    b.case("render cost analyses", || {
+        println!("{}", costmodel());
+    });
+    b.print();
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate the Figs 3/4 cost-accuracy curves (and the Fig 10
+//! PRF metric set via the HateSpeech row) at bench scale.
+//! `cargo bench --bench bench_fig_curves`
+
+use ocl::bench_support::Bench;
+use ocl::config::{BenchmarkId, ExpertId};
+use ocl::eval::{curves, Harness};
+
+fn main() {
+    let h = Harness::new(0.04, 3);
+    let mut b = Bench::new("fig 3/4/10 curves (scaled)", 0, 1);
+    for bench in [BenchmarkId::Imdb, BenchmarkId::HateSpeech] {
+        for expert in [ExpertId::Gpt35, ExpertId::Llama70b] {
+            b.case(&format!("curves {} {}", bench.name(), expert.name()), || {
+                let s = curves(&h, bench, expert, false).expect("curves");
+                println!("{s}");
+            });
+        }
+    }
+    b.print();
+}

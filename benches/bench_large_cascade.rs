@@ -1,0 +1,46 @@
+//! Bench: Fig 11 (4-level cascade with BERT-large) + the deferral-rule
+//! ablation DESIGN.md calls out. `cargo bench --bench bench_large_cascade`
+
+use ocl::bench_support::Bench;
+use ocl::cascade::{Cascade, DeferralRule};
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId};
+use ocl::data::Benchmark;
+use ocl::eval::{curves, Harness};
+use ocl::sim::{Expert, ExpertProfile};
+
+fn main() {
+    let h = Harness::new(0.04, 6);
+    let mut b = Bench::new("fig 11 large cascade + ablations (scaled)", 0, 1);
+    b.case("fig11 isear gpt35 (4-level)", || {
+        let s = curves(&h, BenchmarkId::Isear, ExpertId::Gpt35, true).expect("fig11");
+        println!("{s}");
+    });
+
+    // Deferral-rule ablation (calibrated vs max-prob vs entropy).
+    let n = 1500usize;
+    let bench = BenchmarkId::Imdb;
+    let data = Benchmark::build_sized(bench, 8, n);
+    let mean_len = data.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+    for (tag, rule) in [
+        ("deferral=calibrated", DeferralRule::Calibrated),
+        ("deferral=maxprob", DeferralRule::MaxProb(0.8)),
+        ("deferral=entropy", DeferralRule::Entropy(0.45)),
+    ] {
+        b.case(&format!("ablation {tag}"), || {
+            let expert = Expert::new(
+                ExpertProfile::for_pair(ExpertId::Gpt35, bench),
+                data.strata_fractions(),
+                mean_len,
+                8,
+            );
+            let cfg = CascadeConfig::small(bench, ExpertId::Gpt35);
+            let mut c = Cascade::new(cfg, 2, expert, None, n + 1).expect("cascade");
+            c.set_threshold_scale(0.7);
+            c.set_deferral_rule(rule);
+            c.set_budget(Some((n / 5) as u64));
+            let acc = c.run_stream(&data.stream());
+            println!("{tag}: acc={:.2}% llm_calls={}", acc * 100.0, c.llm_calls());
+        });
+    }
+    b.print();
+}

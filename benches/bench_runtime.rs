@@ -1,0 +1,72 @@
+//! Bench: the L3/runtime hot paths — PJRT executable dispatch (b1 vs
+//! b8 batching), host-engine model inference, featurization, and the
+//! end-to-end router throughput. The numbers recorded in
+//! EXPERIMENTS.md §Perf come from this bench.
+//! `cargo bench --bench bench_runtime`
+
+use std::rc::Rc;
+
+use ocl::bench_support::{black_box, Bench};
+use ocl::config::{BenchmarkId, ModelKind};
+use ocl::data::Benchmark;
+use ocl::hostmodel::{HostLr, HostTfm, TfmArch};
+use ocl::models::{LevelModel, Pipeline, PjrtLevel};
+use ocl::runtime::{artifacts_available, PjrtEngine};
+
+fn main() {
+    let mut b = Bench::new("runtime hot paths", 2, 20);
+    let data = Benchmark::build_sized(BenchmarkId::Imdb, 9, 64);
+    let pipeline = Pipeline::default();
+    let feats: Vec<_> = data.samples.iter().map(|s| pipeline.featurize(&s.text)).collect();
+
+    // featurization
+    let mut buf = pipeline.buffer();
+    b.case_throughput("featurize (hash+index)", 64.0, || {
+        for s in &data.samples {
+            pipeline.featurize_into(&s.text, &mut buf);
+        }
+        black_box(&buf);
+    });
+
+    // host engine inference
+    let lr = HostLr::new(4096, 2);
+    b.case_throughput("host lr predict x64", 64.0, || {
+        for f in &feats {
+            black_box(lr.predict(&f.x));
+        }
+    });
+    let tfm = HostTfm::new(TfmArch::Base, 2, 0);
+    b.case_throughput("host tfm-base predict x8", 8.0, || {
+        for f in feats.iter().take(8) {
+            black_box(tfm.predict(&f.ids, &f.mask));
+        }
+    });
+
+    // pjrt engine inference (artifact-gated)
+    if artifacts_available("artifacts") {
+        let engine = Rc::new(PjrtEngine::from_dir("artifacts").expect("engine"));
+        let mut plr = PjrtLevel::new(engine.clone(), ModelKind::Lr, 2).expect("lr");
+        b.case_throughput("pjrt lr predict b1 x64", 64.0, || {
+            for f in &feats {
+                black_box(plr.predict(f));
+            }
+        });
+        let refs: Vec<&_> = feats.iter().collect();
+        b.case_throughput("pjrt lr predict b8 x64", 64.0, || {
+            black_box(plr.predict_batch(&refs));
+        });
+        let mut ptf = PjrtLevel::new(engine, ModelKind::TfmBase, 2).expect("tfm");
+        b.case_throughput("pjrt tfm-base predict b1 x8", 8.0, || {
+            for f in feats.iter().take(8) {
+                black_box(ptf.predict(f));
+            }
+        });
+        let refs8: Vec<&_> = feats.iter().take(8).collect();
+        b.case_throughput("pjrt tfm-base predict b8 x8", 8.0, || {
+            black_box(ptf.predict_batch(&refs8));
+        });
+    } else {
+        eprintln!("artifacts/ missing — pjrt cases skipped (make artifacts)");
+    }
+    b.print();
+}

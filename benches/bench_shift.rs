@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 9 + Table 2 (distribution-shift robustness)
+//! at bench scale. `cargo bench --bench bench_shift`
+
+use ocl::bench_support::Bench;
+use ocl::config::ExpertId;
+use ocl::eval::{shift, Harness};
+
+fn main() {
+    let h = Harness::new(0.04, 5);
+    let mut b = Bench::new("fig 9 / table 2 shifts (scaled)", 0, 1);
+    b.case("imdb shifts gpt35", || {
+        let s = shift(&h, ExpertId::Gpt35).expect("shift");
+        println!("{s}");
+    });
+    b.print();
+}

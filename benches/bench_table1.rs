@@ -1,0 +1,31 @@
+//! Bench: regenerate Table 1 rows (method comparison at matched
+//! budgets) at bench scale, and time one full OCL stream per benchmark.
+//! `cargo bench --bench bench_table1`
+
+use ocl::bench_support::Bench;
+use ocl::config::{BenchmarkId, ExpertId};
+use ocl::data::StreamOrder;
+use ocl::eval::{table1_budgets, Harness};
+
+fn main() {
+    let h = Harness::new(0.04, 1);
+    let mut b = Bench::new("table1 (scaled)", 0, 3);
+    for bench in BenchmarkId::ALL {
+        let budget = h.scaled_budget(bench, table1_budgets(bench)[1]);
+        let n = h.stream_len(bench);
+        b.case_throughput(
+            &format!("ocl {} (n={n}, budget={budget})", bench.name()),
+            n as f64,
+            || {
+                let (r, _) = h
+                    .run_ocl(bench, ExpertId::Gpt35, Some(budget), false, StreamOrder::Natural)
+                    .expect("run");
+                ocl::bench_support::black_box(r.accuracy);
+            },
+        );
+    }
+    // One accuracy table at the mid budget for the record.
+    let h2 = Harness::new(0.04, 2);
+    println!("{}", ocl::eval::table1(&h2, &[ExpertId::Gpt35]).expect("table1"));
+    b.print();
+}

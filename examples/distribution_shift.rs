@@ -1,0 +1,44 @@
+//! Domain scenario: robustness to input distribution shift (§5.4) —
+//! the same IMDB stream served (a) i.i.d., (b) sorted by length
+//! (semantic-complexity drift), (c) with a whole category held out
+//! until the final third of the stream ("comedy reviews last").
+//!
+//! ```bash
+//! cargo run --release --example distribution_shift
+//! ```
+
+use ocl::config::{BenchmarkId, ExpertId};
+use ocl::data::{StreamOrder, IMDB_HELDOUT_CATEGORY};
+use ocl::eval::Harness;
+
+fn main() -> ocl::Result<()> {
+    let h = Harness::new(0.12, 5);
+    let budget = Some(900u64);
+    let scenarios: [(&str, StreamOrder); 3] = [
+        ("i.i.d. (natural)", StreamOrder::Natural),
+        ("length-ascending", StreamOrder::LengthAscending),
+        ("category-holdout", StreamOrder::CategoryHoldout(IMDB_HELDOUT_CATEGORY)),
+    ];
+    println!("IMDB, budget {} LLM calls, stream {}\n", 900, h.stream_len(BenchmarkId::Imdb));
+    let mut base = None;
+    for (name, order) in scenarios {
+        let (r, _) = h.run_ocl(BenchmarkId::Imdb, ExpertId::Gpt35, budget, false, order)?;
+        let delta = base
+            .map(|b: f64| format!("{:+.2} pts", (r.accuracy - b) * 100.0))
+            .unwrap_or_else(|| "baseline".into());
+        if base.is_none() {
+            base = Some(r.accuracy);
+        }
+        println!(
+            "{name:<20} acc={:.2}%  llm_calls={}  ({delta})",
+            r.accuracy * 100.0,
+            r.llm_calls
+        );
+    }
+    println!(
+        "\nOnline learning adapts within the stream: shifts cost at most a \
+         fraction of a point\n(paper Table 2: -0.54 / +0.08 pts), because the \
+         cascade re-opens its gates when the\ncalibrators see unfamiliar inputs."
+    );
+    Ok(())
+}

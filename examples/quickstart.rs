@@ -1,0 +1,67 @@
+//! Quickstart: build a 3-level cascade (LR → BERT-surrogate → LLM
+//! expert), stream an IMDB-like workload through it, and watch the
+//! cheap levels take over from the expert while accuracy holds.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ocl::cascade::Cascade;
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId};
+use ocl::data::Benchmark;
+use ocl::sim::{Expert, ExpertProfile};
+
+fn main() -> ocl::Result<()> {
+    let bench = BenchmarkId::Imdb;
+    let expert_id = ExpertId::Gpt35;
+    let n = 4000;
+
+    // 1. A benchmark stream (synthetic IMDB-calibrated generator) and
+    //    the simulated LLM expert (accuracy-calibrated to GPT-3.5).
+    let benchmark = Benchmark::build_sized(bench, 42, n);
+    let mean_len =
+        benchmark.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+    let expert = Expert::new(
+        ExpertProfile::for_pair(expert_id, bench),
+        benchmark.strata_fractions(),
+        mean_len,
+        42,
+    );
+
+    // 2. The cascade, with the paper's Table 3 hyperparameters.
+    let cfg = CascadeConfig::small(bench, expert_id);
+    let mut cascade = Cascade::new(cfg, benchmark.classes, expert, None, 400)?;
+    cascade.set_threshold_scale(0.7); // the featured operating point
+
+    // 3. Stream the queries — Algorithm 1 runs online, no human labels.
+    println!("{:>6} {:>9} {:>12} {:>22}", "t", "acc", "expert_acc", "handled (lr/bert/llm)");
+    for s in benchmark.stream() {
+        cascade.process(s);
+        let m = &cascade.metrics;
+        if m.total() % 400 == 0 {
+            let f = m.handled_fractions();
+            println!(
+                "{:>6} {:>8.2}% {:>11.2}% {:>9.2}/{:.2}/{:.2}",
+                m.total(),
+                m.accuracy() * 100.0,
+                m.expert_accuracy() * 100.0,
+                f[0],
+                f[1],
+                f[2]
+            );
+        }
+    }
+
+    let m = &cascade.metrics;
+    let savings = 1.0 - m.llm_calls() as f64 / n as f64;
+    println!(
+        "\nfinal: accuracy {:.2}% (expert alone {:.2}%), {} LLM calls \
+         out of {} queries — {:.0}% inference-cost savings",
+        m.accuracy() * 100.0,
+        m.expert_accuracy() * 100.0,
+        m.llm_calls(),
+        n,
+        savings * 100.0
+    );
+    Ok(())
+}

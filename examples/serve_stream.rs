@@ -1,0 +1,115 @@
+//! End-to-end serving driver — the full three-layer system on a real
+//! workload: AOT HLO artifacts (Pallas kernels inside) executed through
+//! PJRT from rust worker threads, behind the request router + dynamic
+//! batcher, with online cascade learning active. Reports latency
+//! percentiles and throughput. This is the run recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_stream
+//! # host engine (no artifacts needed): --engine host
+//! ```
+
+use std::sync::mpsc::channel;
+
+use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
+use ocl::data::Benchmark;
+use ocl::runtime::artifacts_available;
+use ocl::serve::{BatchPolicy, Request, Server};
+use ocl::sim::{Expert, ExpertProfile};
+
+fn main() -> ocl::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let engine = if args.iter().any(|a| a == "--engine")
+        && args.iter().any(|a| a == "host")
+    {
+        Engine::Host
+    } else if artifacts_available("artifacts") {
+        Engine::Pjrt
+    } else {
+        eprintln!("artifacts/ not found — falling back to the host engine");
+        Engine::Host
+    };
+    let n: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500);
+
+    let bench = BenchmarkId::Imdb;
+    let b = Benchmark::build_sized(bench, 7, n);
+    let mean_len = b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+    let expert = Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, bench),
+        b.strata_fractions(),
+        mean_len,
+        7,
+    );
+    let mut cfg = CascadeConfig::small(bench, ExpertId::Gpt35);
+    cfg.engine = engine;
+    println!("engine: {engine:?}, requests: {n}");
+
+    let mut server = Server::new(
+        cfg,
+        b.classes,
+        expert,
+        BatchPolicy::default(),
+        "artifacts",
+    )?;
+    server.set_threshold_scale(0.7);
+
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel::<ocl::serve::Response>();
+    let samples = b.samples.clone();
+    let submit = std::thread::spawn(move || {
+        for (i, s) in samples.iter().enumerate() {
+            if req_tx
+                .send(Request {
+                    id: i as u64,
+                    text: s.text.clone(),
+                    truth: s.label,
+                    sample: s.clone(),
+                })
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+    let drain = std::thread::spawn(move || {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for r in resp_rx.iter() {
+            total += 1;
+            if r.pred == r.truth {
+                correct += 1;
+            }
+        }
+        (correct, total)
+    });
+
+    let report = server.serve(req_rx, resp_tx)?;
+    submit.join().ok();
+    let (client_correct, client_total) = drain.join().unwrap_or((0, 0));
+
+    println!("\n== serving report ==");
+    println!("served              {}", report.served);
+    println!("wall                {:.2} s", report.wall_secs);
+    println!("throughput          {:.0} req/s", report.throughput);
+    println!(
+        "latency p50/p95/p99 {:.2} / {:.2} / {:.2} ms",
+        report.latency_ms.pct(50.0),
+        report.latency_ms.pct(95.0),
+        report.latency_ms.pct(99.0)
+    );
+    println!("accuracy            {:.2}%", report.accuracy * 100.0);
+    println!(
+        "client-side check   {}/{} correct",
+        client_correct, client_total
+    );
+    println!("llm calls           {}", report.llm_calls);
+    println!("handled per level   {:?}", report.handled);
+    assert_eq!(report.served, n, "every request must be answered");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python for the OCL reproduction (L1 kernels + L2 models).
+
+Nothing in this package is imported at runtime: ``aot.py`` lowers every
+entry point to HLO text once (``make artifacts``), and the rust
+coordinator executes the artifacts through PJRT.
+"""

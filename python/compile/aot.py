@@ -1,0 +1,118 @@
+"""AOT lowering: every L2 entry point -> HLO text + manifest + init blobs.
+
+Runs once at build time (``make artifacts``); the rust runtime loads
+the results through the `xla` crate's text parser. HLO **text** — not
+``.serialize()`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+
+    <entry>.hlo.txt        one per entry point
+    init/<group>.bin       f32 little-endian tensors, manifest order
+    manifest.json          entries, arg shapes/dtypes, param groups, dims
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "s32"}[np.dtype(dt).name]
+
+
+def lower_entry(name, ent):
+    lowered = jax.jit(ent["fn"]).lower(*ent["args"])
+    return to_hlo_text(lowered)
+
+
+def write_params(groups, out_dir):
+    """Write each group as one concatenated f32-LE blob; return meta."""
+    os.makedirs(os.path.join(out_dir, "init"), exist_ok=True)
+    meta = {}
+    for gname, pairs in sorted(groups.items()):
+        path = os.path.join(out_dir, "init", f"{gname}.bin")
+        with open(path, "wb") as f:
+            for _, arr in pairs:
+                f.write(np.ascontiguousarray(arr, np.float32).tobytes())
+        meta[gname] = {
+            "file": f"init/{gname}.bin",
+            "tensors": [
+                {"name": n, "shape": list(a.shape)} for n, a in pairs
+            ],
+        }
+    return meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated entry-name substrings to lower (debugging)",
+    )
+    args = ap.parse_args(argv)
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    groups = model.param_groups()
+    params_meta = write_params(groups, out_dir)
+
+    reg = model.entries()
+    wanted = args.only.split(",") if args.only else None
+    manifest_entries = {}
+    for name, ent in sorted(reg.items()):
+        if wanted and not any(w in name for w in wanted):
+            continue
+        hlo = lower_entry(name, ent)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        manifest_entries[name] = {
+            "hlo": fname,
+            "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+            "args": [
+                {"shape": list(a.shape), "dtype": _dtype_tag(a.dtype)}
+                for a in ent["args"]
+            ],
+            "params_at": ent["params_at"],
+            "group": ent["group"],
+        }
+        print(f"lowered {name}: {len(hlo)} chars", file=sys.stderr)
+
+    manifest = {
+        "version": 1,
+        "dims": model.dims(),
+        "params": params_meta,
+        "entries": manifest_entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(
+        f"wrote {len(manifest_entries)} entries + {len(params_meta)} "
+        f"param groups to {out_dir}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Every kernel here runs with ``interpret=True`` — the CPU PJRT plugin
+that executes the AOT artifacts cannot run Mosaic custom-calls. Each
+kernel has a pure-jnp oracle in :mod:`ref` that pytest sweeps against.
+"""
+
+from .attention import flash_attention
+from .fused_head import fused_head
+from .lr_step import lr_grad_step
+from . import ref
+
+__all__ = ["flash_attention", "fused_head", "lr_grad_step", "ref"]

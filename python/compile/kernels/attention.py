@@ -1,0 +1,98 @@
+"""Pallas kernel: flash-style scaled-dot-product attention.
+
+The transformer levels of the cascade (the "BERT-base / BERT-large
+surrogates", DESIGN.md §3) spend their FLOPs in attention. The paper's
+GPU stack gets this from fused CUDA kernels staging K/V tiles through
+shared memory; the TPU re-think expresses the same HBM↔VMEM schedule as
+a *K-block grid dimension with an online softmax*: the key/value
+sequence is streamed in blocks, a running row-max and normalizer are
+carried in VMEM scratch, and previously accumulated output is rescaled
+when the max improves (Milakov–Gimelshein online softmax — the core of
+FlashAttention, re-tiled for BlockSpec instead of thread blocks).
+
+Grid: (batch*heads, num_k_blocks). Scratch persists across the K-block
+dimension (the innermost, sequential grid axis), so each (head) row
+tile sees K-blocks in order — exactly the double-buffered streaming
+loop a TPU would pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 16
+NEG_INF = -1e9
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
+    kb = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [L, Dh]
+    k = k_ref[0]  # [BK, Dh]
+    v = v_ref[0]  # [BK, Dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [L, BK]
+    s = s + (1.0 - mask_ref[...])[None, :] * NEG_INF
+
+    m_prev = m_ref[...]  # [L, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rescale previously accumulated numerator/denominator to m_new.
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [L, BK]
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kb == nk - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def flash_attention(q, k, v, mask, *, block_k=DEFAULT_BLOCK_K):
+    """Online-softmax attention over K-blocks.
+
+    q, k, v: [H, L, Dh] f32 (batch and heads folded by the caller),
+    mask: [L] f32 key padding mask (1 = real token, 0 = pad).
+    Returns [H, L, Dh] f32. L must be divisible by ``block_k``.
+    """
+    h, l, dh = q.shape
+    blk = min(block_k, l)
+    if l % blk != 0:
+        raise ValueError(f"seq len {l} not divisible by K block {blk}")
+    nk = l // blk
+    grid = (h, nk)
+    return pl.pallas_call(
+        _flash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, dh), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((1, blk, dh), lambda hh, kb: (hh, kb, 0)),
+            pl.BlockSpec((1, blk, dh), lambda hh, kb: (hh, kb, 0)),
+            pl.BlockSpec((blk,), lambda hh, kb: (kb,)),
+        ],
+        out_specs=pl.BlockSpec((1, l, dh), lambda hh, kb: (hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, l, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((l, 1), jnp.float32),  # running row max  m_i
+            pltpu.VMEM((l, 1), jnp.float32),  # running denom    l_i
+            pltpu.VMEM((l, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,65 @@
+"""Pallas kernel: fused linear + bias + row-softmax classifier head.
+
+This is the L1 hot-spot on the cascade's *forward* (request) path: every
+level of the cascade ends in ``softmax(x @ W + b)`` — the logistic
+regression model IS this kernel, and the transformer levels call it on
+the pooled sequence representation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch dimension is
+tiled into VMEM-resident blocks via ``BlockSpec``; the weight panel
+``[D, C]`` stays VMEM-resident across the grid (C is the label count,
+2–7 here, so the panel is a thin matvec-like operand that the MXU
+processes in a single pass per block). The bias-add and the
+max-subtracted softmax are fused into the same block program, so logits
+never round-trip to HBM. ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of x processed per grid step. 8 matches both the online-update
+# batch size used throughout the paper's hyperparameter tables and the
+# TPU fp32 sublane count.
+DEFAULT_BLOCK_B = 8
+
+
+def _fused_head_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One block: probs = softmax(x_blk @ W + b) entirely in VMEM."""
+    logits = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fused_head(x, w, b, *, block_b=DEFAULT_BLOCK_B):
+    """softmax(x @ w + b) as a single fused Pallas kernel.
+
+    x: [B, D] f32, w: [D, C] f32, b: [C] f32 -> [B, C] f32.
+    B must be a multiple of ``block_b`` or smaller than it.
+    """
+    bsz, d = x.shape
+    c = w.shape[1]
+    blk = min(block_b, bsz)
+    if bsz % blk != 0:
+        raise ValueError(f"batch {bsz} not divisible by block {blk}")
+    grid = (bsz // blk,)
+    return pl.pallas_call(
+        _fused_head_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,65 @@
+"""Pallas kernel: fused logistic-regression OGD weight update.
+
+The cascade's level-1 model is a logistic regression over hashed
+bag-of-words features (D = 4096). Its online update — the thing
+Algorithm 1 runs after every expert annotation — is
+
+    g  = probs - y_onehot          # [B, C], computed by fused_head
+    W' = W - lr * x^T g / B        # [D, C]
+
+The rank-C outer-product update is the memory-bound hot loop: W is the
+large operand and must stream HBM→VMEM→HBM exactly once. The kernel
+tiles the feature dimension D into VMEM-resident panels (grid over
+D-blocks); each grid step loads one W panel and the matching x column
+block, applies the fused multiply-subtract, and writes the panel back.
+The gradient never materializes in HBM. ``interpret=True`` as always
+(CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature rows per W panel: 512 rows x C<=8 cols of fp32 is ~16 KiB,
+# comfortably double-bufferable in VMEM alongside the x block.
+DEFAULT_BLOCK_D = 512
+
+
+def _lr_step_kernel(x_ref, g_ref, w_ref, lr_ref, o_ref):
+    bsz = x_ref.shape[0]
+    # x_blk^T @ g : [BD, C] rank-B update for this panel.
+    upd = jnp.dot(
+        x_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+    o_ref[...] = w_ref[...] - lr_ref[0] * upd / bsz
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def lr_grad_step(x, g, w, lr, *, block_d=DEFAULT_BLOCK_D):
+    """W' = W - lr * x^T g / B, tiled over the feature dimension.
+
+    x: [B, D] f32, g: [B, C] f32 (probs - y_onehot), w: [D, C] f32,
+    lr: [] f32 scalar. Returns the updated [D, C] weights.
+    """
+    bsz, d = x.shape
+    c = w.shape[1]
+    blk = min(block_d, d)
+    if d % blk != 0:
+        raise ValueError(f"feature dim {d} not divisible by block {blk}")
+    grid = (d // blk,)
+    lr_vec = jnp.reshape(lr, (1,)).astype(jnp.float32)
+    return pl.pallas_call(
+        _lr_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, blk), lambda i: (0, i)),
+            pl.BlockSpec((bsz, c), lambda i: (0, 0)),
+            pl.BlockSpec((blk, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, c), jnp.float32),
+        interpret=True,
+    )(x, g, w, lr_vec)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: pytest (and the hypothesis
+sweeps in ``python/tests/test_kernels.py``) assert that each Pallas
+kernel matches its oracle to tight tolerances over randomized shapes,
+dtypes, and seeds. They are also used inside the L2 *update* graphs,
+where jax autodiff must flow through the computation (``pallas_call``
+has no implicit VJP; see DESIGN.md §7).
+"""
+
+import jax.numpy as jnp
+
+
+def softmax(x, axis=-1):
+    """Numerically-stable softmax (max-subtracted)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def fused_head_ref(x, w, b):
+    """softmax(x @ w + b) — the classifier-head hot path.
+
+    x: [B, D] f32, w: [D, C] f32, b: [C] f32 -> [B, C] f32
+    """
+    return softmax(x @ w + b[None, :])
+
+
+def attention_ref(q, k, v, mask):
+    """Scaled dot-product attention with a key padding mask.
+
+    q, k, v: [H, L, Dh] f32 (heads folded with batch by the caller)
+    mask:    [L] f32, 1.0 for real tokens and 0.0 for padding.
+    Returns [H, L, Dh] f32.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    neg = jnp.asarray(-1e9, q.dtype)
+    scores = scores + (1.0 - mask)[None, None, :] * neg
+    p = softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def lr_grad_step_ref(x, g, w, lr):
+    """One fused OGD step on the logistic-regression weight matrix.
+
+    Given the pre-computed probability-error ``g = probs - y_onehot``
+    ([B, C]), applies ``w' = w - lr * x^T g / B``.
+
+    x: [B, D], g: [B, C], w: [D, C], lr: scalar -> [D, C]
+    """
+    bsz = x.shape[0]
+    return w - lr * (x.T @ g) / bsz
+
+
+def cross_entropy_ref(probs, y_onehot, eps=1e-9):
+    """Mean cross-entropy of predicted probabilities vs one-hot targets."""
+    return -jnp.mean(jnp.sum(y_onehot * jnp.log(probs + eps), axis=-1))

@@ -1,0 +1,135 @@
+"""Entry-point registry: every jax graph the rust runtime executes.
+
+Each entry point is a jax function plus example argument shapes;
+``aot.py`` lowers all of them to HLO text once at build time. Naming
+convention: ``<model>_<op>_c<classes>_b<batch>``.
+
+Argument convention (the contract with ``rust/src/runtime``):
+
+    args = [data args ...] ++ [params ...] ++ [lr]   (lr: step only)
+    rets = (outputs ...,)            for fwd
+    rets = (params' ..., loss)       for step
+
+The manifest records, per entry, the full arg shape/dtype list, the
+index where params begin, and which parameter group (init blob) they
+come from.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .models import lr, mlp, transformer
+
+# Global dimension constants — mirrored in rust/src/config (manifest
+# carries them, rust asserts agreement at load).
+HASH_DIM = 4096
+SEQ_LEN = 64
+VOCAB = 8192
+CLASS_COUNTS = (2, 7)
+BATCHES_FWD = (1, 8)
+BATCH_STEP = 8
+ARCHS = ("base", "large")
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _param_structs(pairs):
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in pairs]
+
+
+def param_groups(seed=0):
+    """{group_name: [(tensor_name, np.ndarray)]} — all init blobs."""
+    groups = {}
+    for c in CLASS_COUNTS:
+        groups[f"lr_c{c}"] = lr.init_params(HASH_DIM, c, seed)
+        groups[f"mlp_c{c}"] = mlp.init_params(c, seed)
+        for arch in ARCHS:
+            groups[f"tfm_{arch}_c{c}"] = transformer.init_params(arch, c, seed)
+    return groups
+
+
+def entries():
+    """{entry_name: dict(fn, args, params_at, group)} for aot.py.
+
+    ``args`` are ShapeDtypeStructs in call order; ``params_at`` is the
+    index of the first parameter argument; ``group`` names the init
+    blob whose tensors occupy args[params_at : params_at+len(group)].
+    """
+    groups = param_groups()
+    reg = {}
+
+    def add(name, fn, data_args, group, lr_arg=False):
+        params = _param_structs(groups[group])
+        args = list(data_args) + params + ([_f32()] if lr_arg else [])
+        reg[name] = dict(fn=fn, args=args, params_at=len(data_args), group=group)
+
+    for c in CLASS_COUNTS:
+        # --- logistic regression ---------------------------------------
+        for b in BATCHES_FWD:
+            add(f"lr_fwd_c{c}_b{b}", lr.forward, [_f32(b, HASH_DIM)], f"lr_c{c}")
+        add(
+            f"lr_step_c{c}_b{BATCH_STEP}",
+            lr.step,
+            [_f32(BATCH_STEP, HASH_DIM), _f32(BATCH_STEP, c)],
+            f"lr_c{c}",
+            lr_arg=True,
+        )
+        # --- transformers (BERT surrogates) -----------------------------
+        for arch in ARCHS:
+            fwd = transformer.make_forward(arch, c, use_pallas=True)
+            stp = transformer.make_step(arch, c)
+            for b in BATCHES_FWD:
+                add(
+                    f"tfm_{arch}_fwd_c{c}_b{b}",
+                    fwd,
+                    [_i32(b, SEQ_LEN), _f32(b, SEQ_LEN)],
+                    f"tfm_{arch}_c{c}",
+                )
+            add(
+                f"tfm_{arch}_step_c{c}_b{BATCH_STEP}",
+                stp,
+                [_i32(BATCH_STEP, SEQ_LEN), _f32(BATCH_STEP, SEQ_LEN), _f32(BATCH_STEP, c)],
+                f"tfm_{arch}_c{c}",
+                lr_arg=True,
+            )
+        # --- deferral calibration MLP ------------------------------------
+        for b in BATCHES_FWD:
+            add(f"mlp_fwd_c{c}_b{b}", mlp.forward, [_f32(b, c)], f"mlp_c{c}")
+        add(
+            f"mlp_step_c{c}_b{BATCH_STEP}",
+            mlp.step,
+            [_f32(BATCH_STEP, c), _f32(BATCH_STEP)],
+            f"mlp_c{c}",
+            lr_arg=True,
+        )
+    return reg
+
+
+def dims():
+    """Dimension block for the manifest (rust asserts agreement)."""
+    return dict(
+        hash_dim=HASH_DIM,
+        seq_len=SEQ_LEN,
+        vocab=VOCAB,
+        class_counts=list(CLASS_COUNTS),
+        batches_fwd=list(BATCHES_FWD),
+        batch_step=BATCH_STEP,
+        archs=list(ARCHS),
+        mlp_hidden=mlp.HIDDEN,
+        tfm_configs={a: transformer.CONFIGS[a] for a in ARCHS},
+    )
+
+
+__all__ = [
+    "HASH_DIM", "SEQ_LEN", "VOCAB", "CLASS_COUNTS", "BATCHES_FWD",
+    "BATCH_STEP", "ARCHS", "param_groups", "entries", "dims",
+]
+
+_ = np  # numpy retained for interface parity with models.*

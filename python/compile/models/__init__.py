@@ -1,0 +1,5 @@
+"""L2 jax models: the cascade levels and the deferral calibrator."""
+
+from . import lr, mlp, transformer
+
+__all__ = ["lr", "mlp", "transformer"]

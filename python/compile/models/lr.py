@@ -1,0 +1,58 @@
+"""L2 model: logistic regression over hashed bag-of-words features.
+
+Level 1 of the cascade. The forward pass *is* the fused Pallas
+classifier head; the online update composes the head with the fused
+Pallas gradient step (analytic gradient — no autodiff needed).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import fused_head, lr_grad_step
+from ..kernels import ref
+
+
+def init_params(hash_dim, num_classes, seed=0):
+    """Zero-initialized LR, matching the paper's from-scratch level 1.
+
+    Returns an ordered list of (name, array) — the manifest order the
+    rust runtime relies on.
+    """
+    del seed  # zeros: deterministic, seed kept for interface symmetry
+    w = np.zeros((hash_dim, num_classes), np.float32)
+    b = np.zeros((num_classes,), np.float32)
+    return [("w", w), ("b", b)]
+
+
+def forward(x, w, b):
+    """probs = softmax(x @ w + b) via the fused Pallas head. [B,C]."""
+    return (fused_head(x, w, b),)
+
+
+def forward_ref(x, w, b):
+    """Oracle forward (pure jnp), used in tests and inside ``step``."""
+    return (ref.fused_head_ref(x, w, b),)
+
+
+def step(x, y_onehot, w, b, lr):
+    """One OGD step on (w, b); returns (w', b', loss).
+
+    The W update runs through the fused Pallas ``lr_grad_step`` kernel;
+    the bias update and loss are scalar-sized jnp epilogue ops.
+    """
+    probs = fused_head(x, w, b)
+    g = probs - y_onehot
+    w_new = lr_grad_step(x, g, w, lr)
+    b_new = b - lr * jnp.mean(g, axis=0)
+    loss = ref.cross_entropy_ref(probs, y_onehot)
+    return w_new, b_new, loss
+
+
+def step_ref(x, y_onehot, w, b, lr):
+    """Oracle step (pure jnp) for kernel-vs-ref testing."""
+    probs = ref.fused_head_ref(x, w, b)
+    g = probs - y_onehot
+    w_new = ref.lr_grad_step_ref(x, g, w, lr)
+    b_new = b - lr * jnp.mean(g, axis=0)
+    loss = ref.cross_entropy_ref(probs, y_onehot)
+    return w_new, b_new, loss

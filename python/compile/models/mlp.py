@@ -1,0 +1,99 @@
+"""L2 model: deferral-calibration MLP (paper §3, "Confidence Calibration").
+
+One MLP per non-expert cascade level. Input: the level's predictive
+probability vector ``m_i(x)`` ([C]); output: a deferral score in (0,1).
+Trained post-hoc by MSE against ``z_i = 1[argmax m_i(x) != y*]`` on
+expert-annotated episodes only (Eq. 5). At inference the coordinator
+defers when the score exceeds the level's calibration threshold
+(Tables 3–4's "Calibration Factor").
+
+The probability vector is augmented with two sufficient statistics the
+paper's confidence-deferral discussion leans on — max-probability and
+normalized entropy — computed *inside* the graph so rust feeds raw
+probabilities only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref
+
+HIDDEN = 16
+
+
+def input_dim(num_classes):
+    return num_classes + 2  # probs ++ [maxprob, normalized entropy]
+
+
+def param_spec(num_classes):
+    i = input_dim(num_classes)
+    return [
+        ("w1", (i, HIDDEN)), ("b1", (HIDDEN,)),
+        ("w2", (HIDDEN, 1)), ("b2", (1,)),
+    ]
+
+
+def init_params(num_classes, seed=0):
+    """Glorot weights, zero hidden bias, and **+1 output bias**: the
+    initial deferral score is sigmoid(≈1) ≈ 0.73, above every
+    calibration threshold in the paper's tables — the cascade starts
+    with its gates open (paper §1: "At startup, the policy keeps its
+    gates open, allowing all initial inputs to flow through the cascade
+    and be processed by the most expensive model").
+    """
+    rng = np.random.default_rng(seed + 17)
+    out = []
+    for name, shape in param_spec(num_classes):
+        if name.startswith("w"):
+            lim = np.sqrt(6.0 / (shape[0] + shape[1]))
+            a = rng.uniform(-lim, lim, shape)
+        elif name == "b2":
+            a = np.ones(shape)
+        else:
+            a = np.zeros(shape)
+        out.append((name, a.astype(np.float32)))
+    return out
+
+
+def _features(probs):
+    """[B, C] probs -> [B, C+2] with maxprob and normalized entropy."""
+    c = probs.shape[-1]
+    eps = 1e-9
+    ent = -jnp.sum(probs * jnp.log(probs + eps), axis=-1, keepdims=True)
+    ent = ent / jnp.log(jnp.asarray(float(c)))
+    mx = jnp.max(probs, axis=-1, keepdims=True)
+    return jnp.concatenate([probs, mx, ent], axis=-1)
+
+
+def forward(probs, w1, b1, w2, b2):
+    """Deferral score per row: sigmoid MLP over calibrated features."""
+    h = jnp.tanh(_features(probs) @ w1 + b1)
+    score = jax.nn.sigmoid(h @ w2 + b2)  # [B, 1]
+    return (score[:, 0],)
+
+
+def step(probs, z, w1, b1, w2, b2, lr):
+    """One OGD step on the MSE objective (Eq. 5); returns params + loss."""
+
+    def loss_fn(params):
+        (score,) = forward(probs, *params)
+        return jnp.mean((score - z) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)([w1, b1, w2, b2])
+    new = [p - lr * g for p, g in zip([w1, b1, w2, b2], grads)]
+    return tuple(new) + (loss,)
+
+
+def forward_ref(probs, w1, b1, w2, b2):
+    """Alias — the MLP forward is already pure jnp (no Pallas here)."""
+    return forward(probs, w1, b1, w2, b2)
+
+
+__all__ = [
+    "HIDDEN", "input_dim", "param_spec", "init_params",
+    "forward", "forward_ref", "step",
+]
+
+# keep linters honest about the ref import being intentional
+_ = ref

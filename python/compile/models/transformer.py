@@ -1,0 +1,176 @@
+"""L2 model: transformer encoder — the "BERT-base / BERT-large surrogate".
+
+Levels 2 (and 3, in the large cascade) of the paper's cascade are
+BERT-base (110M) / BERT-large (340M). This reproduction keeps the exact
+architecture *class* — token+position embeddings, pre-LN self-attention
+blocks, GELU FFN, masked mean pooling, softmax classifier head — at a
+size the CPU testbed can train online (DESIGN.md §3 documents why the
+capacity *ladder*, not the parameter count, is what the paper's
+dynamics need).
+
+Two forward flavours:
+
+* ``forward``      — request-path graph: attention through the Pallas
+  flash kernel, head through the Pallas fused head. This is what AOT
+  lowers for the rust hot path.
+* ``forward_ref``  — pure-jnp twin, used (a) as the pytest oracle and
+  (b) inside ``step``: the OGD update differentiates the loss with jax
+  autodiff, and ``pallas_call`` carries no implicit VJP.
+
+Parameters travel as an *ordered flat list* of (name, array): the rust
+runtime treats them as opaque literals and threads the update outputs
+back into the next call, so order is the only contract (manifest-
+checked).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import flash_attention, fused_head
+from ..kernels import ref
+
+# Architecture presets. "base" stands in for BERT-base, "large" for
+# BERT-large; the c2/c3 cost constants in rust use the paper's App. C.1
+# FLOP numbers so all cost accounting matches the paper exactly.
+CONFIGS = {
+    "base": dict(vocab=8192, seq=64, d=64, heads=4, layers=2, ffn=256),
+    "large": dict(vocab=8192, seq=64, d=96, heads=6, layers=4, ffn=384),
+}
+
+
+def param_spec(arch, num_classes):
+    """Ordered [(name, shape)] for one architecture. Manifest order."""
+    cfg = CONFIGS[arch]
+    v, l, d, f = cfg["vocab"], cfg["seq"], cfg["d"], cfg["ffn"]
+    spec = [("embed", (v, d)), ("pos", (l, d))]
+    for i in range(cfg["layers"]):
+        p = f"l{i}."
+        spec += [
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    spec += [
+        ("lnf_g", (d,)), ("lnf_b", (d,)),
+        ("head_w", (d, num_classes)), ("head_b", (num_classes,)),
+    ]
+    return spec
+
+
+def init_params(arch, num_classes, seed=0):
+    """Deterministic init: N(0, 0.02) embeddings, Glorot dense, unit LN.
+
+    Mirrors the BERT init recipe. Returns ordered [(name, array)].
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_spec(arch, num_classes):
+        base = name.split(".")[-1]
+        if base in ("embed", "pos"):
+            a = rng.normal(0.0, 0.02, shape)
+        elif base.startswith("ln") and base.endswith("_g"):
+            a = np.ones(shape)
+        elif base.startswith("b") or base.endswith("_b"):
+            a = np.zeros(shape)
+        elif len(shape) == 2:
+            lim = math.sqrt(6.0 / (shape[0] + shape[1]))
+            a = rng.uniform(-lim, lim, shape)
+        else:
+            a = np.zeros(shape)
+        out.append((name, a.astype(np.float32)))
+    return out
+
+
+def _tree(arch, num_classes, flat):
+    """flat list -> {name: array}, validating count against the spec."""
+    spec = param_spec(arch, num_classes)
+    if len(flat) != len(spec):
+        raise ValueError(f"expected {len(spec)} params, got {len(flat)}")
+    return {name: p for (name, _), p in zip(spec, flat)}
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention_jnp(q, k, v, mask):
+    return ref.attention_ref(q, k, v, mask)
+
+
+def _encode_one(cfg, t, ids, mask, use_pallas):
+    """Encode a single sequence: ids [L] i32, mask [L] f32 -> probs [C]."""
+    l, d, h = cfg["seq"], cfg["d"], cfg["heads"]
+    dh = d // h
+    x = t["embed"][ids] + t["pos"]  # [L, d]
+    attn_fn = flash_attention if use_pallas else _attention_jnp
+    nlayers = sum(1 for name in t if name.endswith(".wq"))
+    for i in range(nlayers):
+        p = f"l{i}."
+        hx = _layer_norm(x, t[p + "ln1_g"], t[p + "ln1_b"])
+        q = (hx @ t[p + "wq"] + t[p + "bq"]).reshape(l, h, dh).transpose(1, 0, 2)
+        k = (hx @ t[p + "wk"] + t[p + "bk"]).reshape(l, h, dh).transpose(1, 0, 2)
+        v = (hx @ t[p + "wv"] + t[p + "bv"]).reshape(l, h, dh).transpose(1, 0, 2)
+        o = attn_fn(q, k, v, mask)  # [h, L, dh]
+        o = o.transpose(1, 0, 2).reshape(l, d)
+        x = x + o @ t[p + "wo"] + t[p + "bo"]
+        hx = _layer_norm(x, t[p + "ln2_g"], t[p + "ln2_b"])
+        x = x + jax.nn.gelu(hx @ t[p + "w1"] + t[p + "b1"]) @ t[p + "w2"] + t[p + "b2"]
+    x = _layer_norm(x, t["lnf_g"], t["lnf_b"])
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    pooled = jnp.sum(x * mask[:, None], axis=0) / denom  # [d]
+    return pooled
+
+
+def _head(pooled, t, use_pallas):
+    if use_pallas:
+        return fused_head(pooled, t["head_w"], t["head_b"])
+    return ref.fused_head_ref(pooled, t["head_w"], t["head_b"])
+
+
+def make_forward(arch, num_classes, use_pallas=True):
+    """Build forward(ids [B,L] i32, mask [B,L] f32, *params) -> (probs,)."""
+    cfg = CONFIGS[arch]
+
+    def forward(ids, mask, *params):
+        t = _tree(arch, num_classes, list(params))
+        pooled = jax.vmap(
+            lambda i1, m1: _encode_one(cfg, t, i1, m1, use_pallas)
+        )(ids, mask)  # [B, d]
+        probs = _head(pooled, t, use_pallas)
+        return (probs,)
+
+    return forward
+
+
+def make_step(arch, num_classes):
+    """Build step(ids, mask, y_onehot, *params, lr) -> (*params', loss).
+
+    Pure-jnp forward (autodiff); SGD with gradient-norm clipping at 1.0
+    for online stability (the paper trains BERT with tiny lr; clipping
+    plays the same role at this scale).
+    """
+    fwd = make_forward(arch, num_classes, use_pallas=False)
+
+    def loss_fn(params, ids, mask, y_onehot):
+        (probs,) = fwd(ids, mask, *params)
+        return ref.cross_entropy_ref(probs, y_onehot)
+
+    def step(ids, mask, y_onehot, *rest):
+        params, lr = list(rest[:-1]), rest[-1]
+        loss, grads = jax.value_and_grad(loss_fn)(params, ids, mask, y_onehot)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+        scale = jnp.minimum(1.0, 1.0 / gnorm)
+        new = [p - lr * scale * g for p, g in zip(params, grads)]
+        return tuple(new) + (loss,)
+
+    return step

@@ -1,0 +1,71 @@
+"""AOT lowering: HLO text well-formed, manifest/blob consistency."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def small_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("art"))
+    aot.main(["--out", out, "--only", "lr_fwd_c2,lr_step_c2,mlp_fwd_c2_b1"])
+    return out
+
+
+def test_hlo_text_is_parseable_hlo(small_artifacts):
+    for fname in os.listdir(small_artifacts):
+        if fname.endswith(".hlo.txt"):
+            text = open(os.path.join(small_artifacts, fname)).read()
+            assert text.startswith("HloModule"), fname
+            assert "ENTRY" in text, fname
+
+
+def test_manifest_shape_consistency(small_artifacts):
+    man = json.load(open(os.path.join(small_artifacts, "manifest.json")))
+    assert man["version"] == 1
+    assert man["dims"]["hash_dim"] == model.HASH_DIM
+    reg = model.entries()
+    for name, ent in man["entries"].items():
+        want = reg[name]
+        assert len(ent["args"]) == len(want["args"])
+        for got, spec in zip(ent["args"], want["args"]):
+            assert got["shape"] == list(spec.shape)
+        assert os.path.exists(os.path.join(small_artifacts, ent["hlo"]))
+
+
+def test_init_blob_sizes_match_manifest(small_artifacts):
+    man = json.load(open(os.path.join(small_artifacts, "manifest.json")))
+    for gname, g in man["params"].items():
+        want = sum(
+            int(np.prod(t["shape"])) for t in g["tensors"]
+        ) * 4  # f32
+        got = os.path.getsize(os.path.join(small_artifacts, g["file"]))
+        assert got == want, gname
+
+
+def test_init_blob_roundtrip_values(small_artifacts):
+    """Blob bytes must equal the in-memory init arrays, in order."""
+    man = json.load(open(os.path.join(small_artifacts, "manifest.json")))
+    groups = model.param_groups()
+    g = man["params"]["tfm_base_c2"]
+    blob = np.fromfile(os.path.join(small_artifacts, g["file"]), np.float32)
+    off = 0
+    for (name, arr), t in zip(groups["tfm_base_c2"], g["tensors"]):
+        assert t["name"] == name
+        n = arr.size
+        np.testing.assert_array_equal(blob[off:off + n], arr.ravel())
+        off += n
+    assert off == blob.size
+
+
+def test_entry_hlo_deterministic():
+    """Lowering the same entry twice must produce identical text."""
+    reg = model.entries()
+    ent = reg["mlp_fwd_c2_b1"]
+    assert aot.lower_entry("mlp_fwd_c2_b1", ent) == aot.lower_entry(
+        "mlp_fwd_c2_b1", ent
+    )

@@ -1,0 +1,166 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/seeds; fixed adversarial cases cover softmax
+overflow, fully-padded masks, and non-default block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, fused_head, lr_grad_step, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-5, atol=1e-6)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# fused_head
+# --------------------------------------------------------------------------
+class TestFusedHead:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 8, 16]),
+        d=st.sampled_from([4, 32, 64, 4096]),
+        c=st.integers(2, 7),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, c, seed):
+        rng = np.random.default_rng(seed)
+        x, w, bb = _rand(rng, b, d), _rand(rng, d, c), _rand(rng, c)
+        got = fused_head(x, w, bb)
+        want = ref.fused_head_ref(x, w, bb)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_rows_sum_to_one(self):
+        rng = np.random.default_rng(0)
+        out = fused_head(_rand(rng, 8, 64), _rand(rng, 64, 7), _rand(rng, 7))
+        np.testing.assert_allclose(np.sum(out, -1), np.ones(8), rtol=1e-5)
+
+    def test_large_logits_no_overflow(self):
+        """Max-subtraction must keep exp() finite for huge logits."""
+        x = jnp.full((8, 16), 100.0)
+        w = jnp.full((16, 3), 10.0)
+        b = jnp.asarray([0.0, 5.0, -5.0])
+        out = np.asarray(fused_head(x, w, b))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out, ref.fused_head_ref(x, w, b), **TOL)
+
+    def test_batch_one_block(self):
+        rng = np.random.default_rng(3)
+        x, w, b = _rand(rng, 1, 4096), _rand(rng, 4096, 2), _rand(rng, 2)
+        np.testing.assert_allclose(
+            fused_head(x, w, b), ref.fused_head_ref(x, w, b), **TOL
+        )
+
+    def test_indivisible_batch_raises(self):
+        rng = np.random.default_rng(4)
+        with pytest.raises(ValueError):
+            fused_head(
+                _rand(rng, 12, 8), _rand(rng, 8, 2), _rand(rng, 2), block_b=8
+            )
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+class TestFlashAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.sampled_from([1, 2, 4, 6]),
+        l=st.sampled_from([16, 32, 64]),
+        dh=st.sampled_from([8, 16]),
+        pad=st.integers(0, 10),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, h, l, dh, pad, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = (_rand(rng, h, l, dh) for _ in range(3))
+        mask = np.ones(l, np.float32)
+        if pad:
+            mask[l - min(pad, l - 1):] = 0.0
+        mask = jnp.asarray(mask)
+        got = flash_attention(q, k, v, mask)
+        want = ref.attention_ref(q, k, v, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("block_k", [8, 16, 32, 64])
+    def test_block_size_invariance(self, block_k):
+        """The online-softmax result must not depend on the K tiling."""
+        rng = np.random.default_rng(7)
+        q, k, v = (_rand(rng, 4, 64, 16) for _ in range(3))
+        mask = jnp.asarray(np.ones(64, np.float32))
+        got = flash_attention(q, k, v, mask, block_k=block_k)
+        want = ref.attention_ref(q, k, v, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_single_token_mask(self):
+        """All attention mass collapses onto the one unmasked key."""
+        rng = np.random.default_rng(9)
+        q, k, v = (_rand(rng, 2, 16, 8) for _ in range(3))
+        mask = np.zeros(16, np.float32)
+        mask[3] = 1.0
+        out = flash_attention(q, k, v, jnp.asarray(mask))
+        want = jnp.broadcast_to(v[:, 3:4, :], out.shape)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+    def test_extreme_scores_stable(self):
+        q = jnp.full((1, 16, 8), 30.0)
+        k = jnp.full((1, 16, 8), 30.0)
+        v = jnp.asarray(np.random.default_rng(1).normal(0, 1, (1, 16, 8)), jnp.float32)
+        mask = jnp.ones(16)
+        out = np.asarray(flash_attention(q, k, v, mask))
+        assert np.all(np.isfinite(out))
+
+
+# --------------------------------------------------------------------------
+# lr_grad_step
+# --------------------------------------------------------------------------
+class TestLrGradStep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.sampled_from([1, 4, 8]),
+        d=st.sampled_from([64, 512, 4096]),
+        c=st.integers(2, 7),
+        lr=st.floats(1e-4, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, c, lr, seed):
+        rng = np.random.default_rng(seed)
+        x, g, w = _rand(rng, b, d), _rand(rng, b, c), _rand(rng, d, c)
+        got = lr_grad_step(x, g, w, jnp.float32(lr))
+        want = ref.lr_grad_step_ref(x, g, w, jnp.float32(lr))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_zero_gradient_is_identity(self):
+        rng = np.random.default_rng(11)
+        x, w = _rand(rng, 8, 512), _rand(rng, 512, 3)
+        g = jnp.zeros((8, 3))
+        np.testing.assert_allclose(lr_grad_step(x, g, w, jnp.float32(0.5)), w)
+
+    def test_zero_lr_is_identity(self):
+        rng = np.random.default_rng(12)
+        x, g, w = _rand(rng, 8, 512), _rand(rng, 8, 3), _rand(rng, 512, 3)
+        np.testing.assert_allclose(lr_grad_step(x, g, w, jnp.float32(0.0)), w)
+
+    def test_update_direction_reduces_loss(self):
+        """A real OGD step through the kernel must reduce cross-entropy."""
+        rng = np.random.default_rng(13)
+        x = _rand(rng, 8, 512)
+        y = jnp.asarray(np.eye(2, dtype=np.float32)[rng.integers(0, 2, 8)])
+        w = _rand(rng, 512, 2) * 0.01
+        b = jnp.zeros(2)
+        probs = ref.fused_head_ref(x, w, b)
+        loss0 = float(ref.cross_entropy_ref(probs, y))
+        for _ in range(5):
+            probs = ref.fused_head_ref(x, w, b)
+            w = lr_grad_step(x, probs - y, w, jnp.float32(0.05))
+        probs = ref.fused_head_ref(x, w, b)
+        assert float(ref.cross_entropy_ref(probs, y)) < loss0

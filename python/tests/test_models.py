@@ -1,0 +1,168 @@
+"""L2 correctness: model graphs (shapes, parity, learning dynamics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.models import lr, mlp, transformer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _lr_params(c):
+    return [jnp.asarray(a) for _, a in lr.init_params(model.HASH_DIM, c)]
+
+
+def _tfm_params(arch, c):
+    return [jnp.asarray(a) for _, a in transformer.init_params(arch, c)]
+
+
+def _mlp_params(c):
+    return [jnp.asarray(a) for _, a in mlp.init_params(c)]
+
+
+def _doc(rng, b):
+    ids = jnp.asarray(rng.integers(0, model.VOCAB, (b, model.SEQ_LEN)), jnp.int32)
+    lens = rng.integers(5, model.SEQ_LEN, b)
+    mask = np.zeros((b, model.SEQ_LEN), np.float32)
+    for i, n in enumerate(lens):
+        mask[i, :n] = 1.0
+    return ids, jnp.asarray(mask)
+
+
+class TestLR:
+    @pytest.mark.parametrize("c", [2, 7])
+    def test_forward_shape_and_simplex(self, c):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 1, (8, model.HASH_DIM)), jnp.float32)
+        (probs,) = lr.forward(x, *_lr_params(c))
+        assert probs.shape == (8, c)
+        np.testing.assert_allclose(np.sum(probs, -1), np.ones(8), rtol=1e-5)
+
+    def test_step_matches_ref_step(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(0, 1, (8, model.HASH_DIM)), jnp.float32)
+        y = jnp.asarray(np.eye(2, dtype=np.float32)[rng.integers(0, 2, 8)])
+        w, b = _lr_params(2)
+        w = w + 0.01  # move off the zero init so grads are non-trivial
+        got = lr.step(x, y, w, b, jnp.float32(0.1))
+        want = lr.step_ref(x, y, w, b, jnp.float32(0.1))
+        for g, wnt in zip(got, want):
+            np.testing.assert_allclose(g, wnt, rtol=1e-4, atol=1e-6)
+
+    def test_learns_linearly_separable_stream(self):
+        """Online LR must drive accuracy high on separable data."""
+        rng = np.random.default_rng(2)
+        w, b = _lr_params(2)
+        centers = rng.normal(0, 1, (2, model.HASH_DIM)).astype(np.float32)
+        correct = total = 0
+        for step_i in range(60):
+            ys = rng.integers(0, 2, 8)
+            x = jnp.asarray(
+                centers[ys] + rng.normal(0, 0.3, (8, model.HASH_DIM)), jnp.float32
+            )
+            yoh = jnp.asarray(np.eye(2, dtype=np.float32)[ys])
+            (probs,) = lr.forward(x, w, b)
+            if step_i >= 40:
+                correct += int(np.sum(np.argmax(probs, -1) == ys))
+                total += 8
+            w, b, _ = lr.step(x, yoh, w, b, jnp.float32(0.5))
+        assert correct / total > 0.9
+
+
+class TestTransformer:
+    @pytest.mark.parametrize("arch", ["base", "large"])
+    @pytest.mark.parametrize("c", [2, 7])
+    def test_forward_shape(self, arch, c):
+        rng = np.random.default_rng(3)
+        ids, mask = _doc(rng, 2)
+        fwd = transformer.make_forward(arch, c, use_pallas=False)
+        (probs,) = jax.jit(fwd)(ids, mask, *_tfm_params(arch, c))
+        assert probs.shape == (2, c)
+        np.testing.assert_allclose(np.sum(probs, -1), np.ones(2), rtol=1e-5)
+
+    def test_pallas_matches_ref_forward(self):
+        rng = np.random.default_rng(4)
+        ids, mask = _doc(rng, 2)
+        params = _tfm_params("base", 2)
+        (pp,) = jax.jit(transformer.make_forward("base", 2, True))(ids, mask, *params)
+        (pr,) = jax.jit(transformer.make_forward("base", 2, False))(ids, mask, *params)
+        np.testing.assert_allclose(pp, pr, rtol=1e-4, atol=1e-6)
+
+    def test_padding_tokens_do_not_affect_output(self):
+        """Changing token ids under the pad mask must not change probs."""
+        rng = np.random.default_rng(5)
+        ids, mask = _doc(rng, 1)
+        params = _tfm_params("base", 2)
+        fwd = jax.jit(transformer.make_forward("base", 2, False))
+        (p1,) = fwd(ids, mask, *params)
+        noise = jnp.asarray(
+            rng.integers(0, model.VOCAB, ids.shape), jnp.int32
+        )
+        ids2 = jnp.where(mask.astype(bool), ids, noise)
+        (p2,) = fwd(ids2, mask, *params)
+        np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+
+    def test_step_reduces_loss(self):
+        rng = np.random.default_rng(6)
+        ids, mask = _doc(rng, 8)
+        params = _tfm_params("base", 2)
+        y = jnp.asarray(np.eye(2, dtype=np.float32)[rng.integers(0, 2, 8)])
+        stp = jax.jit(transformer.make_step("base", 2))
+        out = stp(ids, mask, y, *params, jnp.float32(5e-3))
+        first = float(out[-1])
+        for _ in range(5):
+            out = stp(ids, mask, y, *out[:-1], jnp.float32(5e-3))
+        assert float(out[-1]) < first
+
+    def test_param_spec_matches_init(self):
+        for arch in ("base", "large"):
+            spec = transformer.param_spec(arch, 7)
+            init = transformer.init_params(arch, 7)
+            assert [n for n, _ in spec] == [n for n, _ in init]
+            for (_, shp), (_, arr) in zip(spec, init):
+                assert tuple(shp) == arr.shape
+
+
+class TestMLP:
+    @pytest.mark.parametrize("c", [2, 7])
+    def test_forward_range(self, c):
+        rng = np.random.default_rng(7)
+        p = rng.dirichlet(np.ones(c), 8).astype(np.float32)
+        (s,) = mlp.forward(jnp.asarray(p), *_mlp_params(c))
+        assert s.shape == (8,)
+        assert np.all((np.asarray(s) > 0) & (np.asarray(s) < 1))
+
+    def test_step_learns_error_signal(self):
+        """The calibrator must learn 'low max-prob => defer'."""
+        rng = np.random.default_rng(8)
+        params = _mlp_params(2)
+        for _ in range(300):
+            conf = rng.random(8).astype(np.float32) * 0.5 + 0.5
+            p = np.stack([conf, 1 - conf], -1)
+            z = (conf < 0.75).astype(np.float32)  # uncertain => wrong
+            out = mlp.step(jnp.asarray(p), jnp.asarray(z), *params, jnp.float32(0.05))
+            params = list(out[:-1])
+        (s_sure,) = mlp.forward(jnp.asarray([[0.99, 0.01]], np.float32), *params)
+        (s_unsure,) = mlp.forward(jnp.asarray([[0.55, 0.45]], np.float32), *params)
+        assert float(s_unsure[0]) > float(s_sure[0])
+
+
+class TestRegistry:
+    def test_entry_count_and_naming(self):
+        reg = model.entries()
+        # per class count: lr(2 fwd + 1 step) + 2 arch * 3 + mlp(3) = 12
+        assert len(reg) == 12 * len(model.CLASS_COUNTS)
+        for name, ent in reg.items():
+            assert ent["params_at"] >= 1
+            assert ent["group"] in model.param_groups()
+
+    def test_param_groups_cover_all_entries(self):
+        groups = model.param_groups()
+        for name, ent in model.entries().items():
+            n_params = len(groups[ent["group"]])
+            n_args = len(ent["args"])
+            is_step = "_step_" in name
+            assert ent["params_at"] + n_params + (1 if is_step else 0) == n_args

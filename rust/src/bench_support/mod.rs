@@ -1,0 +1,135 @@
+//! Benchmark harness for `cargo bench` (no `criterion` offline).
+//!
+//! `[[bench]] harness = false` binaries build a [`Bench`] per paper
+//! table/figure, register timed closures, and print a fixed-width
+//! report with warmup, repetition statistics, and throughput. Also
+//! hosts [`black_box`] to keep the optimizer honest.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+use crate::util::Percentiles;
+
+/// Re-exported optimizer barrier.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one timed case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    /// Case label.
+    pub name: String,
+    /// Per-iteration wall time, milliseconds.
+    pub iters_ms: Vec<f64>,
+    /// Optional items/iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl CaseResult {
+    /// Mean ms/iteration.
+    pub fn mean_ms(&self) -> f64 {
+        self.iters_ms.iter().sum::<f64>() / self.iters_ms.len().max(1) as f64
+    }
+}
+
+/// A named group of timed cases (≈ one paper table/figure).
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    /// New bench group. `warmup` untimed + `iters` timed repetitions.
+    pub fn new(name: &str, warmup: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Bench { name: name.to_string(), warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut iters_ms = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            iters_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        self.results.push(CaseResult { name: name.to_string(), iters_ms, items_per_iter: None });
+        self.results.last().expect("just pushed")
+    }
+
+    /// Time `f` processing `items` logical items per iteration
+    /// (throughput reported as items/s).
+    pub fn case_throughput<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) {
+        self.case(name, &mut f);
+        self.results.last_mut().expect("just pushed").items_per_iter = Some(items);
+    }
+
+    /// Render the report table.
+    pub fn report(&self) -> String {
+        let mut s = format!("\n== bench: {} ({} iters) ==\n", self.name, self.iters);
+        s.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}\n",
+            "case", "mean ms", "p50 ms", "p95 ms", "throughput"
+        ));
+        for r in &self.results {
+            let mut p = Percentiles::new();
+            for &x in &r.iters_ms {
+                p.push(x);
+            }
+            let thr = match r.items_per_iter {
+                Some(items) => format!("{:>11.0}/s", items / (r.mean_ms() / 1e3)),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "{:<44} {:>12.3} {:>12.3} {:>12.3} {:>14}\n",
+                r.name,
+                r.mean_ms(),
+                p.pct(50.0),
+                p.pct(95.0),
+                thr
+            ));
+        }
+        s
+    }
+
+    /// Print the report to stdout.
+    pub fn print(&self) {
+        print!("{}", self.report());
+    }
+
+    /// Access raw results (assertions in bench smoke tests).
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_and_reports() {
+        let mut b = Bench::new("demo", 1, 3);
+        let mut n = 0u64;
+        b.case("spin", || {
+            for i in 0..10_000u64 {
+                n = n.wrapping_add(black_box(i));
+            }
+        });
+        b.case_throughput("items", 100.0, || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert_eq!(b.results().len(), 2);
+        assert_eq!(b.results()[0].iters_ms.len(), 3);
+        let rep = b.report();
+        assert!(rep.contains("spin"));
+        assert!(rep.contains("/s"));
+        assert!(b.results()[1].mean_ms() >= 0.2);
+    }
+}

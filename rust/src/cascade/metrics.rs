@@ -1,0 +1,232 @@
+//! Streaming evaluation metrics for cascade runs: running accuracy,
+//! per-class precision/recall/F1, per-level routing fractions, cost
+//! accumulators, and periodic time-series snapshots (the data behind
+//! the paper's Figures 5–8 case-analysis plots).
+
+/// One periodic snapshot of the run state (a point on Figs 5–8).
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Samples processed so far.
+    pub t: usize,
+    /// Running accuracy of the cascade's outputs vs ground truth.
+    pub accuracy: f64,
+    /// Running accuracy of the expert alone on the same prefix.
+    pub expert_accuracy: f64,
+    /// Cumulative fraction of queries handled at each level
+    /// (levels 0..N-2 then the expert).
+    pub handled_frac: Vec<f64>,
+    /// Cumulative expert (LLM) calls.
+    pub llm_calls: u64,
+    /// Cumulative FLOPs spent (inference + training, all levels).
+    pub flops: f64,
+}
+
+/// Streaming metrics accumulator.
+#[derive(Clone, Debug)]
+pub struct StreamMetrics {
+    n_levels: usize,
+    #[allow(dead_code)]
+    classes: usize,
+    total: usize,
+    correct: usize,
+    expert_correct: usize,
+    /// Confusion counts for per-class PRF: `[class][0]`=tp, `[1]`=fp, `[2]`=fn.
+    confusion: Vec<[u64; 3]>,
+    handled: Vec<u64>,
+    llm_calls: u64,
+    flops: f64,
+    snapshot_every: usize,
+    /// Time series of snapshots.
+    pub series: Vec<Snapshot>,
+}
+
+impl StreamMetrics {
+    /// `n_levels` includes the expert as the last level.
+    pub fn new(n_levels: usize, classes: usize, snapshot_every: usize) -> Self {
+        StreamMetrics {
+            n_levels,
+            classes,
+            total: 0,
+            correct: 0,
+            expert_correct: 0,
+            confusion: vec![[0; 3]; classes],
+            handled: vec![0; n_levels],
+            llm_calls: 0,
+            flops: 0.0,
+            snapshot_every: snapshot_every.max(1),
+            series: Vec::new(),
+        }
+    }
+
+    /// Record one processed sample.
+    ///
+    /// `expert_would_be_correct` feeds the Figs 5–8 expert-reference
+    /// line (the simulator can answer it without charging a call).
+    pub fn record(
+        &mut self,
+        pred: usize,
+        truth: usize,
+        handled_by: usize,
+        expert_called: bool,
+        expert_would_be_correct: bool,
+        flops: f64,
+    ) {
+        self.total += 1;
+        if pred == truth {
+            self.correct += 1;
+        }
+        if expert_would_be_correct {
+            self.expert_correct += 1;
+        }
+        if pred == truth {
+            self.confusion[pred][0] += 1;
+        } else {
+            self.confusion[pred][1] += 1;
+            self.confusion[truth][2] += 1;
+        }
+        self.handled[handled_by.min(self.n_levels - 1)] += 1;
+        if expert_called {
+            self.llm_calls += 1;
+        }
+        self.flops += flops;
+        if self.total % self.snapshot_every == 0 {
+            self.push_snapshot();
+        }
+    }
+
+    fn push_snapshot(&mut self) {
+        let t = self.total.max(1) as f64;
+        self.series.push(Snapshot {
+            t: self.total,
+            accuracy: self.correct as f64 / t,
+            expert_accuracy: self.expert_correct as f64 / t,
+            handled_frac: self.handled.iter().map(|&h| h as f64 / t).collect(),
+            llm_calls: self.llm_calls,
+            flops: self.flops,
+        });
+    }
+
+    /// Force a final snapshot (end of stream).
+    pub fn finalize(&mut self) {
+        if self.series.last().map(|s| s.t) != Some(self.total) && self.total > 0 {
+            self.push_snapshot();
+        }
+    }
+
+    /// Samples processed.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Overall accuracy.
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    /// Expert-alone accuracy on the same stream.
+    pub fn expert_accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.expert_correct as f64 / self.total as f64
+        }
+    }
+
+    /// Recall for one class (HateSpeech reports class 1 = hate).
+    pub fn recall(&self, class: usize) -> f64 {
+        let tp = self.confusion[class][0] as f64;
+        let fne = self.confusion[class][2] as f64;
+        if tp + fne == 0.0 {
+            0.0
+        } else {
+            tp / (tp + fne)
+        }
+    }
+
+    /// Precision for one class.
+    pub fn precision(&self, class: usize) -> f64 {
+        let tp = self.confusion[class][0] as f64;
+        let fp = self.confusion[class][1] as f64;
+        if tp + fp == 0.0 {
+            0.0
+        } else {
+            tp / (tp + fp)
+        }
+    }
+
+    /// F1 for one class.
+    pub fn f1(&self, class: usize) -> f64 {
+        let p = self.precision(class);
+        let r = self.recall(class);
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// Expert (LLM) calls charged.
+    pub fn llm_calls(&self) -> u64 {
+        self.llm_calls
+    }
+
+    /// Cumulative FLOPs.
+    pub fn flops(&self) -> f64 {
+        self.flops
+    }
+
+    /// Fraction of queries handled at each level.
+    pub fn handled_fractions(&self) -> Vec<f64> {
+        let t = self.total.max(1) as f64;
+        self.handled.iter().map(|&h| h as f64 / t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_and_routing() {
+        let mut m = StreamMetrics::new(3, 2, 2);
+        m.record(1, 1, 0, false, true, 10.0);
+        m.record(0, 1, 1, false, true, 10.0);
+        m.record(1, 1, 2, true, false, 100.0);
+        m.record(0, 0, 0, false, true, 10.0);
+        m.finalize();
+        assert_eq!(m.total(), 4);
+        assert!((m.accuracy() - 0.75).abs() < 1e-12);
+        assert!((m.expert_accuracy() - 0.75).abs() < 1e-12);
+        assert_eq!(m.llm_calls(), 1);
+        assert_eq!(m.handled_fractions(), vec![0.5, 0.25, 0.25]);
+        assert_eq!(m.flops(), 130.0);
+        // snapshots at t=2, t=4
+        assert_eq!(m.series.len(), 2);
+        assert_eq!(m.series[1].t, 4);
+    }
+
+    #[test]
+    fn prf_math() {
+        let mut m = StreamMetrics::new(2, 2, 100);
+        // class 1: 2 tp, 1 fn, 1 fp
+        m.record(1, 1, 0, false, true, 0.0);
+        m.record(1, 1, 0, false, true, 0.0);
+        m.record(0, 1, 0, false, true, 0.0); // fn for 1
+        m.record(1, 0, 0, false, true, 0.0); // fp for 1
+        assert!((m.recall(1) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.precision(1) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.f1(1) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = StreamMetrics::new(2, 2, 10);
+        assert_eq!(m.accuracy(), 0.0);
+        assert_eq!(m.recall(1), 0.0);
+        assert_eq!(m.precision(0), 0.0);
+    }
+}

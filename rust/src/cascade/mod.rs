@@ -1,0 +1,713 @@
+//! Online cascade learning — the paper's Algorithm 1.
+//!
+//! For each stream query the cascade walks levels `m_1 .. m_{N-1}`:
+//! predict, score the prediction with the level's deferral calibrator
+//! `f_i`, exit if confident, defer otherwise; the expert LLM `m_N` is
+//! the last resort. DAgger-style, each level may also jump straight to
+//! the expert with a decaying probability β_i. Every expert annotation
+//! is appended to the per-level replay caches ("Cache Size" in Tables
+//! 3–4) and the levels + calibrators are updated by online gradient
+//! descent. No human label is ever read by the algorithm: ground truth
+//! is used *only* by [`metrics::StreamMetrics`] for evaluation.
+
+pub mod metrics;
+
+use std::rc::Rc;
+
+use crate::config::{CascadeConfig, Engine, LevelConfig};
+use crate::data::Sample;
+use crate::error::Result;
+use crate::models::{
+    build_calibrator, build_level, Calibrator, Featurized, LevelModel, Pipeline,
+};
+use crate::policy::{zero_one_loss, CostParams, RegretTracker};
+use crate::prng::Rng;
+use crate::runtime::PjrtEngine;
+use crate::sim::cost::CostModel;
+use crate::sim::Expert;
+use crate::util::{argmax, normalized_entropy, Ring};
+use metrics::StreamMetrics;
+
+/// How the deferral decision is made. The calibrated MLP is the
+/// paper's method; max-prob / entropy are the related-work rules and
+/// double as the ablation of confidence calibration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DeferralRule {
+    /// Paper §3: post-hoc calibration MLP; defer when score > τ_i.
+    Calibrated,
+    /// Defer when max predictive probability < τ (Varshney & Baral).
+    MaxProb(f64),
+    /// Defer when normalized entropy > τ (Stogiannidis et al.).
+    Entropy(f64),
+}
+
+/// What happened to one query.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// The cascade's emitted label.
+    pub pred: usize,
+    /// Level that produced the output (`levels.len()` = the expert).
+    pub handled_by: usize,
+    /// Whether the expert was invoked (deferral or DAgger jump).
+    pub expert_called: bool,
+    /// The expert's annotation, when it was invoked.
+    pub annotation: Option<usize>,
+    /// FLOPs charged for this query (inference + any training).
+    pub flops: f64,
+}
+
+/// Calibration replay cache depth (see Level::calib_cache).
+const CALIB_CACHE: usize = 128;
+
+/// Replay depth multiplier over the paper's "Cache Size" column.
+///
+/// The paper fine-tunes *pretrained* BERT levels, which tolerate
+/// training on the deferral-biased annotation stream with an 8–32
+/// sample cache. Our from-scratch surrogates drift catastrophically
+/// under the same regime (the annotated subset collapses to the
+/// hard/uncertain tail once gates narrow). A deeper replay ring with
+/// uniform batch sampling restores the i.i.d.-ish training mix while
+/// keeping the table's batch sizes; the deviation is documented in
+/// DESIGN.md §7 and ablated in `benches/bench_large_cascade.rs`.
+const REPLAY_FACTOR: usize = 16;
+
+/// One cascade level: model + deferral function + learning state.
+struct Level {
+    cfg: LevelConfig,
+    model: Box<dyn LevelModel>,
+    calib: Box<dyn Calibrator>,
+    /// Annotation replay cache D_i.
+    cache: Ring<(Rc<Featurized>, usize)>,
+    /// Calibration replay cache: (probs at this level, z_i).
+    calib_cache: Ring<(Vec<f32>, f32)>,
+    /// Annotations since the last model update.
+    pending: usize,
+    /// Calibration examples since the last calibrator update.
+    calib_pending: usize,
+    /// Current DAgger jump probability β_i.
+    beta: f64,
+}
+
+/// The online cascade (Algorithm 1 driver).
+pub struct Cascade {
+    cfg: CascadeConfig,
+    classes: usize,
+    levels: Vec<Level>,
+    expert: Expert,
+    pipeline: Pipeline,
+    rng: Rng,
+    /// Global multiplier on per-level calibration thresholds — the
+    /// practical μ knob: smaller scale ⇒ defer more ⇒ more LLM calls.
+    threshold_scale: f64,
+    /// Hard budget on expert calls (the paper's 𝒩); `None` = unlimited.
+    budget: Option<u64>,
+    /// Expert calls spent (survives metric resets — budgets span the
+    /// whole stream even when accuracy is measured on the test half).
+    spent: u64,
+    /// Queries processed (survives metric resets; pacing denominator).
+    processed: usize,
+    /// Expected stream length for the budget pacing controller.
+    pace_len: Option<usize>,
+    deferral_rule: DeferralRule,
+    /// Evaluation state (ground truth is consumed here only).
+    pub metrics: StreamMetrics,
+    /// Empirical-regret tracker (enable explicitly; it evaluates every
+    /// level on every sample, which costs extra inference).
+    pub regret: Option<RegretTracker>,
+    /// Online learning switch (frozen cascades for ablations).
+    pub learning: bool,
+}
+
+impl Cascade {
+    /// Build a cascade for `classes`-way streams.
+    ///
+    /// `pjrt` must be `Some` when `cfg.engine == Engine::Pjrt`.
+    pub fn new(
+        cfg: CascadeConfig,
+        classes: usize,
+        expert: Expert,
+        pjrt: Option<&Rc<PjrtEngine>>,
+        snapshot_every: usize,
+    ) -> Result<Self> {
+        let engine_ref = match cfg.engine {
+            Engine::Pjrt => {
+                assert!(pjrt.is_some(), "pjrt engine required by config");
+                pjrt
+            }
+            Engine::Host => None,
+        };
+        let mut levels = Vec::with_capacity(cfg.levels.len());
+        for (i, lc) in cfg.levels.iter().enumerate() {
+            let seed = cfg.seed ^ ((i as u64 + 1) * 0x9E37);
+            levels.push(Level {
+                cfg: lc.clone(),
+                model: build_level(engine_ref, lc.model, classes, seed)?,
+                calib: build_calibrator(engine_ref, classes, seed)?,
+                cache: Ring::new(lc.cache_size.max(lc.batch_size) * REPLAY_FACTOR),
+                // Calibration replay is kept deeper than the model
+                // cache: the deferral decision is the control loop of
+                // the whole system and needs a smoother MSE estimate
+                // than an 8-sample window provides.
+                calib_cache: Ring::new(CALIB_CACHE),
+                pending: 0,
+                calib_pending: 0,
+                beta: cfg.beta0,
+            });
+        }
+        let n_levels = cfg.levels.len() + 1;
+        Ok(Cascade {
+            rng: Rng::new(cfg.seed ^ 0xCA5C),
+            metrics: StreamMetrics::new(n_levels, classes, snapshot_every),
+            regret: None,
+            learning: true,
+            threshold_scale: 1.0,
+            budget: None,
+            spent: 0,
+            processed: 0,
+            pace_len: None,
+            deferral_rule: DeferralRule::Calibrated,
+            pipeline: Pipeline::default(),
+            classes,
+            levels,
+            expert,
+            cfg,
+        })
+    }
+
+    /// Set the global threshold scale (the cost-pressure / μ knob).
+    pub fn set_threshold_scale(&mut self, s: f64) {
+        self.threshold_scale = s;
+    }
+
+    /// Set a hard expert-call budget (the paper's 𝒩).
+    pub fn set_budget(&mut self, n: Option<u64>) {
+        self.budget = n;
+    }
+
+    /// Enable budget pacing against an expected stream length.
+    ///
+    /// The paper hits each reported budget by tuning μ per run
+    /// (§B.3: "we tuned μ specifically in the context of different
+    /// cost budgets"). The online equivalent is a feedback controller:
+    /// the effective deferral threshold is scaled by
+    /// `exp(k·(spent_frac − elapsed_frac))`, deferring more while the
+    /// budget is underspent and exiting earlier when overspent —
+    /// converging on the same cost-performance operating point without
+    /// a per-run offline grid search.
+    pub fn set_budget_paced(&mut self, n: u64, expected_stream_len: usize) {
+        self.budget = Some(n);
+        self.pace_len = Some(expected_stream_len.max(1));
+    }
+
+    /// Switch the deferral rule (ablations).
+    pub fn set_deferral_rule(&mut self, r: DeferralRule) {
+        self.deferral_rule = r;
+    }
+
+    /// Enable empirical-regret tracking.
+    pub fn enable_regret_tracking(&mut self, trace_every: usize) {
+        self.regret = Some(RegretTracker::new(
+            CostParams::from_config(&self.cfg),
+            self.levels.len() + 1,
+            trace_every,
+        ));
+    }
+
+    /// Direct access to the expert simulator (failure injection).
+    pub fn expert_mut(&mut self) -> &mut Expert {
+        &mut self.expert
+    }
+
+    /// Expert call count charged so far.
+    pub fn llm_calls(&self) -> u64 {
+        self.metrics.llm_calls()
+    }
+
+    /// The config in use.
+    pub fn config(&self) -> &CascadeConfig {
+        &self.cfg
+    }
+
+    /// Current β of each level (diagnostics).
+    pub fn betas(&self) -> Vec<f64> {
+        self.levels.iter().map(|l| l.beta).collect()
+    }
+
+    /// Evaluate every level on a sample without touching any state
+    /// (diagnostics/tests): returns (probs, deferral score) per level.
+    pub fn diagnose(&mut self, sample: &Sample) -> Vec<(Vec<f32>, f32)> {
+        let f = self.pipeline.featurize(&sample.text);
+        let mut out = Vec::with_capacity(self.levels.len());
+        for l in &mut self.levels {
+            let probs = l.model.predict(&f);
+            let score = l.calib.score(&probs);
+            out.push((probs, score));
+        }
+        out
+    }
+
+    /// Budget-pacing multiplier on the effective threshold (1.0 when
+    /// pacing is off): <1 while underspent (defer more), >1 when
+    /// overspent (exit earlier).
+    fn pace_factor(&self) -> f64 {
+        let (Some(budget), Some(t_total)) = (self.budget, self.pace_len) else {
+            return 1.0;
+        };
+        if budget == 0 {
+            return 4.0;
+        }
+        let spent = self.spent as f64 / budget as f64;
+        let elapsed = self.processed as f64 / t_total as f64;
+        // Spend profile: up to half the budget may be front-loaded into
+        // the first 20% of the stream (annotations train the levels
+        // fastest early — the paper's Fig. 5 spend shape), the rest is
+        // released pro-rata so expert capacity remains available across
+        // the whole stream instead of exhausting at the start.
+        let allowed = 0.5 * (elapsed / 0.2).min(1.0)
+            + 0.5 * ((elapsed - 0.2).max(0.0) / 0.8).min(1.0);
+        (4.0 * (spent - allowed)).exp().clamp(0.05, 4.0)
+    }
+
+    fn defer_decision(&mut self, level: usize, probs: &[f32]) -> bool {
+        let pace = self.pace_factor();
+        match self.deferral_rule {
+            DeferralRule::Calibrated => {
+                let tau =
+                    self.levels[level].cfg.calibration * self.threshold_scale * pace;
+                (self.levels[level].calib.score(probs) as f64) > tau
+            }
+            DeferralRule::MaxProb(t) => {
+                let mp =
+                    probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+                mp < t / self.threshold_scale.max(1e-6)
+            }
+            DeferralRule::Entropy(t) => {
+                (normalized_entropy(probs) as f64) > t * self.threshold_scale
+            }
+        }
+    }
+
+    /// Reset the evaluation metrics while keeping all learned state —
+    /// the Table-1 protocol measures accuracy on the test half only
+    /// (§4: "All methods are evaluated on the identical test sets")
+    /// while learning and budgets span the whole stream.
+    pub fn reset_metrics(&mut self) {
+        let snap = self.metrics.series.last().map(|s| s.t).unwrap_or(1).max(1);
+        let classes = self.classes;
+        let n_levels = self.levels.len() + 1;
+        let _ = snap;
+        let every = usize::MAX / 2;
+        self.metrics = StreamMetrics::new(n_levels, classes, every);
+    }
+
+    /// Process one stream query — the body of Algorithm 1's outer loop.
+    pub fn process(&mut self, sample: &Sample) -> StepOutcome {
+        self.processed += 1;
+        let f = Rc::new(self.pipeline.featurize(&sample.text));
+        let mut flops = 0.0;
+        // Predictions gathered on the way down (calibration targets,
+        // budget fallback, regret tracking).
+        let mut seen: Vec<Option<Vec<f32>>> = vec![None; self.levels.len()];
+        let mut exit: Option<(usize, usize)> = None; // (level, pred)
+        let mut jumped = false;
+
+        let budget_left = self
+            .budget
+            .map(|b| self.spent < b)
+            .unwrap_or(true);
+
+        for i in 0..self.levels.len() {
+            // DAgger jump to the expert at probability β_i.
+            let beta = self.levels[i].beta;
+            if self.learning && budget_left && beta > 0.0 && self.rng.coin(beta) {
+                jumped = true;
+                break;
+            }
+            let probs = self.levels[i].model.predict(&f);
+            flops +=
+                CostModel::infer_flops(self.levels[i].cfg.model) + CostModel::MLP_INFER;
+            let defer = self.defer_decision(i, &probs);
+            let pred = argmax(&probs);
+            seen[i] = Some(probs);
+            if !defer {
+                exit = Some((i, pred));
+                break;
+            }
+        }
+
+        // Expert invocation: deferral past the last level, or a jump.
+        let (handled_by, pred, expert_called, annotation) = match exit {
+            Some((i, p)) if !jumped => (i, p, false, None),
+            _ => {
+                if budget_left {
+                    match self.expert.annotate(sample, self.classes) {
+                        Some(y_hat) => {
+                            flops += self.expert.flops_per_call();
+                            self.spent += 1;
+                            (self.levels.len(), y_hat, true, Some(y_hat))
+                        }
+                        None => {
+                            // Failure injection: expert down — deepest
+                            // level answers instead.
+                            let (p, extra) = self.fallback_pred(&f, &mut seen);
+                            flops += extra;
+                            (self.levels.len() - 1, p, false, None)
+                        }
+                    }
+                } else {
+                    // Budget exhausted: deepest level answers.
+                    let (p, extra) = self.fallback_pred(&f, &mut seen);
+                    flops += extra;
+                    (self.levels.len() - 1, p, false, None)
+                }
+            }
+        };
+
+        // --- learning updates (only from expert annotations) ---------
+        if self.learning {
+            if let Some(y_star) = annotation {
+                flops += self.absorb_annotation(&f, y_star, &seen);
+            }
+            for l in &mut self.levels {
+                l.beta *= l.cfg.beta_decay;
+            }
+        }
+
+        // --- evaluation ----------------------------------------------
+        let expert_would = self.expert.peek(sample, self.classes) == sample.label;
+        self.metrics.record(
+            pred,
+            sample.label,
+            handled_by,
+            expert_called,
+            expert_would,
+            flops,
+        );
+        if self.regret.is_some() {
+            let loss = zero_one_loss(pred, sample.label);
+            self.record_regret(&f, sample, &seen, handled_by, loss);
+        }
+
+        StepOutcome { pred, handled_by, expert_called, annotation, flops }
+    }
+
+    /// Run a whole stream; returns final accuracy.
+    pub fn run_stream(&mut self, stream: &[&Sample]) -> f64 {
+        for s in stream {
+            self.process(s);
+        }
+        self.metrics.finalize();
+        self.metrics.accuracy()
+    }
+
+    /// Fallback when the expert cannot be used (budget exhausted or
+    /// outage): a confidence-weighted ensemble over the levels. Each
+    /// calibrator estimates `P(m_i wrong | m_i(x))`, so weighting each
+    /// level's probability vector by `1 − P(wrong)` is the natural
+    /// posterior mixture — and adds the ensemble's variance reduction
+    /// exactly in the regime (no more annotations) where single-level
+    /// exits are least reliable.
+    fn fallback_pred(
+        &mut self,
+        f: &Rc<Featurized>,
+        seen: &mut [Option<Vec<f32>>],
+    ) -> (usize, f64) {
+        let mut extra = 0.0;
+        let mut mix = vec![0.0f32; self.classes];
+        for i in 0..self.levels.len() {
+            if seen[i].is_none() {
+                let probs = self.levels[i].model.predict(f);
+                extra += CostModel::infer_flops(self.levels[i].cfg.model);
+                seen[i] = Some(probs);
+            }
+            let probs = seen[i].as_ref().expect("fallback probs");
+            let score = self.levels[i].calib.score(probs);
+            extra += CostModel::MLP_INFER;
+            let w = (1.0 - score).max(0.05);
+            for (m, &p) in mix.iter_mut().zip(probs) {
+                *m += w * p;
+            }
+        }
+        (argmax(&mix), extra)
+    }
+
+    /// Push an expert annotation through every level's caches and run
+    /// due OGD updates; returns the training FLOPs charged.
+    ///
+    /// Calibration (Eq. 5) happens exactly on expert-annotated queries:
+    /// levels the walk skipped (DAgger jump) are evaluated here so every
+    /// `f_i` receives its `(m_i(x), z_i)` example — the cost is charged.
+    fn absorb_annotation(
+        &mut self,
+        f: &Rc<Featurized>,
+        y_star: usize,
+        seen: &[Option<Vec<f32>>],
+    ) -> f64 {
+        let mut flops = 0.0;
+        for i in 0..self.levels.len() {
+            self.levels[i].cache.push((f.clone(), y_star));
+            self.levels[i].pending += 1;
+            let probs = match &seen[i] {
+                Some(p) => p.clone(),
+                None => {
+                    let p = self.levels[i].model.predict(f);
+                    flops += CostModel::infer_flops(self.levels[i].cfg.model);
+                    p
+                }
+            };
+            {
+                let probs = &probs;
+                let z = if argmax(probs) != y_star { 1.0 } else { 0.0 };
+                self.levels[i].calib_cache.push((probs.clone(), z));
+                self.levels[i].calib_pending += 1;
+            }
+            let bs = self.levels[i].cfg.batch_size;
+            if self.levels[i].pending >= bs && self.levels[i].cache.len() >= bs {
+                flops += self.train_level(i);
+                self.levels[i].pending = 0;
+            }
+            if self.levels[i].calib_pending >= 8 && self.levels[i].calib_cache.len() >= 8
+            {
+                flops += self.train_calibrator(i);
+                self.levels[i].calib_pending = 0;
+            }
+        }
+        flops
+    }
+
+    fn train_level(&mut self, i: usize) -> f64 {
+        let is_pjrt = matches!(self.cfg.engine, Engine::Pjrt);
+        let items = self.levels[i].cache.to_vec();
+        let bs = self.levels[i].cfg.batch_size;
+        if items.len() < bs {
+            return 0.0;
+        }
+        // Uniform replay over the ring (see REPLAY_FACTOR): half the
+        // batch is the newest annotations (fast adaptation), half is
+        // replayed history (drift resistance). Two passes per trigger —
+        // the distillation baseline trains 5 epochs over its label set
+        // (paper §B.3), so the online learner needs comparable
+        // per-annotation sample efficiency.
+        let mut picked: Vec<usize> = (items.len() - bs / 2..items.len()).collect();
+        picked.extend(self.rng.sample_indices(items.len(), bs - bs / 2));
+        picked.extend(self.rng.sample_indices(items.len(), bs));
+        let mut flops = 0.0;
+        let lvl = &mut self.levels[i];
+        for chunk in picked.chunks(8) {
+            if chunk.len() < 8 && is_pjrt {
+                break; // pjrt step executables are fixed at batch 8
+            }
+            let batch: Vec<(&Featurized, usize)> =
+                chunk.iter().map(|&j| (items[j].0.as_ref(), items[j].1)).collect();
+            lvl.model.train(&batch, lvl.cfg.model_lr);
+            flops += CostModel::train_flops(lvl.cfg.model) * chunk.len() as f64;
+        }
+        flops
+    }
+
+    /// The paper's Tables 3–4 quote calibration-MLP learning rates of
+    /// 7e-4..1e-3 for MLPs over BERT-scale inputs; our probability
+    /// vectors are 2–7 dimensional, so the same rates would need ~100x
+    /// more annotated samples than the budgets provide. The table value
+    /// is kept in the config (for traceability) and scaled here.
+    const MLP_LR_SCALE: f32 = 50.0;
+    /// Replay batches drawn from the calibration cache per trigger.
+    const CALIB_REPLAY: usize = 4;
+
+    fn train_calibrator(&mut self, i: usize) -> f64 {
+        let items = self.levels[i].calib_cache.to_vec();
+        if items.len() < 8 {
+            return 0.0;
+        }
+        let lr = self.levels[i].cfg.mlp_lr * Self::MLP_LR_SCALE;
+        let mut flops = 0.0;
+        for _ in 0..Self::CALIB_REPLAY {
+            let idx = self.rng.sample_indices(items.len(), 8);
+            let batch: Vec<(&[f32], f32)> =
+                idx.iter().map(|&j| (items[j].0.as_slice(), items[j].1)).collect();
+            self.levels[i].calib.train(&batch, lr);
+            flops += CostModel::MLP_TRAIN * 8.0;
+        }
+        flops
+    }
+
+    fn record_regret(
+        &mut self,
+        f: &Rc<Featurized>,
+        sample: &Sample,
+        seen: &[Option<Vec<f32>>],
+        exit_level: usize,
+        loss: f64,
+    ) {
+        let mut fixed = Vec::with_capacity(self.levels.len() + 1);
+        for i in 0..self.levels.len() {
+            let pred = match &seen[i] {
+                Some(p) => argmax(p),
+                None => argmax(&self.levels[i].model.predict(f)),
+            };
+            fixed.push(zero_one_loss(pred, sample.label));
+        }
+        fixed.push(zero_one_loss(
+            self.expert.peek(sample, self.classes),
+            sample.label,
+        ));
+        if let Some(rt) = &mut self.regret {
+            rt.record(exit_level, loss, &fixed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BenchmarkId, CascadeConfig, ExpertId};
+    use crate::data::Benchmark;
+    use crate::sim::ExpertProfile;
+
+    pub(crate) fn build(
+        bench: BenchmarkId,
+        n: usize,
+        seed: u64,
+    ) -> (Cascade, Benchmark) {
+        let b = Benchmark::build_sized(bench, seed, n);
+        let mean_len =
+            b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+        let expert = Expert::new(
+            ExpertProfile::for_pair(ExpertId::Gpt35, bench),
+            b.strata_fractions(),
+            mean_len,
+            seed ^ 0xE,
+        );
+        let cfg = CascadeConfig::small(bench, ExpertId::Gpt35);
+        let c = Cascade::new(cfg, b.classes, expert, None, 200).unwrap();
+        (c, b)
+    }
+
+    #[test]
+    fn early_stream_goes_to_expert() {
+        let (mut c, b) = build(BenchmarkId::Imdb, 50, 1);
+        // β₁ = 1.0: the very first queries must all reach the expert.
+        let out = c.process(&b.samples[0]);
+        assert!(out.expert_called);
+        assert_eq!(out.handled_by, 2);
+        assert!(out.annotation.is_some());
+    }
+
+    #[test]
+    fn smaller_models_take_over() {
+        let (mut c, b) = build(BenchmarkId::Imdb, 1500, 2);
+        let stream = b.stream();
+        c.run_stream(&stream);
+        let frac = c.metrics.handled_fractions();
+        // After 1500 samples the cheap levels must handle a majority
+        // and the LLM share must have dropped well below 1.
+        let small = frac[0] + frac[1];
+        assert!(small > 0.4, "small-model share {small} fracs {frac:?}");
+        assert!(
+            (c.llm_calls() as f64) < 0.7 * stream.len() as f64,
+            "llm calls {}",
+            c.llm_calls()
+        );
+        // β decayed essentially to zero.
+        assert!(c.betas().iter().all(|&b| b < 0.01));
+    }
+
+    #[test]
+    fn accuracy_tracks_expert_on_easy_benchmark() {
+        // Operate near the paper's featured IMDB budget (~30% of the
+        // stream annotated — Fig. 5 runs at 𝒩/T ≈ 0.29).
+        let (mut c, b) = build(BenchmarkId::Imdb, 2500, 3);
+        c.set_threshold_scale(0.7);
+        let acc = c.run_stream(&b.stream());
+        let exp = c.metrics.expert_accuracy();
+        assert!(
+            acc > exp - 0.15,
+            "cascade {acc} too far below expert {exp}"
+        );
+        assert!(
+            (c.llm_calls() as f64) < 0.75 * 2500.0,
+            "too many llm calls: {}",
+            c.llm_calls()
+        );
+    }
+
+    #[test]
+    fn budget_is_hard() {
+        let (mut c, b) = build(BenchmarkId::Imdb, 800, 4);
+        c.set_budget(Some(100));
+        c.run_stream(&b.stream());
+        assert!(c.llm_calls() <= 100, "{} calls", c.llm_calls());
+        assert_eq!(c.metrics.total(), 800);
+    }
+
+    #[test]
+    fn threshold_scale_modulates_llm_usage() {
+        let mut calls = Vec::new();
+        for (i, scale) in [(10u64, 0.4), (11, 2.5)] {
+            let (mut c, b) = build(BenchmarkId::Imdb, 1200, i);
+            c.set_threshold_scale(scale);
+            c.run_stream(&b.stream());
+            calls.push(c.llm_calls());
+        }
+        assert!(
+            calls[0] > calls[1],
+            "lower threshold must defer more: {calls:?}"
+        );
+    }
+
+    #[test]
+    fn expert_outage_falls_back_without_panic() {
+        let (mut c, b) = build(BenchmarkId::Imdb, 300, 5);
+        c.expert_mut().set_available(false);
+        c.run_stream(&b.stream());
+        assert_eq!(c.llm_calls(), 0);
+        assert_eq!(c.metrics.total(), 300);
+    }
+
+    #[test]
+    fn frozen_cascade_never_learns_or_jumps() {
+        let (mut c, b) = build(BenchmarkId::Imdb, 200, 6);
+        c.learning = false;
+        c.run_stream(&b.stream());
+        // β never decayed (no learning), but jumps disabled.
+        assert!(c.betas().iter().all(|&x| (x - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn regret_trends_nonincreasing() {
+        let (mut c, b) = build(BenchmarkId::Imdb, 2000, 7);
+        c.enable_regret_tracking(100);
+        c.run_stream(&b.stream());
+        let rt = c.regret.as_ref().unwrap();
+        let trace = &rt.trace;
+        assert!(trace.len() >= 10);
+        // Average regret in the last quarter must be below the first
+        // quarter (the no-regret property, empirically).
+        let q = trace.len() / 4;
+        let first: f64 =
+            trace[..q].iter().map(|&(_, r)| r).sum::<f64>() / q as f64;
+        let last: f64 =
+            trace[trace.len() - q..].iter().map(|&(_, r)| r).sum::<f64>() / q as f64;
+        assert!(
+            last <= first + 1e-9,
+            "avg regret rose: first {first} last {last}"
+        );
+    }
+
+    #[test]
+    fn deferral_rule_ablations_run() {
+        for rule in [DeferralRule::MaxProb(0.8), DeferralRule::Entropy(0.5)] {
+            let (mut c, b) = build(BenchmarkId::Imdb, 300, 8);
+            c.set_deferral_rule(rule);
+            let acc = c.run_stream(&b.stream());
+            assert!(acc > 0.4, "{rule:?} collapsed: {acc}");
+        }
+    }
+
+    #[test]
+    fn isear_multiclass_runs() {
+        let (mut c, b) = build(BenchmarkId::Isear, 600, 9);
+        let acc = c.run_stream(&b.stream());
+        assert!(acc > 1.0 / 7.0, "above chance: {acc}");
+    }
+}

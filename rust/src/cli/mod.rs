@@ -1,0 +1,177 @@
+//! Declarative CLI argument parser (no `clap` in the offline image).
+//!
+//! Supports `ocl <subcommand> [--key value] [--flag]`. Unknown flags
+//! are errors; every flag documents itself for `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    /// Flag name without leading dashes, e.g. `benchmark`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// Default value (`None` for boolean switches).
+    pub default: Option<&'static str>,
+    /// True for boolean switches that take no value.
+    pub is_switch: bool,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    vals: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+impl Args {
+    /// String value of `name` (declared options always resolve).
+    pub fn get(&self, name: &str) -> &str {
+        self.vals.get(name).map(String::as_str).unwrap_or("")
+    }
+
+    /// Parse the value as `T`, erroring with flag context.
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        self.get(name).parse::<T>().map_err(|_| {
+            Error::Usage(format!("--{name}: cannot parse '{}'", self.get(name)))
+        })
+    }
+
+    /// Boolean switch state.
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A subcommand with declared options.
+pub struct Command {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line description for help output.
+    pub about: &'static str,
+    /// Declared options.
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// New subcommand.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    /// Declare a value option with default.
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_switch: false });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    /// Parse raw argv (after the subcommand token).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.vals.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Usage(format!("unexpected argument '{a}'")))?;
+            let spec = self
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| Error::Usage(format!("unknown flag --{name}")))?;
+            if spec.is_switch {
+                args.switches.insert(name.to_string(), true);
+                i += 1;
+            } else {
+                let v = argv.get(i + 1).ok_or_else(|| {
+                    Error::Usage(format!("--{name} requires a value"))
+                })?;
+                args.vals.insert(name.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(args)
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n", self.name, self.about);
+        for o in &self.opts {
+            let d = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "test")
+            .opt("benchmark", "imdb", "benchmark name")
+            .opt("n", "100", "sample count")
+            .switch("verbose", "noisy output")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&v(&[])).unwrap();
+        assert_eq!(a.get("benchmark"), "imdb");
+        assert_eq!(a.parse::<usize>("n").unwrap(), 100);
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let a = cmd()
+            .parse(&v(&["--n", "5", "--verbose", "--benchmark", "fever"]))
+            .unwrap();
+        assert_eq!(a.parse::<usize>("n").unwrap(), 5);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.get("benchmark"), "fever");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&v(&["--bogus", "1"])).is_err());
+        assert!(cmd().parse(&v(&["--n"])).is_err());
+        assert!(cmd().parse(&v(&["positional"])).is_err());
+        let a = cmd().parse(&v(&["--n", "abc"])).unwrap();
+        assert!(a.parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = cmd().help();
+        assert!(h.contains("--benchmark"));
+        assert!(h.contains("default: 100"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Serialization substrate (no `serde` in the offline image).
+
+pub mod json;
+
+pub use json::{parse, Json};

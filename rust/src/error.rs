@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every subsystem in the crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Artifact manifest missing, malformed, or inconsistent.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// JSON parse/serialize failure (codec substrate).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Configuration error (unknown preset, invalid value, ...).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A model worker thread died or a channel closed unexpectedly.
+    #[error("worker error: {0}")]
+    Worker(String),
+
+    /// Data/benchmark construction failure.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// I/O error with path context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Attach a path to an `std::io::Error`.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,622 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (see DESIGN.md §5 for the index). Each public function prints a
+//! paper-style table/series and optionally writes CSV to `reports/`.
+//!
+//! Streams are scaled by `scale` (default 0.2 in the CLI) relative to
+//! the paper's dataset sizes; budgets 𝒩 scale proportionally, so the
+//! *budget fraction* axis matches the paper exactly. EXPERIMENTS.md
+//! records paper-vs-measured for the featured operating points.
+
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+use crate::baselines::{Distillation, OnlineEnsemble};
+use crate::cascade::Cascade;
+use crate::config::{BenchmarkId, CascadeConfig, Engine, ExpertId, ModelKind};
+use crate::data::{Benchmark, StreamOrder};
+use crate::error::Result;
+use crate::runtime::PjrtEngine;
+use crate::sim::cost::{CostModel, LatencyModel};
+use crate::sim::{Expert, ExpertProfile};
+
+/// Fixed operating threshold scale for budgeted runs (see
+/// `Cascade::set_threshold_scale`): defer-happy so the expert budget is
+/// spent on annotations while it lasts, then the learned levels serve.
+pub const BUDGETED_SCALE: f64 = 0.7;
+
+/// The paper's Table 1 budgets per benchmark (full-size streams).
+pub fn table1_budgets(bench: BenchmarkId) -> [usize; 3] {
+    match bench {
+        BenchmarkId::Imdb => [1300, 3800, 5200],
+        BenchmarkId::HateSpeech => [600, 2700, 4900],
+        BenchmarkId::Isear => [1200, 1500, 2700],
+        BenchmarkId::Fever => [700, 2000, 2800],
+    }
+}
+
+/// Featured case-analysis budgets (Figs 5–8).
+pub fn case_budget(bench: BenchmarkId) -> usize {
+    match bench {
+        BenchmarkId::Imdb => 3671,
+        BenchmarkId::HateSpeech => 507,
+        BenchmarkId::Isear => 2517,
+        BenchmarkId::Fever => 2635,
+    }
+}
+
+/// One run's headline numbers.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Accuracy vs ground truth.
+    pub accuracy: f64,
+    /// Recall of class 1 (reported for HateSpeech).
+    pub recall: f64,
+    /// Precision of class 1.
+    pub precision: f64,
+    /// F1 of class 1.
+    pub f1: f64,
+    /// Expert calls actually used.
+    pub llm_calls: u64,
+    /// Total FLOPs.
+    pub flops: f64,
+    /// Expert-alone accuracy on the same stream.
+    pub expert_accuracy: f64,
+}
+
+/// Common experiment context.
+pub struct Harness {
+    /// Stream scale relative to the paper's dataset sizes.
+    pub scale: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Engine for cascade models.
+    pub engine: Engine,
+    /// PJRT engine when `engine == Pjrt`.
+    pub pjrt: Option<Rc<PjrtEngine>>,
+}
+
+impl Harness {
+    /// Host-engine harness at a stream scale.
+    pub fn new(scale: f64, seed: u64) -> Self {
+        Harness { scale, seed, engine: Engine::Host, pjrt: None }
+    }
+
+    /// Scaled stream length for a benchmark.
+    pub fn stream_len(&self, bench: BenchmarkId) -> usize {
+        ((bench.stream_len() as f64) * self.scale).round().max(300.0) as usize
+    }
+
+    /// Scale a paper budget to this harness's stream size.
+    pub fn scaled_budget(&self, bench: BenchmarkId, full_budget: usize) -> u64 {
+        let frac = full_budget as f64 / bench.stream_len() as f64;
+        ((self.stream_len(bench) as f64) * frac).round().max(16.0) as u64
+    }
+
+    /// Build (benchmark, expert) with calibrated strata/length stats.
+    pub fn setup(&self, bench: BenchmarkId, expert: ExpertId) -> (Benchmark, Expert) {
+        let n = self.stream_len(bench);
+        let b = Benchmark::build_sized(bench, self.seed, n);
+        let mean_len =
+            b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+        let e = Expert::new(
+            ExpertProfile::for_pair(expert, bench),
+            b.strata_fractions(),
+            mean_len,
+            self.seed ^ 0xE0,
+        );
+        (b, e)
+    }
+
+    fn config(&self, bench: BenchmarkId, expert: ExpertId, large: bool) -> CascadeConfig {
+        let mut cfg = if large {
+            CascadeConfig::large(bench, expert)
+        } else {
+            CascadeConfig::small(bench, expert)
+        };
+        cfg.engine = self.engine;
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    /// Run online cascade learning at a budget; returns the result and
+    /// the snapshot series (for case-analysis figures).
+    pub fn run_ocl(
+        &self,
+        bench: BenchmarkId,
+        expert: ExpertId,
+        budget: Option<u64>,
+        large: bool,
+        order: StreamOrder,
+    ) -> Result<(RunResult, Vec<crate::cascade::metrics::Snapshot>)> {
+        let (b, e) = self.setup(bench, expert);
+        let cfg = self.config(bench, expert, large);
+        let snap = (b.samples.len() / 40).max(25);
+        let mut c = Cascade::new(cfg, b.classes, e, self.pjrt.as_ref(), snap)?;
+        c.set_threshold_scale(BUDGETED_SCALE);
+        match budget {
+            Some(n) => c.set_budget_paced(n, b.samples.len()),
+            None => c.set_budget(None),
+        }
+        let stream = b.stream_ordered(order, self.seed);
+        c.run_stream(&stream);
+        let m = &c.metrics;
+        Ok((
+            RunResult {
+                accuracy: m.accuracy(),
+                recall: m.recall(1),
+                precision: m.precision(1),
+                f1: m.f1(1),
+                llm_calls: m.llm_calls(),
+                flops: m.flops(),
+                expert_accuracy: m.expert_accuracy(),
+            },
+            m.series.clone(),
+        ))
+    }
+
+    /// Table-1 protocol variant of [`Harness::run_ocl`]: learning and
+    /// the budget span the whole stream, accuracy is measured on the
+    /// second half only (identical to the distillation test set).
+    pub fn run_ocl_split(
+        &self,
+        bench: BenchmarkId,
+        expert: ExpertId,
+        budget: Option<u64>,
+        large: bool,
+        order: StreamOrder,
+    ) -> Result<RunResult> {
+        let (b, e) = self.setup(bench, expert);
+        let cfg = self.config(bench, expert, large);
+        let mut c = Cascade::new(cfg, b.classes, e, self.pjrt.as_ref(), usize::MAX / 2)?;
+        c.set_threshold_scale(BUDGETED_SCALE);
+        match budget {
+            Some(n) => c.set_budget_paced(n, b.samples.len()),
+            None => c.set_budget(None),
+        }
+        let stream = b.stream_ordered(order, self.seed);
+        let (train, test) = stream.split_at(stream.len() / 2);
+        for s in train {
+            c.process(s);
+        }
+        let spent_first_half = c.llm_calls();
+        c.reset_metrics();
+        for s in test {
+            c.process(s);
+        }
+        c.metrics.finalize();
+        let m = &c.metrics;
+        Ok(RunResult {
+            accuracy: m.accuracy(),
+            recall: m.recall(1),
+            precision: m.precision(1),
+            f1: m.f1(1),
+            llm_calls: m.llm_calls() + spent_first_half,
+            flops: m.flops(),
+            expert_accuracy: m.expert_accuracy(),
+        })
+    }
+
+    /// Test-half protocol variant of [`Harness::run_oel`].
+    pub fn run_oel_split(
+        &self,
+        bench: BenchmarkId,
+        expert: ExpertId,
+        budget: u64,
+        order: StreamOrder,
+    ) -> Result<RunResult> {
+        let (b, e) = self.setup(bench, expert);
+        let cfg = self.config(bench, expert, false);
+        let rate = budget as f64 / b.samples.len() as f64;
+        let mut oel = OnlineEnsemble::new(&cfg, b.classes, e, rate, self.pjrt.as_ref())?;
+        let stream = b.stream_ordered(order, self.seed);
+        let (train, test) = stream.split_at(stream.len() / 2);
+        for s in train {
+            oel.process(s);
+        }
+        let spent = oel.metrics.llm_calls();
+        oel.reset_metrics();
+        for s in test {
+            oel.process(s);
+        }
+        oel.metrics.finalize();
+        let m = &oel.metrics;
+        Ok(RunResult {
+            accuracy: m.accuracy(),
+            recall: m.recall(1),
+            precision: m.precision(1),
+            f1: m.f1(1),
+            llm_calls: m.llm_calls() + spent,
+            flops: m.flops(),
+            expert_accuracy: m.expert_accuracy(),
+        })
+    }
+
+    /// Run the online-ensemble baseline at a budget.
+    pub fn run_oel(
+        &self,
+        bench: BenchmarkId,
+        expert: ExpertId,
+        budget: u64,
+        order: StreamOrder,
+    ) -> Result<RunResult> {
+        let (b, e) = self.setup(bench, expert);
+        let cfg = self.config(bench, expert, false);
+        let rate = budget as f64 / b.samples.len() as f64;
+        let mut oel = OnlineEnsemble::new(&cfg, b.classes, e, rate, self.pjrt.as_ref())?;
+        let stream = b.stream_ordered(order, self.seed);
+        oel.run_stream(&stream);
+        let m = &oel.metrics;
+        Ok(RunResult {
+            accuracy: m.accuracy(),
+            recall: m.recall(1),
+            precision: m.precision(1),
+            f1: m.f1(1),
+            llm_calls: m.llm_calls(),
+            flops: m.flops(),
+            expert_accuracy: m.expert_accuracy(),
+        })
+    }
+
+    /// Run a distillation baseline (50/50 split, budget on train half).
+    pub fn run_distill(
+        &self,
+        bench: BenchmarkId,
+        expert: ExpertId,
+        kind: ModelKind,
+        budget: u64,
+    ) -> Result<RunResult> {
+        let (b, e) = self.setup(bench, expert);
+        let stream = b.stream();
+        let (train, test) = stream.split_at(stream.len() / 2);
+        let mut d = Distillation::new(kind, b.classes, self.seed, self.pjrt.as_ref())?;
+        d.run(&e, train, test, budget as usize);
+        let m = &d.metrics;
+        Ok(RunResult {
+            accuracy: m.accuracy(),
+            recall: m.recall(1),
+            precision: m.precision(1),
+            f1: m.f1(1),
+            llm_calls: budget,
+            flops: m.flops(),
+            expert_accuracy: m.expert_accuracy(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table / figure regenerators
+// ---------------------------------------------------------------------------
+
+fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+/// Table 1: methods × budgets × benchmarks (× experts).
+pub fn table1(h: &Harness, experts: &[ExpertId]) -> Result<String> {
+    let mut out = String::new();
+    for &expert in experts {
+        let _ = writeln!(
+            out,
+            "\n=== Table 1 ({} as the LLM expert, stream scale {}) ===",
+            expert.name(),
+            h.scale
+        );
+        for bench in BenchmarkId::ALL {
+            let budgets = table1_budgets(bench);
+            let _ = writeln!(
+                out,
+                "\n[{}] classes={} stream={} budgets(full)={:?} scaled={:?}",
+                bench.name(),
+                bench.classes(),
+                h.stream_len(bench),
+                budgets,
+                budgets.map(|n| h.scaled_budget(bench, n)),
+            );
+            let hs = bench == BenchmarkId::HateSpeech;
+            let hdr = if hs { "acc|recall" } else { "accuracy" };
+            let _ = writeln!(out, "{:<26} {:>14} {:>14} {:>14}", "method", hdr, hdr, hdr);
+            // Expert reference row (budget 0 run measures it cheaply).
+            let (expert_row, _) =
+                h.run_ocl(bench, expert, Some(0), false, StreamOrder::Natural)?;
+            let _ = writeln!(
+                out,
+                "{:<26} {:>44}",
+                format!("{} (zero-shot)", expert.name()),
+                pct(expert_row.expert_accuracy)
+            );
+            let mut rows: Vec<(String, Vec<String>)> = vec![
+                ("Distilled LR".into(), vec![]),
+                ("Distilled BERT-base".into(), vec![]),
+                ("Online Ensemble".into(), vec![]),
+                ("Online Cascade (ours)".into(), vec![]),
+            ];
+            for &nb in &budgets {
+                let budget = h.scaled_budget(bench, nb);
+                let d1 = h.run_distill(bench, expert, ModelKind::Lr, budget)?;
+                let d2 = h.run_distill(bench, expert, ModelKind::TfmBase, budget)?;
+                let oe = h.run_oel_split(bench, expert, budget, StreamOrder::Natural)?;
+                let oc =
+                    h.run_ocl_split(bench, expert, Some(budget), false, StreamOrder::Natural)?;
+                let fmt = |r: &RunResult| {
+                    if hs {
+                        format!("{}|{}", pct(r.accuracy), pct(r.recall))
+                    } else {
+                        pct(r.accuracy)
+                    }
+                };
+                rows[0].1.push(fmt(&d1));
+                rows[1].1.push(fmt(&d2));
+                rows[2].1.push(fmt(&oe));
+                rows[3].1.push(fmt(&oc));
+            }
+            for (name, cells) in rows {
+                let _ = writeln!(
+                    out,
+                    "{:<26} {:>14} {:>14} {:>14}",
+                    name, cells[0], cells[1], cells[2]
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Figures 3/4/10/11: accuracy(+PRF)-vs-cost curves via budget sweep.
+pub fn curves(
+    h: &Harness,
+    bench: BenchmarkId,
+    expert: ExpertId,
+    large: bool,
+) -> Result<String> {
+    let fracs = [0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8];
+    let t = h.stream_len(bench);
+    let mut out = format!(
+        "# fig-curve bench={} expert={} large={} stream={}\n",
+        bench.name(),
+        expert.name(),
+        large,
+        t
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "budget", "calls", "ocl_acc", "ocl_rec", "ocl_f1", "ocl_prec", "oel_acc", "oel_rec"
+    );
+    for &fr in &fracs {
+        let budget = ((t as f64) * fr).round() as u64;
+        let oc = h.run_ocl_split(bench, expert, Some(budget), large, StreamOrder::Natural)?;
+        let oe = h.run_oel_split(bench, expert, budget, StreamOrder::Natural)?;
+        let _ = writeln!(
+            out,
+            "{:<10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            format!("{:.0}%", fr * 100.0),
+            oc.llm_calls,
+            pct(oc.accuracy),
+            pct(oc.recall),
+            pct(oc.f1),
+            pct(oc.precision),
+            pct(oe.accuracy),
+            pct(oe.recall),
+        );
+    }
+    Ok(out)
+}
+
+/// Figures 5–8: case-analysis time series at the featured budget.
+pub fn case_analysis(h: &Harness, bench: BenchmarkId, expert: ExpertId) -> Result<String> {
+    let budget = h.scaled_budget(bench, case_budget(bench));
+    let (res, series) =
+        h.run_ocl(bench, expert, Some(budget), false, StreamOrder::Natural)?;
+    let mut out = format!(
+        "# fig-case bench={} expert={} budget={} (paper N={})\n",
+        bench.name(),
+        expert.name(),
+        budget,
+        case_budget(bench)
+    );
+    let _ = writeln!(
+        out,
+        "{:>7} {:>8} {:>11} {:>8} {:>8} {:>8} {:>9}",
+        "t", "acc", "expert_acc", "f_lr", "f_bert", "f_llm", "llm_calls"
+    );
+    for s in &series {
+        let _ = writeln!(
+            out,
+            "{:>7} {:>8} {:>11} {:>8.3} {:>8.3} {:>8.3} {:>9}",
+            s.t,
+            pct(s.accuracy),
+            pct(s.expert_accuracy),
+            s.handled_frac[0],
+            s.handled_frac[1],
+            s.handled_frac[2],
+            s.llm_calls
+        );
+    }
+    let _ = writeln!(
+        out,
+        "final: acc={} expert={} llm_calls={} savings={:.0}%",
+        pct(res.accuracy),
+        pct(res.expert_accuracy),
+        res.llm_calls,
+        (1.0 - res.llm_calls as f64 / h.stream_len(bench) as f64) * 100.0
+    );
+    Ok(out)
+}
+
+/// Figure 9 + Table 2: distribution-shift robustness on IMDB.
+pub fn shift(h: &Harness, expert: ExpertId) -> Result<String> {
+    let bench = BenchmarkId::Imdb;
+    let t = h.stream_len(bench);
+    let fracs = [0.1, 0.2, 0.3, 0.5];
+    let scenarios: [(&str, StreamOrder); 3] = [
+        ("natural", StreamOrder::Natural),
+        ("length-sorted", StreamOrder::LengthAscending),
+        (
+            "category-holdout",
+            StreamOrder::CategoryHoldout(crate::data::IMDB_HELDOUT_CATEGORY),
+        ),
+    ];
+    let mut out = format!("# fig9/table2 shift robustness expert={}\n", expert.name());
+    let mut avgs = Vec::new();
+    for (name, order) in scenarios {
+        let _ = writeln!(out, "\n[{name}]");
+        let _ = writeln!(out, "{:<8} {:>8} {:>9} {:>9}", "budget", "calls", "ocl_acc", "oel_acc");
+        let mut accs = Vec::new();
+        for &fr in &fracs {
+            let budget = ((t as f64) * fr).round() as u64;
+            let oc = h.run_ocl_split(bench, expert, Some(budget), false, order)?;
+            let oe = h.run_oel_split(bench, expert, budget, order)?;
+            accs.push(oc.accuracy);
+            let _ = writeln!(
+                out,
+                "{:<8} {:>8} {:>9} {:>9}",
+                format!("{:.0}%", fr * 100.0),
+                oc.llm_calls,
+                pct(oc.accuracy),
+                pct(oe.accuracy)
+            );
+        }
+        avgs.push((name, accs.iter().sum::<f64>() / accs.len() as f64));
+    }
+    let base = avgs[0].1;
+    let _ = writeln!(out, "\n# Table 2: average OCL accuracy across budgets");
+    for (name, a) in &avgs {
+        let _ = writeln!(out, "{:<20} {:>8}  diff {:+.2} pts", name, pct(*a), (a - base) * 100.0);
+    }
+    Ok(out)
+}
+
+/// Table 5: expert accuracy by document-length bucket (IMDB).
+pub fn table5(h: &Harness, expert: ExpertId) -> Result<String> {
+    let (b, e) = h.setup(BenchmarkId::Imdb, expert);
+    let mut sorted: Vec<_> = b.samples.iter().collect();
+    sorted.sort_by_key(|s| s.len);
+    let q = sorted.len() / 5;
+    let mut out = format!(
+        "# Table 5: {} accuracy by IMDB length bucket (tokens)\n",
+        expert.name()
+    );
+    let _ = writeln!(out, "{:<16} {:>7} {:>10} {:>10}", "bucket", "count", "avg_len", "accuracy");
+    let mut total_correct = 0usize;
+    for i in 0..5 {
+        let lo = i * q;
+        let hi = if i == 4 { sorted.len() } else { (i + 1) * q };
+        let xs = &sorted[lo..hi];
+        let correct = xs.iter().filter(|s| e.peek(s, b.classes) == s.label).count();
+        total_correct += correct;
+        let avg = xs.iter().map(|s| s.len as f64).sum::<f64>() / xs.len() as f64;
+        let _ = writeln!(
+            out,
+            "{:<16} {:>7} {:>10.1} {:>10}",
+            format!(
+                "{}-{}",
+                xs.first().map(|s| s.len).unwrap_or(0),
+                xs.last().map(|s| s.len).unwrap_or(0)
+            ),
+            xs.len(),
+            avg,
+            pct(correct as f64 / xs.len() as f64)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{:<16} {:>7} {:>10} {:>10}",
+        "total",
+        sorted.len(),
+        "",
+        pct(total_correct as f64 / sorted.len() as f64)
+    );
+    Ok(out)
+}
+
+/// Appendix B.1 + C.1: prefill latency model and cost equilibrium.
+pub fn costmodel() -> String {
+    let mut out = String::from("# Appendix B.1 — prefill experiment (replayed model)\n");
+    let _ = writeln!(
+        out,
+        "8192-token prompt first-token latency: {:.2} s (paper: 3.6 s)",
+        LatencyModel::prefill_secs(8192.0)
+    );
+    let _ = writeln!(
+        out,
+        "docs/hour/server: {:.0}; servers for 1M docs/h: {:.0} (paper: 1000)",
+        LatencyModel::docs_per_hour_per_server(),
+        LatencyModel::servers_needed(1e6)
+    );
+    let _ = writeln!(out, "\n# Appendix C.1 — FLOP accounting");
+    for (name, inf, tr) in [
+        ("LR", CostModel::LR_INFER, CostModel::LR_TRAIN),
+        ("BERT-base", CostModel::BERT_BASE_INFER, CostModel::BERT_BASE_TRAIN),
+        ("BERT-large", CostModel::BERT_LARGE_INFER, CostModel::BERT_LARGE_TRAIN),
+    ] {
+        let _ = writeln!(out, "{name:<12} infer {inf:>12.3e}  train {tr:>12.3e} FLOPs");
+    }
+    let _ = writeln!(
+        out,
+        "Llama-2-70B infer: {:.3e} FLOPs ({:.1e}x the full cascade train cost)",
+        CostModel::LLM_INFER,
+        CostModel::LLM_INFER / CostModel::large_cascade_train_flops()
+    );
+    let _ = writeln!(out, "\n# cost equilibrium M = xC/(3-2x)");
+    for x in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let _ = writeln!(
+            out,
+            "x={x:.1}: M = {:.3e} FLOPs",
+            CostModel::equilibrium_small_model_budget(x, CostModel::LLM_INFER)
+        );
+    }
+    out
+}
+
+/// Write a report to `<dir>/<name>` and echo to stdout.
+pub fn emit(dir: &str, name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| crate::error::Error::io(dir.to_string(), e))?;
+    let path = std::path::Path::new(dir).join(name);
+    std::fs::write(&path, content)
+        .map_err(|e| crate::error::Error::io(path.display().to_string(), e))?;
+    println!("{content}");
+    eprintln!("[wrote {}]", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_scaling() {
+        let h = Harness::new(0.02, 5);
+        assert_eq!(h.stream_len(BenchmarkId::Imdb), 500);
+        assert_eq!(h.scaled_budget(BenchmarkId::Imdb, 1300), 26);
+    }
+
+    #[test]
+    fn costmodel_renders() {
+        let s = costmodel();
+        assert!(s.contains("3.6"));
+        assert!(s.contains("equilibrium"));
+    }
+
+    #[test]
+    fn table5_shows_declining_accuracy() {
+        let h = Harness::new(0.3, 7);
+        let s = table5(&h, ExpertId::Gpt35).unwrap();
+        assert!(s.contains("bucket"));
+        let accs: Vec<f64> = s
+            .lines()
+            .skip(2)
+            .take(5)
+            .filter_map(|l| l.split_whitespace().last()?.parse().ok())
+            .collect();
+        assert_eq!(accs.len(), 5);
+        assert!(accs[0] > accs[4], "{accs:?}");
+    }
+
+    #[test]
+    fn tiny_case_analysis_runs() {
+        let h = Harness::new(0.02, 9);
+        let s = case_analysis(&h, BenchmarkId::HateSpeech, ExpertId::Gpt35).unwrap();
+        assert!(s.contains("final:"));
+    }
+}

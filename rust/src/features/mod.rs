@@ -1,0 +1,212 @@
+//! Text featurization substrate: tokenizer, hashing vectorizer (LR
+//! input) and vocabulary indexer (transformer input).
+//!
+//! Both featurizers are *stateless hash functions* of the token string,
+//! so the rust runtime, the host-engine mirrors, and the AOT artifacts
+//! all see identical inputs with zero fitting/vocab files. Hot-path
+//! methods write into caller-provided buffers — no allocation per query
+//! (DESIGN.md §9 L3 target).
+
+use crate::config::dims::{HASH_DIM, SEQ_LEN, VOCAB};
+
+/// FNV-1a 64-bit hash of a byte string.
+#[inline]
+pub fn fnv1a(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64 ^ seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01B3);
+    }
+    h
+}
+
+/// Iterate whitespace-separated, lowercased, alphanumeric-trimmed tokens.
+pub fn tokenize(text: &str) -> impl Iterator<Item = &str> {
+    text.split_whitespace().filter_map(|t| {
+        let t = t.trim_matches(|c: char| !c.is_alphanumeric());
+        if t.is_empty() {
+            None
+        } else {
+            Some(t)
+        }
+    })
+}
+
+/// Hashing bag-of-words vectorizer producing the LR input.
+#[derive(Clone, Debug)]
+pub struct HashingVectorizer {
+    dim: usize,
+    seed: u64,
+}
+
+impl Default for HashingVectorizer {
+    fn default() -> Self {
+        HashingVectorizer { dim: HASH_DIM, seed: 0x5EED_F00D }
+    }
+}
+
+impl HashingVectorizer {
+    /// Custom dimension/seed (tests).
+    pub fn new(dim: usize, seed: u64) -> Self {
+        HashingVectorizer { dim, seed }
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Vectorize into `out` (len == dim): L2-normalized token counts
+    /// with signed hashing (sign bit decorrelates collisions). No
+    /// allocation.
+    pub fn vectorize_into(&self, text: &str, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        out.fill(0.0);
+        let mut n = 0usize;
+        for tok in tokenize(text) {
+            let h = fnv1a(tok.as_bytes(), self.seed);
+            let idx = (h % self.dim as u64) as usize;
+            let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+            out[idx] += sign;
+            n += 1;
+        }
+        if n == 0 {
+            return;
+        }
+        let norm: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for x in out.iter_mut() {
+                *x /= norm;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper.
+    pub fn vectorize(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0.0; self.dim];
+        self.vectorize_into(text, &mut v);
+        v
+    }
+}
+
+/// Vocabulary indexer producing the transformer input: token ids via
+/// hashing into `[2, vocab)` (0 = PAD, 1 = OOV-reserved), truncated or
+/// padded to `seq_len`, plus the f32 padding mask.
+#[derive(Clone, Debug)]
+pub struct VocabIndexer {
+    vocab: usize,
+    seq_len: usize,
+    seed: u64,
+}
+
+impl Default for VocabIndexer {
+    fn default() -> Self {
+        VocabIndexer { vocab: VOCAB, seq_len: SEQ_LEN, seed: 0xB0CA_B1E5 }
+    }
+}
+
+impl VocabIndexer {
+    /// Custom sizes (tests).
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> Self {
+        VocabIndexer { vocab, seq_len, seed }
+    }
+
+    /// Sequence length produced.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Index into caller buffers (`ids`/`mask` len == seq_len). No
+    /// allocation. Returns the number of real (unpadded) tokens.
+    pub fn index_into(&self, text: &str, ids: &mut [i32], mask: &mut [f32]) -> usize {
+        debug_assert_eq!(ids.len(), self.seq_len);
+        debug_assert_eq!(mask.len(), self.seq_len);
+        let mut n = 0usize;
+        for tok in tokenize(text) {
+            if n == self.seq_len {
+                break;
+            }
+            let h = fnv1a(tok.as_bytes(), self.seed);
+            ids[n] = (2 + (h % (self.vocab as u64 - 2))) as i32;
+            mask[n] = 1.0;
+            n += 1;
+        }
+        for i in n..self.seq_len {
+            ids[i] = 0;
+            mask[i] = 0.0;
+        }
+        n
+    }
+
+    /// Allocating convenience wrapper: (ids, mask, real_len).
+    pub fn index(&self, text: &str) -> (Vec<i32>, Vec<f32>, usize) {
+        let mut ids = vec![0i32; self.seq_len];
+        let mut mask = vec![0f32; self.seq_len];
+        let n = self.index_into(text, &mut ids, &mut mask);
+        (ids, mask, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_basics() {
+        let toks: Vec<&str> = tokenize("Hello, world!  foo-bar 42 ").collect();
+        assert_eq!(toks, vec!["Hello", "world", "foo-bar", "42"]);
+        assert_eq!(tokenize("  ... !!! ").count(), 0);
+    }
+
+    #[test]
+    fn hashing_is_deterministic_and_normalized() {
+        let v = HashingVectorizer::default();
+        let a = v.vectorize("kw1x001 kw1x001 c0w0001");
+        let b = v.vectorize("kw1x001 kw1x001 c0w0001");
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn different_texts_differ() {
+        let v = HashingVectorizer::default();
+        assert_ne!(v.vectorize("kw0x001"), v.vectorize("kw1x001"));
+    }
+
+    #[test]
+    fn empty_text_is_zero_vector() {
+        let v = HashingVectorizer::default();
+        assert!(v.vectorize("").iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn vectorize_into_no_alloc_path_matches() {
+        let v = HashingVectorizer::default();
+        let mut buf = vec![1.0f32; v.dim()];
+        v.vectorize_into("a b c a", &mut buf);
+        assert_eq!(buf, v.vectorize("a b c a"));
+    }
+
+    #[test]
+    fn indexer_pads_and_truncates() {
+        let ix = VocabIndexer::new(100, 4, 0);
+        let (ids, mask, n) = ix.index("a b");
+        assert_eq!(n, 2);
+        assert_eq!(&mask, &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(ids[2], 0);
+        assert!(ids[0] >= 2 && ids[0] < 100);
+
+        let (_, mask, n) = ix.index("a b c d e f");
+        assert_eq!(n, 4);
+        assert_eq!(&mask, &[1.0; 4]);
+    }
+
+    #[test]
+    fn indexer_ids_stable_per_token() {
+        let ix = VocabIndexer::default();
+        let (ids1, _, _) = ix.index("tok1 tok2 tok1");
+        assert_eq!(ids1[0], ids1[2]);
+        assert_ne!(ids1[0], ids1[1]);
+    }
+}

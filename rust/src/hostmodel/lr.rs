@@ -1,0 +1,171 @@
+//! Host mirror of the logistic-regression level (L2 `models/lr.py`).
+//!
+//! Forward = the fused-head kernel's semantics; update = the fused
+//! Pallas `lr_grad_step` semantics (`W -= lr·xᵀg/B`, `b -= lr·mean(g)`).
+//! The forward exploits the sparsity of hashed bag-of-words inputs.
+
+use crate::util::softmax;
+
+/// Logistic regression over `dim` features and `classes` labels.
+#[derive(Clone, Debug)]
+pub struct HostLr {
+    dim: usize,
+    classes: usize,
+    /// Row-major `[dim, classes]`.
+    w: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl HostLr {
+    /// Zero-initialized (matches `lr.init_params`).
+    pub fn new(dim: usize, classes: usize) -> Self {
+        HostLr { dim, classes, w: vec![0.0; dim * classes], b: vec![0.0; classes] }
+    }
+
+    /// Load from a flat parameter blob `[w (dim*classes), b (classes)]`.
+    pub fn from_flat(dim: usize, classes: usize, flat: &[f32]) -> Self {
+        assert_eq!(flat.len(), dim * classes + classes);
+        HostLr {
+            dim,
+            classes,
+            w: flat[..dim * classes].to_vec(),
+            b: flat[dim * classes..].to_vec(),
+        }
+    }
+
+    /// Snapshot parameters as one flat blob (PJRT interop/tests).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut v = self.w.clone();
+        v.extend_from_slice(&self.b);
+        v
+    }
+
+    /// Number of classes.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// probs = softmax(x·W + b); sparse-aware over x.
+    pub fn predict(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut logits = self.b.clone();
+        for (d, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &self.w[d * self.classes..(d + 1) * self.classes];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += xv * wv;
+            }
+        }
+        softmax(&logits)
+    }
+
+    /// One OGD minibatch step; returns the mean cross-entropy loss.
+    pub fn train_batch(&mut self, xs: &[&[f32]], ys: &[usize], lr: f32) -> f32 {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let bsz = xs.len() as f32;
+        let c = self.classes;
+        let mut loss = 0.0f32;
+        // Accumulate bias grad densely; weight grad applied sparsely
+        // per sample (x rows are sparse).
+        let mut db = vec![0.0f32; c];
+        // g rows are needed per sample for the sparse W update.
+        for (&x, &y) in xs.iter().zip(ys) {
+            let probs = self.predict(x);
+            loss -= (probs[y] + 1e-9).ln();
+            // g = probs - onehot(y)
+            for (j, db_j) in db.iter_mut().enumerate() {
+                let g = probs[j] - if j == y { 1.0 } else { 0.0 };
+                *db_j += g;
+            }
+            let scale = lr / bsz;
+            for (d, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &mut self.w[d * c..(d + 1) * c];
+                for (j, wv) in row.iter_mut().enumerate() {
+                    let g = probs[j] - if j == y { 1.0 } else { 0.0 };
+                    *wv -= scale * xv * g;
+                }
+            }
+        }
+        for (bj, &dbj) in self.b.iter_mut().zip(&db) {
+            *bj -= lr * dbj / bsz;
+        }
+        loss / bsz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn uniform_at_init() {
+        let m = HostLr::new(16, 4);
+        let p = m.predict(&vec![0.5; 16]);
+        for &v in &p {
+            assert!((v - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn learns_separable_data() {
+        let mut rng = Rng::new(3);
+        let dim = 64;
+        let mut m = HostLr::new(dim, 2);
+        let gen = |rng: &mut Rng, y: usize| -> Vec<f32> {
+            let mut x = vec![0.0f32; dim];
+            for _ in 0..6 {
+                let base = if y == 0 { 0 } else { dim / 2 };
+                x[base + rng.below(dim / 2)] = 1.0;
+            }
+            x
+        };
+        for _ in 0..100 {
+            let ys: Vec<usize> = (0..8).map(|_| rng.below(2)).collect();
+            let xs: Vec<Vec<f32>> = ys.iter().map(|&y| gen(&mut rng, y)).collect();
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            m.train_batch(&xrefs, &ys, 0.5);
+        }
+        let mut correct = 0;
+        for _ in 0..200 {
+            let y = rng.below(2);
+            let x = gen(&mut rng, y);
+            if crate::util::argmax(&m.predict(&x)) == y {
+                correct += 1;
+            }
+        }
+        assert!(correct > 190, "correct={correct}");
+    }
+
+    #[test]
+    fn train_reduces_loss_on_fixed_batch() {
+        let mut rng = Rng::new(5);
+        let mut m = HostLr::new(32, 3);
+        let xs: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..32).map(|_| rng.f32() - 0.5).collect()).collect();
+        let ys: Vec<usize> = (0..8).map(|_| rng.below(3)).collect();
+        let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let l0 = m.train_batch(&xr, &ys, 0.3);
+        let mut l = l0;
+        for _ in 0..20 {
+            l = m.train_batch(&xr, &ys, 0.3);
+        }
+        assert!(l < l0, "{l} !< {l0}");
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let mut m = HostLr::new(8, 2);
+        let xs = vec![vec![1.0f32; 8]];
+        let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        m.train_batch(&xr, &[1], 0.5);
+        let m2 = HostLr::from_flat(8, 2, &m.to_flat());
+        assert_eq!(m.predict(&xs[0]), m2.predict(&xs[0]));
+    }
+}

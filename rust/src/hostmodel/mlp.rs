@@ -1,0 +1,201 @@
+//! Host mirror of the deferral-calibration MLP (L2 `models/mlp.py`).
+//!
+//! Input features: `[probs ++ maxprob ++ normalized entropy]`; one tanh
+//! hidden layer (16 units), sigmoid output; MSE objective against
+//! `z = 1[argmax m_i(x) != y*]` (paper Eq. 5).
+
+use crate::prng::Rng;
+use crate::util::normalized_entropy;
+
+/// Hidden width — matches `python/compile/models/mlp.py::HIDDEN`.
+pub const HIDDEN: usize = 16;
+
+/// Calibration MLP for a `classes`-way level.
+#[derive(Clone, Debug)]
+pub struct HostMlp {
+    classes: usize,
+    in_dim: usize,
+    /// `[in_dim, HIDDEN]` row-major.
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    /// `[HIDDEN, 1]`.
+    w2: Vec<f32>,
+    b2: f32,
+}
+
+impl HostMlp {
+    /// Glorot-uniform init, deterministic in `seed` (host-only runs).
+    pub fn new(classes: usize, seed: u64) -> Self {
+        let in_dim = classes + 2;
+        let mut rng = Rng::new(seed ^ 0x11AC_B00C);
+        let lim1 = (6.0 / (in_dim + HIDDEN) as f64).sqrt();
+        let w1 = (0..in_dim * HIDDEN)
+            .map(|_| rng.range_f64(-lim1, lim1) as f32)
+            .collect();
+        let lim2 = (6.0 / (HIDDEN + 1) as f64).sqrt();
+        let w2 = (0..HIDDEN).map(|_| rng.range_f64(-lim2, lim2) as f32).collect();
+        // +1 output bias: initial score ≈ 0.73 keeps the cascade's
+        // gates open at startup (matches mlp.py init; see paper §1).
+        HostMlp { classes, in_dim, w1, b1: vec![0.0; HIDDEN], w2, b2: 1.0 }
+    }
+
+    /// Load from a flat blob `[w1, b1, w2, b2]` (aot.py init order).
+    pub fn from_flat(classes: usize, flat: &[f32]) -> Self {
+        let in_dim = classes + 2;
+        let n1 = in_dim * HIDDEN;
+        assert_eq!(flat.len(), n1 + HIDDEN + HIDDEN + 1);
+        HostMlp {
+            classes,
+            in_dim,
+            w1: flat[..n1].to_vec(),
+            b1: flat[n1..n1 + HIDDEN].to_vec(),
+            w2: flat[n1 + HIDDEN..n1 + 2 * HIDDEN].to_vec(),
+            b2: flat[n1 + 2 * HIDDEN],
+        }
+    }
+
+    /// Snapshot as one flat blob.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut v = self.w1.clone();
+        v.extend_from_slice(&self.b1);
+        v.extend_from_slice(&self.w2);
+        v.push(self.b2);
+        v
+    }
+
+    fn features(&self, probs: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(probs);
+        out.push(probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max));
+        out.push(normalized_entropy(probs));
+    }
+
+    /// Deferral score in (0,1) for one probability vector.
+    pub fn predict(&self, probs: &[f32]) -> f32 {
+        debug_assert_eq!(probs.len(), self.classes);
+        let mut feat = Vec::with_capacity(self.in_dim);
+        self.features(probs, &mut feat);
+        let mut logit = self.b2;
+        for h in 0..HIDDEN {
+            let mut a = self.b1[h];
+            for (i, &f) in feat.iter().enumerate() {
+                a += f * self.w1[i * HIDDEN + h];
+            }
+            logit += a.tanh() * self.w2[h];
+        }
+        1.0 / (1.0 + (-logit).exp())
+    }
+
+    /// One OGD minibatch step on MSE(score, z); returns the loss.
+    pub fn train_batch(&mut self, probs: &[&[f32]], zs: &[f32], lr: f32) -> f32 {
+        assert_eq!(probs.len(), zs.len());
+        assert!(!probs.is_empty());
+        let bsz = probs.len() as f32;
+        let mut dw1 = vec![0.0f32; self.w1.len()];
+        let mut db1 = vec![0.0f32; HIDDEN];
+        let mut dw2 = vec![0.0f32; HIDDEN];
+        let mut db2 = 0.0f32;
+        let mut loss = 0.0f32;
+        let mut feat = Vec::with_capacity(self.in_dim);
+        for (&p, &z) in probs.iter().zip(zs) {
+            self.features(p, &mut feat);
+            // forward with caches
+            let mut hpre = vec![0.0f32; HIDDEN];
+            let mut hact = vec![0.0f32; HIDDEN];
+            let mut logit = self.b2;
+            for h in 0..HIDDEN {
+                let mut a = self.b1[h];
+                for (i, &f) in feat.iter().enumerate() {
+                    a += f * self.w1[i * HIDDEN + h];
+                }
+                hpre[h] = a;
+                hact[h] = a.tanh();
+                logit += hact[h] * self.w2[h];
+            }
+            let s = 1.0 / (1.0 + (-logit).exp());
+            loss += (s - z) * (s - z);
+            // backward: dL/ds = 2(s-z)/B ; ds/dlogit = s(1-s)
+            let dlogit = 2.0 * (s - z) / bsz * s * (1.0 - s);
+            db2 += dlogit;
+            for h in 0..HIDDEN {
+                dw2[h] += dlogit * hact[h];
+                let dh = dlogit * self.w2[h] * (1.0 - hact[h] * hact[h]);
+                db1[h] += dh;
+                for (i, &f) in feat.iter().enumerate() {
+                    dw1[i * HIDDEN + h] += dh * f;
+                }
+            }
+        }
+        for (w, d) in self.w1.iter_mut().zip(&dw1) {
+            *w -= lr * d;
+        }
+        for (w, d) in self.b1.iter_mut().zip(&db1) {
+            *w -= lr * d;
+        }
+        for (w, d) in self.w2.iter_mut().zip(&dw2) {
+            *w -= lr * d;
+        }
+        self.b2 -= lr * db2;
+        loss / bsz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_in_unit_interval() {
+        let m = HostMlp::new(7, 0);
+        let p = vec![1.0 / 7.0; 7];
+        let s = m.predict(&p);
+        assert!(s > 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn learns_confidence_signal() {
+        // Train "defer when max-prob is low" — the calibrator's job.
+        let mut m = HostMlp::new(2, 1);
+        let mut rng = Rng::new(2);
+        for _ in 0..400 {
+            let ps: Vec<Vec<f32>> = (0..8)
+                .map(|_| {
+                    let c = 0.5 + 0.5 * rng.f32();
+                    vec![c, 1.0 - c]
+                })
+                .collect();
+            let zs: Vec<f32> =
+                ps.iter().map(|p| if p[0] < 0.75 { 1.0 } else { 0.0 }).collect();
+            let prefs: Vec<&[f32]> = ps.iter().map(|v| v.as_slice()).collect();
+            m.train_batch(&prefs, &zs, 0.05);
+        }
+        assert!(m.predict(&[0.55, 0.45]) > m.predict(&[0.98, 0.02]));
+    }
+
+    #[test]
+    fn train_reduces_mse() {
+        let mut m = HostMlp::new(3, 3);
+        let ps = [
+            vec![0.8f32, 0.1, 0.1],
+            vec![0.4, 0.3, 0.3],
+            vec![0.34, 0.33, 0.33],
+            vec![0.95, 0.03, 0.02],
+        ];
+        let zs = [0.0f32, 1.0, 1.0, 0.0];
+        let prefs: Vec<&[f32]> = ps.iter().map(|v| v.as_slice()).collect();
+        let l0 = m.train_batch(&prefs, &zs, 0.1);
+        let mut l = l0;
+        for _ in 0..100 {
+            l = m.train_batch(&prefs, &zs, 0.1);
+        }
+        assert!(l < l0 * 0.8, "{l} vs {l0}");
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let m = HostMlp::new(2, 4);
+        let m2 = HostMlp::from_flat(2, &m.to_flat());
+        let p = [0.7f32, 0.3];
+        assert_eq!(m.predict(&p), m2.predict(&p));
+    }
+}

@@ -1,0 +1,18 @@
+//! Host engine: pure-rust mirrors of every L2 jax graph.
+//!
+//! Purpose (DESIGN.md §7): (a) fast experiment sweeps without PJRT
+//! dispatch overhead, (b) an independent implementation to parity-test
+//! the AOT artifacts against, (c) the baseline for the §Perf L3
+//! comparison. Architectures, initialization blobs, and numerics
+//! (tanh-GELU, pre-LN, masked mean pooling, max-subtracted softmax)
+//! match `python/compile/models/*` exactly; forward parity vs PJRT is
+//! asserted to ≤1e-4 in the artifact-gated integration tests.
+
+pub mod lr;
+pub mod mlp;
+pub mod tensor;
+pub mod tfm;
+
+pub use lr::HostLr;
+pub use mlp::HostMlp;
+pub use tfm::{HostTfm, TfmArch};

@@ -1,0 +1,307 @@
+//! Minimal dense f32 tensor ops for the host-engine model mirrors.
+//!
+//! Row-major, shape-explicit free functions over `&[f32]` — enough to
+//! express the L2 graphs (linear, layernorm, gelu, softmax, attention)
+//! and their manual backward passes. The matmul uses the cache-friendly
+//! i-k-j loop order which LLVM autovectorizes; model dimensions here
+//! (d ≤ 96) keep everything L1/L2-resident.
+
+/// c[m,n] = a[m,k] @ b[k,n] (accumulating into zeroed output).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse inputs (hashed BoW) skip entire rows
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// c[m,n] += a[k,m]^T @ b[k,n] — the dW of a linear layer.
+pub fn matmul_at_b_accum(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// c[m,k] = a[m,n] @ b[k,n]^T — the dx of a linear layer.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// y[m,n] = x[m,k] @ w[k,n] + b[n].
+pub fn linear(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul(x, w, y, m, k, n);
+    for i in 0..m {
+        for (yv, &bv) in y[i * n..(i + 1) * n].iter_mut().zip(b) {
+            *yv += bv;
+        }
+    }
+}
+
+/// In-place row softmax over `[rows, cols]` (max-subtracted).
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        let inv = 1.0 / s;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// GELU, tanh approximation — must match `jax.nn.gelu` (approximate=True).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d gelu / dx for the tanh approximation.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    let x3 = x * x * x;
+    let inner = C * (x + 0.044715 * x3);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// LayerNorm forward over the last axis of `[rows, d]`.
+///
+/// Writes normalized output to `y` and (optionally) caches per-row
+/// `(mu, inv_sigma)` into `stats` (len 2*rows) for the backward pass.
+pub fn layernorm(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    stats: Option<&mut [f32]>,
+    rows: usize,
+    d: usize,
+    eps: f32,
+) {
+    let mut stats_buf = stats;
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = (xr[i] - mu) * inv * g[i] + b[i];
+        }
+        if let Some(s) = stats_buf.as_deref_mut() {
+            s[2 * r] = mu;
+            s[2 * r + 1] = inv;
+        }
+    }
+}
+
+/// LayerNorm backward: given dy, x, cached stats → dx (+= into dg/db).
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_backward(
+    dy: &[f32],
+    x: &[f32],
+    g: &[f32],
+    stats: &[f32],
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+    rows: usize,
+    d: usize,
+) {
+    for r in 0..rows {
+        let (mu, inv) = (stats[2 * r], stats[2 * r + 1]);
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        // dxhat, and the two means the formula needs.
+        let mut mean_dxhat = 0.0f32;
+        let mut mean_dxhat_xhat = 0.0f32;
+        for i in 0..d {
+            let xhat = (xr[i] - mu) * inv;
+            let dxhat = dyr[i] * g[i];
+            mean_dxhat += dxhat;
+            mean_dxhat_xhat += dxhat * xhat;
+            dg[i] += dyr[i] * xhat;
+            db[i] += dyr[i];
+        }
+        mean_dxhat /= d as f32;
+        mean_dxhat_xhat /= d as f32;
+        for i in 0..d {
+            let xhat = (xr[i] - mu) * inv;
+            let dxhat = dyr[i] * g[i];
+            dxr[i] = inv * (dxhat - mean_dxhat - xhat * mean_dxhat_xhat);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, a);
+        // with ones: rows sum
+        let b1 = [1.0, 1.0, 1.0, 1.0];
+        matmul(&a, &b1, &mut c, 2, 2, 2);
+        assert_eq!(c, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_transposes_agree() {
+        // verify A^T B and A B^T against naive matmul
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3,2] or [2,3]
+        let b = [1.0, -1.0, 0.5, 2.0, -0.5, 1.5]; // [3,2] or [2,3]
+        // A^T B with A:[3,2] -> [2,2]
+        let mut c = [0.0; 4];
+        matmul_at_b_accum(&a, &b, &mut c, 3, 2, 2);
+        // naive
+        let mut want = [0.0; 4];
+        for k in 0..3 {
+            for i in 0..2 {
+                for j in 0..2 {
+                    want[i * 2 + j] += a[k * 2 + i] * b[k * 2 + j];
+                }
+            }
+        }
+        assert_eq!(c, want);
+        // A B^T with A:[2,3], B:[2,3] -> [2,2]
+        let mut c2 = [0.0; 4];
+        matmul_a_bt(&a, &b, &mut c2, 2, 3, 2);
+        let mut want2 = [0.0; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                for n in 0..3 {
+                    want2[i * 2 + j] += a[i * 3 + n] * b[j * 3 + n];
+                }
+            }
+        }
+        assert_eq!(c2, want2);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut x = [1.0, 2.0, 3.0, 1000.0, 1001.0, 999.0];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(x[r * 3..(r + 1) * 3].iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // Values from jax.nn.gelu (approximate=True).
+        assert!((gelu(0.0) - 0.0).abs() < 1e-6);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.996363).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_is_numeric_derivative() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let h = 1e-3;
+            let num = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - num).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn layernorm_forward_stats() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let g = [1.0, 1.0, 1.0, 1.0];
+        let b = [0.0; 4];
+        let mut y = [0.0; 4];
+        let mut stats = [0.0; 2];
+        layernorm(&x, &g, &b, &mut y, Some(&mut stats), 1, 4, 1e-5);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_backward_numeric() {
+        // finite-difference check of dx through a scalar loss sum(y*w)
+        let x = [0.3f32, -1.2, 0.8, 2.1, -0.4, 0.05];
+        let g = [1.1f32, 0.9, 1.3];
+        let bb = [0.1f32, -0.2, 0.0];
+        let wloss = [0.7f32, -1.3, 0.4, 0.2, 0.9, -0.6];
+        let rows = 2;
+        let d = 3;
+        let loss = |xv: &[f32]| -> f32 {
+            let mut y = vec![0.0; 6];
+            layernorm(xv, &g, &bb, &mut y, None, rows, d, 1e-5);
+            y.iter().zip(&wloss).map(|(a, b)| a * b).sum()
+        };
+        let mut y = vec![0.0; 6];
+        let mut stats = vec![0.0; 4];
+        layernorm(&x, &g, &bb, &mut y, Some(&mut stats), rows, d, 1e-5);
+        let mut dx = vec![0.0; 6];
+        let mut dg = vec![0.0; 3];
+        let mut db = vec![0.0; 3];
+        layernorm_backward(&wloss, &x, &g, &stats, &mut dx, &mut dg, &mut db, rows, d);
+        for i in 0..6 {
+            let mut xp = x;
+            xp[i] += 1e-3;
+            let mut xm = x;
+            xm[i] -= 1e-3;
+            let num = (loss(&xp) - loss(&xm)) / 2e-3;
+            assert!((dx[i] - num).abs() < 1e-2, "i={i} got {} want {num}", dx[i]);
+        }
+    }
+}

@@ -1,0 +1,874 @@
+//! Host mirror of the transformer encoder (L2 `models/transformer.py`).
+//!
+//! Same architecture class as the paper's BERT levels: token+position
+//! embeddings, pre-LN self-attention blocks, tanh-GELU FFN, masked mean
+//! pooling, softmax head. Forward numerics match the jax graph (parity
+//! asserted against the AOT artifacts); the backward pass is a manual
+//! reverse-mode derivation with global-gradient-norm clipping at 1.0 —
+//! the same update rule `make_step` compiles.
+
+use super::tensor as t;
+use crate::prng::Rng;
+
+/// Architecture preset — mirrors `transformer.CONFIGS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TfmArch {
+    /// BERT-base surrogate: d=64, 4 heads, 2 layers, ffn 256.
+    Base,
+    /// BERT-large surrogate: d=96, 6 heads, 4 layers, ffn 384.
+    Large,
+}
+
+impl TfmArch {
+    /// (vocab, seq, d, heads, layers, ffn)
+    pub fn dims(self) -> (usize, usize, usize, usize, usize, usize) {
+        match self {
+            TfmArch::Base => (8192, 64, 64, 4, 2, 256),
+            TfmArch::Large => (8192, 64, 96, 6, 4, 384),
+        }
+    }
+}
+
+/// Per-layer parameter tensors (order mirrors `param_spec`).
+#[derive(Clone, Debug)]
+struct Layer {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: Vec<f32>,
+    bq: Vec<f32>,
+    wk: Vec<f32>,
+    bk: Vec<f32>,
+    wv: Vec<f32>,
+    bv: Vec<f32>,
+    wo: Vec<f32>,
+    bo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+impl Layer {
+    fn zeros_like(&self) -> Layer {
+        Layer {
+            ln1_g: vec![0.0; self.ln1_g.len()],
+            ln1_b: vec![0.0; self.ln1_b.len()],
+            wq: vec![0.0; self.wq.len()],
+            bq: vec![0.0; self.bq.len()],
+            wk: vec![0.0; self.wk.len()],
+            bk: vec![0.0; self.bk.len()],
+            wv: vec![0.0; self.wv.len()],
+            bv: vec![0.0; self.bv.len()],
+            wo: vec![0.0; self.wo.len()],
+            bo: vec![0.0; self.bo.len()],
+            ln2_g: vec![0.0; self.ln2_g.len()],
+            ln2_b: vec![0.0; self.ln2_b.len()],
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            w2: vec![0.0; self.w2.len()],
+            b2: vec![0.0; self.b2.len()],
+        }
+    }
+}
+
+/// The full parameter set.
+#[derive(Clone, Debug)]
+struct Params {
+    embed: Vec<f32>,
+    pos: Vec<f32>,
+    layers: Vec<Layer>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+}
+
+/// Forward activation caches for one sequence (backward pass inputs).
+struct Cache {
+    /// Residual-stream input to each layer (pre-LN1), `[L, d]`.
+    x_in: Vec<Vec<f32>>,
+    /// LN1 output per layer.
+    hx1: Vec<Vec<f32>>,
+    /// LN1 stats per layer (mu, inv) per row.
+    ln1_stats: Vec<Vec<f32>>,
+    /// Q/K/V `[L, d]` per layer.
+    q: Vec<Vec<f32>>,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Attention probabilities per layer, `[heads][L*L]`.
+    p: Vec<Vec<Vec<f32>>>,
+    /// Attention output (pre-Wo) per layer, `[L, d]`.
+    o: Vec<Vec<f32>>,
+    /// Residual after attention (pre-LN2) per layer.
+    x_mid: Vec<Vec<f32>>,
+    /// LN2 output per layer.
+    hx2: Vec<Vec<f32>>,
+    ln2_stats: Vec<Vec<f32>>,
+    /// FFN pre-activation `[L, ffn]` per layer.
+    ffn_pre: Vec<Vec<f32>>,
+    /// FFN activation (gelu) per layer.
+    ffn_act: Vec<Vec<f32>>,
+    /// Final residual stream (pre-LNf).
+    x_final: Vec<f32>,
+    lnf_out: Vec<f32>,
+    lnf_stats: Vec<f32>,
+    pooled: Vec<f32>,
+    probs: Vec<f32>,
+    mask_sum: f32,
+}
+
+/// Host transformer encoder + classifier.
+#[derive(Clone, Debug)]
+pub struct HostTfm {
+    arch: TfmArch,
+    classes: usize,
+    params: Params,
+}
+
+impl HostTfm {
+    /// Fresh model with its own deterministic init (host-only runs;
+    /// BERT-style: N(0, 0.02) embeddings, Glorot dense, unit LN).
+    pub fn new(arch: TfmArch, classes: usize, seed: u64) -> Self {
+        let (v, l, d, _h, layers, f) = arch.dims();
+        let mut rng = Rng::new(seed ^ 0x7F0_7F0);
+        let mut normal = |n: usize, s: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * s) as f32).collect()
+        };
+        let embed = normal(v * d, 0.02);
+        let pos = normal(l * d, 0.02);
+        let mut rng2 = Rng::new(seed ^ 0x61055);
+        let mut glorot = |rows: usize, cols: usize| -> Vec<f32> {
+            let lim = (6.0 / (rows + cols) as f64).sqrt();
+            (0..rows * cols).map(|_| rng2.range_f64(-lim, lim) as f32).collect()
+        };
+        let mk_layer = |g: &mut dyn FnMut(usize, usize) -> Vec<f32>| Layer {
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            wq: g(d, d),
+            bq: vec![0.0; d],
+            wk: g(d, d),
+            bk: vec![0.0; d],
+            wv: g(d, d),
+            bv: vec![0.0; d],
+            wo: g(d, d),
+            bo: vec![0.0; d],
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+            w1: g(d, f),
+            b1: vec![0.0; f],
+            w2: g(f, d),
+            b2: vec![0.0; d],
+        };
+        let layers_v = (0..layers).map(|_| mk_layer(&mut glorot)).collect();
+        HostTfm {
+            arch,
+            classes,
+            params: Params {
+                embed,
+                pos,
+                layers: layers_v,
+                lnf_g: vec![1.0; d],
+                lnf_b: vec![0.0; d],
+                head_w: glorot(d, classes),
+                head_b: vec![0.0; classes],
+            },
+        }
+    }
+
+    /// Load from a flat blob in `param_spec` order (the aot.py init
+    /// blob / PJRT interop format).
+    pub fn from_flat(arch: TfmArch, classes: usize, flat: &[f32]) -> Self {
+        let (v, l, d, _h, layers, f) = arch.dims();
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Vec<f32> {
+            let s = flat[off..off + n].to_vec();
+            off += n;
+            s
+        };
+        let embed = take(v * d);
+        let pos = take(l * d);
+        let layers_v = (0..layers)
+            .map(|_| Layer {
+                ln1_g: take(d),
+                ln1_b: take(d),
+                wq: take(d * d),
+                bq: take(d),
+                wk: take(d * d),
+                bk: take(d),
+                wv: take(d * d),
+                bv: take(d),
+                wo: take(d * d),
+                bo: take(d),
+                ln2_g: take(d),
+                ln2_b: take(d),
+                w1: take(d * f),
+                b1: take(f),
+                w2: take(f * d),
+                b2: take(d),
+            })
+            .collect();
+        let lnf_g = take(d);
+        let lnf_b = take(d);
+        let head_w = take(d * classes);
+        let head_b = take(classes);
+        assert_eq!(off, flat.len(), "flat blob size mismatch");
+        HostTfm {
+            arch,
+            classes,
+            params: Params { embed, pos, layers: layers_v, lnf_g, lnf_b, head_w, head_b },
+        }
+    }
+
+    /// Snapshot parameters as one flat blob (`param_spec` order).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let p = &self.params;
+        let mut v = Vec::new();
+        v.extend_from_slice(&p.embed);
+        v.extend_from_slice(&p.pos);
+        for lay in &p.layers {
+            for s in [
+                &lay.ln1_g, &lay.ln1_b, &lay.wq, &lay.bq, &lay.wk, &lay.bk, &lay.wv,
+                &lay.bv, &lay.wo, &lay.bo, &lay.ln2_g, &lay.ln2_b, &lay.w1, &lay.b1,
+                &lay.w2, &lay.b2,
+            ] {
+                v.extend_from_slice(s);
+            }
+        }
+        v.extend_from_slice(&p.lnf_g);
+        v.extend_from_slice(&p.lnf_b);
+        v.extend_from_slice(&p.head_w);
+        v.extend_from_slice(&p.head_b);
+        v
+    }
+
+    /// Architecture.
+    pub fn arch(&self) -> TfmArch {
+        self.arch
+    }
+
+    /// Number of classes.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Class probabilities for one sequence.
+    pub fn predict(&self, ids: &[i32], mask: &[f32]) -> Vec<f32> {
+        self.forward(ids, mask).probs
+    }
+
+    fn forward(&self, ids: &[i32], mask: &[f32]) -> Cache {
+        let (_v, l, d, heads, nlayers, f) = self.arch.dims();
+        debug_assert_eq!(ids.len(), l);
+        debug_assert_eq!(mask.len(), l);
+        let dh = d / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let p = &self.params;
+
+        let mut x = vec![0.0f32; l * d];
+        for i in 0..l {
+            let row = (ids[i] as usize) * d;
+            for j in 0..d {
+                x[i * d + j] = p.embed[row + j] + p.pos[i * d + j];
+            }
+        }
+        let mut cache = Cache {
+            x_in: Vec::with_capacity(nlayers),
+            hx1: Vec::with_capacity(nlayers),
+            ln1_stats: Vec::with_capacity(nlayers),
+            q: Vec::with_capacity(nlayers),
+            k: Vec::with_capacity(nlayers),
+            v: Vec::with_capacity(nlayers),
+            p: Vec::with_capacity(nlayers),
+            o: Vec::with_capacity(nlayers),
+            x_mid: Vec::with_capacity(nlayers),
+            hx2: Vec::with_capacity(nlayers),
+            ln2_stats: Vec::with_capacity(nlayers),
+            ffn_pre: Vec::with_capacity(nlayers),
+            ffn_act: Vec::with_capacity(nlayers),
+            x_final: Vec::new(),
+            lnf_out: vec![0.0; l * d],
+            lnf_stats: vec![0.0; 2 * l],
+            pooled: vec![0.0; d],
+            probs: Vec::new(),
+            mask_sum: mask.iter().sum::<f32>().max(1.0),
+        };
+
+        for lay in &p.layers {
+            cache.x_in.push(x.clone());
+            // --- attention block (pre-LN) ---
+            let mut hx = vec![0.0f32; l * d];
+            let mut stats = vec![0.0f32; 2 * l];
+            t::layernorm(&x, &lay.ln1_g, &lay.ln1_b, &mut hx, Some(&mut stats), l, d, 1e-5);
+            let mut q = vec![0.0f32; l * d];
+            let mut k = vec![0.0f32; l * d];
+            let mut v = vec![0.0f32; l * d];
+            t::linear(&hx, &lay.wq, &lay.bq, &mut q, l, d, d);
+            t::linear(&hx, &lay.wk, &lay.bk, &mut k, l, d, d);
+            t::linear(&hx, &lay.wv, &lay.bv, &mut v, l, d, d);
+            let mut o = vec![0.0f32; l * d];
+            let mut probs_heads = Vec::with_capacity(heads);
+            // Per-head panels are gathered into contiguous [L, dh]
+            // buffers so the score/context products run through the
+            // vectorized matmul primitives instead of strided loops
+            // (§Perf iteration 1: 2.3x on the forward pass).
+            let mut qh = vec![0.0f32; l * dh];
+            let mut kh = vec![0.0f32; l * dh];
+            let mut vh = vec![0.0f32; l * dh];
+            let mut oh = vec![0.0f32; l * dh];
+            for h in 0..heads {
+                let c0 = h * dh;
+                for i in 0..l {
+                    qh[i * dh..(i + 1) * dh]
+                        .copy_from_slice(&q[i * d + c0..i * d + c0 + dh]);
+                    kh[i * dh..(i + 1) * dh]
+                        .copy_from_slice(&k[i * d + c0..i * d + c0 + dh]);
+                    vh[i * dh..(i + 1) * dh]
+                        .copy_from_slice(&v[i * d + c0..i * d + c0 + dh]);
+                }
+                // scores = q @ k^T * scale + mask bias
+                let mut s = vec![0.0f32; l * l];
+                t::matmul_a_bt(&qh, &kh, &mut s, l, dh, l);
+                for i in 0..l {
+                    for j in 0..l {
+                        s[i * l + j] = s[i * l + j] * scale + (1.0 - mask[j]) * -1e9;
+                    }
+                }
+                t::softmax_rows(&mut s, l, l);
+                t::matmul(&s, &vh, &mut oh, l, l, dh);
+                for i in 0..l {
+                    o[i * d + c0..i * d + c0 + dh]
+                        .copy_from_slice(&oh[i * dh..(i + 1) * dh]);
+                }
+                probs_heads.push(s);
+            }
+            // x = x + o @ wo + bo
+            let mut proj = vec![0.0f32; l * d];
+            t::linear(&o, &lay.wo, &lay.bo, &mut proj, l, d, d);
+            for (xv, pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            cache.hx1.push(hx);
+            cache.ln1_stats.push(stats);
+            cache.q.push(q);
+            cache.k.push(k);
+            cache.v.push(v);
+            cache.p.push(probs_heads);
+            cache.o.push(o);
+            cache.x_mid.push(x.clone());
+            // --- FFN block (pre-LN) ---
+            let mut hx2 = vec![0.0f32; l * d];
+            let mut stats2 = vec![0.0f32; 2 * l];
+            t::layernorm(&x, &lay.ln2_g, &lay.ln2_b, &mut hx2, Some(&mut stats2), l, d, 1e-5);
+            let mut pre = vec![0.0f32; l * f];
+            t::linear(&hx2, &lay.w1, &lay.b1, &mut pre, l, d, f);
+            let act: Vec<f32> = pre.iter().map(|&z| t::gelu(z)).collect();
+            let mut out = vec![0.0f32; l * d];
+            t::linear(&act, &lay.w2, &lay.b2, &mut out, l, f, d);
+            for (xv, ov) in x.iter_mut().zip(&out) {
+                *xv += ov;
+            }
+            cache.hx2.push(hx2);
+            cache.ln2_stats.push(stats2);
+            cache.ffn_pre.push(pre);
+            cache.ffn_act.push(act);
+        }
+        cache.x_final = x.clone();
+        t::layernorm(
+            &x,
+            &p.lnf_g,
+            &p.lnf_b,
+            &mut cache.lnf_out,
+            Some(&mut cache.lnf_stats),
+            l,
+            d,
+            1e-5,
+        );
+        // masked mean pooling
+        for j in 0..d {
+            let mut acc = 0.0;
+            for i in 0..l {
+                acc += cache.lnf_out[i * d + j] * mask[i];
+            }
+            cache.pooled[j] = acc / cache.mask_sum;
+        }
+        // head
+        let mut logits = vec![0.0f32; self.classes];
+        t::linear(&cache.pooled, &p.head_w, &p.head_b, &mut logits, 1, d, self.classes);
+        t::softmax_rows(&mut logits, 1, self.classes);
+        cache.probs = logits;
+        cache
+    }
+
+    /// One OGD minibatch step (cross-entropy, global-norm clip at 1.0);
+    /// returns the mean loss over the batch.
+    pub fn train_batch(
+        &mut self,
+        ids: &[&[i32]],
+        masks: &[&[f32]],
+        ys: &[usize],
+        lr: f32,
+    ) -> f32 {
+        assert_eq!(ids.len(), ys.len());
+        assert!(!ids.is_empty());
+        let (_v, l, d, heads, _n, f) = self.arch.dims();
+        let dh = d / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let bsz = ids.len() as f32;
+        let p = &self.params;
+
+        // gradient accumulators
+        let mut g_embed = vec![0.0f32; p.embed.len()];
+        let mut g_pos = vec![0.0f32; p.pos.len()];
+        let mut g_layers: Vec<Layer> = p.layers.iter().map(|x| x.zeros_like()).collect();
+        let mut g_lnf_g = vec![0.0f32; d];
+        let mut g_lnf_b = vec![0.0f32; d];
+        let mut g_head_w = vec![0.0f32; p.head_w.len()];
+        let mut g_head_b = vec![0.0f32; self.classes];
+        let mut loss = 0.0f32;
+
+        for bi in 0..ids.len() {
+            let cache = self.forward(ids[bi], masks[bi]);
+            let y = ys[bi];
+            loss -= (cache.probs[y] + 1e-9).ln();
+            // dlogits = (probs - onehot)/B
+            let mut dpooled = vec![0.0f32; d];
+            for c in 0..self.classes {
+                let dl = (cache.probs[c] - if c == y { 1.0 } else { 0.0 }) / bsz;
+                g_head_b[c] += dl;
+                for j in 0..d {
+                    g_head_w[j * self.classes + c] += cache.pooled[j] * dl;
+                    dpooled[j] += self.params.head_w[j * self.classes + c] * dl;
+                }
+            }
+            // pooling backward
+            let mut d_lnf_out = vec![0.0f32; l * d];
+            for i in 0..l {
+                let m = masks[bi][i] / cache.mask_sum;
+                if m == 0.0 {
+                    continue;
+                }
+                for j in 0..d {
+                    d_lnf_out[i * d + j] = dpooled[j] * m;
+                }
+            }
+            // final LN backward
+            let mut dx = vec![0.0f32; l * d];
+            t::layernorm_backward(
+                &d_lnf_out,
+                &cache.x_final,
+                &self.params.lnf_g,
+                &cache.lnf_stats,
+                &mut dx,
+                &mut g_lnf_g,
+                &mut g_lnf_b,
+                l,
+                d,
+            );
+            // layers in reverse
+            for (li, lay) in self.params.layers.iter().enumerate().rev() {
+                let gl = &mut g_layers[li];
+                // ---- FFN block backward ----
+                // x_out = x_mid + gelu(hx2@w1+b1)@w2 + b2
+                let act = &cache.ffn_act[li];
+                let pre = &cache.ffn_pre[li];
+                let hx2 = &cache.hx2[li];
+                // d(out) = dx (residual add)
+                // dw2 += act^T dx ; db2 += colsum dx ; dact = dx w2^T
+                t::matmul_at_b_accum(act, &dx, &mut gl.w2, l, f, d);
+                for i in 0..l {
+                    for j in 0..d {
+                        gl.b2[j] += dx[i * d + j];
+                    }
+                }
+                let mut dact = vec![0.0f32; l * f];
+                t::matmul_a_bt(&dx, &lay.w2, &mut dact, l, d, f);
+                // gelu backward
+                let mut dpre = vec![0.0f32; l * f];
+                for i in 0..l * f {
+                    dpre[i] = dact[i] * t::gelu_grad(pre[i]);
+                }
+                // dw1 += hx2^T dpre ; db1 += colsum ; dhx2 = dpre w1^T
+                t::matmul_at_b_accum(hx2, &dpre, &mut gl.w1, l, d, f);
+                for i in 0..l {
+                    for j in 0..f {
+                        gl.b1[j] += dpre[i * f + j];
+                    }
+                }
+                let mut dhx2 = vec![0.0f32; l * d];
+                t::matmul_a_bt(&dpre, &lay.w1, &mut dhx2, l, f, d);
+                // LN2 backward adds into dx (residual skip keeps dx too)
+                let mut dx_mid = vec![0.0f32; l * d];
+                t::layernorm_backward(
+                    &dhx2,
+                    &cache.x_mid[li],
+                    &lay.ln2_g,
+                    &cache.ln2_stats[li],
+                    &mut dx_mid,
+                    &mut gl.ln2_g,
+                    &mut gl.ln2_b,
+                    l,
+                    d,
+                );
+                for i in 0..l * d {
+                    dx[i] += dx_mid[i];
+                }
+                // ---- attention block backward ----
+                // x_mid = x_in + o @ wo + bo
+                let o = &cache.o[li];
+                t::matmul_at_b_accum(o, &dx, &mut gl.wo, l, d, d);
+                for i in 0..l {
+                    for j in 0..d {
+                        gl.bo[j] += dx[i * d + j];
+                    }
+                }
+                let mut do_ = vec![0.0f32; l * d];
+                t::matmul_a_bt(&dx, &lay.wo, &mut do_, l, d, d);
+                // attention core backward per head
+                let (q, k, v) = (&cache.q[li], &cache.k[li], &cache.v[li]);
+                let mut dq = vec![0.0f32; l * d];
+                let mut dk = vec![0.0f32; l * d];
+                let mut dv = vec![0.0f32; l * d];
+                for h in 0..heads {
+                    let c0 = h * dh;
+                    let pm = &cache.p[li][h]; // [L, L]
+                    // dp = do v^T (head slice)
+                    let mut dp = vec![0.0f32; l * l];
+                    for i in 0..l {
+                        for j in 0..l {
+                            let mut acc = 0.0;
+                            for e in 0..dh {
+                                acc += do_[i * d + c0 + e] * v[j * d + c0 + e];
+                            }
+                            dp[i * l + j] = acc;
+                        }
+                    }
+                    // dv += p^T do
+                    for j in 0..l {
+                        for e in 0..dh {
+                            let mut acc = 0.0;
+                            for i in 0..l {
+                                acc += pm[i * l + j] * do_[i * d + c0 + e];
+                            }
+                            dv[j * d + c0 + e] += acc;
+                        }
+                    }
+                    // softmax backward: ds = p * (dp - rowsum(dp*p))
+                    let mut ds = vec![0.0f32; l * l];
+                    for i in 0..l {
+                        let mut rowsum = 0.0;
+                        for j in 0..l {
+                            rowsum += dp[i * l + j] * pm[i * l + j];
+                        }
+                        for j in 0..l {
+                            ds[i * l + j] = pm[i * l + j] * (dp[i * l + j] - rowsum);
+                        }
+                    }
+                    // dq += ds k * scale ; dk += ds^T q * scale
+                    for i in 0..l {
+                        for e in 0..dh {
+                            let mut acc = 0.0;
+                            for j in 0..l {
+                                acc += ds[i * l + j] * k[j * d + c0 + e];
+                            }
+                            dq[i * d + c0 + e] += acc * scale;
+                        }
+                    }
+                    for j in 0..l {
+                        for e in 0..dh {
+                            let mut acc = 0.0;
+                            for i in 0..l {
+                                acc += ds[i * l + j] * q[i * d + c0 + e];
+                            }
+                            dk[j * d + c0 + e] += acc * scale;
+                        }
+                    }
+                }
+                // qkv linear backwards into dhx1
+                let hx1 = &cache.hx1[li];
+                let mut dhx1 = vec![0.0f32; l * d];
+                for (dm, w, gw, gb) in [
+                    (&dq, &lay.wq, &mut gl.wq, &mut gl.bq),
+                    (&dk, &lay.wk, &mut gl.wk, &mut gl.bk),
+                    (&dv, &lay.wv, &mut gl.wv, &mut gl.bv),
+                ] {
+                    t::matmul_at_b_accum(hx1, dm, gw, l, d, d);
+                    for i in 0..l {
+                        for j in 0..d {
+                            gb[j] += dm[i * d + j];
+                        }
+                    }
+                    let mut tmp = vec![0.0f32; l * d];
+                    t::matmul_a_bt(dm, w, &mut tmp, l, d, d);
+                    for i in 0..l * d {
+                        dhx1[i] += tmp[i];
+                    }
+                }
+                // LN1 backward adds into dx
+                let mut dx_in = vec![0.0f32; l * d];
+                t::layernorm_backward(
+                    &dhx1,
+                    &cache.x_in[li],
+                    &lay.ln1_g,
+                    &cache.ln1_stats[li],
+                    &mut dx_in,
+                    &mut gl.ln1_g,
+                    &mut gl.ln1_b,
+                    l,
+                    d,
+                );
+                for i in 0..l * d {
+                    dx[i] += dx_in[i];
+                }
+            }
+            // embeddings backward
+            for i in 0..l {
+                let row = (ids[bi][i] as usize) * d;
+                for j in 0..d {
+                    g_embed[row + j] += dx[i * d + j];
+                    g_pos[i * d + j] += dx[i * d + j];
+                }
+            }
+        }
+
+        // global-norm clip + SGD (matches make_step)
+        let mut sq = 0.0f64;
+        {
+            let mut add = |g: &[f32]| {
+                for &x in g {
+                    sq += (x as f64) * (x as f64);
+                }
+            };
+            add(&g_embed);
+            add(&g_pos);
+            for gl in &g_layers {
+                for s in [
+                    &gl.ln1_g, &gl.ln1_b, &gl.wq, &gl.bq, &gl.wk, &gl.bk, &gl.wv, &gl.bv,
+                    &gl.wo, &gl.bo, &gl.ln2_g, &gl.ln2_b, &gl.w1, &gl.b1, &gl.w2, &gl.b2,
+                ] {
+                    add(s);
+                }
+            }
+            add(&g_lnf_g);
+            add(&g_lnf_b);
+            add(&g_head_w);
+            add(&g_head_b);
+        }
+        let gnorm = (sq + 1e-12).sqrt();
+        let clip = (1.0f64.min(1.0 / gnorm)) as f32;
+        let step = lr * clip;
+        let apply = |p: &mut [f32], g: &[f32]| {
+            for (pv, &gv) in p.iter_mut().zip(g) {
+                *pv -= step * gv;
+            }
+        };
+        let pm = &mut self.params;
+        apply(&mut pm.embed, &g_embed);
+        apply(&mut pm.pos, &g_pos);
+        for (lay, gl) in pm.layers.iter_mut().zip(&g_layers) {
+            apply(&mut lay.ln1_g, &gl.ln1_g);
+            apply(&mut lay.ln1_b, &gl.ln1_b);
+            apply(&mut lay.wq, &gl.wq);
+            apply(&mut lay.bq, &gl.bq);
+            apply(&mut lay.wk, &gl.wk);
+            apply(&mut lay.bk, &gl.bk);
+            apply(&mut lay.wv, &gl.wv);
+            apply(&mut lay.bv, &gl.bv);
+            apply(&mut lay.wo, &gl.wo);
+            apply(&mut lay.bo, &gl.bo);
+            apply(&mut lay.ln2_g, &gl.ln2_g);
+            apply(&mut lay.ln2_b, &gl.ln2_b);
+            apply(&mut lay.w1, &gl.w1);
+            apply(&mut lay.b1, &gl.b1);
+            apply(&mut lay.w2, &gl.w2);
+            apply(&mut lay.b2, &gl.b2);
+        }
+        apply(&mut pm.lnf_g, &g_lnf_g);
+        apply(&mut pm.lnf_b, &g_lnf_b);
+        apply(&mut pm.head_w, &g_head_w);
+        apply(&mut pm.head_b, &g_head_b);
+        loss / bsz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rng: &mut Rng, l: usize) -> (Vec<i32>, Vec<f32>) {
+        let n = 5 + rng.below(l - 5);
+        let ids: Vec<i32> =
+            (0..l).map(|i| if i < n { 2 + rng.below(8000) as i32 } else { 0 }).collect();
+        let mask: Vec<f32> = (0..l).map(|i| if i < n { 1.0 } else { 0.0 }).collect();
+        (ids, mask)
+    }
+
+    #[test]
+    fn forward_is_simplex() {
+        let m = HostTfm::new(TfmArch::Base, 7, 0);
+        let mut rng = Rng::new(1);
+        let (ids, mask) = doc(&mut rng, 64);
+        let p = m.predict(&ids, &mask);
+        assert_eq!(p.len(), 7);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn padding_tokens_do_not_change_output() {
+        let m = HostTfm::new(TfmArch::Base, 2, 0);
+        let mut rng = Rng::new(2);
+        let (mut ids, mask) = doc(&mut rng, 64);
+        let p1 = m.predict(&ids, &mask);
+        for i in 0..64 {
+            if mask[i] == 0.0 {
+                ids[i] = 2 + rng.below(8000) as i32;
+            }
+        }
+        let p2 = m.predict(&ids, &mask);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip_preserves_forward() {
+        let m = HostTfm::new(TfmArch::Base, 2, 3);
+        let flat = m.to_flat();
+        let m2 = HostTfm::from_flat(TfmArch::Base, 2, &flat);
+        let mut rng = Rng::new(4);
+        let (ids, mask) = doc(&mut rng, 64);
+        assert_eq!(m.predict(&ids, &mask), m2.predict(&ids, &mask));
+    }
+
+    #[test]
+    fn flat_blob_size_matches_spec() {
+        // base: embed 8192*64 + pos 64*64 + 2 layers * (2d+4(dd+d)+2d+df+f+fd+d)
+        //       + 2d + d*2 + 2
+        let m = HostTfm::new(TfmArch::Base, 2, 0);
+        let d = 64;
+        let f = 256;
+        let per_layer = 2 * d + 4 * (d * d + d) + 2 * d + d * f + f + f * d + d;
+        let want = 8192 * d + 64 * d + 2 * per_layer + 2 * d + d * 2 + 2;
+        assert_eq!(m.to_flat().len(), want);
+    }
+
+    #[test]
+    fn train_reduces_loss_on_fixed_batch() {
+        let mut m = HostTfm::new(TfmArch::Base, 2, 5);
+        let mut rng = Rng::new(6);
+        let docs: Vec<(Vec<i32>, Vec<f32>)> = (0..8).map(|_| doc(&mut rng, 64)).collect();
+        let ids: Vec<&[i32]> = docs.iter().map(|d| d.0.as_slice()).collect();
+        let masks: Vec<&[f32]> = docs.iter().map(|d| d.1.as_slice()).collect();
+        let ys: Vec<usize> = (0..8).map(|_| rng.below(2)).collect();
+        let l0 = m.train_batch(&ids, &masks, &ys, 5e-3);
+        let mut l = l0;
+        for _ in 0..8 {
+            l = m.train_batch(&ids, &masks, &ys, 5e-3);
+        }
+        assert!(l < l0, "{l} !< {l0}");
+    }
+
+    #[test]
+    fn learns_order_sensitive_rule() {
+        // The medium stratum's core claim (text::Stratum::Medium): the
+        // label is XOR(keyword class, flip-marker present) — a pattern
+        // linear bag-of-words provably cannot represent, but the
+        // transformer's attention+FFN nonlinearity can.
+        let mut m = HostTfm::new(TfmArch::Base, 2, 7);
+        let mut rng = Rng::new(8);
+        let kw = [100i32, 101]; // keyword token per apparent class
+        let marker = 200i32;
+        let mk = |rng: &mut Rng, y: usize| -> (Vec<i32>, Vec<f32>) {
+            let l = 64;
+            let mut ids: Vec<i32> =
+                (0..l).map(|_| 2 + rng.below(50) as i32 + 300).collect();
+            let mask = vec![1.0f32; l];
+            let flip = rng.below(2); // marker present?
+            let apparent = (y + flip) % 2; // label = apparent XOR flip
+            for _ in 0..4 {
+                ids[rng.below(l)] = kw[apparent];
+            }
+            if flip == 1 {
+                for _ in 0..3 {
+                    ids[rng.below(l)] = marker;
+                }
+            }
+            (ids, mask)
+        };
+        for _ in 0..400 {
+            let batch: Vec<(Vec<i32>, Vec<f32>, usize)> = (0..8)
+                .map(|_| {
+                    let y = rng.below(2);
+                    let (i, ma) = mk(&mut rng, y);
+                    (i, ma, y)
+                })
+                .collect();
+            let ids: Vec<&[i32]> = batch.iter().map(|x| x.0.as_slice()).collect();
+            let masks: Vec<&[f32]> = batch.iter().map(|x| x.1.as_slice()).collect();
+            let ys: Vec<usize> = batch.iter().map(|x| x.2).collect();
+            m.train_batch(&ids, &masks, &ys, 2e-2);
+        }
+        let mut correct = 0;
+        for _ in 0..100 {
+            let y = rng.below(2);
+            let (ids, mask) = mk(&mut rng, y);
+            if crate::util::argmax(&m.predict(&ids, &mask)) == y {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 70, "correct={correct}/100");
+    }
+
+    #[test]
+    fn gradcheck_embedding_path() {
+        // Finite-difference check of the full backward through one
+        // embedding entry (covers the whole chain end-to-end).
+        let mut m = HostTfm::new(TfmArch::Base, 2, 9);
+        let mut rng = Rng::new(10);
+        let (ids, mask) = doc(&mut rng, 64);
+        let y = 1usize;
+        // numeric dloss/dembed for the first token's first dim
+        let tok = ids[0] as usize;
+        let loss_of = |m: &HostTfm| -> f32 {
+            let p = m.predict(&ids, &mask);
+            -(p[y] + 1e-9).ln()
+        };
+        // Numeric grads at two coordinates; the analytic step applies
+        // `clip * grad` with a shared (unknown) clip factor, so the
+        // *ratios* across coordinates must agree.
+        let num_grad = |coord: usize| -> f32 {
+            let h = 1e-2f32;
+            let mut mp = m.clone();
+            mp.params.embed[coord] += h;
+            let mut mm = m.clone();
+            mm.params.embed[coord] -= h;
+            (loss_of(&mp) - loss_of(&mm)) / (2.0 * h)
+        };
+        let c1 = tok * 64;
+        let c2 = tok * 64 + 7;
+        let (n1, n2) = (num_grad(c1), num_grad(c2));
+        let (b1, b2) = (m.params.embed[c1], m.params.embed[c2]);
+        let lr = 1e-4f32;
+        let ids_b = [ids.as_slice()];
+        let masks_b = [mask.as_slice()];
+        m.train_batch(&ids_b, &masks_b, &[y], lr);
+        let g1 = (b1 - m.params.embed[c1]) / lr; // clip * grad1
+        let g2 = (b2 - m.params.embed[c2]) / lr; // clip * grad2
+        assert!(n1.abs() > 1e-4 && n2.abs() > 1e-4, "degenerate test point");
+        let analytic_ratio = g1 / g2;
+        let numeric_ratio = n1 / n2;
+        assert!(
+            (analytic_ratio - numeric_ratio).abs()
+                / numeric_ratio.abs().max(1e-3)
+                < 0.08,
+            "ratios diverge: analytic {analytic_ratio} numeric {numeric_ratio}"
+        );
+        // and the shared clip factor must be identical in (0, 1]
+        let clip1 = g1 / n1;
+        let clip2 = g2 / n2;
+        assert!(clip1 > 0.0 && clip1 <= 1.05, "clip {clip1}");
+        assert!((clip1 - clip2).abs() / clip1 < 0.08, "{clip1} vs {clip2}");
+    }
+}

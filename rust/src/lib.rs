@@ -1,0 +1,46 @@
+//! # ocl — Online Cascade Learning for Efficient Inference over Streams
+//!
+//! Production-grade reproduction of Nie et al., ICML 2024, as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the streaming cascade coordinator: Algorithm 1
+//!   (online cascade learning via imitation of an LLM expert), the
+//!   deferral-calibration policy, online-gradient-descent learner,
+//!   DAgger β-schedule, cost/budget accounting, a request router +
+//!   dynamic batcher for the serving mode, baselines, and the full
+//!   experiment harness regenerating every table and figure of the paper.
+//! * **L2 (python/compile, build-time)** — jax model graphs (logistic
+//!   regression, BERT-surrogate transformers, deferral MLPs), AOT-lowered
+//!   to HLO text.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused
+//!   classifier head, flash attention, fused LR update) inside the L2 HLO.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! rust worker threads.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cascade;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod features;
+pub mod hostmodel;
+pub mod models;
+pub mod policy;
+pub mod prng;
+pub mod prop;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod text;
+pub mod util;
+
+pub use error::{Error, Result};

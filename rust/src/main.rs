@@ -1,0 +1,271 @@
+//! `ocl` — launcher for the Online Cascade Learning reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's tables and figures (DESIGN.md
+//! §5) plus a serving mode and a self-test. `make reproduce` drives
+//! everything into `reports/`.
+
+use std::rc::Rc;
+
+use ocl::cli::Command;
+use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
+use ocl::error::{Error, Result};
+use ocl::eval::{self, Harness};
+use ocl::runtime::PjrtEngine;
+use ocl::serve::{BatchPolicy, Request, Server};
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("run", "run online cascade learning on one benchmark stream")
+            .opt("benchmark", "imdb", "imdb|hatespeech|isear|fever")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("scale", "0.2", "stream scale vs the paper's dataset size")
+            .opt("budget", "0", "LLM-call budget (0 = unlimited)")
+            .opt("seed", "0", "rng seed")
+            .opt("engine", "host", "host|pjrt")
+            .switch("large", "use the 4-level cascade (adds BERT-large)"),
+        Command::new("table1", "reproduce Table 1 (all methods x budgets)")
+            .opt("scale", "0.1", "stream scale")
+            .opt("seed", "0", "rng seed")
+            .opt("out", "reports", "output directory")
+            .switch("full", "run both experts (default: gpt35 only)"),
+        Command::new("curves", "reproduce Figs 3/4/10/11 cost-accuracy curves")
+            .opt("benchmark", "imdb", "benchmark (or 'all')")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("scale", "0.1", "stream scale")
+            .opt("seed", "0", "rng seed")
+            .opt("out", "reports", "output directory")
+            .switch("large", "4-level cascade (Fig 11)"),
+        Command::new("case", "reproduce Figs 5-8 case-analysis time series")
+            .opt("benchmark", "imdb", "benchmark (or 'all')")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("scale", "0.2", "stream scale")
+            .opt("seed", "0", "rng seed")
+            .opt("out", "reports", "output directory"),
+        Command::new("shift", "reproduce Fig 9 + Table 2 distribution shifts")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("scale", "0.1", "stream scale")
+            .opt("seed", "0", "rng seed")
+            .opt("out", "reports", "output directory"),
+        Command::new("table5", "reproduce Table 5 (accuracy by length bucket)")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("scale", "0.3", "stream scale")
+            .opt("seed", "0", "rng seed")
+            .opt("out", "reports", "output directory"),
+        Command::new("costmodel", "reproduce App. B.1/C.1 cost analyses")
+            .opt("out", "reports", "output directory"),
+        Command::new("serve", "run the streaming serving mode (router+batcher)")
+            .opt("benchmark", "imdb", "benchmark")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("requests", "2000", "number of requests")
+            .opt("engine", "host", "host|pjrt")
+            .opt("seed", "0", "rng seed")
+            .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)"),
+        Command::new("selftest", "quick end-to-end smoke test"),
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn usage(cmds: &[Command]) -> String {
+    let mut s = String::from("ocl — Online Cascade Learning (ICML 2024) reproduction\n\nsubcommands:\n");
+    for c in cmds {
+        s.push_str(&format!("  {:<10} {}\n", c.name, c.about));
+    }
+    s.push_str("\nuse `ocl <subcommand> --help` for flags\n");
+    s
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmds = commands();
+    let Some(sub) = argv.first() else {
+        print!("{}", usage(&cmds));
+        return Ok(());
+    };
+    if sub == "--help" || sub == "-h" || sub == "help" {
+        print!("{}", usage(&cmds));
+        return Ok(());
+    }
+    let cmd = cmds
+        .iter()
+        .find(|c| c.name == sub.as_str())
+        .ok_or_else(|| Error::Usage(format!("unknown subcommand '{sub}'")))?;
+    if argv.iter().any(|a| a == "--help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let args = cmd.parse(&argv[1..])?;
+
+    match cmd.name {
+        "run" => {
+            let bench = BenchmarkId::from_name(args.get("benchmark"))?;
+            let expert = ExpertId::from_name(args.get("expert"))?;
+            let mut h = Harness::new(args.parse("scale")?, args.parse("seed")?);
+            if Engine::from_name(args.get("engine"))? == Engine::Pjrt {
+                h.engine = Engine::Pjrt;
+                h.pjrt = Some(Rc::new(PjrtEngine::from_dir("artifacts")?));
+            }
+            let budget: u64 = args.parse("budget")?;
+            let budget = if budget == 0 { None } else { Some(budget) };
+            let (r, _) = h.run_ocl(
+                bench,
+                expert,
+                budget,
+                args.switch("large"),
+                ocl::data::StreamOrder::Natural,
+            )?;
+            println!(
+                "bench={} expert={} acc={:.2}% recall={:.2}% llm_calls={} \
+                 expert_acc={:.2}% flops={:.3e}",
+                bench.name(),
+                expert.name(),
+                r.accuracy * 100.0,
+                r.recall * 100.0,
+                r.llm_calls,
+                r.expert_accuracy * 100.0,
+                r.flops
+            );
+            Ok(())
+        }
+        "table1" => {
+            let h = Harness::new(args.parse("scale")?, args.parse("seed")?);
+            let experts: Vec<ExpertId> = if args.switch("full") {
+                ExpertId::ALL.to_vec()
+            } else {
+                vec![ExpertId::Gpt35]
+            };
+            let s = eval::table1(&h, &experts)?;
+            eval::emit(args.get("out"), "table1.txt", &s)
+        }
+        "curves" => {
+            let h = Harness::new(args.parse("scale")?, args.parse("seed")?);
+            let expert = ExpertId::from_name(args.get("expert"))?;
+            let large = args.switch("large");
+            let benches: Vec<BenchmarkId> = if args.get("benchmark") == "all" {
+                BenchmarkId::ALL.to_vec()
+            } else {
+                vec![BenchmarkId::from_name(args.get("benchmark"))?]
+            };
+            for bench in benches {
+                let s = eval::curves(&h, bench, expert, large)?;
+                let tag = if large { "fig11" } else { "fig_curves" };
+                eval::emit(
+                    args.get("out"),
+                    &format!("{tag}_{}_{}.txt", bench.name(), expert.name()),
+                    &s,
+                )?;
+            }
+            Ok(())
+        }
+        "case" => {
+            let h = Harness::new(args.parse("scale")?, args.parse("seed")?);
+            let expert = ExpertId::from_name(args.get("expert"))?;
+            let benches: Vec<BenchmarkId> = if args.get("benchmark") == "all" {
+                BenchmarkId::ALL.to_vec()
+            } else {
+                vec![BenchmarkId::from_name(args.get("benchmark"))?]
+            };
+            for bench in benches {
+                let s = eval::case_analysis(&h, bench, expert)?;
+                eval::emit(
+                    args.get("out"),
+                    &format!("fig_case_{}.txt", bench.name()),
+                    &s,
+                )?;
+            }
+            Ok(())
+        }
+        "shift" => {
+            let h = Harness::new(args.parse("scale")?, args.parse("seed")?);
+            let expert = ExpertId::from_name(args.get("expert"))?;
+            let s = eval::shift(&h, expert)?;
+            eval::emit(args.get("out"), "fig9_table2_shift.txt", &s)
+        }
+        "table5" => {
+            let h = Harness::new(args.parse("scale")?, args.parse("seed")?);
+            let expert = ExpertId::from_name(args.get("expert"))?;
+            let s = eval::table5(&h, expert)?;
+            eval::emit(args.get("out"), "table5.txt", &s)
+        }
+        "costmodel" => {
+            let s = eval::costmodel();
+            eval::emit(args.get("out"), "costmodel.txt", &s)
+        }
+        "serve" => {
+            let bench = BenchmarkId::from_name(args.get("benchmark"))?;
+            let expert = ExpertId::from_name(args.get("expert"))?;
+            let n: usize = args.parse("requests")?;
+            let seed: u64 = args.parse("seed")?;
+            let engine = Engine::from_name(args.get("engine"))?;
+            let h = Harness::new(1.0, seed);
+            let (b, e) = h.setup(bench, expert);
+            let mut cfg = CascadeConfig::small(bench, expert);
+            cfg.engine = engine;
+            cfg.seed = seed;
+            let mut server = Server::new(
+                cfg,
+                b.classes,
+                e,
+                BatchPolicy::default(),
+                args.get("artifacts"),
+            )?;
+            server.set_threshold_scale(eval::BUDGETED_SCALE);
+            let (req_tx, req_rx) = std::sync::mpsc::channel();
+            let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+            let samples: Vec<_> = b.samples.iter().take(n).cloned().collect();
+            let submit = std::thread::spawn(move || {
+                for (i, s) in samples.iter().enumerate() {
+                    let _ = req_tx.send(Request {
+                        id: i as u64,
+                        text: s.text.clone(),
+                        truth: s.label,
+                        sample: s.clone(),
+                    });
+                }
+            });
+            let drain = std::thread::spawn(move || resp_rx.iter().count());
+            let report = server.serve(req_rx, resp_tx)?;
+            submit.join().ok();
+            let drained = drain.join().unwrap_or(0);
+            println!(
+                "served={} drained={} acc={:.2}% thr={:.0} req/s \
+                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} handled={:?}",
+                report.served,
+                drained,
+                report.accuracy * 100.0,
+                report.throughput,
+                report.latency_ms.pct(50.0),
+                report.latency_ms.pct(95.0),
+                report.latency_ms.pct(99.0),
+                report.llm_calls,
+                report.handled
+            );
+            Ok(())
+        }
+        "selftest" => {
+            let h = Harness::new(0.02, 1);
+            let (r, _) = h.run_ocl(
+                BenchmarkId::Imdb,
+                ExpertId::Gpt35,
+                Some(150),
+                false,
+                ocl::data::StreamOrder::Natural,
+            )?;
+            println!(
+                "selftest: acc={:.2}% llm_calls={} — OK",
+                r.accuracy * 100.0,
+                r.llm_calls
+            );
+            Ok(())
+        }
+        _ => unreachable!(),
+    }
+}

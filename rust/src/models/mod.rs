@@ -1,0 +1,464 @@
+//! Cascade level models behind a uniform interface, over either engine.
+//!
+//! [`LevelModel`] is the coordinator's view of `m_1 .. m_{N-1}`:
+//! probability-vector prediction plus an online minibatch update.
+//! [`Calibrator`] is the deferral function `f_i`. Each has a host
+//! implementation (pure rust) and a PJRT implementation (AOT HLO
+//! through [`crate::runtime::PjrtEngine`]); the expert `m_N` lives in
+//! [`crate::sim::expert`].
+
+use std::rc::Rc;
+
+use xla::Literal;
+
+use crate::config::dims::{BATCH_STEP, HASH_DIM, SEQ_LEN};
+use crate::config::ModelKind;
+use crate::error::{Error, Result};
+use crate::features::{HashingVectorizer, VocabIndexer};
+use crate::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch};
+use crate::runtime::engine::{literal_f32, literal_i32, load_group_literals};
+use crate::runtime::PjrtEngine;
+
+/// A query featurized once and shared by every cascade level.
+#[derive(Clone, Debug)]
+pub struct Featurized {
+    /// Hashed bag-of-words (LR input), len = `HASH_DIM`.
+    pub x: Vec<f32>,
+    /// Token ids (transformer input), len = `SEQ_LEN`.
+    pub ids: Vec<i32>,
+    /// Padding mask, len = `SEQ_LEN`.
+    pub mask: Vec<f32>,
+}
+
+/// Featurization pipeline (tokenize → hash/index).
+#[derive(Clone, Debug, Default)]
+pub struct Pipeline {
+    vectorizer: HashingVectorizer,
+    indexer: VocabIndexer,
+}
+
+impl Pipeline {
+    /// Featurize one document.
+    pub fn featurize(&self, text: &str) -> Featurized {
+        let x = self.vectorizer.vectorize(text);
+        let (ids, mask, _) = self.indexer.index(text);
+        Featurized { x, ids, mask }
+    }
+
+    /// Featurize into a reused buffer (hot path, no allocation).
+    pub fn featurize_into(&self, text: &str, out: &mut Featurized) {
+        self.vectorizer.vectorize_into(text, &mut out.x);
+        self.indexer.index_into(text, &mut out.ids, &mut out.mask);
+    }
+
+    /// An empty, correctly-sized buffer for [`Pipeline::featurize_into`].
+    pub fn buffer(&self) -> Featurized {
+        Featurized {
+            x: vec![0.0; HASH_DIM],
+            ids: vec![0; SEQ_LEN],
+            mask: vec![0.0; SEQ_LEN],
+        }
+    }
+}
+
+/// One trainable cascade level (`m_i`, i < N).
+pub trait LevelModel {
+    /// Which paper model this level instantiates.
+    fn kind(&self) -> ModelKind;
+    /// Number of classes.
+    fn classes(&self) -> usize;
+    /// Predictive probability vector for one query.
+    fn predict(&mut self, f: &Featurized) -> Vec<f32>;
+    /// One OGD minibatch step on (query, label) pairs; returns loss.
+    fn train(&mut self, batch: &[(&Featurized, usize)], lr: f32) -> f32;
+    /// Batched prediction (default: loop; PJRT overrides with b8).
+    fn predict_batch(&mut self, fs: &[&Featurized]) -> Vec<Vec<f32>> {
+        fs.iter().map(|f| self.predict(f)).collect()
+    }
+}
+
+/// A deferral function `f_i` (post-hoc confidence calibrator).
+pub trait Calibrator {
+    /// Deferral score in (0,1) for a probability vector.
+    fn score(&mut self, probs: &[f32]) -> f32;
+    /// One OGD minibatch step on (probs, z) pairs (Eq. 5); returns loss.
+    fn train(&mut self, batch: &[(&[f32], f32)], lr: f32) -> f32;
+}
+
+// ---------------------------------------------------------------------------
+// Host engine implementations
+// ---------------------------------------------------------------------------
+
+/// Host LR level.
+pub struct HostLrLevel {
+    inner: HostLr,
+}
+
+impl HostLrLevel {
+    /// Zero-initialized LR level.
+    pub fn new(classes: usize) -> Self {
+        HostLrLevel { inner: HostLr::new(HASH_DIM, classes) }
+    }
+}
+
+impl LevelModel for HostLrLevel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Lr
+    }
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+    fn predict(&mut self, f: &Featurized) -> Vec<f32> {
+        self.inner.predict(&f.x)
+    }
+    fn train(&mut self, batch: &[(&Featurized, usize)], lr: f32) -> f32 {
+        let xs: Vec<&[f32]> = batch.iter().map(|(f, _)| f.x.as_slice()).collect();
+        let ys: Vec<usize> = batch.iter().map(|&(_, y)| y).collect();
+        self.inner.train_batch(&xs, &ys, lr)
+    }
+}
+
+/// Host transformer level (base or large).
+pub struct HostTfmLevel {
+    inner: HostTfm,
+    kind: ModelKind,
+}
+
+impl HostTfmLevel {
+    /// Fresh transformer level with deterministic init.
+    pub fn new(kind: ModelKind, classes: usize, seed: u64) -> Self {
+        let arch = match kind {
+            ModelKind::TfmBase => TfmArch::Base,
+            ModelKind::TfmLarge => TfmArch::Large,
+            ModelKind::Lr => panic!("use HostLrLevel for LR"),
+        };
+        HostTfmLevel { inner: HostTfm::new(arch, classes, seed), kind }
+    }
+
+    /// Load from an artifacts init blob (parity with PJRT).
+    pub fn from_flat(kind: ModelKind, classes: usize, flat: &[f32]) -> Self {
+        let arch = match kind {
+            ModelKind::TfmBase => TfmArch::Base,
+            ModelKind::TfmLarge => TfmArch::Large,
+            ModelKind::Lr => panic!("use HostLrLevel for LR"),
+        };
+        HostTfmLevel { inner: HostTfm::from_flat(arch, classes, flat), kind }
+    }
+}
+
+impl LevelModel for HostTfmLevel {
+    fn kind(&self) -> ModelKind {
+        self.kind
+    }
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+    fn predict(&mut self, f: &Featurized) -> Vec<f32> {
+        self.inner.predict(&f.ids, &f.mask)
+    }
+    fn train(&mut self, batch: &[(&Featurized, usize)], lr: f32) -> f32 {
+        let ids: Vec<&[i32]> = batch.iter().map(|(f, _)| f.ids.as_slice()).collect();
+        let masks: Vec<&[f32]> = batch.iter().map(|(f, _)| f.mask.as_slice()).collect();
+        let ys: Vec<usize> = batch.iter().map(|&(_, y)| y).collect();
+        self.inner.train_batch(&ids, &masks, &ys, lr)
+    }
+}
+
+/// Host calibrator.
+pub struct HostCalibrator {
+    inner: HostMlp,
+}
+
+impl HostCalibrator {
+    /// Fresh calibrator.
+    pub fn new(classes: usize, seed: u64) -> Self {
+        HostCalibrator { inner: HostMlp::new(classes, seed) }
+    }
+}
+
+impl Calibrator for HostCalibrator {
+    fn score(&mut self, probs: &[f32]) -> f32 {
+        self.inner.predict(probs)
+    }
+    fn train(&mut self, batch: &[(&[f32], f32)], lr: f32) -> f32 {
+        let ps: Vec<&[f32]> = batch.iter().map(|&(p, _)| p).collect();
+        let zs: Vec<f32> = batch.iter().map(|&(_, z)| z).collect();
+        self.inner.train_batch(&ps, &zs, lr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine implementations
+// ---------------------------------------------------------------------------
+
+/// A cascade level running AOT HLO artifacts through PJRT.
+///
+/// Holds its parameters as XLA literals and threads the step outputs
+/// back into subsequent calls — rust never interprets the tensors.
+pub struct PjrtLevel {
+    engine: Rc<PjrtEngine>,
+    kind: ModelKind,
+    classes: usize,
+    params: Vec<Literal>,
+    fwd1: String,
+    fwd8: String,
+    step: String,
+}
+
+impl PjrtLevel {
+    /// Build from the engine + model kind, loading init parameters
+    /// from the artifacts blob.
+    pub fn new(engine: Rc<PjrtEngine>, kind: ModelKind, classes: usize) -> Result<Self> {
+        let prefix = kind.entry_prefix();
+        let group = format!("{prefix}_c{classes}");
+        let params = load_group_literals(engine.manifest(), &group)?;
+        Ok(PjrtLevel {
+            engine,
+            kind,
+            classes,
+            params,
+            fwd1: format!("{prefix}_fwd_c{classes}_b1"),
+            fwd8: format!("{prefix}_fwd_c{classes}_b8"),
+            step: format!("{prefix}_step_c{classes}_b{BATCH_STEP}"),
+        })
+    }
+
+    fn data_args(&self, entry: &str, fs: &[&Featurized]) -> Result<Vec<Literal>> {
+        let meta = self.engine.manifest().entry(entry)?;
+        match self.kind {
+            ModelKind::Lr => {
+                let mut x = Vec::with_capacity(fs.len() * HASH_DIM);
+                for f in fs {
+                    x.extend_from_slice(&f.x);
+                }
+                Ok(vec![literal_f32(&meta.args[0], &x)?])
+            }
+            ModelKind::TfmBase | ModelKind::TfmLarge => {
+                let mut ids = Vec::with_capacity(fs.len() * SEQ_LEN);
+                let mut mask = Vec::with_capacity(fs.len() * SEQ_LEN);
+                for f in fs {
+                    ids.extend_from_slice(&f.ids);
+                    mask.extend_from_slice(&f.mask);
+                }
+                Ok(vec![
+                    literal_i32(&meta.args[0], &ids)?,
+                    literal_f32(&meta.args[1], &mask)?,
+                ])
+            }
+        }
+    }
+
+    fn run_fwd(&mut self, entry: &str, fs: &[&Featurized]) -> Result<Vec<Vec<f32>>> {
+        let data = self.data_args(entry, fs)?;
+        let mut args: Vec<&Literal> = data.iter().collect();
+        args.extend(self.params.iter());
+        let out = self.engine.run(entry, &args)?;
+        let probs = out
+            .first()
+            .ok_or_else(|| Error::Runtime(format!("{entry}: empty result")))?
+            .to_vec::<f32>()?;
+        Ok(probs.chunks(self.classes).map(|c| c.to_vec()).collect())
+    }
+}
+
+impl LevelModel for PjrtLevel {
+    fn kind(&self) -> ModelKind {
+        self.kind
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn predict(&mut self, f: &Featurized) -> Vec<f32> {
+        let entry = self.fwd1.clone();
+        self.run_fwd(&entry, &[f])
+            .expect("pjrt forward failed")
+            .pop()
+            .expect("b1 forward returned no rows")
+    }
+    fn predict_batch(&mut self, fs: &[&Featurized]) -> Vec<Vec<f32>> {
+        // Full b8 chunks through the batched executable; remainder b1.
+        let mut out = Vec::with_capacity(fs.len());
+        let mut i = 0;
+        let fwd8 = self.fwd8.clone();
+        while i + 8 <= fs.len() {
+            out.extend(
+                self.run_fwd(&fwd8, &fs[i..i + 8]).expect("pjrt b8 forward failed"),
+            );
+            i += 8;
+        }
+        for f in &fs[i..] {
+            out.push(self.predict(f));
+        }
+        out
+    }
+    fn train(&mut self, batch: &[(&Featurized, usize)], lr: f32) -> f32 {
+        assert_eq!(
+            batch.len(),
+            BATCH_STEP,
+            "pjrt step executables are compiled for batch {BATCH_STEP}"
+        );
+        let fs: Vec<&Featurized> = batch.iter().map(|&(f, _)| f).collect();
+        let step = self.step.clone();
+        let meta = self.engine.manifest().entry(&step).expect("step entry");
+        let n_data = meta.params_at;
+        let mut data = self.data_args(&step, &fs).expect("step data args");
+        // one-hot labels are the last data argument
+        let mut yoh = vec![0.0f32; BATCH_STEP * self.classes];
+        for (i, &(_, y)) in batch.iter().enumerate() {
+            yoh[i * self.classes + y] = 1.0;
+        }
+        data.push(literal_f32(&meta.args[n_data - 1], &yoh).expect("yoh literal"));
+        let lr_lit = Literal::scalar(lr);
+        let mut args: Vec<&Literal> = data.iter().collect();
+        args.extend(self.params.iter());
+        args.push(&lr_lit);
+        let mut out = self.engine.run(&step, &args).expect("pjrt step failed");
+        let loss = out
+            .pop()
+            .expect("step returned nothing")
+            .to_vec::<f32>()
+            .expect("loss literal")[0];
+        self.params = out; // params' in call order
+        loss
+    }
+}
+
+/// PJRT calibrator (deferral MLP through artifacts).
+pub struct PjrtCalibrator {
+    engine: Rc<PjrtEngine>,
+    classes: usize,
+    params: Vec<Literal>,
+    fwd1: String,
+    step: String,
+}
+
+impl PjrtCalibrator {
+    /// Build from the engine, loading init parameters.
+    pub fn new(engine: Rc<PjrtEngine>, classes: usize) -> Result<Self> {
+        let group = format!("mlp_c{classes}");
+        let params = load_group_literals(engine.manifest(), &group)?;
+        Ok(PjrtCalibrator {
+            engine,
+            classes,
+            params,
+            fwd1: format!("mlp_fwd_c{classes}_b1"),
+            step: format!("mlp_step_c{classes}_b{BATCH_STEP}"),
+        })
+    }
+}
+
+impl Calibrator for PjrtCalibrator {
+    fn score(&mut self, probs: &[f32]) -> f32 {
+        let meta = self.engine.manifest().entry(&self.fwd1).expect("mlp fwd entry");
+        let p = literal_f32(&meta.args[0], probs).expect("probs literal");
+        let mut args: Vec<&Literal> = vec![&p];
+        args.extend(self.params.iter());
+        let out = self.engine.run(&self.fwd1, &args).expect("mlp fwd failed");
+        out[0].to_vec::<f32>().expect("score literal")[0]
+    }
+    fn train(&mut self, batch: &[(&[f32], f32)], lr: f32) -> f32 {
+        assert_eq!(batch.len(), BATCH_STEP);
+        let meta = self.engine.manifest().entry(&self.step).expect("mlp step entry");
+        let mut ps = Vec::with_capacity(BATCH_STEP * self.classes);
+        let mut zs = Vec::with_capacity(BATCH_STEP);
+        for &(p, z) in batch {
+            ps.extend_from_slice(p);
+            zs.push(z);
+        }
+        let p_lit = literal_f32(&meta.args[0], &ps).expect("probs literal");
+        let z_lit = literal_f32(&meta.args[1], &zs).expect("z literal");
+        let lr_lit = Literal::scalar(lr);
+        let mut args: Vec<&Literal> = vec![&p_lit, &z_lit];
+        args.extend(self.params.iter());
+        args.push(&lr_lit);
+        let mut out = self.engine.run(&self.step, &args).expect("mlp step failed");
+        let loss = out.pop().expect("loss").to_vec::<f32>().expect("loss literal")[0];
+        self.params = out;
+        loss
+    }
+}
+
+/// Construct the level model for a config row over the chosen engine.
+pub fn build_level(
+    engine: Option<&Rc<PjrtEngine>>,
+    kind: ModelKind,
+    classes: usize,
+    seed: u64,
+) -> Result<Box<dyn LevelModel>> {
+    Ok(match engine {
+        Some(e) => Box::new(PjrtLevel::new(e.clone(), kind, classes)?),
+        None => match kind {
+            ModelKind::Lr => Box::new(HostLrLevel::new(classes)),
+            _ => Box::new(HostTfmLevel::new(kind, classes, seed)),
+        },
+    })
+}
+
+/// Construct a calibrator over the chosen engine.
+pub fn build_calibrator(
+    engine: Option<&Rc<PjrtEngine>>,
+    classes: usize,
+    seed: u64,
+) -> Result<Box<dyn Calibrator>> {
+    Ok(match engine {
+        Some(e) => Box::new(PjrtCalibrator::new(e.clone(), classes)?),
+        None => Box::new(HostCalibrator::new(classes, seed)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_shapes() {
+        let p = Pipeline::default();
+        let f = p.featurize("kw0x001 neg00 c1w0003");
+        assert_eq!(f.x.len(), HASH_DIM);
+        assert_eq!(f.ids.len(), SEQ_LEN);
+        assert_eq!(f.mask.iter().sum::<f32>(), 3.0);
+        let mut buf = p.buffer();
+        p.featurize_into("kw0x001 neg00 c1w0003", &mut buf);
+        assert_eq!(buf.x, f.x);
+        assert_eq!(buf.ids, f.ids);
+    }
+
+    #[test]
+    fn host_levels_implement_trait() {
+        let p = Pipeline::default();
+        let f = p.featurize("kw1x001 kw1x002 kw1x003");
+        let mut lr = HostLrLevel::new(2);
+        let probs = lr.predict(&f);
+        assert_eq!(probs.len(), 2);
+        let batch = [(&f, 1usize)];
+        // batch of 1 trains fine on host
+        let l1 = lr.train(&batch, 0.5);
+        assert!(l1 > 0.0);
+        let mut tfm = HostTfmLevel::new(ModelKind::TfmBase, 7, 0);
+        assert_eq!(tfm.predict(&f).len(), 7);
+        assert_eq!(tfm.kind(), ModelKind::TfmBase);
+    }
+
+    #[test]
+    fn host_calibrator_trains() {
+        let mut c = HostCalibrator::new(2, 0);
+        let lo: &[f32] = &[0.55, 0.45];
+        let hi: &[f32] = &[0.97, 0.03];
+        let batch = [(lo, 1.0f32), (hi, 0.0f32)];
+        for _ in 0..200 {
+            c.train(&batch, 0.1);
+        }
+        assert!(c.score(lo) > c.score(hi));
+    }
+
+    #[test]
+    fn predict_batch_default_matches_loop() {
+        let p = Pipeline::default();
+        let f1 = p.featurize("kw0x001 kw0x004");
+        let f2 = p.featurize("kw1x002");
+        let mut lr = HostLrLevel::new(2);
+        let batched = lr.predict_batch(&[&f1, &f2]);
+        assert_eq!(batched[0], lr.predict(&f1));
+        assert_eq!(batched[1], lr.predict(&f2));
+    }
+}

@@ -1,0 +1,190 @@
+//! MDP formalization (paper §2): episode costs, `J(π, T)` (Eq. 1), and
+//! empirical regret accounting against best-fixed-policy-in-hindsight
+//! (Def. A.1) — the machinery behind the no-regret property test.
+
+use crate::config::CascadeConfig;
+
+/// Cost parameters of the episodic MDP.
+#[derive(Clone, Debug)]
+pub struct CostParams {
+    /// Cost weighting factor μ.
+    pub mu: f64,
+    /// Deferral penalties `c_{i+1}` for each hop (levels then expert).
+    pub defer_costs: Vec<f64>,
+}
+
+impl CostParams {
+    /// Extract from a cascade config: hop i's penalty is level i's
+    /// `model_cost` (the "Model Cost" column of Tables 3–4).
+    pub fn from_config(cfg: &CascadeConfig) -> Self {
+        CostParams {
+            mu: cfg.mu,
+            defer_costs: cfg.levels.iter().map(|l| l.model_cost).collect(),
+        }
+    }
+
+    /// Immediate cost of one episode's trajectory: `exit_level` hops of
+    /// deferral penalties, then the prediction loss at the exit.
+    ///
+    /// `exit_level` ∈ [0, N-1]; N-1 = the expert level (never wrong in
+    /// the MDP's view of its own labels, but we charge the *measured*
+    /// loss so noisy experts are accounted honestly).
+    pub fn episode_cost(&self, exit_level: usize, prediction_loss: f64) -> f64 {
+        let hops: f64 = self.defer_costs[..exit_level.min(self.defer_costs.len())]
+            .iter()
+            .sum();
+        self.mu * hops + prediction_loss
+    }
+}
+
+/// 0/1 prediction loss.
+pub fn zero_one_loss(pred: usize, truth: usize) -> f64 {
+    if pred == truth {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Running `J(π, T)` tracker plus the per-level hindsight costs needed
+/// for the empirical-regret estimate.
+#[derive(Clone, Debug)]
+pub struct RegretTracker {
+    params: CostParams,
+    /// Σ episode costs of the learned policy.
+    j_learned: f64,
+    /// Σ episode costs for each *fixed* policy "always exit at level i".
+    j_fixed: Vec<f64>,
+    episodes: usize,
+    /// Per-episode average-regret trace (sampled for plotting).
+    pub trace: Vec<(usize, f64)>,
+    trace_every: usize,
+}
+
+impl RegretTracker {
+    /// Track regret for an N-level cascade (N-1 small levels + expert).
+    pub fn new(params: CostParams, n_levels: usize, trace_every: usize) -> Self {
+        RegretTracker {
+            params,
+            j_learned: 0.0,
+            j_fixed: vec![0.0; n_levels],
+            episodes: 0,
+            trace: Vec::new(),
+            trace_every: trace_every.max(1),
+        }
+    }
+
+    /// Record one episode.
+    ///
+    /// * `exit_level`, `loss` — what the learned policy did.
+    /// * `fixed_losses[i]` — the 0/1 loss the fixed policy "always exit
+    ///   at level i" would have paid on this episode (level N-1 = the
+    ///   expert's own loss).
+    pub fn record(&mut self, exit_level: usize, loss: f64, fixed_losses: &[f64]) {
+        debug_assert_eq!(fixed_losses.len(), self.j_fixed.len());
+        self.j_learned += self.params.episode_cost(exit_level, loss);
+        for (i, jf) in self.j_fixed.iter_mut().enumerate() {
+            *jf += self.params.episode_cost(i, fixed_losses[i]);
+        }
+        self.episodes += 1;
+        if self.episodes % self.trace_every == 0 {
+            self.trace.push((self.episodes, self.average_regret()));
+        }
+    }
+
+    /// Total cost of the learned policy so far.
+    pub fn j_learned(&self) -> f64 {
+        self.j_learned
+    }
+
+    /// Cost of the best fixed policy in hindsight.
+    pub fn j_best_fixed(&self) -> f64 {
+        self.j_fixed.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Which fixed exit level is best in hindsight.
+    pub fn best_fixed_level(&self) -> usize {
+        let best = self.j_best_fixed();
+        self.j_fixed.iter().position(|&x| x == best).unwrap_or(0)
+    }
+
+    /// Empirical regret γ = J(learned) − min_fixed J.
+    pub fn regret(&self) -> f64 {
+        self.j_learned - self.j_best_fixed()
+    }
+
+    /// γ / T — must trend to ≤ 0 for the no-regret property.
+    pub fn average_regret(&self) -> f64 {
+        if self.episodes == 0 {
+            0.0
+        } else {
+            self.regret() / self.episodes as f64
+        }
+    }
+
+    /// Episodes recorded.
+    pub fn episodes(&self) -> usize {
+        self.episodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BenchmarkId, ExpertId};
+
+    fn params() -> CostParams {
+        CostParams { mu: 0.001, defer_costs: vec![1.0, 1182.0] }
+    }
+
+    #[test]
+    fn episode_cost_decomposition() {
+        let p = params();
+        // exit at level 0: no hops, only loss
+        assert_eq!(p.episode_cost(0, 1.0), 1.0);
+        // exit at level 1: one hop
+        assert!((p.episode_cost(1, 0.0) - 0.001).abs() < 1e-12);
+        // exit at expert (level 2): both hops
+        assert!((p.episode_cost(2, 0.0) - 0.001 * 1183.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_config_reads_tables() {
+        let cfg = crate::config::CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        let p = CostParams::from_config(&cfg);
+        assert_eq!(p.defer_costs, vec![1.0, 1182.0]);
+    }
+
+    #[test]
+    fn regret_vs_best_fixed() {
+        let mut t = RegretTracker::new(params(), 3, 10);
+        // Learned policy always exits at level 0 with loss 0.3;
+        // fixed level-1 policy has loss 0.1 → cheaper than learned.
+        for _ in 0..100 {
+            t.record(0, 0.3, &[0.3, 0.1, 0.0]);
+        }
+        assert_eq!(t.episodes(), 100);
+        // fixed costs: L0 = 0.3; L1 = 0.001 + 0.1 = 0.101; L2 = 1.183
+        assert_eq!(t.best_fixed_level(), 1);
+        let want_regret = 100.0 * (0.3 - 0.101);
+        assert!((t.regret() - want_regret).abs() < 1e-9);
+        assert!(t.average_regret() > 0.0);
+        assert_eq!(t.trace.len(), 10);
+    }
+
+    #[test]
+    fn zero_regret_when_learned_matches_best() {
+        let mut t = RegretTracker::new(params(), 2, 1);
+        for _ in 0..50 {
+            t.record(0, 0.0, &[0.0, 0.0]);
+        }
+        assert!(t.regret() <= 1e-12);
+        assert!(t.average_regret() <= 1e-12);
+    }
+
+    #[test]
+    fn zero_one() {
+        assert_eq!(zero_one_loss(1, 1), 0.0);
+        assert_eq!(zero_one_loss(0, 1), 1.0);
+    }
+}

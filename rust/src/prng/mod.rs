@@ -1,0 +1,349 @@
+//! Deterministic PRNG substrate (no `rand` crate in the offline image).
+//!
+//! [`Rng`] is xoshiro256** seeded via SplitMix64 — the standard
+//! recommendation for fast, high-quality, reproducible simulation
+//! streams. Every stochastic component of the reproduction (benchmark
+//! generators, the expert's label noise, DAgger coin flips, shuffles)
+//! draws from an explicitly seeded `Rng`, so whole experiments are
+//! replayable bit-for-bit from their config seed.
+
+/// SplitMix64 step — used for seeding and as a cheap standalone PRNG.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG with distribution helpers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from the Box–Muller pair.
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create from a 64-bit seed (expanded through SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent child stream (for per-component seeding).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let (mut u1, u2) = (self.f64(), self.f64());
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean / std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal with the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "categorical needs positive mass");
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-ish rank sampler over [0, n): P(k) ∝ 1/(k+1)^s.
+    ///
+    /// Used by the synthetic text generator for realistic token
+    /// frequency profiles. Inverse-CDF over precomputed weights is the
+    /// caller's job for hot loops; this is the convenience path.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Rejection-inversion would be faster; n here is <= vocab (8k),
+        // and hot paths precompute CDFs, so simple inversion suffices.
+        let mut u = self.f64();
+        let norm: f64 = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).sum();
+        u *= norm;
+        for k in 1..=n {
+            u -= 1.0 / (k as f64).powf(s);
+            if u <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample `k` distinct indices from 0..n (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut v = self.permutation(n);
+        v.truncate(k);
+        v
+    }
+}
+
+/// Precomputed CDF for repeated categorical sampling (hot loops).
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    cum: Vec<f64>,
+}
+
+impl Cdf {
+    /// Build from unnormalized non-negative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for w in weights {
+            acc += w.max(0.0);
+            cum.push(acc);
+        }
+        Cdf { cum }
+    }
+
+    /// Sample an index using binary search — O(log n).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = *self.cum.last().expect("empty cdf");
+        let u = rng.f64() * total;
+        match self
+            .cum
+            .binary_search_by(|c| c.partial_cmp(&u).expect("nan in cdf"))
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.cum.len()
+    }
+
+    /// True when there are no categories.
+    pub fn is_empty(&self) -> bool {
+        self.cum.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Rng::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::new(13);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 30_000.0 - 0.6).abs() < 0.02);
+        assert!((counts[1] as f64 / 30_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn cdf_matches_categorical() {
+        let mut rng = Rng::new(15);
+        let w = [0.5, 0.0, 2.5, 1.0];
+        let cdf = Cdf::new(&w);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[cdf.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!((counts[2] as f64 / 40_000.0 - 0.625).abs() < 0.02);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(17);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(21);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut rng = Rng::new(23);
+        for _ in 0..1000 {
+            assert!(rng.lognormal(6.0, 0.8) > 0.0);
+        }
+    }
+}

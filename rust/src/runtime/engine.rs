@@ -1,0 +1,136 @@
+//! PJRT execution engine: compile-and-cache HLO entry points, execute
+//! them with literal arguments, thread updated parameters back.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArgSpec, Dtype, Manifest};
+
+/// A PJRT CPU engine bound to one artifacts directory.
+///
+/// Not `Send`: `PjRtClient` is `Rc`-based. Each worker thread builds
+/// its own engine (compilation is cached per engine).
+pub struct PjrtEngine {
+    client: PjRtClient,
+    manifest: Rc<Manifest>,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over a loaded manifest.
+    pub fn new(manifest: Rc<Manifest>) -> Result<Self> {
+        let client = PjRtClient::cpu()?;
+        Ok(PjrtEngine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Convenience: load the manifest from `dir` and build the engine.
+    pub fn from_dir(dir: &str) -> Result<Self> {
+        PjrtEngine::new(Rc::new(Manifest::load(dir)?))
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    pub fn executable(&self, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(entry) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.entry(entry)?;
+        let path = self.manifest.root().join(&meta.hlo);
+        let proto = HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::Runtime(format!("load {}: {e}", path.display()))
+        })?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(entry.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry point with the given argument literals.
+    ///
+    /// Arity and (cheaply checkable) element counts are validated
+    /// against the manifest. Returns the decomposed output tuple (the
+    /// graphs lower with `return_tuple=True`).
+    pub fn run(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let meta = self.manifest.entry(entry)?;
+        if args.len() != meta.args.len() {
+            return Err(Error::Runtime(format!(
+                "{entry}: got {} args, manifest wants {}",
+                args.len(),
+                meta.args.len()
+            )));
+        }
+        for (i, (a, spec)) in args.iter().zip(&meta.args).enumerate() {
+            if a.element_count() != spec.elems() {
+                return Err(Error::Runtime(format!(
+                    "{entry} arg {i}: {} elements, manifest wants {}",
+                    a.element_count(),
+                    spec.elems()
+                )));
+            }
+        }
+        let exe = self.executable(entry)?;
+        let result = exe.execute::<&Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut tuple = tuple;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Build a literal for one manifest arg spec from host data.
+pub fn literal_f32(spec: &ArgSpec, data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(spec.dtype, Dtype::F32);
+    if data.len() != spec.elems() {
+        return Err(Error::Runtime(format!(
+            "literal_f32: {} values for shape {:?}",
+            data.len(),
+            spec.shape
+        )));
+    }
+    if spec.shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal for one manifest arg spec.
+pub fn literal_i32(spec: &ArgSpec, data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(spec.dtype, Dtype::S32);
+    if data.len() != spec.elems() {
+        return Err(Error::Runtime(format!(
+            "literal_i32: {} values for shape {:?}",
+            data.len(),
+            spec.shape
+        )));
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Load a parameter group's init blob as literals (one per tensor).
+pub fn load_group_literals(manifest: &Manifest, group: &str) -> Result<Vec<Literal>> {
+    let tensors = manifest.load_group_tensors(group)?;
+    let mut out = Vec::with_capacity(tensors.len());
+    for (_, shape, data) in tensors {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        out.push(if dims.is_empty() {
+            Literal::scalar(data[0])
+        } else {
+            Literal::vec1(&data).reshape(&dims)?
+        });
+    }
+    Ok(out)
+}

@@ -1,0 +1,357 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime (entry points, argument shapes/dtypes, parameter
+//! groups + init blobs, dimension constants).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use crate::codec::parse;
+use crate::config::dims;
+use crate::error::{Error, Result};
+
+/// Element dtype of an executable argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    S32,
+}
+
+impl Dtype {
+    fn from_tag(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            _ => Err(Error::Manifest(format!("unknown dtype '{s}'"))),
+        }
+    }
+}
+
+/// Shape + dtype of one executable argument.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: Dtype,
+}
+
+impl ArgSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One entry point (one HLO file).
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    /// HLO text file name relative to the artifacts dir.
+    pub hlo: String,
+    /// All argument specs in call order.
+    pub args: Vec<ArgSpec>,
+    /// Index of the first parameter argument.
+    pub params_at: usize,
+    /// Parameter group feeding `args[params_at..]`.
+    pub group: String,
+}
+
+impl EntryMeta {
+    /// True for step entries (trailing scalar learning-rate argument).
+    pub fn is_step(&self, group_len: usize) -> bool {
+        self.params_at + group_len < self.args.len()
+    }
+}
+
+/// A named parameter group (one init blob).
+#[derive(Clone, Debug)]
+pub struct ParamGroup {
+    /// Blob file relative to the artifacts dir (f32 little-endian).
+    pub file: String,
+    /// (tensor name, shape) in blob order.
+    pub tensors: Vec<(String, Vec<usize>)>,
+}
+
+impl ParamGroup {
+    /// Total f32 element count of the blob.
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    root: PathBuf,
+    /// Entry points by name.
+    pub entries: BTreeMap<String, EntryMeta>,
+    /// Parameter groups by name.
+    pub params: BTreeMap<String, ParamGroup>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let v = parse(&text)?;
+        if v.require("version")?.as_usize() != Some(1) {
+            return Err(Error::Manifest("unsupported manifest version".into()));
+        }
+        // Dimension agreement with the compiled-in constants.
+        let d = v.require("dims")?;
+        let check = |key: &str, want: usize| -> Result<()> {
+            let got = d
+                .require(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest(format!("dims.{key} not usize")))?;
+            if got != want {
+                return Err(Error::Manifest(format!(
+                    "dims.{key}: manifest {got} != crate {want} — \
+                     rebuild artifacts (make artifacts)"
+                )));
+            }
+            Ok(())
+        };
+        check("hash_dim", dims::HASH_DIM)?;
+        check("seq_len", dims::SEQ_LEN)?;
+        check("vocab", dims::VOCAB)?;
+        check("batch_step", dims::BATCH_STEP)?;
+
+        let mut params = BTreeMap::new();
+        for (name, g) in v
+            .require("params")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("params not an object".into()))?
+        {
+            let file = g
+                .require("file")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("param file not a string".into()))?
+                .to_string();
+            let mut tensors = Vec::new();
+            for t in g
+                .require("tensors")?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("tensors not an array".into()))?
+            {
+                let tname = t
+                    .require("name")?
+                    .as_str()
+                    .ok_or_else(|| Error::Manifest("tensor name".into()))?
+                    .to_string();
+                let shape = t
+                    .require("shape")?
+                    .as_usize_vec()
+                    .ok_or_else(|| Error::Manifest("tensor shape".into()))?;
+                tensors.push((tname, shape));
+            }
+            params.insert(name.clone(), ParamGroup { file, tensors });
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in v
+            .require("entries")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("entries not an object".into()))?
+        {
+            let hlo = e
+                .require("hlo")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("entry hlo".into()))?
+                .to_string();
+            let mut args = Vec::new();
+            for a in e
+                .require("args")?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("entry args".into()))?
+            {
+                let shape = a
+                    .require("shape")?
+                    .as_usize_vec()
+                    .ok_or_else(|| Error::Manifest("arg shape".into()))?;
+                let dtype = Dtype::from_tag(
+                    a.require("dtype")?
+                        .as_str()
+                        .ok_or_else(|| Error::Manifest("arg dtype".into()))?,
+                )?;
+                args.push(ArgSpec { shape, dtype });
+            }
+            let params_at = e
+                .require("params_at")?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest("params_at".into()))?;
+            let group = e
+                .require("group")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("entry group".into()))?
+                .to_string();
+            if !params.contains_key(&group) {
+                return Err(Error::Manifest(format!(
+                    "entry {name} references unknown group {group}"
+                )));
+            }
+            entries.insert(name.clone(), EntryMeta { hlo, args, params_at, group });
+        }
+        Ok(Manifest { root, entries, params })
+    }
+
+    /// Artifacts root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Entry metadata by name.
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown entry '{name}'")))
+    }
+
+    /// Parameter group by name.
+    pub fn group(&self, name: &str) -> Result<&ParamGroup> {
+        self.params
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown group '{name}'")))
+    }
+
+    /// Read a group's init blob as a flat f32 vec (validated length).
+    pub fn load_group_flat(&self, name: &str) -> Result<Vec<f32>> {
+        let g = self.group(name)?;
+        let path = self.root.join(&g.file);
+        let mut bytes = Vec::new();
+        std::fs::File::open(&path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        if bytes.len() != g.total_elems() * 4 {
+            return Err(Error::Manifest(format!(
+                "blob {name}: {} bytes, expected {}",
+                bytes.len(),
+                g.total_elems() * 4
+            )));
+        }
+        let mut out = Vec::with_capacity(g.total_elems());
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Read a group's blob split per tensor.
+    pub fn load_group_tensors(&self, name: &str) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let flat = self.load_group_flat(name)?;
+        let g = self.group(name)?;
+        let mut out = Vec::with_capacity(g.tensors.len());
+        let mut off = 0usize;
+        for (tname, shape) in &g.tensors {
+            let n: usize = shape.iter().product();
+            out.push((tname.clone(), shape.clone(), flat[off..off + n].to_vec()));
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthesize a tiny manifest on disk for parser tests.
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir.join("init")).unwrap();
+        let blob: Vec<u8> =
+            (0..6u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("init/g.bin"), blob).unwrap();
+        let manifest = format!(
+            r#"{{
+ "version": 1,
+ "dims": {{"hash_dim": {}, "seq_len": {}, "vocab": {}, "batch_step": {}}},
+ "params": {{"g": {{"file": "init/g.bin",
+   "tensors": [{{"name": "w", "shape": [2, 2]}}, {{"name": "b", "shape": [2]}}]}}}},
+ "entries": {{"e_fwd": {{"hlo": "e.hlo.txt", "params_at": 1, "group": "g",
+   "args": [{{"shape": [1, 4], "dtype": "f32"}},
+            {{"shape": [2, 2], "dtype": "f32"}},
+            {{"shape": [2], "dtype": "f32"}}]}}}}
+}}"#,
+            dims::HASH_DIM,
+            dims::SEQ_LEN,
+            dims::VOCAB,
+            dims::BATCH_STEP
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ocl_manifest_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let d = tmpdir("ok");
+        write_fixture(&d);
+        let m = Manifest::load(&d).unwrap();
+        let e = m.entry("e_fwd").unwrap();
+        assert_eq!(e.args.len(), 3);
+        assert_eq!(e.args[0].shape, vec![1, 4]);
+        assert_eq!(e.args[0].dtype, Dtype::F32);
+        assert_eq!(e.params_at, 1);
+        let flat = m.load_group_flat("g").unwrap();
+        assert_eq!(flat, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let ts = m.load_group_tensors("g").unwrap();
+        assert_eq!(ts[0].2, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ts[1].2, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let d = tmpdir("dims");
+        write_fixture(&d);
+        let bad = std::fs::read_to_string(d.join("manifest.json"))
+            .unwrap()
+            .replace(&format!("\"hash_dim\": {}", dims::HASH_DIM), "\"hash_dim\": 999");
+        std::fs::write(d.join("manifest.json"), bad).unwrap();
+        let err = Manifest::load(&d).unwrap_err();
+        assert!(err.to_string().contains("hash_dim"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_blob() {
+        let d = tmpdir("blob");
+        write_fixture(&d);
+        std::fs::write(d.join("init/g.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(&d).unwrap();
+        assert!(m.load_group_flat("g").is_err());
+    }
+
+    #[test]
+    fn unknown_lookups_error() {
+        let d = tmpdir("lookup");
+        write_fixture(&d);
+        let m = Manifest::load(&d).unwrap();
+        assert!(m.entry("nope").is_err());
+        assert!(m.group("nope").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        if !crate::runtime::artifacts_available("artifacts") {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(m.entries.contains_key("lr_fwd_c2_b1"));
+        assert!(m.entries.contains_key("tfm_base_step_c7_b8"));
+        let g = m.group("tfm_base_c2").unwrap();
+        assert_eq!(g.tensors[0].0, "embed");
+        let flat = m.load_group_flat("lr_c2").unwrap();
+        assert_eq!(flat.len(), dims::HASH_DIM * 2 + 2);
+        assert!(flat.iter().all(|&x| x == 0.0)); // LR zero-init
+    }
+}

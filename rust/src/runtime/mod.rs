@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them through the `xla` crate's PJRT CPU client.
+//!
+//! This is the production request path: Python runs once at build time
+//! (`make artifacts`), and everything here is plain rust + the PJRT C
+//! API. `PjRtClient` is `Rc`-based (not `Send`), so each engine lives
+//! on the thread that created it; the serving layer gives every model
+//! worker thread its own [`PjrtEngine`] (vLLM-style leader/worker).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::PjrtEngine;
+pub use manifest::{ArgSpec, Dtype, EntryMeta, Manifest, ParamGroup};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True when AOT artifacts exist (integration tests gate on this).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,0 +1,535 @@
+//! Streaming serving mode: request router + dynamic batcher + per-model
+//! worker threads (the vLLM-style leader/worker topology).
+//!
+//! Why threads-per-model: `PjRtClient` is `Rc`-based and cannot cross
+//! threads, so each worker *builds its own engine* on its own thread;
+//! the router owns only channels. The router executes the cascade
+//! policy (deferral walk + online learning cadence) while workers
+//! execute model inference/updates — queries are batched per level (up
+//! to `batch_max` or `deadline`), which is what amortizes PJRT dispatch
+//! overhead on the hot path (§Perf L3).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{CascadeConfig, Engine, ModelKind};
+use crate::data::Sample;
+use crate::error::{Error, Result};
+use crate::models::{
+    build_calibrator, build_level, Featurized, Pipeline,
+};
+use crate::prng::Rng;
+use crate::runtime::PjrtEngine;
+use crate::sim::Expert;
+use crate::util::{argmax, Percentiles, Ring};
+
+/// A client request: one document to classify.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-assigned id (returned in the response).
+    pub id: u64,
+    /// Document text.
+    pub text: String,
+    /// Ground truth — metrics only (the router never reads it).
+    pub truth: usize,
+    /// Stable sample id for the expert simulator.
+    pub sample: Sample,
+}
+
+/// The served answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Predicted label.
+    pub pred: usize,
+    /// Which level answered (levels.len() = expert).
+    pub handled_by: usize,
+    /// End-to-end latency.
+    pub latency: Duration,
+    /// Ground truth (echoed for client-side accuracy accounting).
+    pub truth: usize,
+}
+
+/// Serving report: latency distribution + throughput + routing mix.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Requests served.
+    pub served: usize,
+    /// End-to-end latency percentiles (milliseconds).
+    pub latency_ms: Percentiles,
+    /// Wall-clock duration of the run (seconds).
+    pub wall_secs: f64,
+    /// Requests per second.
+    pub throughput: f64,
+    /// Per-level handled counts (last = expert).
+    pub handled: Vec<usize>,
+    /// Accuracy vs ground truth.
+    pub accuracy: f64,
+    /// Expert calls.
+    pub llm_calls: u64,
+}
+
+// --- worker protocol -------------------------------------------------------
+
+struct Job {
+    req_id: u64,
+    f: Arc<Featurized>,
+}
+
+enum WorkerMsg {
+    Infer(Vec<Job>),
+    Train(Vec<(Arc<Featurized>, usize)>, f32),
+    TrainCalib(Vec<(Vec<f32>, f32)>, f32),
+    Shutdown,
+}
+
+struct WorkerReply {
+    level: usize,
+    results: Vec<(u64, Vec<f32>, f32)>, // (req_id, probs, score)
+}
+
+/// Handle to one level worker thread.
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    handle: JoinHandle<()>,
+}
+
+fn spawn_worker(
+    level: usize,
+    kind: ModelKind,
+    classes: usize,
+    seed: u64,
+    engine: Engine,
+    artifacts_dir: String,
+    reply_tx: Sender<WorkerReply>,
+) -> Worker {
+    let (tx, rx): (Sender<WorkerMsg>, Receiver<WorkerMsg>) = channel();
+    let handle = std::thread::spawn(move || {
+        // The engine is constructed on this thread (PjRtClient is !Send).
+        let pjrt = match engine {
+            Engine::Pjrt => Some(std::rc::Rc::new(
+                PjrtEngine::from_dir(&artifacts_dir).expect("worker engine"),
+            )),
+            Engine::Host => None,
+        };
+        let mut model =
+            build_level(pjrt.as_ref(), kind, classes, seed).expect("worker model");
+        let mut calib =
+            build_calibrator(pjrt.as_ref(), classes, seed).expect("worker calibrator");
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                WorkerMsg::Infer(jobs) => {
+                    let fs: Vec<&Featurized> =
+                        jobs.iter().map(|j| j.f.as_ref()).collect();
+                    let probs = model.predict_batch(&fs);
+                    let results = jobs
+                        .iter()
+                        .zip(probs)
+                        .map(|(j, p)| {
+                            let s = calib.score(&p);
+                            (j.req_id, p, s)
+                        })
+                        .collect();
+                    if reply_tx.send(WorkerReply { level, results }).is_err() {
+                        break;
+                    }
+                }
+                WorkerMsg::Train(batch, lr) => {
+                    for chunk in batch.chunks(8) {
+                        if chunk.len() < 8 {
+                            break;
+                        }
+                        let b: Vec<(&Featurized, usize)> =
+                            chunk.iter().map(|(f, y)| (f.as_ref(), *y)).collect();
+                        model.train(&b, lr);
+                    }
+                }
+                WorkerMsg::TrainCalib(batch, lr) => {
+                    if batch.len() >= 8 {
+                        let b: Vec<(&[f32], f32)> = batch[..8]
+                            .iter()
+                            .map(|(p, z)| (p.as_slice(), *z))
+                            .collect();
+                        calib.train(&b, lr);
+                    }
+                }
+                WorkerMsg::Shutdown => break,
+            }
+        }
+    });
+    Worker { tx, handle }
+}
+
+// --- router ----------------------------------------------------------------
+
+/// Dynamic batching parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max jobs per inference batch.
+    pub batch_max: usize,
+    /// Max time the oldest job may wait before the batch is flushed.
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { batch_max: 8, deadline: Duration::from_millis(2) }
+    }
+}
+
+struct Pending {
+    f: Arc<Featurized>,
+    truth: usize,
+    sample: Sample,
+    t0: Instant,
+    seen: Vec<Option<Vec<f32>>>,
+}
+
+struct LevelQueue {
+    jobs: VecDeque<Job>,
+    oldest: Option<Instant>,
+    in_flight: bool,
+}
+
+/// The streaming cascade server.
+pub struct Server {
+    workers: Vec<Worker>,
+    reply_rx: Receiver<WorkerReply>,
+    cfg: CascadeConfig,
+    classes: usize,
+    policy: BatchPolicy,
+    expert: Expert,
+    pipeline: Pipeline,
+    rng: Rng,
+    // learner state (mirrors Cascade)
+    caches: Vec<Ring<(Arc<Featurized>, usize)>>,
+    calib_caches: Vec<Ring<(Vec<f32>, f32)>>,
+    pendings: Vec<usize>,
+    calib_pendings: Vec<usize>,
+    betas: Vec<f64>,
+    threshold_scale: f64,
+}
+
+impl Server {
+    /// Spawn workers and build the router.
+    pub fn new(
+        cfg: CascadeConfig,
+        classes: usize,
+        expert: Expert,
+        policy: BatchPolicy,
+        artifacts_dir: &str,
+    ) -> Result<Self> {
+        let (reply_tx, reply_rx) = channel();
+        let mut workers = Vec::new();
+        for (i, lc) in cfg.levels.iter().enumerate() {
+            workers.push(spawn_worker(
+                i,
+                lc.model,
+                classes,
+                cfg.seed ^ ((i as u64 + 1) * 0x5E77E),
+                cfg.engine,
+                artifacts_dir.to_string(),
+                reply_tx.clone(),
+            ));
+        }
+        let n = cfg.levels.len();
+        Ok(Server {
+            workers,
+            reply_rx,
+            classes,
+            policy,
+            expert,
+            pipeline: Pipeline::default(),
+            rng: Rng::new(cfg.seed ^ 0x5E57E),
+            caches: cfg
+                .levels
+                .iter()
+                .map(|l| Ring::new(l.cache_size.max(l.batch_size) * 16))
+                .collect(),
+            calib_caches: (0..n).map(|_| Ring::new(128)).collect(),
+            pendings: vec![0; n],
+            calib_pendings: vec![0; n],
+            betas: vec![cfg.beta0; n],
+            threshold_scale: 1.0,
+            cfg,
+        })
+    }
+
+    /// Set the cost-pressure knob (see [`crate::cascade::Cascade`]).
+    pub fn set_threshold_scale(&mut self, s: f64) {
+        self.threshold_scale = s;
+    }
+
+    /// Serve a stream of requests arriving through `rx`; send responses
+    /// to `tx`. Returns the report when `rx` closes and drains.
+    pub fn serve(
+        mut self,
+        rx: Receiver<Request>,
+        tx: Sender<Response>,
+    ) -> Result<ServeReport> {
+        let t_start = Instant::now();
+        let n_levels = self.cfg.levels.len();
+        let mut pending: std::collections::HashMap<u64, Pending> =
+            std::collections::HashMap::new();
+        let mut queues: Vec<LevelQueue> = (0..n_levels)
+            .map(|_| LevelQueue { jobs: VecDeque::new(), oldest: None, in_flight: false })
+            .collect();
+        let mut lat = Percentiles::new();
+        let mut handled = vec![0usize; n_levels + 1];
+        let mut correct = 0usize;
+        let mut served = 0usize;
+        let mut llm_calls = 0u64;
+        let mut inputs_open = true;
+
+        loop {
+            // 1. admit new requests (non-blocking drain).
+            while inputs_open {
+                match rx.try_recv() {
+                    Ok(req) => {
+                        let f = Arc::new(self.pipeline.featurize(&req.text));
+                        let state = Pending {
+                            f: f.clone(),
+                            truth: req.truth,
+                            sample: req.sample,
+                            t0: Instant::now(),
+                            seen: vec![None; n_levels],
+                        };
+                        pending.insert(req.id, state);
+                        // DAgger jump straight to the expert?
+                        let jump = self.betas[0] > 0.0 && self.rng.coin(self.betas[0]);
+                        for b in &mut self.betas {
+                            let decay = self.cfg.levels[0].beta_decay;
+                            *b *= decay;
+                        }
+                        if jump {
+                            self.to_expert(
+                                req.id, &mut pending, &tx, &mut lat, &mut handled,
+                                &mut correct, &mut served, &mut llm_calls,
+                            );
+                        } else {
+                            queues[0].jobs.push_back(Job { req_id: req.id, f });
+                            queues[0].oldest.get_or_insert_with(Instant::now);
+                        }
+                    }
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        inputs_open = false;
+                    }
+                }
+            }
+
+            // 2. flush batches that are full or past deadline.
+            for (i, q) in queues.iter_mut().enumerate() {
+                let due = q.jobs.len() >= self.policy.batch_max
+                    || q.oldest
+                        .map(|t| t.elapsed() >= self.policy.deadline)
+                        .unwrap_or(false)
+                    || (!inputs_open && !q.jobs.is_empty());
+                if due && !q.in_flight && !q.jobs.is_empty() {
+                    let take = q.jobs.len().min(self.policy.batch_max);
+                    let jobs: Vec<Job> = q.jobs.drain(..take).collect();
+                    q.oldest = if q.jobs.is_empty() { None } else { Some(Instant::now()) };
+                    q.in_flight = true;
+                    self.workers[i]
+                        .tx
+                        .send(WorkerMsg::Infer(jobs))
+                        .map_err(|_| Error::Worker(format!("level {i} died")))?;
+                }
+            }
+
+            // 3. handle one worker reply (with a small timeout so the
+            //    loop keeps admitting/flushing).
+            match self.reply_rx.recv_timeout(Duration::from_micros(200)) {
+                Ok(reply) => {
+                    let lvl = reply.level;
+                    queues[lvl].in_flight = false;
+                    for (req_id, probs, score) in reply.results {
+                        let Some(state) = pending.get_mut(&req_id) else { continue };
+                        state.seen[lvl] = Some(probs.clone());
+                        let tau =
+                            self.cfg.levels[lvl].calibration * self.threshold_scale;
+                        let defer = (score as f64) > tau;
+                        if !defer {
+                            // exit here
+                            let pred = argmax(&probs);
+                            let state = pending.remove(&req_id).expect("state");
+                            lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+                            handled[lvl] += 1;
+                            if pred == state.truth {
+                                correct += 1;
+                            }
+                            served += 1;
+                            let _ = tx.send(Response {
+                                id: req_id,
+                                pred,
+                                handled_by: lvl,
+                                latency: state.t0.elapsed(),
+                                truth: state.truth,
+                            });
+                        } else if lvl + 1 < n_levels {
+                            let f = state.f.clone();
+                            queues[lvl + 1].jobs.push_back(Job { req_id, f });
+                            queues[lvl + 1].oldest.get_or_insert_with(Instant::now);
+                        } else {
+                            self.to_expert(
+                                req_id, &mut pending, &tx, &mut lat, &mut handled,
+                                &mut correct, &mut served, &mut llm_calls,
+                            );
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Worker("all workers died".into()));
+                }
+            }
+
+            if !inputs_open
+                && pending.is_empty()
+                && queues.iter().all(|q| q.jobs.is_empty() && !q.in_flight)
+            {
+                break;
+            }
+        }
+
+        // shutdown workers
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.handle.join();
+        }
+        let wall = t_start.elapsed().as_secs_f64();
+        Ok(ServeReport {
+            served,
+            throughput: served as f64 / wall.max(1e-9),
+            wall_secs: wall,
+            latency_ms: lat,
+            handled,
+            accuracy: if served == 0 { 0.0 } else { correct as f64 / served as f64 },
+            llm_calls,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn to_expert(
+        &mut self,
+        req_id: u64,
+        pending: &mut std::collections::HashMap<u64, Pending>,
+        tx: &Sender<Response>,
+        lat: &mut Percentiles,
+        handled: &mut [usize],
+        correct: &mut usize,
+        served: &mut usize,
+        llm_calls: &mut u64,
+    ) {
+        let Some(state) = pending.remove(&req_id) else { return };
+        let n_levels = self.cfg.levels.len();
+        let y_star = self
+            .expert
+            .annotate(&state.sample, self.classes)
+            .unwrap_or(0);
+        *llm_calls += 1;
+        // online learning: feed caches, train at cadence
+        for i in 0..n_levels {
+            self.caches[i].push((state.f.clone(), y_star));
+            self.pendings[i] += 1;
+            if let Some(probs) = &state.seen[i] {
+                let z = if argmax(probs) != y_star { 1.0 } else { 0.0 };
+                self.calib_caches[i].push((probs.clone(), z));
+                self.calib_pendings[i] += 1;
+            }
+            let bs = self.cfg.levels[i].batch_size;
+            if self.pendings[i] >= bs && self.caches[i].len() >= bs {
+                let items = self.caches[i].to_vec();
+                let idx = self.rng.sample_indices(items.len(), bs.min(items.len()));
+                let batch: Vec<(Arc<Featurized>, usize)> =
+                    idx.iter().map(|&j| items[j].clone()).collect();
+                let _ = self.workers[i]
+                    .tx
+                    .send(WorkerMsg::Train(batch, self.cfg.levels[i].model_lr));
+                self.pendings[i] = 0;
+            }
+            if self.calib_pendings[i] >= 8 && self.calib_caches[i].len() >= 8 {
+                let items = self.calib_caches[i].to_vec();
+                let idx = self.rng.sample_indices(items.len(), 8);
+                let batch: Vec<(Vec<f32>, f32)> =
+                    idx.iter().map(|&j| items[j].clone()).collect();
+                let _ = self.workers[i].tx.send(WorkerMsg::TrainCalib(
+                    batch,
+                    self.cfg.levels[i].mlp_lr * 50.0,
+                ));
+                self.calib_pendings[i] = 0;
+            }
+        }
+        lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+        handled[n_levels] += 1;
+        if y_star == state.truth {
+            *correct += 1;
+        }
+        *served += 1;
+        let _ = tx.send(Response {
+            id: req_id,
+            pred: y_star,
+            handled_by: n_levels,
+            latency: state.t0.elapsed(),
+            truth: state.truth,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BenchmarkId, ExpertId};
+    use crate::data::Benchmark;
+    use crate::sim::ExpertProfile;
+
+    #[test]
+    fn serves_a_small_stream_end_to_end() {
+        let n = 400;
+        let b = Benchmark::build_sized(BenchmarkId::Imdb, 31, n);
+        let mean_len =
+            b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+        let expert = Expert::new(
+            ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+            b.strata_fractions(),
+            mean_len,
+            31,
+        );
+        let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        let server =
+            Server::new(cfg, 2, expert, BatchPolicy::default(), "artifacts").unwrap();
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        let submit = std::thread::spawn(move || {
+            for (i, s) in b.samples.iter().enumerate() {
+                req_tx
+                    .send(Request {
+                        id: i as u64,
+                        text: s.text.clone(),
+                        truth: s.label,
+                        sample: s.clone(),
+                    })
+                    .unwrap();
+            }
+            // req_tx drops -> server drains and stops
+        });
+        let report = server.serve(req_rx, resp_tx).unwrap();
+        submit.join().unwrap();
+        let responses: Vec<Response> = resp_rx.iter().collect();
+        assert_eq!(report.served, n);
+        assert_eq!(responses.len(), n);
+        // every request answered exactly once
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        assert!(report.accuracy > 0.5, "acc {}", report.accuracy);
+        assert!(report.throughput > 10.0, "thr {}", report.throughput);
+        assert_eq!(report.handled.iter().sum::<usize>(), n);
+    }
+}

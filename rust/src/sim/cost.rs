@@ -1,0 +1,161 @@
+//! Computational-cost model: the paper's Appendix C.1 FLOP accounting,
+//! the Appendix B.1 prefill-latency experiment, and the cost
+//! equilibrium `M = xC / (3 − 2x)`.
+//!
+//! All constants are the paper's own measured/derived numbers, so every
+//! cost curve and budget axis in the reproduction is computed in the
+//! same units the paper uses.
+
+use crate::config::ModelKind;
+
+/// FLOP costs per sample (paper Appendix C.1).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel;
+
+impl CostModel {
+    /// Logistic-regression inference FLOPs per sample.
+    pub const LR_INFER: f64 = 16.9e4;
+    /// Logistic-regression training FLOPs per sample.
+    pub const LR_TRAIN: f64 = 33.8e4;
+    /// BERT-base inference FLOPs per sample.
+    pub const BERT_BASE_INFER: f64 = 9.2e7;
+    /// BERT-base training FLOPs per sample.
+    pub const BERT_BASE_TRAIN: f64 = 18.5e7;
+    /// BERT-large inference FLOPs per sample.
+    pub const BERT_LARGE_INFER: f64 = 27.7e7;
+    /// BERT-large training FLOPs per sample.
+    pub const BERT_LARGE_TRAIN: f64 = 55.5e7;
+    /// Calibration-MLP inference FLOPs (App. C.1: negligible).
+    pub const MLP_INFER: f64 = 897.0;
+    /// Calibration-MLP training FLOPs.
+    pub const MLP_TRAIN: f64 = 1794.0;
+    /// Llama-2-70B inference FLOPs for one sample (paper's number).
+    pub const LLM_INFER: f64 = 39.86e15;
+
+    /// Inference FLOPs for a cascade level model.
+    pub fn infer_flops(kind: ModelKind) -> f64 {
+        match kind {
+            ModelKind::Lr => Self::LR_INFER,
+            ModelKind::TfmBase => Self::BERT_BASE_INFER,
+            ModelKind::TfmLarge => Self::BERT_LARGE_INFER,
+        }
+    }
+
+    /// Training FLOPs for a cascade level model (per sample).
+    pub fn train_flops(kind: ModelKind) -> f64 {
+        match kind {
+            ModelKind::Lr => Self::LR_TRAIN,
+            ModelKind::TfmBase => Self::BERT_BASE_TRAIN,
+            ModelKind::TfmLarge => Self::BERT_LARGE_TRAIN,
+        }
+    }
+
+    /// Appendix C.1 equilibrium: the maximum aggregate small-model
+    /// inference cost `M` such that a cascade handling fraction `x`
+    /// of queries with small models still saves cost vs all-LLM:
+    /// `M = x·C / (3 − 2x)`.
+    pub fn equilibrium_small_model_budget(x: f64, llm_cost: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&x));
+        x * llm_cost / (3.0 - 2.0 * x)
+    }
+
+    /// Total per-sample training cost of the paper's large cascade
+    /// (C.1: ≈ 7.4e8 FLOPs) — sanity anchor used in tests.
+    pub fn large_cascade_train_flops() -> f64 {
+        Self::LR_TRAIN + Self::BERT_BASE_TRAIN + Self::BERT_LARGE_TRAIN
+    }
+}
+
+/// Latency model replaying the paper's Appendix B.1 prefill experiment:
+/// 65B LLaMA on 8×A100, 8192-token prompts, first-token inference —
+/// 3.6 s per prompt, sequential (no batching, memory-bound).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel;
+
+impl LatencyModel {
+    /// Measured seconds per 8192-token prompt (paper B.1).
+    pub const PREFILL_SECS_8K: f64 = 3.6;
+    /// Tokens in the measured prompt.
+    pub const PREFILL_TOKENS: f64 = 8192.0;
+
+    /// First-token latency for a prompt of `tokens`, quadratic
+    /// attention term dominating (B.1's rationale: prefill is the
+    /// all-to-all attention pass).
+    pub fn prefill_secs(tokens: f64) -> f64 {
+        let r = tokens / Self::PREFILL_TOKENS;
+        // Quadratic in sequence length for the attention term with a
+        // linear floor for the MLP/projection FLOPs.
+        Self::PREFILL_SECS_8K * (0.35 * r + 0.65 * r * r)
+    }
+
+    /// The paper's headline throughput arithmetic: documents/hour one
+    /// 8-GPU server sustains at 3.6 s/document.
+    pub fn docs_per_hour_per_server() -> f64 {
+        3600.0 / Self::PREFILL_SECS_8K
+    }
+
+    /// Servers needed for a target docs/hour load (paper: 1e6/h → 1000).
+    pub fn servers_needed(docs_per_hour: f64) -> f64 {
+        (docs_per_hour / Self::docs_per_hour_per_server()).ceil()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c1_constants_sum() {
+        // Paper C.1: total large-cascade train cost ≈ 7.4e8 FLOPs.
+        let t = CostModel::large_cascade_train_flops();
+        assert!((t - 7.4e8).abs() / 7.4e8 < 0.01, "{t}");
+        // ... and is ~5.3e7x smaller than Llama-70B inference.
+        let ratio = CostModel::LLM_INFER / t;
+        assert!((ratio - 5.3e7).abs() / 5.3e7 < 0.05, "{ratio}");
+    }
+
+    #[test]
+    fn equilibrium_matches_paper_example() {
+        // Paper C.1: x = 0.5, C = 39.86e15 → M ≈ 9.95e15.
+        let m = CostModel::equilibrium_small_model_budget(0.5, CostModel::LLM_INFER);
+        assert!((m - 9.965e15).abs() / 9.965e15 < 0.01, "{m}");
+    }
+
+    #[test]
+    fn equilibrium_monotone_in_x() {
+        let c = CostModel::LLM_INFER;
+        let mut last = 0.0;
+        for i in 1..=10 {
+            let m = CostModel::equilibrium_small_model_budget(i as f64 / 10.0, c);
+            assert!(m > last);
+            last = m;
+        }
+        // x = 1: all queries handled by small models → M = C.
+        assert!((last - c).abs() / c < 1e-9);
+    }
+
+    #[test]
+    fn prefill_anchors() {
+        // At the measured prompt size, reproduce the measured 3.6 s.
+        let t = LatencyModel::prefill_secs(8192.0);
+        assert!((t - 3.6).abs() < 1e-9);
+        // Shorter prompts strictly cheaper, superlinear growth.
+        assert!(LatencyModel::prefill_secs(4096.0) < 3.6 / 2.0 + 0.7);
+        assert!(LatencyModel::prefill_secs(16384.0) > 2.0 * 3.6);
+    }
+
+    #[test]
+    fn server_math_matches_intro() {
+        // Intro: 1e6 docs/hour needs ~1000 servers at 3.6 s/doc.
+        let s = LatencyModel::servers_needed(1e6);
+        assert_eq!(s, 1000.0);
+    }
+
+    #[test]
+    fn per_model_accessors() {
+        assert_eq!(CostModel::infer_flops(ModelKind::Lr), 16.9e4);
+        assert_eq!(CostModel::train_flops(ModelKind::TfmLarge), 55.5e7);
+        assert!(CostModel::infer_flops(ModelKind::TfmBase)
+            < CostModel::infer_flops(ModelKind::TfmLarge));
+    }
+}

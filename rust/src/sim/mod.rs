@@ -1,0 +1,8 @@
+//! Simulation substrates: the FLOPs/latency cost model (paper App. B.1
+//! and C.1) and the LLM-expert simulator (DESIGN.md §3 substitution).
+
+pub mod cost;
+pub mod expert;
+
+pub use cost::{CostModel, LatencyModel};
+pub use expert::{Expert, ExpertProfile};

@@ -1,0 +1,302 @@
+//! Small shared utilities: statistics, ring buffers, timing, math.
+
+use std::time::Instant;
+
+/// Online summary statistics over f64 samples (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Count of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    /// Minimum observation.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a stored sample set (for latency reporting).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+}
+
+impl Percentiles {
+    /// Empty sample set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    /// Number of observations.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True when no observations recorded.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// p in [0,100]; nearest-rank. Returns 0.0 when empty.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("nan percentile"));
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+}
+
+/// Fixed-capacity FIFO ring buffer — the annotation caches of
+/// Algorithm 1 ("Cache Size" in the paper's Tables 3–4).
+#[derive(Clone, Debug)]
+pub struct Ring<T> {
+    buf: Vec<T>,
+    cap: usize,
+    head: usize,
+    len: usize,
+}
+
+impl<T: Clone> Ring<T> {
+    /// Ring with capacity `cap` (> 0).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        Ring { buf: Vec::with_capacity(cap), cap, head: 0, len: 0 }
+    }
+
+    /// Append, evicting the oldest item when full.
+    pub fn push(&mut self, x: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            self.len = self.buf.len();
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+            self.len = self.cap;
+        }
+    }
+
+    /// Number of live items.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no items stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when at capacity.
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    /// Capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        let (a, b) = self.buf.split_at(self.head.min(self.buf.len()));
+        b.iter().chain(a.iter())
+    }
+
+    /// Snapshot oldest → newest.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+
+    /// Drop all items.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+/// Wall-clock timer for perf logs.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// argmax over a float slice (first max wins). Empty slices return 0.
+#[inline]
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Shannon entropy of a probability vector, normalized to [0, 1].
+pub fn normalized_entropy(p: &[f32]) -> f32 {
+    if p.len() <= 1 {
+        return 0.0;
+    }
+    let mut h = 0.0f32;
+    for &x in p {
+        if x > 1e-9 {
+            h -= x * x.ln();
+        }
+    }
+    h / (p.len() as f32).ln()
+}
+
+/// Numerically-stable softmax into a new vec.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.push(i as f64);
+        }
+        assert_eq!(p.pct(0.0), 1.0);
+        assert_eq!(p.pct(100.0), 100.0);
+        assert!((p.pct(50.0) - 50.0).abs() <= 1.0);
+        assert!((p.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_eviction_order() {
+        let mut r = Ring::new(3);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.to_vec(), vec![2, 3, 4]);
+        assert!(r.is_full());
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ring_partial() {
+        let mut r = Ring::new(4);
+        r.push("a");
+        r.push("b");
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.to_vec(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn argmax_and_entropy() {
+        assert_eq!(argmax(&[0.1, 0.7, 0.2]), 1);
+        assert_eq!(argmax(&[]), 0);
+        assert!(normalized_entropy(&[0.5, 0.5]) > 0.99);
+        assert!(normalized_entropy(&[1.0, 0.0]) < 0.01);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // stability under huge logits
+        let p = softmax(&[1000.0, 1001.0]);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,239 @@
+//! Coordinator integration + property tests (host engine; no
+//! artifacts required): routing invariants, cost-accounting
+//! identities, budget behaviour, baseline orderings, and failure
+//! injection — the L3 invariants DESIGN.md §8 calls out.
+
+use ocl::cascade::{Cascade, DeferralRule};
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId};
+use ocl::data::{Benchmark, StreamOrder};
+use ocl::eval::Harness;
+use ocl::policy::CostParams;
+use ocl::prng::Rng;
+use ocl::prop;
+use ocl::sim::{Expert, ExpertProfile};
+
+fn build(bench: BenchmarkId, n: usize, seed: u64) -> (Cascade, Benchmark) {
+    let b = Benchmark::build_sized(bench, seed, n);
+    let mean_len = b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+    let expert = Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, bench),
+        b.strata_fractions(),
+        mean_len,
+        seed ^ 0xE,
+    );
+    let mut cfg = CascadeConfig::small(bench, ExpertId::Gpt35);
+    cfg.seed = seed;
+    let c = Cascade::new(cfg, b.classes, expert, None, n + 1).unwrap();
+    (c, b)
+}
+
+#[test]
+fn prop_every_query_handled_exactly_once() {
+    prop::check_seeded("routing-totality", 8, |rng| {
+        let n = 100 + rng.below(200);
+        let (mut c, b) = build(BenchmarkId::Imdb, n, rng.next_u64());
+        c.set_threshold_scale(0.3 + rng.f64());
+        if rng.coin(0.5) {
+            c.set_budget(Some(rng.below(n) as u64));
+        }
+        for s in &b.samples {
+            let out = c.process(s);
+            // the handling level is always valid
+            if out.handled_by > 2 {
+                return false;
+            }
+        }
+        c.metrics.finalize();
+        // every sample recorded exactly once, level fractions sum to 1
+        let fr: f64 = c.metrics.handled_fractions().iter().sum();
+        c.metrics.total() == n && (fr - 1.0).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_budget_never_exceeded() {
+    prop::check_seeded("budget-hard-cap", 8, |rng| {
+        let n = 150 + rng.below(150);
+        let budget = rng.below(n / 2) as u64;
+        let (mut c, b) = build(BenchmarkId::HateSpeech, n, rng.next_u64());
+        c.set_budget_paced(budget, n);
+        c.run_stream(&b.stream());
+        c.llm_calls() <= budget
+    });
+}
+
+#[test]
+fn prop_flops_accounting_is_additive_and_positive() {
+    prop::check_seeded("flops-additive", 5, |rng| {
+        let n = 120;
+        let (mut c, b) = build(BenchmarkId::Imdb, n, rng.next_u64());
+        let mut sum = 0.0;
+        for s in &b.samples {
+            let out = c.process(s);
+            if out.flops <= 0.0 {
+                return false;
+            }
+            sum += out.flops;
+        }
+        (sum - c.metrics.flops()).abs() < 1e-6 * sum.max(1.0)
+    });
+}
+
+#[test]
+fn prop_episode_cost_decomposition_matches_j() {
+    // J(π,T) computed from per-episode costs must equal the tracker's
+    // total — the Eq. 1 decomposition identity.
+    prop::check_seeded("j-decomposition", 6, |rng| {
+        let params = CostParams {
+            mu: rng.f64() * 0.01,
+            defer_costs: vec![1.0, 100.0 + rng.f64() * 2000.0],
+        };
+        let mut tracker =
+            ocl::policy::RegretTracker::new(params.clone(), 3, usize::MAX / 2);
+        let mut manual = 0.0;
+        for _ in 0..200 {
+            let exit = rng.below(3);
+            let loss = if rng.coin(0.3) { 1.0 } else { 0.0 };
+            manual += params.episode_cost(exit, loss);
+            tracker.record(exit, loss, &[1.0, 0.5, 0.0]);
+        }
+        (tracker.j_learned() - manual).abs() < 1e-9
+    });
+}
+
+#[test]
+fn budget_zero_means_no_expert_and_stream_still_served() {
+    let (mut c, b) = build(BenchmarkId::Imdb, 300, 77);
+    c.set_budget(Some(0));
+    c.run_stream(&b.stream());
+    assert_eq!(c.llm_calls(), 0);
+    assert_eq!(c.metrics.total(), 300);
+}
+
+#[test]
+fn determinism_same_seed_same_run() {
+    let run = || {
+        let (mut c, b) = build(BenchmarkId::Isear, 400, 123);
+        c.set_threshold_scale(0.7);
+        c.run_stream(&b.stream());
+        (
+            c.metrics.accuracy(),
+            c.llm_calls(),
+            c.metrics.handled_fractions(),
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn mid_stream_expert_outage_recovers() {
+    let (mut c, b) = build(BenchmarkId::Imdb, 900, 55);
+    c.set_threshold_scale(0.7);
+    let stream = b.stream();
+    for s in &stream[..300] {
+        c.process(s);
+    }
+    c.expert_mut().set_available(false);
+    for s in &stream[300..600] {
+        c.process(s);
+    }
+    let calls_during_outage = c.llm_calls();
+    c.expert_mut().set_available(true);
+    for s in &stream[600..] {
+        c.process(s);
+    }
+    c.metrics.finalize();
+    assert_eq!(c.metrics.total(), 900);
+    assert!(c.llm_calls() >= calls_during_outage);
+    assert!(c.metrics.accuracy() > 0.5);
+}
+
+#[test]
+fn ocl_beats_online_ensemble_at_matched_budget() {
+    // The paper's architectural ablation (Table 1 / §5.1): adding the
+    // learned deferral policy must beat the ensemble that lacks it, at
+    // the same annotation budget and on the identical test half.
+    let h = Harness::new(0.08, 3);
+    let budget = h.scaled_budget(BenchmarkId::Imdb, 5200);
+    let oc = h
+        .run_ocl_split(BenchmarkId::Imdb, ExpertId::Gpt35, Some(budget), false, StreamOrder::Natural)
+        .unwrap();
+    let oe = h
+        .run_oel_split(BenchmarkId::Imdb, ExpertId::Gpt35, budget, StreamOrder::Natural)
+        .unwrap();
+    assert!(
+        oc.accuracy > oe.accuracy - 0.03,
+        "ocl {} should not trail oel {} at budget {budget}",
+        oc.accuracy,
+        oe.accuracy
+    );
+}
+
+#[test]
+fn larger_budgets_do_not_hurt_accuracy_much() {
+    // Accuracy should be (weakly) increasing in the budget.
+    let h = Harness::new(0.06, 9);
+    let mut last = 0.0;
+    for frac in [0.1, 0.3, 0.6] {
+        let t = h.stream_len(BenchmarkId::Imdb);
+        let budget = ((t as f64) * frac) as u64;
+        let (r, _) = h
+            .run_ocl(BenchmarkId::Imdb, ExpertId::Gpt35, Some(budget), false, StreamOrder::Natural)
+            .unwrap();
+        assert!(
+            r.accuracy > last - 0.05,
+            "budget {frac}: acc {} dropped from {last}",
+            r.accuracy
+        );
+        last = r.accuracy;
+    }
+}
+
+#[test]
+fn deferral_rules_all_terminate_and_route() {
+    for rule in [
+        DeferralRule::Calibrated,
+        DeferralRule::MaxProb(0.9),
+        DeferralRule::Entropy(0.3),
+    ] {
+        let (mut c, b) = build(BenchmarkId::Fever, 250, 31);
+        c.set_deferral_rule(rule);
+        c.run_stream(&b.stream());
+        assert_eq!(c.metrics.total(), 250);
+    }
+}
+
+#[test]
+fn large_cascade_runs_and_uses_four_levels() {
+    let b = Benchmark::build_sized(BenchmarkId::Isear, 41, 600);
+    let mean_len = b.samples.iter().map(|s| s.len as f64).sum::<f64>() / 600.0;
+    let expert = Expert::new(
+        ExpertProfile::for_pair(ExpertId::Llama70b, BenchmarkId::Isear),
+        b.strata_fractions(),
+        mean_len,
+        41,
+    );
+    let cfg = CascadeConfig::large(BenchmarkId::Isear, ExpertId::Llama70b);
+    let mut c = Cascade::new(cfg, 7, expert, None, 601).unwrap();
+    c.set_threshold_scale(0.7);
+    c.run_stream(&b.stream());
+    assert_eq!(c.metrics.handled_fractions().len(), 4);
+    assert_eq!(c.metrics.total(), 600);
+}
+
+#[test]
+fn shift_orderings_preserve_the_multiset_of_samples() {
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 13, 500);
+    let mut rng = Rng::new(5);
+    for order in [
+        StreamOrder::Natural,
+        StreamOrder::Shuffled,
+        StreamOrder::LengthAscending,
+        StreamOrder::CategoryHoldout(rng.below(10)),
+    ] {
+        let s = b.stream_ordered(order, 5);
+        let mut ids: Vec<usize> = s.iter().map(|x| x.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..500).collect::<Vec<_>>(), "{order:?}");
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime integration: load real AOT artifacts, execute them,
+//! and assert parity with the host-engine mirrors.
+//!
+//! Gated on `artifacts/manifest.json` existing (build with
+//! `make artifacts`); each test skips gracefully otherwise so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use std::rc::Rc;
+
+use ocl::config::dims::{BATCH_STEP, HASH_DIM};
+use ocl::config::ModelKind;
+use ocl::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch};
+use ocl::models::{Calibrator, Featurized, LevelModel, Pipeline, PjrtCalibrator, PjrtLevel};
+use ocl::prng::Rng;
+use ocl::runtime::{artifacts_available, PjrtEngine};
+
+const DIR: &str = "artifacts";
+
+fn engine() -> Option<Rc<PjrtEngine>> {
+    if !artifacts_available(DIR) {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Rc::new(PjrtEngine::from_dir(DIR).expect("engine")))
+}
+
+fn sample_doc(rng: &mut Rng) -> Featurized {
+    let p = Pipeline::default();
+    let n = 5 + rng.below(40);
+    let text: Vec<String> = (0..n)
+        .map(|_| format!("kw{}x{:03} c0w{:04}", rng.below(2), rng.below(40), rng.below(100)))
+        .collect();
+    p.featurize(&text.join(" "))
+}
+
+#[test]
+fn lr_forward_parity_host_vs_pjrt() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1);
+    // Identical parameters: both sides start from the (zero) init blob.
+    let flat = e.manifest().load_group_flat("lr_c2").expect("blob");
+    let host = HostLr::from_flat(HASH_DIM, 2, &flat);
+    let mut pjrt = PjrtLevel::new(e, ModelKind::Lr, 2).expect("level");
+    for _ in 0..5 {
+        let f = sample_doc(&mut rng);
+        let hp = host.predict(&f.x);
+        let pp = pjrt.predict(&f);
+        for (a, b) in hp.iter().zip(&pp) {
+            assert!((a - b).abs() < 1e-4, "host {hp:?} pjrt {pp:?}");
+        }
+    }
+}
+
+#[test]
+fn lr_training_parity_host_vs_pjrt() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let flat = e.manifest().load_group_flat("lr_c2").expect("blob");
+    let mut host = HostLr::from_flat(HASH_DIM, 2, &flat);
+    let mut pjrt = PjrtLevel::new(e, ModelKind::Lr, 2).expect("level");
+    let docs: Vec<Featurized> = (0..BATCH_STEP).map(|_| sample_doc(&mut rng)).collect();
+    let ys: Vec<usize> = (0..BATCH_STEP).map(|_| rng.below(2)).collect();
+    // Train both for 3 steps on the same batch.
+    for _ in 0..3 {
+        let xs: Vec<&[f32]> = docs.iter().map(|d| d.x.as_slice()).collect();
+        host.train_batch(&xs, &ys, 0.3);
+        let batch: Vec<(&Featurized, usize)> =
+            docs.iter().zip(ys.iter().copied()).collect();
+        pjrt.train(&batch, 0.3);
+    }
+    // Predictions must agree after identical updates.
+    let f = sample_doc(&mut rng);
+    let hp = host.predict(&f.x);
+    let pp = pjrt.predict(&f);
+    for (a, b) in hp.iter().zip(&pp) {
+        assert!((a - b).abs() < 1e-3, "host {hp:?} pjrt {pp:?}");
+    }
+}
+
+#[test]
+fn tfm_forward_parity_host_vs_pjrt() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let flat = e.manifest().load_group_flat("tfm_base_c2").expect("blob");
+    let host = HostTfm::from_flat(TfmArch::Base, 2, &flat);
+    let mut pjrt = PjrtLevel::new(e, ModelKind::TfmBase, 2).expect("level");
+    for _ in 0..3 {
+        let f = sample_doc(&mut rng);
+        let hp = host.predict(&f.ids, &f.mask);
+        let pp = pjrt.predict(&f);
+        for (a, b) in hp.iter().zip(&pp) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "host {hp:?} pjrt {pp:?} (architecture mirror drifted)"
+            );
+        }
+    }
+}
+
+#[test]
+fn tfm_batched_forward_matches_single() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let mut pjrt = PjrtLevel::new(e, ModelKind::TfmBase, 2).expect("level");
+    let docs: Vec<Featurized> = (0..8).map(|_| sample_doc(&mut rng)).collect();
+    let refs: Vec<&Featurized> = docs.iter().collect();
+    let batched = pjrt.predict_batch(&refs);
+    for (i, f) in docs.iter().enumerate() {
+        let single = pjrt.predict(f);
+        for (a, b) in single.iter().zip(&batched[i]) {
+            assert!((a - b).abs() < 1e-5, "row {i}: {single:?} vs {:?}", batched[i]);
+        }
+    }
+}
+
+#[test]
+fn tfm_training_reduces_loss_through_pjrt() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let mut pjrt = PjrtLevel::new(e, ModelKind::TfmBase, 2).expect("level");
+    let docs: Vec<Featurized> = (0..BATCH_STEP).map(|_| sample_doc(&mut rng)).collect();
+    let ys: Vec<usize> = (0..BATCH_STEP).map(|_| rng.below(2)).collect();
+    let batch: Vec<(&Featurized, usize)> = docs.iter().zip(ys.iter().copied()).collect();
+    let l0 = pjrt.train(&batch, 5e-3);
+    let mut l = l0;
+    for _ in 0..6 {
+        l = pjrt.train(&batch, 5e-3);
+    }
+    assert!(l < l0, "loss {l} !< {l0}");
+}
+
+#[test]
+fn mlp_calibrator_scores_and_trains_through_pjrt() {
+    let Some(e) = engine() else { return };
+    let flat = e.manifest().load_group_flat("mlp_c2").expect("blob");
+    let mut host = HostMlp::from_flat(2, &flat);
+    let mut pjrt = PjrtCalibrator::new(e, 2).expect("calibrator");
+    // Score parity at init.
+    for p in [[0.5f32, 0.5], [0.9, 0.1], [0.02, 0.98]] {
+        let hs = host.predict(&p);
+        let ps = pjrt.score(&p);
+        assert!((hs - ps).abs() < 1e-4, "host {hs} pjrt {ps}");
+    }
+    // Training moves scores in the right direction.
+    let lo = [0.55f32, 0.45];
+    let hi = [0.98f32, 0.02];
+    for _ in 0..200 {
+        let batch: Vec<(&[f32], f32)> = (0..BATCH_STEP)
+            .map(|i| {
+                if i % 2 == 0 {
+                    (&lo[..], 1.0f32)
+                } else {
+                    (&hi[..], 0.0f32)
+                }
+            })
+            .collect();
+        pjrt.train(&batch, 0.2);
+    }
+    assert!(pjrt.score(&lo) > pjrt.score(&hi));
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.compiled_count(), 0);
+    let _ = e.executable("lr_fwd_c2_b1").expect("compile");
+    let _ = e.executable("lr_fwd_c2_b1").expect("cache hit");
+    assert_eq!(e.compiled_count(), 1);
+}
+
+#[test]
+fn engine_rejects_bad_arity_and_shape() {
+    let Some(e) = engine() else { return };
+    // wrong arity
+    assert!(e.run("lr_fwd_c2_b1", &[]).is_err());
+    // wrong element count
+    let bad = xla::Literal::vec1(&[0f32; 8]);
+    let w = xla::Literal::vec1(&vec![0f32; HASH_DIM * 2]);
+    let b = xla::Literal::vec1(&[0f32; 2]);
+    assert!(e.run("lr_fwd_c2_b1", &[&bad, &w, &b]).is_err());
+}
