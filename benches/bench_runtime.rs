@@ -1,17 +1,14 @@
-//! Bench: the L3/runtime hot paths — PJRT executable dispatch (b1 vs
-//! b8 batching), host-engine model inference, featurization, and the
-//! end-to-end router throughput. The numbers recorded in
-//! EXPERIMENTS.md §Perf come from this bench.
+//! Bench: the L3/runtime hot paths — host-engine model inference,
+//! featurization, and (with `--features pjrt` + built artifacts) PJRT
+//! executable dispatch (b1 vs b8 batching). The numbers recorded in
+//! DESIGN.md §10 (Perf) come from this bench.
 //! `cargo bench --bench bench_runtime`
 
-use std::rc::Rc;
-
 use ocl::bench_support::{black_box, Bench};
-use ocl::config::{BenchmarkId, ModelKind};
+use ocl::config::BenchmarkId;
 use ocl::data::Benchmark;
 use ocl::hostmodel::{HostLr, HostTfm, TfmArch};
-use ocl::models::{LevelModel, Pipeline, PjrtLevel};
-use ocl::runtime::{artifacts_available, PjrtEngine};
+use ocl::models::{Featurized, Pipeline};
 
 fn main() {
     let mut b = Bench::new("runtime hot paths", 2, 20);
@@ -42,31 +39,45 @@ fn main() {
         }
     });
 
-    // pjrt engine inference (artifact-gated)
-    if artifacts_available("artifacts") {
-        let engine = Rc::new(PjrtEngine::from_dir("artifacts").expect("engine"));
-        let mut plr = PjrtLevel::new(engine.clone(), ModelKind::Lr, 2).expect("lr");
-        b.case_throughput("pjrt lr predict b1 x64", 64.0, || {
-            for f in &feats {
-                black_box(plr.predict(f));
-            }
-        });
-        let refs: Vec<&_> = feats.iter().collect();
-        b.case_throughput("pjrt lr predict b8 x64", 64.0, || {
-            black_box(plr.predict_batch(&refs));
-        });
-        let mut ptf = PjrtLevel::new(engine, ModelKind::TfmBase, 2).expect("tfm");
-        b.case_throughput("pjrt tfm-base predict b1 x8", 8.0, || {
-            for f in feats.iter().take(8) {
-                black_box(ptf.predict(f));
-            }
-        });
-        let refs8: Vec<&_> = feats.iter().take(8).collect();
-        b.case_throughput("pjrt tfm-base predict b8 x8", 8.0, || {
-            black_box(ptf.predict_batch(&refs8));
-        });
-    } else {
-        eprintln!("artifacts/ missing — pjrt cases skipped (make artifacts)");
-    }
+    pjrt_cases(&mut b, &feats);
     b.print();
+}
+
+/// PJRT engine inference cases (feature- and artifact-gated).
+#[cfg(feature = "pjrt")]
+fn pjrt_cases(b: &mut Bench, feats: &[Featurized]) {
+    use ocl::config::ModelKind;
+    use ocl::models::{LevelModel, PjrtLevel};
+    use ocl::runtime::{artifacts_available, worker_engine, DEFAULT_ARTIFACTS_DIR};
+
+    if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+        eprintln!("artifacts/ missing — pjrt cases skipped (make artifacts)");
+        return;
+    }
+    let engine = worker_engine(DEFAULT_ARTIFACTS_DIR);
+    let mut plr = PjrtLevel::new(engine.clone(), ModelKind::Lr, 2).expect("lr");
+    b.case_throughput("pjrt lr predict b1 x64", 64.0, || {
+        for f in feats {
+            black_box(plr.predict(f));
+        }
+    });
+    let refs: Vec<&_> = feats.iter().collect();
+    b.case_throughput("pjrt lr predict b8 x64", 64.0, || {
+        black_box(plr.predict_batch(&refs));
+    });
+    let mut ptf = PjrtLevel::new(engine, ModelKind::TfmBase, 2).expect("tfm");
+    b.case_throughput("pjrt tfm-base predict b1 x8", 8.0, || {
+        for f in feats.iter().take(8) {
+            black_box(ptf.predict(f));
+        }
+    });
+    let refs8: Vec<&_> = feats.iter().take(8).collect();
+    b.case_throughput("pjrt tfm-base predict b8 x8", 8.0, || {
+        black_box(ptf.predict_batch(&refs8));
+    });
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_cases(_b: &mut Bench, _feats: &[Featurized]) {
+    eprintln!("built without the `pjrt` feature — pjrt cases skipped");
 }

@@ -3,32 +3,50 @@
 //! PJRT from rust worker threads, behind the request router + dynamic
 //! batcher, with online cascade learning active. Reports latency
 //! percentiles and throughput. This is the run recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! DESIGN.md §10 (End-to-end).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_stream
-//! # host engine (no artifacts needed): --engine host
+//! make artifacts && cargo run --release --features pjrt --example serve_stream
+//! # host engine (no artifacts or pjrt feature needed): --engine host
 //! ```
 
 use std::sync::mpsc::channel;
 
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::data::Benchmark;
-use ocl::runtime::artifacts_available;
 use ocl::serve::{BatchPolicy, Request, Server};
 use ocl::sim::{Expert, ExpertProfile};
 
-fn main() -> ocl::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let engine = if args.iter().any(|a| a == "--engine")
-        && args.iter().any(|a| a == "host")
-    {
-        Engine::Host
-    } else if artifacts_available("artifacts") {
+/// Prefer PJRT when the build and the artifacts allow it.
+#[cfg(feature = "pjrt")]
+fn auto_engine() -> Engine {
+    if ocl::runtime::artifacts_available(ocl::runtime::DEFAULT_ARTIFACTS_DIR) {
         Engine::Pjrt
     } else {
         eprintln!("artifacts/ not found — falling back to the host engine");
         Engine::Host
+    }
+}
+
+/// Feature-off twin of [`auto_engine`]: only the host engine exists.
+#[cfg(not(feature = "pjrt"))]
+fn auto_engine() -> Engine {
+    eprintln!("built without the `pjrt` feature — using the host engine");
+    Engine::Host
+}
+
+fn main() -> ocl::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    // An explicit `--engine <name>` is honored strictly (erroring in
+    // builds that cannot provide it); only the unspecified case
+    // auto-selects.
+    let engine = match args
+        .iter()
+        .position(|a| a == "--engine")
+        .and_then(|i| args.get(i + 1))
+    {
+        Some(name) => Engine::from_name(name)?,
+        None => auto_engine(),
     };
     let n: usize = args
         .iter()
@@ -55,7 +73,7 @@ fn main() -> ocl::Result<()> {
         b.classes,
         expert,
         BatchPolicy::default(),
-        "artifacts",
+        ocl::runtime::DEFAULT_ARTIFACTS_DIR,
     )?;
     server.set_threshold_scale(0.7);
 

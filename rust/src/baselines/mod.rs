@@ -5,7 +5,7 @@
 
 use std::rc::Rc;
 
-use crate::config::{CascadeConfig, Engine, ModelKind};
+use crate::config::{CascadeConfig, ModelKind};
 use crate::data::Sample;
 use crate::error::Result;
 use crate::models::{build_level, Featurized, LevelModel, Pipeline};
@@ -52,10 +52,7 @@ impl OnlineEnsemble {
         annotate_rate: f64,
         pjrt: Option<&Rc<crate::runtime::PjrtEngine>>,
     ) -> Result<Self> {
-        let engine_ref = match cfg.engine {
-            Engine::Pjrt => pjrt,
-            Engine::Host => None,
-        };
+        let engine_ref = if cfg.engine.is_pjrt() { pjrt } else { None };
         let mut models = Vec::new();
         let mut caches = Vec::new();
         let mut lrs = Vec::new();

@@ -14,7 +14,7 @@ pub mod metrics;
 
 use std::rc::Rc;
 
-use crate::config::{CascadeConfig, Engine, LevelConfig};
+use crate::config::{CascadeConfig, LevelConfig};
 use crate::data::Sample;
 use crate::error::Result;
 use crate::models::{
@@ -121,7 +121,8 @@ pub struct Cascade {
 impl Cascade {
     /// Build a cascade for `classes`-way streams.
     ///
-    /// `pjrt` must be `Some` when `cfg.engine == Engine::Pjrt`.
+    /// `pjrt` must be `Some` when `cfg.engine` selects the PJRT
+    /// backend (only possible with the `pjrt` cargo feature).
     pub fn new(
         cfg: CascadeConfig,
         classes: usize,
@@ -129,12 +130,11 @@ impl Cascade {
         pjrt: Option<&Rc<PjrtEngine>>,
         snapshot_every: usize,
     ) -> Result<Self> {
-        let engine_ref = match cfg.engine {
-            Engine::Pjrt => {
-                assert!(pjrt.is_some(), "pjrt engine required by config");
-                pjrt
-            }
-            Engine::Host => None,
+        let engine_ref = if cfg.engine.is_pjrt() {
+            assert!(pjrt.is_some(), "pjrt engine required by config");
+            pjrt
+        } else {
+            None
         };
         let mut levels = Vec::with_capacity(cfg.levels.len());
         for (i, lc) in cfg.levels.iter().enumerate() {
@@ -476,7 +476,7 @@ impl Cascade {
     }
 
     fn train_level(&mut self, i: usize) -> f64 {
-        let is_pjrt = matches!(self.cfg.engine, Engine::Pjrt);
+        let is_pjrt = self.cfg.engine.is_pjrt();
         let items = self.levels[i].cache.to_vec();
         let bs = self.levels[i].cfg.batch_size;
         if items.len() < bs {

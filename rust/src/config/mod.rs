@@ -128,9 +128,12 @@ impl ModelKind {
 /// Inference engine backing the cascade models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
-    /// Pure-rust mirrors (parity-tested vs PJRT) — fast sweeps.
+    /// Pure-rust mirrors (parity-tested vs PJRT) — fast sweeps, and the
+    /// only backend in builds without the `pjrt` cargo feature.
     Host,
     /// AOT HLO artifacts through the PJRT CPU client — production path.
+    /// Only exists when the crate is built with `--features pjrt`.
+    #[cfg(feature = "pjrt")]
     Pjrt,
 }
 
@@ -139,8 +142,28 @@ impl Engine {
     pub fn from_name(s: &str) -> Result<Self> {
         match s {
             "host" => Ok(Engine::Host),
+            #[cfg(feature = "pjrt")]
             "pjrt" => Ok(Engine::Pjrt),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => Err(Error::Config(
+                "engine 'pjrt' requires building with `--features pjrt`".into(),
+            )),
             _ => Err(Error::Config(format!("unknown engine '{s}'"))),
+        }
+    }
+
+    /// True when this is the PJRT engine. Always `false` without the
+    /// `pjrt` feature — the single branch point the coordinator,
+    /// baseline, and serving layers use, so they compile unchanged in
+    /// both configurations.
+    pub fn is_pjrt(self) -> bool {
+        #[cfg(feature = "pjrt")]
+        {
+            matches!(self, Engine::Pjrt)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            false
         }
     }
 }
@@ -392,5 +415,55 @@ mod tests {
         let v = crate::codec::parse(&j).unwrap();
         assert_eq!(v.get("expert").unwrap().as_str(), Some("gpt35"));
         assert_eq!(v.get("levels").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        // Full round-trip over the richest config type: encode → parse
+        // → re-encode must be a fixed point, and every hyperparameter
+        // of Tables 3–4 must survive the trip bit-for-bit (f64-exact
+        // for the table constants used here).
+        for cfg in [
+            CascadeConfig::small(BenchmarkId::HateSpeech, ExpertId::Llama70b),
+            CascadeConfig::large(BenchmarkId::Fever, ExpertId::Gpt35),
+        ] {
+            let j = cfg.to_json();
+            for text in [j.to_string_compact(), j.to_string_pretty()] {
+                let v = crate::codec::parse(&text).unwrap();
+                assert_eq!(v, j, "parse(encode(cfg)) must equal the Json value");
+                assert_eq!(v.get("expert").unwrap().as_str(), Some(cfg.expert.name()));
+                assert_eq!(v.get("mu").unwrap().as_f64(), Some(cfg.mu));
+                assert_eq!(
+                    v.get("expert_cost").unwrap().as_f64(),
+                    Some(cfg.expert_cost)
+                );
+                let levels = v.get("levels").unwrap().as_arr().unwrap();
+                assert_eq!(levels.len(), cfg.levels.len());
+                for (lv, lc) in levels.iter().zip(&cfg.levels) {
+                    assert_eq!(lv.get("model").unwrap().as_str(), Some(lc.model.name()));
+                    assert_eq!(lv.get("model_cost").unwrap().as_f64(), Some(lc.model_cost));
+                    assert_eq!(lv.get("cache_size").unwrap().as_usize(), Some(lc.cache_size));
+                    assert_eq!(lv.get("batch_size").unwrap().as_usize(), Some(lc.batch_size));
+                    assert_eq!(lv.get("beta_decay").unwrap().as_f64(), Some(lc.beta_decay));
+                    assert_eq!(lv.get("calibration").unwrap().as_f64(), Some(lc.calibration));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_parsing_matches_build_features() {
+        assert_eq!(Engine::from_name("host").unwrap(), Engine::Host);
+        assert!(!Engine::Host.is_pjrt());
+        assert!(Engine::from_name("warp").is_err());
+        #[cfg(feature = "pjrt")]
+        {
+            assert!(Engine::from_name("pjrt").unwrap().is_pjrt());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let err = Engine::from_name("pjrt").unwrap_err().to_string();
+            assert!(err.contains("pjrt"), "{err}");
+        }
     }
 }

@@ -1,45 +1,73 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls (no `thiserror`): the default
+//! build of this crate has zero external dependencies and must compile
+//! fully offline.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every subsystem in the crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Artifact manifest missing, malformed, or inconsistent.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// JSON parse/serialize failure (codec substrate).
-    #[error("json error at byte {offset}: {msg}")]
-    Json { offset: usize, msg: String },
+    Json {
+        /// Byte offset of the failure in the input.
+        offset: usize,
+        /// What went wrong.
+        msg: String,
+    },
 
     /// Configuration error (unknown preset, invalid value, ...).
-    #[error("config error: {0}")]
     Config(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// A model worker thread died or a channel closed unexpectedly.
-    #[error("worker error: {0}")]
     Worker(String),
 
     /// Data/benchmark construction failure.
-    #[error("data error: {0}")]
     Data(String),
 
     /// I/O error with path context.
-    #[error("io error on {path}: {source}")]
     Io {
+        /// Path the operation touched.
         path: String,
-        #[source]
+        /// Underlying OS error.
         source: std::io::Error,
     },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Worker(m) => write!(f, "worker error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -49,6 +77,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -57,3 +86,31 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_thiserror_era_messages() {
+        assert_eq!(Error::Manifest("x".into()).to_string(), "manifest error: x");
+        assert_eq!(
+            Error::Json { offset: 7, msg: "bad".into() }.to_string(),
+            "json error at byte 7: bad"
+        );
+        assert_eq!(Error::Config("c".into()).to_string(), "config error: c");
+        assert_eq!(Error::Usage("u".into()).to_string(), "usage error: u");
+        assert_eq!(Error::Runtime("r".into()).to_string(), "runtime error: r");
+        assert_eq!(Error::Worker("w".into()).to_string(), "worker error: w");
+        assert_eq!(Error::Data("d".into()).to_string(), "data error: d");
+    }
+
+    #[test]
+    fn io_variant_carries_path_and_source() {
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let s = e.to_string();
+        assert!(s.starts_with("io error on /tmp/x:"), "{s}");
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Data("d".into())).is_none());
+    }
+}

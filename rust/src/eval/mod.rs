@@ -4,7 +4,7 @@
 //!
 //! Streams are scaled by `scale` (default 0.2 in the CLI) relative to
 //! the paper's dataset sizes; budgets 𝒩 scale proportionally, so the
-//! *budget fraction* axis matches the paper exactly. EXPERIMENTS.md
+//! *budget fraction* axis matches the paper exactly. DESIGN.md §10
 //! records paper-vs-measured for the featured operating points.
 
 use std::fmt::Write as _;

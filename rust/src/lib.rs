@@ -15,12 +15,15 @@
 //! * **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused
 //!   classifier head, flash attention, fused LR update) inside the L2 HLO.
 //!
-//! Python never runs on the request path: [`runtime`] loads the HLO
-//! artifacts through the PJRT C API (`xla` crate) and executes them from
-//! rust worker threads.
+//! Python never runs on the request path: with the opt-in `pjrt` cargo
+//! feature, [`runtime`] loads the HLO artifacts through the PJRT C API
+//! (`xla` crate) and executes them from rust worker threads. The
+//! default (feature-less) build is pure rust with zero external
+//! dependencies: the [`hostmodel`] mirrors back every cascade level, so
+//! the crate builds and tests fully offline.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory, the per-experiment index,
+//! and measured results (§10).
 
 pub mod baselines;
 pub mod bench_support;

@@ -4,13 +4,10 @@
 //! §5) plus a serving mode and a self-test. `make reproduce` drives
 //! everything into `reports/`.
 
-use std::rc::Rc;
-
 use ocl::cli::Command;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
-use ocl::runtime::PjrtEngine;
 use ocl::serve::{BatchPolicy, Request, Server};
 
 fn commands() -> Vec<Command> {
@@ -109,9 +106,15 @@ fn dispatch(argv: &[String]) -> Result<()> {
             let bench = BenchmarkId::from_name(args.get("benchmark"))?;
             let expert = ExpertId::from_name(args.get("expert"))?;
             let mut h = Harness::new(args.parse("scale")?, args.parse("seed")?);
-            if Engine::from_name(args.get("engine"))? == Engine::Pjrt {
-                h.engine = Engine::Pjrt;
-                h.pjrt = Some(Rc::new(PjrtEngine::from_dir("artifacts")?));
+            let engine = Engine::from_name(args.get("engine"))?;
+            if engine.is_pjrt() {
+                h.engine = engine;
+                #[cfg(feature = "pjrt")]
+                {
+                    h.pjrt = Some(std::rc::Rc::new(ocl::runtime::PjrtEngine::from_dir(
+                        ocl::runtime::DEFAULT_ARTIFACTS_DIR,
+                    )?));
+                }
             }
             let budget: u64 = args.parse("budget")?;
             let budget = if budget == 0 { None } else { Some(budget) };

@@ -3,19 +3,26 @@
 //! [`LevelModel`] is the coordinator's view of `m_1 .. m_{N-1}`:
 //! probability-vector prediction plus an online minibatch update.
 //! [`Calibrator`] is the deferral function `f_i`. Each has a host
-//! implementation (pure rust) and a PJRT implementation (AOT HLO
-//! through [`crate::runtime::PjrtEngine`]); the expert `m_N` lives in
+//! implementation (pure rust) and — behind the `pjrt` cargo feature —
+//! a PJRT implementation (AOT HLO through
+//! `crate::runtime::engine::PjrtEngine`); the expert `m_N` lives in
 //! [`crate::sim::expert`].
 
 use std::rc::Rc;
 
+#[cfg(feature = "pjrt")]
 use xla::Literal;
 
-use crate::config::dims::{BATCH_STEP, HASH_DIM, SEQ_LEN};
+#[cfg(feature = "pjrt")]
+use crate::config::dims::BATCH_STEP;
+use crate::config::dims::{HASH_DIM, SEQ_LEN};
 use crate::config::ModelKind;
-use crate::error::{Error, Result};
+use crate::error::Result;
+#[cfg(feature = "pjrt")]
+use crate::error::Error;
 use crate::features::{HashingVectorizer, VocabIndexer};
 use crate::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch};
+#[cfg(feature = "pjrt")]
 use crate::runtime::engine::{literal_f32, literal_i32, load_group_literals};
 use crate::runtime::PjrtEngine;
 
@@ -188,13 +195,14 @@ impl Calibrator for HostCalibrator {
 }
 
 // ---------------------------------------------------------------------------
-// PJRT engine implementations
+// PJRT engine implementations (feature-gated)
 // ---------------------------------------------------------------------------
 
 /// A cascade level running AOT HLO artifacts through PJRT.
 ///
 /// Holds its parameters as XLA literals and threads the step outputs
 /// back into subsequent calls — rust never interprets the tensors.
+#[cfg(feature = "pjrt")]
 pub struct PjrtLevel {
     engine: Rc<PjrtEngine>,
     kind: ModelKind,
@@ -205,6 +213,7 @@ pub struct PjrtLevel {
     step: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtLevel {
     /// Build from the engine + model kind, loading init parameters
     /// from the artifacts blob.
@@ -261,6 +270,7 @@ impl PjrtLevel {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl LevelModel for PjrtLevel {
     fn kind(&self) -> ModelKind {
         self.kind
@@ -324,6 +334,7 @@ impl LevelModel for PjrtLevel {
 }
 
 /// PJRT calibrator (deferral MLP through artifacts).
+#[cfg(feature = "pjrt")]
 pub struct PjrtCalibrator {
     engine: Rc<PjrtEngine>,
     classes: usize,
@@ -332,6 +343,7 @@ pub struct PjrtCalibrator {
     step: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtCalibrator {
     /// Build from the engine, loading init parameters.
     pub fn new(engine: Rc<PjrtEngine>, classes: usize) -> Result<Self> {
@@ -347,6 +359,7 @@ impl PjrtCalibrator {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Calibrator for PjrtCalibrator {
     fn score(&mut self, probs: &[f32]) -> f32 {
         let meta = self.engine.manifest().entry(&self.fwd1).expect("mlp fwd entry");
@@ -379,19 +392,26 @@ impl Calibrator for PjrtCalibrator {
 }
 
 /// Construct the level model for a config row over the chosen engine.
+///
+/// `engine = None` selects the host backend. In builds without the
+/// `pjrt` feature, `PjrtEngine` is uninhabited, so the `Some(_)` arm
+/// can never execute.
 pub fn build_level(
     engine: Option<&Rc<PjrtEngine>>,
     kind: ModelKind,
     classes: usize,
     seed: u64,
 ) -> Result<Box<dyn LevelModel>> {
-    Ok(match engine {
-        Some(e) => Box::new(PjrtLevel::new(e.clone(), kind, classes)?),
-        None => match kind {
-            ModelKind::Lr => Box::new(HostLrLevel::new(classes)),
+    match engine {
+        #[cfg(feature = "pjrt")]
+        Some(e) => Ok(Box::new(PjrtLevel::new(e.clone(), kind, classes)?)),
+        #[cfg(not(feature = "pjrt"))]
+        Some(_) => unreachable!("PjrtEngine is uninhabited without the `pjrt` feature"),
+        None => Ok(match kind {
+            ModelKind::Lr => Box::new(HostLrLevel::new(classes)) as Box<dyn LevelModel>,
             _ => Box::new(HostTfmLevel::new(kind, classes, seed)),
-        },
-    })
+        }),
+    }
 }
 
 /// Construct a calibrator over the chosen engine.
@@ -400,10 +420,13 @@ pub fn build_calibrator(
     classes: usize,
     seed: u64,
 ) -> Result<Box<dyn Calibrator>> {
-    Ok(match engine {
-        Some(e) => Box::new(PjrtCalibrator::new(e.clone(), classes)?),
-        None => Box::new(HostCalibrator::new(classes, seed)),
-    })
+    match engine {
+        #[cfg(feature = "pjrt")]
+        Some(e) => Ok(Box::new(PjrtCalibrator::new(e.clone(), classes)?)),
+        #[cfg(not(feature = "pjrt"))]
+        Some(_) => unreachable!("PjrtEngine is uninhabited without the `pjrt` feature"),
+        None => Ok(Box::new(HostCalibrator::new(classes, seed))),
+    }
 }
 
 #[cfg(test)]

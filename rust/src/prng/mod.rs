@@ -346,4 +346,79 @@ mod tests {
             assert!(rng.lognormal(6.0, 0.8) > 0.0);
         }
     }
+
+    #[test]
+    fn cross_seed_streams_decorrelate() {
+        // Adjacent (and distant) seeds must produce streams that agree
+        // on ~50% of their bits — SplitMix64 expansion decorrelates
+        // even hamming-distance-1 seeds.
+        for (s1, s2) in [(0u64, 1u64), (41, 42), (7, 7 << 32), (u64::MAX - 1, u64::MAX)] {
+            let (mut a, mut b) = (Rng::new(s1), Rng::new(s2));
+            let mut same_bits = 0u32;
+            let total = 256 * 64;
+            for _ in 0..256 {
+                same_bits += (!(a.next_u64() ^ b.next_u64())).count_ones();
+            }
+            let frac = same_bits as f64 / total as f64;
+            assert!(
+                (frac - 0.5).abs() < 0.03,
+                "seeds {s1}/{s2}: {frac} of bits agree"
+            );
+        }
+    }
+
+    #[test]
+    fn below_stays_in_range_for_all_bounds() {
+        let mut rng = Rng::new(31);
+        for n in [1usize, 2, 3, 5, 7, 10, 63, 64, 65, 1000, 1 << 20] {
+            for _ in 0..500 {
+                assert!(rng.below(n) < n, "below({n}) out of range");
+            }
+        }
+        // n = 1 is degenerate: only 0 is possible.
+        assert_eq!(rng.below(1), 0);
+    }
+
+    #[test]
+    fn coin_edge_probabilities() {
+        let mut rng = Rng::new(33);
+        for _ in 0..2000 {
+            assert!(!rng.coin(0.0), "coin(0) must never land");
+            assert!(rng.coin(1.0), "coin(1) must always land (f64() < 1.0)");
+        }
+        // and a mid probability is frequency-calibrated
+        let hits = (0..20_000).filter(|_| rng.coin(0.25)).count();
+        assert!((hits as f64 / 20_000.0 - 0.25).abs() < 0.02, "{hits}");
+    }
+
+    #[test]
+    fn f64_unit_interval_across_seeds() {
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(seed);
+            for _ in 0..1000 {
+                let x = rng.f64();
+                assert!((0.0..1.0).contains(&x), "seed {seed}: {x} out of [0,1)");
+            }
+            let y = rng.f32();
+            assert!((0.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn range_and_sample_indices_invariants() {
+        let mut rng = Rng::new(35);
+        for _ in 0..500 {
+            let x = rng.range_f64(-2.5, 7.5);
+            assert!((-2.5..7.5).contains(&x));
+        }
+        for k in [0usize, 1, 5, 32] {
+            let idx = rng.sample_indices(32, k);
+            assert_eq!(idx.len(), k);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "indices must be distinct");
+            assert!(sorted.iter().all(|&i| i < 32));
+        }
+    }
 }

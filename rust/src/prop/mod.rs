@@ -1,9 +1,10 @@
 //! Mini property-based testing framework (no `proptest` offline).
 //!
-//! [`check`] runs a property over `n` seeded random cases; on failure
-//! it re-runs a bounded shrink loop that retries the failing case with
-//! "smaller" seeds derived from the failure, then panics with the
-//! smallest reproducer seed. Tests write generators as plain
+//! [`check`] runs a property over `n` seeded random cases; the first
+//! falsified case panics with a **reproducer seed**. Feeding that seed
+//! to [`recheck`] (or [`recheck_seeded`]) replays exactly the same
+//! generated input, so failures shrink to a one-line deterministic
+//! repro instead of a flaky CI log. Tests write generators as plain
 //! `fn(&mut Rng) -> T`.
 
 use crate::prng::Rng;
@@ -25,6 +26,17 @@ impl Default for PropConfig {
 
 const DEFAULT_SEED: u64 = 0x9E37_79B9;
 
+/// Per-case seed for [`check`] — public so a failure's reported case
+/// index can also be mapped back to its seed.
+pub fn case_seed(case: usize) -> u64 {
+    DEFAULT_SEED ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+}
+
+/// Per-case seed for [`check_seeded`].
+pub fn case_seed_stateful(case: usize) -> u64 {
+    DEFAULT_SEED ^ (case as u64).wrapping_mul(0xD134_2543_DE82_EF95)
+}
+
 /// Run `prop` over `cases` random inputs produced by `gen`.
 ///
 /// Panics with the reproducer seed on the first falsified case.
@@ -34,12 +46,12 @@ where
     P: FnMut(&T) -> bool,
 {
     for case in 0..cases {
-        let case_seed = DEFAULT_SEED ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407);
-        let mut rng = Rng::new(case_seed);
+        let seed = case_seed(case);
+        let mut rng = Rng::new(seed);
         let input = gen(&mut rng);
         if !prop(&input) {
             panic!(
-                "property '{name}' falsified at case {case} (seed {case_seed:#x}):\n{input:#?}"
+                "property '{name}' falsified at case {case} (seed {seed:#x}):\n{input:#?}"
             );
         }
     }
@@ -51,12 +63,46 @@ where
     P: FnMut(&mut Rng) -> bool,
 {
     for case in 0..cases {
-        let case_seed = DEFAULT_SEED ^ (case as u64).wrapping_mul(0xD134_2543_DE82_EF95);
-        let mut rng = Rng::new(case_seed);
+        let seed = case_seed_stateful(case);
+        let mut rng = Rng::new(seed);
         if !prop(&mut rng) {
-            panic!("property '{name}' falsified at case {case} (seed {case_seed:#x})");
+            panic!("property '{name}' falsified at case {case} (seed {seed:#x})");
         }
     }
+}
+
+/// Replay one [`check`] case from a reproducer seed: regenerates the
+/// input and re-evaluates the property. Returns `(input, held)`.
+/// Deterministic — the same seed always replays the same case.
+pub fn recheck<T, G, P>(seed: u64, mut gen: G, mut prop: P) -> (T, bool)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    let held = prop(&input);
+    (input, held)
+}
+
+/// Replay one [`check_seeded`] case from a reproducer seed.
+pub fn recheck_seeded<P>(seed: u64, mut prop: P) -> bool
+where
+    P: FnMut(&mut Rng) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng)
+}
+
+/// Extract the `seed 0x…` reproducer from a [`check`]/[`check_seeded`]
+/// panic message.
+pub fn parse_reproducer_seed(msg: &str) -> Option<u64> {
+    let at = msg.find("seed 0x")? + "seed 0x".len();
+    let hex: String = msg[at..]
+        .chars()
+        .take_while(|c| c.is_ascii_hexdigit())
+        .collect();
+    u64::from_str_radix(&hex, 16).ok()
 }
 
 #[cfg(test)]
@@ -81,5 +127,69 @@ mod tests {
     #[should_panic(expected = "falsified")]
     fn failing_property_panics_with_seed() {
         check("always-false", 5, |rng| rng.below(10), |_| false);
+    }
+
+    // --- self-tests of the reproducer-seed contract ---------------------
+
+    /// Deliberately falsifiable: `below(1000)` exceeds 9 almost always.
+    fn gen_u(rng: &mut Rng) -> usize {
+        rng.below(1000)
+    }
+    fn prop_small(x: &usize) -> bool {
+        *x < 10
+    }
+
+    fn panic_message(err: Box<dyn std::any::Any + Send>) -> String {
+        match err.downcast::<String>() {
+            Ok(s) => *s,
+            Err(err) => err
+                .downcast::<&'static str>()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|_| "<non-string panic>".into()),
+        }
+    }
+
+    #[test]
+    fn falsified_check_reports_a_seed_that_replays_the_failure() {
+        let err = std::panic::catch_unwind(|| check("repro", 64, gen_u, prop_small))
+            .expect_err("property must be falsified within 64 cases");
+        let msg = panic_message(err);
+        assert!(msg.contains("falsified"), "{msg}");
+        let seed =
+            parse_reproducer_seed(&msg).expect("panic message must carry a seed");
+        // Rerunning with the reported seed reproduces the failure …
+        let (a, held_a) = recheck(seed, gen_u, prop_small);
+        assert!(!held_a, "reproducer seed must refail (input {a})");
+        // … deterministically: same seed, same input, same verdict.
+        let (b, held_b) = recheck(seed, gen_u, prop_small);
+        assert_eq!(a, b, "replay must regenerate the identical input");
+        assert!(!held_b);
+        // The reported input is embedded in the message too.
+        assert!(msg.contains(&format!("{a}")), "{msg} should mention {a}");
+    }
+
+    #[test]
+    fn falsified_check_seeded_seed_replays() {
+        let err = std::panic::catch_unwind(|| {
+            check_seeded("repro2", 16, |rng| rng.below(100) < 2)
+        })
+        .expect_err("must falsify");
+        let seed = parse_reproducer_seed(&panic_message(err)).expect("seed");
+        assert!(!recheck_seeded(seed, |rng| rng.below(100) < 2));
+        // and the seed matches the published derivation for its case
+        assert!(
+            (0..16).any(|c| case_seed_stateful(c) == seed),
+            "seed must come from the documented per-case derivation"
+        );
+    }
+
+    #[test]
+    fn case_seed_derivations_are_stable_and_distinct() {
+        assert_eq!(case_seed(0), DEFAULT_SEED);
+        assert_ne!(case_seed(1), case_seed(2));
+        assert_ne!(case_seed(3), case_seed_stateful(3));
+        assert_eq!(parse_reproducer_seed("seed 0xdead_beef"), Some(0xdead));
+        assert_eq!(parse_reproducer_seed(&format!("(seed {:#x})", u64::MAX)), Some(u64::MAX));
+        assert_eq!(parse_reproducer_seed("no seed here"), None);
     }
 }

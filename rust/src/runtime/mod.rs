@@ -1,17 +1,36 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them through the `xla` crate's PJRT CPU client.
+//! Runtime layer: artifact manifests plus the engine-backend seam.
 //!
-//! This is the production request path: Python runs once at build time
-//! (`make artifacts`), and everything here is plain rust + the PJRT C
-//! API. `PjRtClient` is `Rc`-based (not `Send`), so each engine lives
-//! on the thread that created it; the serving layer gives every model
-//! worker thread its own [`PjrtEngine`] (vLLM-style leader/worker).
+//! The artifact *manifest* machinery is pure rust and always compiled.
+//! The PJRT execution engine — which loads the AOT artifacts
+//! (`artifacts/*.hlo.txt`) and executes them through the `xla` crate's
+//! PJRT CPU client — is gated behind the `pjrt` cargo feature; the
+//! default build runs entirely on the host models
+//! ([`crate::hostmodel`]).
+//!
+//! With the feature on, this is the production request path: Python
+//! runs once at build time (`make artifacts`), and everything here is
+//! plain rust + the PJRT C API. `PjRtClient` is `Rc`-based (not
+//! `Send`), so each engine lives on the thread that created it; the
+//! serving layer gives every model worker thread its own
+//! [`PjrtEngine`] (vLLM-style leader/worker).
 
-pub mod engine;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtEngine;
 pub use manifest::{ArgSpec, Dtype, EntryMeta, Manifest, ParamGroup};
+
+/// Engine-backend seam for builds without the `pjrt` feature: an
+/// *uninhabited* placeholder, so every `Option<Rc<PjrtEngine>>`
+/// threaded through the coordinator / serving / eval layers is
+/// statically `None` and the pure-rust host models are the only
+/// backend. No value of this type can ever exist.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub enum PjrtEngine {}
 
 /// Default artifacts directory relative to the repo root.
 pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
@@ -19,4 +38,20 @@ pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
 /// True when AOT artifacts exist (integration tests gate on this).
 pub fn artifacts_available(dir: &str) -> bool {
     std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+/// Build the PJRT engine for a worker thread (each worker owns its
+/// engine because `PjRtClient` is not `Send`). Panics on engine
+/// construction failure — a worker without its engine cannot serve.
+#[cfg(feature = "pjrt")]
+pub fn worker_engine(dir: &str) -> std::rc::Rc<PjrtEngine> {
+    std::rc::Rc::new(PjrtEngine::from_dir(dir).expect("worker engine"))
+}
+
+/// Feature-off twin of [`worker_engine`]. Statically unreachable:
+/// without the `pjrt` feature, `config::Engine` has no `Pjrt` variant,
+/// so no caller can select the PJRT path.
+#[cfg(not(feature = "pjrt"))]
+pub fn worker_engine(_dir: &str) -> std::rc::Rc<PjrtEngine> {
+    unreachable!("Engine::Pjrt cannot be selected without the `pjrt` cargo feature")
 }

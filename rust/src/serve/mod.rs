@@ -22,7 +22,6 @@ use crate::models::{
     build_calibrator, build_level, Featurized, Pipeline,
 };
 use crate::prng::Rng;
-use crate::runtime::PjrtEngine;
 use crate::sim::Expert;
 use crate::util::{argmax, Percentiles, Ring};
 
@@ -110,11 +109,10 @@ fn spawn_worker(
     let (tx, rx): (Sender<WorkerMsg>, Receiver<WorkerMsg>) = channel();
     let handle = std::thread::spawn(move || {
         // The engine is constructed on this thread (PjRtClient is !Send).
-        let pjrt = match engine {
-            Engine::Pjrt => Some(std::rc::Rc::new(
-                PjrtEngine::from_dir(&artifacts_dir).expect("worker engine"),
-            )),
-            Engine::Host => None,
+        let pjrt = if engine.is_pjrt() {
+            Some(crate::runtime::worker_engine(&artifacts_dir))
+        } else {
+            None
         };
         let mut model =
             build_level(pjrt.as_ref(), kind, classes, seed).expect("worker model");

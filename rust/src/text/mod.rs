@@ -89,7 +89,7 @@ pub struct GenParams {
 impl GenParams {
     /// Preset for one of the paper's four benchmarks. The strata mix is
     /// calibrated so the distilled-model ceilings land near Table 1
-    /// (see DESIGN.md §3 and EXPERIMENTS.md for measured values).
+    /// (see DESIGN.md §3, and §10 for measured values).
     pub fn preset(bench: BenchmarkId) -> Self {
         match bench {
             BenchmarkId::Imdb => GenParams {

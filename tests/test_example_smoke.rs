@@ -1,0 +1,68 @@
+//! Smoke test mirroring `examples/quickstart.rs`'s core loop at small
+//! N, so drift between the example's API usage and the library breaks
+//! `cargo test` instead of rotting silently. (`cargo test` also
+//! *compiles* every example; this additionally executes the flow and
+//! asserts the run's headline invariants.)
+
+use ocl::cascade::Cascade;
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId};
+use ocl::data::Benchmark;
+use ocl::sim::{Expert, ExpertProfile};
+
+/// The quickstart flow: build benchmark + expert + cascade, stream
+/// every sample, read the metrics. Kept structurally identical to
+/// examples/quickstart.rs (same constructors, same knobs) at n=600.
+#[test]
+fn quickstart_core_loop_runs_and_learns() {
+    let bench = BenchmarkId::Imdb;
+    let expert_id = ExpertId::Gpt35;
+    let n = 600;
+
+    let benchmark = Benchmark::build_sized(bench, 42, n);
+    let mean_len =
+        benchmark.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+    let expert = Expert::new(
+        ExpertProfile::for_pair(expert_id, bench),
+        benchmark.strata_fractions(),
+        mean_len,
+        42,
+    );
+
+    let cfg = CascadeConfig::small(bench, expert_id);
+    let mut cascade =
+        Cascade::new(cfg, benchmark.classes, expert, None, 200).expect("cascade");
+    cascade.set_threshold_scale(0.7);
+
+    for s in benchmark.stream() {
+        cascade.process(s);
+    }
+    let m = &mut cascade.metrics;
+    m.finalize();
+
+    // Every query answered exactly once.
+    assert_eq!(m.total(), n);
+    let handled: f64 = m.handled_fractions().iter().sum();
+    assert!((handled - 1.0).abs() < 1e-9);
+    // The run actually learned something: accuracy beats coin-flip …
+    assert!(m.accuracy() > 0.55, "accuracy {}", m.accuracy());
+    // … and the cheap levels took real traffic off the expert, which
+    // is the quickstart's headline claim ("cost savings").
+    assert!(
+        (m.llm_calls() as usize) < n,
+        "expert answered everything: {} calls",
+        m.llm_calls()
+    );
+    let savings = 1.0 - m.llm_calls() as f64 / n as f64;
+    assert!(savings > 0.05, "savings {savings}");
+    // Snapshots were taken at the example's cadence.
+    assert!(!m.series.is_empty());
+}
+
+/// The quickstart's printed fractions index levels 0/1/2 — pin the
+/// small-cascade level count so the example's formatting stays valid.
+#[test]
+fn quickstart_level_layout_is_stable() {
+    let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+    assert_eq!(cfg.levels.len(), 2, "small cascade = LR + BERT-base + expert");
+    assert_eq!(cfg.n_levels(), 3);
+}

@@ -1,0 +1,191 @@
+//! Offline stub of the `xla` (PJRT) crate API surface used by `ocl`.
+//!
+//! Shapes and element counts are tracked honestly so argument
+//! validation in `ocl::runtime` behaves; every execution entry point
+//! errors with [`STUB_MSG`]. See README.md for how to swap in the real
+//! crate.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// The message every unimplemented execution path reports.
+pub const STUB_MSG: &str =
+    "xla stub: built against third_party/xla-stub — patch in the real `xla` \
+     crate to execute HLO artifacts";
+
+/// Stub error type (mirrors `xla::Error`'s `Display`/`Error` role).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+/// Parsed HLO module (stub: retains nothing).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub only checks the file exists so
+    /// missing-artifact errors surface with the right path.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(Error(format!("no such HLO file: {}", p.display())));
+        }
+        Ok(HloModuleProto { _private: () })
+    }
+}
+
+/// Computation wrapper (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. The stub cannot create one: `cpu()` always
+/// errors, so engine construction fails fast with [`STUB_MSG`].
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client (always errors in the stub).
+    pub fn cpu() -> Result<Self> {
+        stub_err()
+    }
+
+    /// Compile a computation (unreachable: no client can exist).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments (unreachable: never constructed).
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal (unreachable: never constructed).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+/// Host literal: the stub tracks shape/element count only (enough for
+/// `ocl::runtime`'s arity and element-count validation).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: Vec<i64>,
+    elems: usize,
+}
+
+impl Literal {
+    /// Rank-0 scalar literal.
+    pub fn scalar<T: Copy>(_v: T) -> Literal {
+        Literal { shape: Vec::new(), elems: 1 }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        Literal { shape: vec![data.len() as i64], elems: data.len() }
+    }
+
+    /// Reshape; errors on element-count mismatch like the real crate.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.elems {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.elems
+            )));
+        }
+        Ok(Literal { shape: dims.to_vec(), elems: self.elems })
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.elems
+    }
+
+    /// Literal shape (stub bookkeeping).
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Copy out as a host vec (no data in the stub: always errors).
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        stub_err()
+    }
+
+    /// Split a tuple literal (no data in the stub: always errors).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_bookkeeping() {
+        let l = Literal::vec1(&[0f32; 12]);
+        assert_eq!(l.element_count(), 12);
+        let r = l.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.shape(), &[3, 4]);
+        assert!(l.reshape(&[5, 5]).is_err());
+        assert_eq!(Literal::scalar(1.0f32).element_count(), 1);
+    }
+
+    #[test]
+    fn execution_paths_error_with_stub_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+        let mut l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn hlo_file_existence_is_checked() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
