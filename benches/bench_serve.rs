@@ -1,0 +1,125 @@
+//! Bench: serve-layer sustained throughput under open-loop load —
+//! steady Poisson, ramp, and burst arrival processes against the
+//! supervised router (`serve::Server`). Prints the usual table and
+//! emits the JSON baseline (`target/bench_serve.json`, override with
+//! `BENCH_SERVE_JSON`) that CI uploads as the perf-trajectory
+//! artifact; `BENCH_SERVE_REQUESTS` pins the scale (default 1200).
+//! `cargo bench --bench bench_serve`
+
+use std::cell::RefCell;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use ocl::bench_support::Bench;
+use ocl::codec::Json;
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
+use ocl::data::Benchmark;
+use ocl::serve::{load, Server, ServeReport};
+use ocl::sim::{Expert, ExpertProfile};
+
+fn run_scenario(arrival: load::Arrival, n: usize, seed: u64) -> ServeReport {
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, seed, n);
+    let mean_len =
+        b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n.max(1) as f64;
+    let expert = Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+        b.strata_fractions(),
+        mean_len,
+        seed,
+    );
+    let mut cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+    cfg.seed = seed;
+    let mut server =
+        Server::new(cfg, b.classes, expert, ServeConfig::default(), "artifacts")
+            .expect("server");
+    server.set_threshold_scale(0.7);
+
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let drain = std::thread::spawn(move || resp_rx.iter().count());
+    let submit = load::drive(b.samples.clone(), arrival, seed ^ 0xA, req_tx);
+    let report = server.serve(req_rx, resp_tx).expect("serve");
+    assert_eq!(submit.join().expect("submit"), n);
+    assert_eq!(drain.join().expect("drain"), n, "every request answered");
+    assert_eq!(report.served + report.shed, n);
+    report
+}
+
+fn main() {
+    let n: usize = std::env::var("BENCH_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1200);
+    let scenarios: [(&str, load::Arrival); 3] = [
+        ("poisson-steady-1200rps", load::Arrival::Poisson { rate: 1200.0 }),
+        ("ramp-300-to-3000rps", load::Arrival::Ramp { start: 300.0, end: 3000.0 }),
+        (
+            "burst-300-4000rps",
+            load::Arrival::Burst {
+                base: 300.0,
+                peak: 4000.0,
+                period: Duration::from_millis(50),
+                duty: 0.3,
+            },
+        ),
+    ];
+
+    let mut bench = Bench::new("serve load (open loop)", 0, 1);
+    let reports: RefCell<Vec<ServeReport>> = RefCell::new(Vec::new());
+    for (i, (name, arrival)) in scenarios.iter().enumerate() {
+        bench.case_throughput(name, n as f64, || {
+            reports.borrow_mut().push(run_scenario(*arrival, n, 51 + i as u64));
+        });
+    }
+    bench.print();
+
+    let reports = reports.into_inner();
+    for ((name, _), r) in scenarios.iter().zip(&reports) {
+        println!(
+            "{name}: served {} shed {} restarts {:?} p50 {:.2}ms p99 {:.2}ms max {:.2}ms",
+            r.served,
+            r.shed,
+            r.restarts,
+            r.latency_ms.pct(50.0),
+            r.latency_ms.pct(99.0),
+            r.latency_ms.max()
+        );
+    }
+    // SLO gate: intentionally generous (shared CI runners) — the point
+    // is catching order-of-magnitude regressions, not µs drift.
+    load::Slo { p50_ms: 2_000.0, p99_ms: 15_000.0 }
+        .check(&reports[0].latency_ms)
+        .expect("steady-state SLO");
+
+    // JSON baseline: harness timings + per-scenario serve reports.
+    let json = Json::obj(vec![
+        ("harness", bench.to_json()),
+        (
+            "serve",
+            Json::Arr(
+                scenarios
+                    .iter()
+                    .zip(&reports)
+                    .map(|((name, _), r)| {
+                        Json::obj(vec![
+                            ("name", Json::Str((*name).to_string())),
+                            ("requests", Json::Num(n as f64)),
+                            ("report", r.to_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    // Default next to the workspace target dir (cargo runs benches with
+    // cwd = the package root, so a bare relative path would land in
+    // rust/target/ instead).
+    let path = std::env::var("BENCH_SERVE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../target/bench_serve.json").to_string()
+    });
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(&path, json.to_string_pretty()).expect("write json baseline");
+    println!("json baseline written to {path}");
+}

@@ -14,7 +14,7 @@ use std::sync::mpsc::channel;
 
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::data::Benchmark;
-use ocl::serve::{BatchPolicy, Request, Server};
+use ocl::serve::{load, Server, ServeConfig};
 use ocl::sim::{Expert, ExpertProfile};
 
 /// Prefer PJRT when the build and the artifacts allow it.
@@ -54,6 +54,13 @@ fn main() -> ocl::Result<()> {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(1500);
+    // Open-loop offered load (req/s); 0 = submit as fast as possible.
+    let rate: f64 = args
+        .iter()
+        .position(|a| a == "--rate")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
 
     let bench = BenchmarkId::Imdb;
     let b = Benchmark::build_sized(bench, 7, n);
@@ -72,33 +79,24 @@ fn main() -> ocl::Result<()> {
         cfg,
         b.classes,
         expert,
-        BatchPolicy::default(),
+        ServeConfig::default(),
         ocl::runtime::DEFAULT_ARTIFACTS_DIR,
     )?;
     server.set_threshold_scale(0.7);
 
     let (req_tx, req_rx) = channel();
     let (resp_tx, resp_rx) = channel::<ocl::serve::Response>();
-    let samples = b.samples.clone();
-    let submit = std::thread::spawn(move || {
-        for (i, s) in samples.iter().enumerate() {
-            if req_tx
-                .send(Request {
-                    id: i as u64,
-                    text: s.text.clone(),
-                    truth: s.label,
-                    sample: s.clone(),
-                })
-                .is_err()
-            {
-                break;
-            }
-        }
-    });
+    // Open-loop submission: a positive --rate drives a Poisson arrival
+    // process; 0 degenerates to back-to-back submission.
+    let arrival = load::Arrival::Poisson { rate: if rate > 0.0 { rate } else { 1e9 } };
+    let submit = load::drive(b.samples.clone(), arrival, 7, req_tx);
     let drain = std::thread::spawn(move || {
         let mut correct = 0usize;
         let mut total = 0usize;
         for r in resp_rx.iter() {
+            if r.shed {
+                continue; // shed responses carry no prediction
+            }
             total += 1;
             if r.pred == r.truth {
                 correct += 1;
@@ -128,6 +126,12 @@ fn main() -> ocl::Result<()> {
     );
     println!("llm calls           {}", report.llm_calls);
     println!("handled per level   {:?}", report.handled);
-    assert_eq!(report.served, n, "every request must be answered");
+    println!("shed / restarts     {} / {:?}", report.shed, report.restarts);
+    println!("peak in-system      {}", report.peak_pending);
+    assert_eq!(
+        report.served + report.shed,
+        n,
+        "every request must be answered (served or shed)"
+    );
     Ok(())
 }

@@ -107,6 +107,50 @@ impl Bench {
     pub fn results(&self) -> &[CaseResult] {
         &self.results
     }
+
+    /// JSON baseline encoding — the machine-readable twin of
+    /// [`Bench::report`]. CI uploads these per-bench baselines as
+    /// artifacts (`BENCH_*.json`) so perf trajectories can be diffed
+    /// across commits without scraping the text tables.
+    pub fn to_json(&self) -> crate::codec::Json {
+        use crate::codec::Json;
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("schema", Json::Num(1.0)),
+            ("iters", Json::Num(self.iters as f64)),
+            (
+                "cases",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            let mut p = Percentiles::new();
+                            for &x in &r.iters_ms {
+                                p.push(x);
+                            }
+                            let q = p.pcts(&[50.0, 95.0, 99.0]);
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("mean_ms", Json::Num(r.mean_ms())),
+                                ("p50_ms", Json::Num(q[0])),
+                                ("p95_ms", Json::Num(q[1])),
+                                ("p99_ms", Json::Num(q[2])),
+                                (
+                                    "items_per_sec",
+                                    match r.items_per_iter {
+                                        Some(items) => {
+                                            Json::Num(items / (r.mean_ms() / 1e3))
+                                        }
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +175,24 @@ mod tests {
         assert!(rep.contains("spin"));
         assert!(rep.contains("/s"));
         assert!(b.results()[1].mean_ms() >= 0.2);
+    }
+
+    #[test]
+    fn json_baseline_round_trips() {
+        let mut b = Bench::new("jsondemo", 0, 2);
+        b.case_throughput("c1", 10.0, || {
+            black_box(1 + 1);
+        });
+        b.case("c2", || {
+            black_box(2 + 2);
+        });
+        let v = crate::codec::parse(&b.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("jsondemo"));
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").unwrap().as_str(), Some("c1"));
+        assert!(cases[0].get("items_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(cases[1].get("items_per_sec"), Some(&crate::codec::Json::Null));
+        assert!(cases[1].get("p99_ms").unwrap().as_f64().is_some());
     }
 }

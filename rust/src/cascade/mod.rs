@@ -69,7 +69,35 @@ const CALIB_CACHE: usize = 128;
 /// uniform batch sampling restores the i.i.d.-ish training mix while
 /// keeping the table's batch sizes; the deviation is documented in
 /// DESIGN.md §7 and ablated in `benches/bench_large_cascade.rs`.
-const REPLAY_FACTOR: usize = 16;
+pub const REPLAY_FACTOR: usize = 16;
+
+/// The paper's Tables 3–4 quote calibration-MLP learning rates of
+/// 7e-4..1e-3 for MLPs over BERT-scale inputs; our probability
+/// vectors are 2–7 dimensional, so the same rates would need ~100x
+/// more annotated samples than the budgets provide. The table value
+/// is kept in the config (for traceability) and scaled by this
+/// constant wherever a calibrator is trained — shared with the serve
+/// router so the offline and served learners cannot drift.
+pub const MLP_LR_SCALE: f32 = 50.0;
+
+/// Replay batches drawn from the calibration cache per trigger —
+/// shared with the serve router (learner parity).
+pub const CALIB_REPLAY: usize = 4;
+
+/// Replay-batch index selection shared by [`Cascade`] and
+/// [`crate::serve::Server`]: half the batch is the newest annotations
+/// (fast adaptation), half is replayed history (drift resistance),
+/// plus a second full uniform pass — two passes per trigger (the
+/// distillation baseline trains 5 epochs over its label set, §B.3, so
+/// the online learner needs comparable per-annotation sample
+/// efficiency). Keeping this in one place is what guarantees the two
+/// learners build identical training batches per trigger.
+pub fn replay_picks(rng: &mut Rng, len: usize, bs: usize) -> Vec<usize> {
+    let mut picked: Vec<usize> = (len - bs / 2..len).collect();
+    picked.extend(rng.sample_indices(len, bs - bs / 2));
+    picked.extend(rng.sample_indices(len, bs));
+    picked
+}
 
 /// One cascade level: model + deferral function + learning state.
 struct Level {
@@ -86,6 +114,10 @@ struct Level {
     calib_pending: usize,
     /// Current DAgger jump probability β_i.
     beta: f64,
+    /// 8-sample model-training chunks executed (parity diagnostics).
+    train_chunks: u64,
+    /// 8-sample calibrator-training chunks executed.
+    calib_chunks: u64,
 }
 
 /// The online cascade (Algorithm 1 driver).
@@ -152,6 +184,8 @@ impl Cascade {
                 pending: 0,
                 calib_pending: 0,
                 beta: cfg.beta0,
+                train_chunks: 0,
+                calib_chunks: 0,
             });
         }
         let n_levels = cfg.levels.len() + 1;
@@ -231,6 +265,13 @@ impl Cascade {
     /// Current β of each level (diagnostics).
     pub fn betas(&self) -> Vec<f64> {
         self.levels.iter().map(|l| l.beta).collect()
+    }
+
+    /// Per-level (model, calibrator) 8-sample training-chunk counts —
+    /// the learner-parity diagnostic the serve tests compare against
+    /// [`crate::serve::ServeReport`]'s worker counters.
+    pub fn train_counts(&self) -> Vec<(u64, u64)> {
+        self.levels.iter().map(|l| (l.train_chunks, l.calib_chunks)).collect()
     }
 
     /// Evaluate every level on a sample without touching any state
@@ -482,15 +523,10 @@ impl Cascade {
         if items.len() < bs {
             return 0.0;
         }
-        // Uniform replay over the ring (see REPLAY_FACTOR): half the
-        // batch is the newest annotations (fast adaptation), half is
-        // replayed history (drift resistance). Two passes per trigger —
-        // the distillation baseline trains 5 epochs over its label set
-        // (paper §B.3), so the online learner needs comparable
-        // per-annotation sample efficiency.
-        let mut picked: Vec<usize> = (items.len() - bs / 2..items.len()).collect();
-        picked.extend(self.rng.sample_indices(items.len(), bs - bs / 2));
-        picked.extend(self.rng.sample_indices(items.len(), bs));
+        // Uniform replay over the ring (see REPLAY_FACTOR); batch
+        // construction is shared with the serve router via
+        // `replay_picks` so the two learners cannot drift.
+        let picked = replay_picks(&mut self.rng, items.len(), bs);
         let mut flops = 0.0;
         let lvl = &mut self.levels[i];
         for chunk in picked.chunks(8) {
@@ -500,32 +536,25 @@ impl Cascade {
             let batch: Vec<(&Featurized, usize)> =
                 chunk.iter().map(|&j| (items[j].0.as_ref(), items[j].1)).collect();
             lvl.model.train(&batch, lvl.cfg.model_lr);
+            lvl.train_chunks += 1;
             flops += CostModel::train_flops(lvl.cfg.model) * chunk.len() as f64;
         }
         flops
     }
-
-    /// The paper's Tables 3–4 quote calibration-MLP learning rates of
-    /// 7e-4..1e-3 for MLPs over BERT-scale inputs; our probability
-    /// vectors are 2–7 dimensional, so the same rates would need ~100x
-    /// more annotated samples than the budgets provide. The table value
-    /// is kept in the config (for traceability) and scaled here.
-    const MLP_LR_SCALE: f32 = 50.0;
-    /// Replay batches drawn from the calibration cache per trigger.
-    const CALIB_REPLAY: usize = 4;
 
     fn train_calibrator(&mut self, i: usize) -> f64 {
         let items = self.levels[i].calib_cache.to_vec();
         if items.len() < 8 {
             return 0.0;
         }
-        let lr = self.levels[i].cfg.mlp_lr * Self::MLP_LR_SCALE;
+        let lr = self.levels[i].cfg.mlp_lr * MLP_LR_SCALE;
         let mut flops = 0.0;
-        for _ in 0..Self::CALIB_REPLAY {
+        for _ in 0..CALIB_REPLAY {
             let idx = self.rng.sample_indices(items.len(), 8);
             let batch: Vec<(&[f32], f32)> =
                 idx.iter().map(|&j| (items[j].0.as_slice(), items[j].1)).collect();
             self.levels[i].calib.train(&batch, lr);
+            self.levels[i].calib_chunks += 1;
             flops += CostModel::MLP_TRAIN * 8.0;
         }
         flops

@@ -353,6 +353,45 @@ impl CascadeConfig {
     }
 }
 
+/// Serve-layer knobs: dynamic batching + admission control. The router
+/// in `serve::Server` owns no hyperparameters of its own — everything
+/// operationally tunable lives here so experiment specs can pin it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Max jobs per inference batch dispatched to a level worker.
+    pub batch_max: usize,
+    /// Max time the oldest *enqueued* job may wait before its level's
+    /// batch is flushed regardless of fill (measured from the job's own
+    /// enqueue instant, so partial drains never re-arm the deadline).
+    pub deadline: std::time::Duration,
+    /// Admission bound: when this many requests are in the system
+    /// (admitted, unanswered), new arrivals are shed with an immediate
+    /// `shed` response instead of growing the router's state without
+    /// bound. Sheds are counted separately in [`crate::serve::ServeReport`].
+    pub max_pending: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_max: 8,
+            deadline: std::time::Duration::from_millis(2),
+            max_pending: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// JSON encoding (serve reports / replayable load specs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch_max", Json::Num(self.batch_max as f64)),
+            ("deadline_us", Json::Num(self.deadline.as_micros() as f64)),
+            ("max_pending", Json::Num(self.max_pending as f64)),
+        ])
+    }
+}
+
 /// Global dimension constants — must agree with `python/compile/model.py`
 /// (the manifest carries them; `runtime` asserts agreement at load).
 pub mod dims {
@@ -449,6 +488,18 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn serve_config_defaults_and_json() {
+        let s = ServeConfig::default();
+        assert_eq!(s.batch_max, 8);
+        assert_eq!(s.max_pending, 1024);
+        assert_eq!(s.deadline, std::time::Duration::from_millis(2));
+        let v = crate::codec::parse(&s.to_json().to_string_compact()).unwrap();
+        assert_eq!(v.get("batch_max").unwrap().as_usize(), Some(8));
+        assert_eq!(v.get("deadline_us").unwrap().as_f64(), Some(2000.0));
+        assert_eq!(v.get("max_pending").unwrap().as_usize(), Some(1024));
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub enum Error {
     /// A model worker thread died or a channel closed unexpectedly.
     Worker(String),
 
+    /// A latency/throughput service-level objective was violated
+    /// (serve-layer load harness assertions).
+    Slo(String),
+
     /// Data/benchmark construction failure.
     Data(String),
 
@@ -55,6 +59,7 @@ impl fmt::Display for Error {
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Worker(m) => write!(f, "worker error: {m}"),
+            Error::Slo(m) => write!(f, "slo violation: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
         }
@@ -102,6 +107,7 @@ mod tests {
         assert_eq!(Error::Usage("u".into()).to_string(), "usage error: u");
         assert_eq!(Error::Runtime("r".into()).to_string(), "runtime error: r");
         assert_eq!(Error::Worker("w".into()).to_string(), "worker error: w");
+        assert_eq!(Error::Slo("s".into()).to_string(), "slo violation: s");
         assert_eq!(Error::Data("d".into()).to_string(), "data error: d");
     }
 

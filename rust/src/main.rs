@@ -8,7 +8,7 @@ use ocl::cli::Command;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
-use ocl::serve::{BatchPolicy, Request, Server};
+use ocl::serve::{Request, Server, ServeConfig};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -217,7 +217,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 cfg,
                 b.classes,
                 e,
-                BatchPolicy::default(),
+                ServeConfig::default(),
                 args.get("artifacts"),
             )?;
             server.set_threshold_scale(eval::BUDGETED_SCALE);
@@ -239,9 +239,11 @@ fn dispatch(argv: &[String]) -> Result<()> {
             submit.join().ok();
             let drained = drain.join().unwrap_or(0);
             println!(
-                "served={} drained={} acc={:.2}% thr={:.0} req/s \
-                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} handled={:?}",
+                "served={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
+                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} \
+                 restarts={:?} handled={:?}",
                 report.served,
+                report.shed,
                 drained,
                 report.accuracy * 100.0,
                 report.throughput,
@@ -249,6 +251,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 report.latency_ms.pct(95.0),
                 report.latency_ms.pct(99.0),
                 report.llm_calls,
+                report.restarts,
                 report.handled
             );
             Ok(())

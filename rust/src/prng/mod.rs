@@ -134,6 +134,15 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
+    /// Exponential(rate) variate — the inter-arrival gaps of a Poisson
+    /// process at `rate` events/second (the serve-layer open-loop load
+    /// generator). `rate` must be positive.
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0, "exp needs a positive rate");
+        // 1 - U is in (0, 1], so ln never sees zero.
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Sample an index from unnormalized non-negative weights.
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
@@ -337,6 +346,26 @@ mod tests {
         let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn exp_mean_matches_rate() {
+        let mut rng = Rng::new(27);
+        for rate in [0.5, 4.0, 250.0] {
+            let n = 30_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                let x = rng.exp(rate);
+                assert!(x >= 0.0 && x.is_finite());
+                sum += x;
+            }
+            let mean = sum / n as f64;
+            assert!(
+                (mean * rate - 1.0).abs() < 0.05,
+                "rate {rate}: mean {mean} (expected {})",
+                1.0 / rate
+            );
+        }
     }
 
     #[test]

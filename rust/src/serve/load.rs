@@ -1,0 +1,228 @@
+//! Open-loop load generation + SLO assertions for the serve layer.
+//!
+//! **Why open-loop:** a closed-loop driver (send → wait for the reply →
+//! send the next) lets a slow server throttle its own offered load, so
+//! measured latency hides queueing delay precisely when the system is
+//! saturating — the classic *coordinated omission* failure. The
+//! generator here precomputes the whole arrival schedule from the
+//! configured process and submits on that clock no matter how the
+//! server is doing; overload then shows up honestly as queue growth,
+//! shed responses, and p99 inflation (see DESIGN.md §9).
+//!
+//! Arrival processes are driven by [`crate::prng::Rng`], so a load run
+//! is replayable bit-for-bit from its seed.
+
+use std::sync::mpsc::Sender;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::data::Sample;
+use crate::error::{Error, Result};
+use crate::prng::Rng;
+use crate::serve::Request;
+use crate::util::Percentiles;
+
+/// An open-loop arrival process (rates in requests/second).
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Stationary Poisson arrivals at `rate`.
+    Poisson {
+        /// Mean arrival rate.
+        rate: f64,
+    },
+    /// Poisson arrivals whose rate ramps linearly from `start` to `end`
+    /// over the request sequence (capacity-walk runs).
+    Ramp {
+        /// Rate at the first request.
+        start: f64,
+        /// Rate at the last request.
+        end: f64,
+    },
+    /// Square-wave bursts: `peak` for the first `duty` fraction of each
+    /// `period`, `base` for the rest (batcher/backpressure stress).
+    Burst {
+        /// Off-burst rate.
+        base: f64,
+        /// In-burst rate.
+        peak: f64,
+        /// Burst cycle length.
+        period: Duration,
+        /// Fraction of the period spent at `peak`, in (0, 1).
+        duty: f64,
+    },
+}
+
+impl Arrival {
+    /// Instantaneous rate at request-fraction `frac` (k/n) and absolute
+    /// schedule time `t_secs`.
+    fn rate_at(&self, frac: f64, t_secs: f64) -> f64 {
+        match *self {
+            Arrival::Poisson { rate } => rate,
+            Arrival::Ramp { start, end } => start + (end - start) * frac.clamp(0.0, 1.0),
+            Arrival::Burst { base, peak, period, duty } => {
+                let p = period.as_secs_f64().max(1e-9);
+                let phase = (t_secs % p) / p;
+                if phase < duty {
+                    peak
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Precompute `n` absolute arrival offsets from t=0. The schedule
+    /// is fixed before the run starts — that is what makes the loop
+    /// open: send times never react to server progress.
+    pub fn schedule(&self, n: usize, rng: &mut Rng) -> Vec<Duration> {
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        for k in 0..n {
+            let rate = self.rate_at(k as f64 / n.max(1) as f64, t).max(1e-9);
+            t += rng.exp(rate);
+            out.push(Duration::from_secs_f64(t));
+        }
+        out
+    }
+}
+
+/// Submit `samples` as [`Request`]s on the arrival schedule from a
+/// background thread; returns the count actually submitted (stops
+/// early only if the server hangs up). Request ids are the sample
+/// positions, so exactly-once accounting is a sort away.
+pub fn drive(
+    samples: Vec<Sample>,
+    arrival: Arrival,
+    seed: u64,
+    tx: Sender<Request>,
+) -> JoinHandle<usize> {
+    std::thread::spawn(move || {
+        let mut rng = Rng::new(seed);
+        let schedule = arrival.schedule(samples.len(), &mut rng);
+        let t0 = Instant::now();
+        let mut sent = 0usize;
+        for (i, (s, due)) in samples.iter().zip(&schedule).enumerate() {
+            if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let ok = tx
+                .send(Request {
+                    id: i as u64,
+                    text: s.text.clone(),
+                    truth: s.label,
+                    sample: s.clone(),
+                })
+                .is_ok();
+            if !ok {
+                break;
+            }
+            sent += 1;
+        }
+        sent
+    })
+}
+
+/// Latency service-level objective: p50/p99 bounds in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Slo {
+    /// Median bound.
+    pub p50_ms: f64,
+    /// Tail bound.
+    pub p99_ms: f64,
+}
+
+impl Slo {
+    /// Assert the SLO against a latency distribution; the error names
+    /// the violated bound ([`Error::Slo`]).
+    pub fn check(&self, latency_ms: &Percentiles) -> Result<()> {
+        let q = latency_ms.pcts(&[50.0, 99.0]);
+        if q[0] > self.p50_ms {
+            return Err(Error::Slo(format!(
+                "p50 {:.2} ms > bound {:.2} ms",
+                q[0], self.p50_ms
+            )));
+        }
+        if q[1] > self.p99_ms {
+            return Err(Error::Slo(format!(
+                "p99 {:.2} ms > bound {:.2} ms",
+                q[1], self.p99_ms
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_matches_rate_and_is_deterministic() {
+        let arr = Arrival::Poisson { rate: 1000.0 };
+        let n = 8000;
+        let a = arr.schedule(n, &mut Rng::new(5));
+        let b = arr.schedule(n, &mut Rng::new(5));
+        assert_eq!(a, b, "same seed → same schedule");
+        // monotone non-decreasing offsets
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // mean inter-arrival ≈ 1/rate (±5%)
+        let total = a.last().unwrap().as_secs_f64();
+        let mean_gap = total / n as f64;
+        assert!(
+            (mean_gap * 1000.0 - 1.0).abs() < 0.05,
+            "mean gap {mean_gap} at rate 1000"
+        );
+    }
+
+    #[test]
+    fn ramp_accelerates() {
+        let arr = Arrival::Ramp { start: 100.0, end: 10_000.0 };
+        let s = arr.schedule(4000, &mut Rng::new(9));
+        // The first quarter must span much more time than the last.
+        let q = s.len() / 4;
+        let first = s[q].as_secs_f64();
+        let last = s[s.len() - 1].as_secs_f64() - s[s.len() - 1 - q].as_secs_f64();
+        assert!(
+            first > 3.0 * last,
+            "ramp did not accelerate: first-quarter {first}s, last-quarter {last}s"
+        );
+    }
+
+    #[test]
+    fn burst_alternates_density() {
+        let arr = Arrival::Burst {
+            base: 50.0,
+            peak: 5000.0,
+            period: Duration::from_millis(100),
+            duty: 0.5,
+        };
+        let s = arr.schedule(3000, &mut Rng::new(11));
+        // Count arrivals in-burst vs off-burst phases.
+        let (mut hot, mut cold) = (0usize, 0usize);
+        for d in &s {
+            let phase = (d.as_secs_f64() % 0.1) / 0.1;
+            if phase < 0.5 {
+                hot += 1;
+            } else {
+                cold += 1;
+            }
+        }
+        assert!(
+            hot > 10 * cold.max(1),
+            "bursts not visible: {hot} in-burst vs {cold} off-burst"
+        );
+    }
+
+    #[test]
+    fn slo_check_flags_the_right_bound() {
+        let mut lat = Percentiles::new();
+        for i in 0..100 {
+            lat.push(i as f64); // p50 ≈ 50, p99 ≈ 99
+        }
+        assert!(Slo { p50_ms: 60.0, p99_ms: 120.0 }.check(&lat).is_ok());
+        let e = Slo { p50_ms: 10.0, p99_ms: 120.0 }.check(&lat).unwrap_err();
+        assert!(e.to_string().contains("p50"), "{e}");
+        let e = Slo { p50_ms: 60.0, p99_ms: 80.0 }.check(&lat).unwrap_err();
+        assert!(e.to_string().contains("p99"), "{e}");
+    }
+}

@@ -1,5 +1,6 @@
 //! Streaming serving mode: request router + dynamic batcher + per-model
-//! worker threads (the vLLM-style leader/worker topology).
+//! worker threads (the vLLM-style leader/worker topology), with worker
+//! supervision and admission control.
 //!
 //! Why threads-per-model: `PjRtClient` is `Rc`-based and cannot cross
 //! threads, so each worker *builds its own engine* on its own thread;
@@ -8,22 +9,56 @@
 //! execute model inference/updates — queries are batched per level (up
 //! to `batch_max` or `deadline`), which is what amortizes PJRT dispatch
 //! overhead on the hot path (§Perf L3).
+//!
+//! **Learner parity.** The router's online-learning mirror of
+//! [`crate::cascade::Cascade`] consults each level's *own* DAgger β at
+//! the value snapshotted at the request's admission (so queueing delay
+//! never skews jump probabilities; decay uses each level's own factor,
+//! one step per admitted request), builds training batches via
+//! the shared [`crate::cascade::replay_picks`], trains calibrators with
+//! [`crate::cascade::CALIB_REPLAY`] replay passes at the shared
+//! [`crate::cascade::MLP_LR_SCALE`], and evaluates walk-skipped levels
+//! through async calibration probes — so the served cascade learns the
+//! same way the offline one does (asserted in `tests/test_serve_load.rs`).
+//!
+//! **Supervision.** A dead level worker (panic, send/recv failure, or
+//! injected [`Chaos`]) is detected by the router loop, respawned from
+//! config, and its in-flight batch is requeued at the front of the
+//! level queue — every admitted request is still answered exactly once
+//! (stale replies from the old worker generation are dropped by epoch).
+//! The respawned model restarts from fresh weights, but the replay
+//! caches live in the router, so the next training trigger re-teaches
+//! it from retained annotations; only gradient steps queued inside the
+//! dead worker are lost.
+//!
+//! **Admission control.** The router's in-system population is bounded
+//! by [`ServeConfig::max_pending`]; arrivals beyond the bound are shed
+//! with an immediate [`Response`] (`shed = true`) and counted
+//! separately, so overload degrades by refusing work instead of by
+//! growing queues without bound.
 
-use std::collections::VecDeque;
+pub mod load;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cascade::{replay_picks, CALIB_REPLAY, MLP_LR_SCALE, REPLAY_FACTOR};
 use crate::config::{CascadeConfig, Engine, ModelKind};
+pub use crate::config::ServeConfig;
 use crate::data::Sample;
 use crate::error::{Error, Result};
-use crate::models::{
-    build_calibrator, build_level, Featurized, Pipeline,
-};
+use crate::models::{build_calibrator, build_level, Featurized, Pipeline};
 use crate::prng::Rng;
 use crate::sim::Expert;
 use crate::util::{argmax, Percentiles, Ring};
+
+/// Restart budget per level — a respawn loop beyond this indicates a
+/// deterministic crash (bad config/artifacts), not a transient fault.
+const MAX_RESTARTS: usize = 16;
 
 /// A client request: one document to classify.
 #[derive(Clone, Debug)]
@@ -43,81 +78,164 @@ pub struct Request {
 pub struct Response {
     /// Request id.
     pub id: u64,
-    /// Predicted label.
+    /// Predicted label (0 and meaningless when `shed`).
     pub pred: usize,
-    /// Which level answered (levels.len() = expert).
+    /// Which level answered: `0..levels.len()` = cascade level,
+    /// `levels.len()` = expert, `levels.len() + 1` = shed at admission.
     pub handled_by: usize,
-    /// End-to-end latency.
+    /// End-to-end latency (zero when shed).
     pub latency: Duration,
     /// Ground truth (echoed for client-side accuracy accounting).
     pub truth: usize,
+    /// True when the request was refused by admission control.
+    pub shed: bool,
 }
 
-/// Serving report: latency distribution + throughput + routing mix.
+/// Serving report: latency distribution + throughput + routing mix +
+/// supervision/overload accounting.
 #[derive(Debug)]
 pub struct ServeReport {
-    /// Requests served.
+    /// Requests served (excludes shed).
     pub served: usize,
-    /// End-to-end latency percentiles (milliseconds).
+    /// Requests shed by admission control.
+    pub shed: usize,
+    /// End-to-end latency percentiles (milliseconds, served only).
     pub latency_ms: Percentiles,
     /// Wall-clock duration of the run (seconds).
     pub wall_secs: f64,
-    /// Requests per second.
+    /// Served requests per second.
     pub throughput: f64,
     /// Per-level handled counts (last = expert).
     pub handled: Vec<usize>,
-    /// Accuracy vs ground truth.
+    /// Accuracy vs ground truth (served only).
     pub accuracy: f64,
     /// Expert calls.
     pub llm_calls: u64,
+    /// Worker respawns per level.
+    pub restarts: Vec<usize>,
+    /// Largest in-system population observed (≤ `max_pending`).
+    pub peak_pending: usize,
+    /// Per-level DAgger β after the run (cascade-parity diagnostic).
+    pub final_betas: Vec<f64>,
+    /// 8-sample model-training chunks executed per level worker.
+    pub train_batches: Vec<u64>,
+    /// 8-sample calibrator-training chunks executed per level worker.
+    pub calib_batches: Vec<u64>,
+}
+
+impl ServeReport {
+    /// JSON encoding (bench baselines, report files).
+    pub fn to_json(&self) -> crate::codec::Json {
+        use crate::codec::Json;
+        let q = self.latency_ms.pcts(&[50.0, 95.0, 99.0]);
+        Json::obj(vec![
+            ("served", Json::Num(self.served as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("throughput", Json::Num(self.throughput)),
+            ("p50_ms", Json::Num(q[0])),
+            ("p95_ms", Json::Num(q[1])),
+            ("p99_ms", Json::Num(q[2])),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("llm_calls", Json::Num(self.llm_calls as f64)),
+            (
+                "restarts",
+                Json::Arr(self.restarts.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            ("peak_pending", Json::Num(self.peak_pending as f64)),
+            (
+                "handled",
+                Json::Arr(self.handled.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Fault injection: crash one level worker after the N-th admission
+/// (the serve-layer twin of `Expert::set_available(false)`).
+#[derive(Clone, Copy, Debug)]
+pub struct Chaos {
+    /// Which level worker to kill.
+    pub kill_level: usize,
+    /// Crash after this many admitted (non-shed) requests.
+    pub after_requests: usize,
 }
 
 // --- worker protocol -------------------------------------------------------
 
+#[derive(Clone)]
 struct Job {
     req_id: u64,
     f: Arc<Featurized>,
+    /// Enqueue instant — the batch deadline is measured from here, so a
+    /// partial drain never re-arms the clock for surviving jobs.
+    enq: Instant,
 }
 
 enum WorkerMsg {
     Infer(Vec<Job>),
     Train(Vec<(Arc<Featurized>, usize)>, f32),
     TrainCalib(Vec<(Vec<f32>, f32)>, f32),
+    /// Simulated crash (supervision tests): the worker thread exits
+    /// without replying, exactly like a panic would leave it.
+    Crash,
     Shutdown,
 }
 
 struct WorkerReply {
     level: usize,
+    /// Worker generation — replies from a generation the supervisor
+    /// already replaced are dropped (their jobs were requeued).
+    epoch: u64,
     results: Vec<(u64, Vec<f32>, f32)>, // (req_id, probs, score)
 }
 
-/// Handle to one level worker thread.
-struct Worker {
-    tx: Sender<WorkerMsg>,
-    handle: JoinHandle<()>,
+/// Training-work counters shared router ↔ worker (survive respawns:
+/// the supervisor re-hands the same `Arc` to the replacement worker).
+#[derive(Default)]
+struct WorkerStats {
+    train_chunks: AtomicU64,
+    calib_chunks: AtomicU64,
 }
 
-fn spawn_worker(
+/// Everything needed to (re)build one level worker.
+#[derive(Clone)]
+struct WorkerSpec {
     level: usize,
     kind: ModelKind,
     classes: usize,
     seed: u64,
     engine: Engine,
     artifacts_dir: String,
+}
+
+/// Handle to one level worker thread.
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    handle: JoinHandle<()>,
+    epoch: u64,
+}
+
+fn spawn_worker(
+    spec: &WorkerSpec,
+    epoch: u64,
     reply_tx: Sender<WorkerReply>,
+    stats: Arc<WorkerStats>,
 ) -> Worker {
     let (tx, rx): (Sender<WorkerMsg>, Receiver<WorkerMsg>) = channel();
+    let spec = spec.clone();
     let handle = std::thread::spawn(move || {
         // The engine is constructed on this thread (PjRtClient is !Send).
-        let pjrt = if engine.is_pjrt() {
-            Some(crate::runtime::worker_engine(&artifacts_dir))
+        let is_pjrt = spec.engine.is_pjrt();
+        let pjrt = if is_pjrt {
+            Some(crate::runtime::worker_engine(&spec.artifacts_dir))
         } else {
             None
         };
-        let mut model =
-            build_level(pjrt.as_ref(), kind, classes, seed).expect("worker model");
-        let mut calib =
-            build_calibrator(pjrt.as_ref(), classes, seed).expect("worker calibrator");
+        let mut model = build_level(pjrt.as_ref(), spec.kind, spec.classes, spec.seed)
+            .expect("worker model");
+        let mut calib = build_calibrator(pjrt.as_ref(), spec.classes, spec.seed)
+            .expect("worker calibrator");
         while let Ok(msg) = rx.recv() {
             match msg {
                 WorkerMsg::Infer(jobs) => {
@@ -132,77 +250,168 @@ fn spawn_worker(
                             (j.req_id, p, s)
                         })
                         .collect();
-                    if reply_tx.send(WorkerReply { level, results }).is_err() {
+                    let reply = WorkerReply { level: spec.level, epoch, results };
+                    if reply_tx.send(reply).is_err() {
                         break;
                     }
                 }
                 WorkerMsg::Train(batch, lr) => {
                     for chunk in batch.chunks(8) {
-                        if chunk.len() < 8 {
-                            break;
+                        if chunk.len() < 8 && is_pjrt {
+                            break; // pjrt step executables are fixed at batch 8
                         }
                         let b: Vec<(&Featurized, usize)> =
                             chunk.iter().map(|(f, y)| (f.as_ref(), *y)).collect();
                         model.train(&b, lr);
+                        stats.train_chunks.fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 WorkerMsg::TrainCalib(batch, lr) => {
-                    if batch.len() >= 8 {
-                        let b: Vec<(&[f32], f32)> = batch[..8]
-                            .iter()
-                            .map(|(p, z)| (p.as_slice(), *z))
-                            .collect();
+                    for chunk in batch.chunks(8) {
+                        if chunk.len() < 8 && is_pjrt {
+                            break; // same fixed-batch constraint as Train
+                        }
+                        let b: Vec<(&[f32], f32)> =
+                            chunk.iter().map(|(p, z)| (p.as_slice(), *z)).collect();
                         calib.train(&b, lr);
+                        stats.calib_chunks.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+                WorkerMsg::Crash => return,
                 WorkerMsg::Shutdown => break,
             }
         }
     });
-    Worker { tx, handle }
+    Worker { tx, handle, epoch }
 }
 
 // --- router ----------------------------------------------------------------
-
-/// Dynamic batching parameters.
-#[derive(Clone, Copy, Debug)]
-pub struct BatchPolicy {
-    /// Max jobs per inference batch.
-    pub batch_max: usize,
-    /// Max time the oldest job may wait before the batch is flushed.
-    pub deadline: Duration,
-}
-
-impl Default for BatchPolicy {
-    fn default() -> Self {
-        BatchPolicy { batch_max: 8, deadline: Duration::from_millis(2) }
-    }
-}
 
 struct Pending {
     f: Arc<Featurized>,
     truth: usize,
     sample: Sample,
     t0: Instant,
-    seen: Vec<Option<Vec<f32>>>,
+    /// Per-level (probs, deferral score) gathered on the walk.
+    seen: Vec<Option<(Vec<f32>, f32)>>,
+    /// β vector snapshot at admission (pre-decay): the walk's DAgger
+    /// gates consult *these* values, exactly as `Cascade::process`
+    /// consults the pre-decay β of the sample's own step — a deferral
+    /// processed after later admissions must not see further-decayed β.
+    betas_at_admit: Vec<f64>,
+}
+
+/// Calibration probe bookkeeping for an expert-annotated request whose
+/// walk skipped some levels (see module docs, Learner parity).
+struct ProbeWait {
+    y_star: usize,
+    left: usize,
 }
 
 struct LevelQueue {
     jobs: VecDeque<Job>,
-    oldest: Option<Instant>,
-    in_flight: bool,
+    /// The batch currently at the worker — kept for requeue-on-death.
+    in_flight: Option<Vec<Job>>,
+}
+
+impl LevelQueue {
+    fn new() -> Self {
+        LevelQueue { jobs: VecDeque::new(), in_flight: None }
+    }
+
+    fn push(&mut self, job: Job) {
+        self.jobs.push_back(job);
+    }
+
+    /// Enqueue instant of the oldest queued job — deadline clock.
+    fn oldest_enq(&self) -> Option<Instant> {
+        self.jobs.front().map(|j| j.enq)
+    }
+
+    /// Should this queue flush a batch now?
+    fn due(&self, batch_max: usize, deadline: Duration, draining: bool) -> bool {
+        !self.jobs.is_empty()
+            && (self.jobs.len() >= batch_max
+                || draining
+                || self
+                    .oldest_enq()
+                    .map(|t| t.elapsed() >= deadline)
+                    .unwrap_or(false))
+    }
+
+    fn take(&mut self, max: usize) -> Vec<Job> {
+        let take = self.jobs.len().min(max);
+        self.jobs.drain(..take).collect()
+    }
+
+    /// Put a requeued batch back at the front, preserving order and the
+    /// original enqueue timestamps.
+    fn requeue_front(&mut self, jobs: Vec<Job>) {
+        for job in jobs.into_iter().rev() {
+            self.jobs.push_front(job);
+        }
+    }
+}
+
+/// Mutable per-run state of the serve loop (split from `Server` so the
+/// router methods can borrow both independently).
+struct RunState {
+    pending: HashMap<u64, Pending>,
+    probe_truth: HashMap<u64, ProbeWait>,
+    queues: Vec<LevelQueue>,
+    lat: Percentiles,
+    handled: Vec<usize>,
+    correct: usize,
+    served: usize,
+    shed: usize,
+    llm_calls: u64,
+    admitted: usize,
+    peak_pending: usize,
+}
+
+impl RunState {
+    fn new(n_levels: usize) -> Self {
+        RunState {
+            pending: HashMap::new(),
+            probe_truth: HashMap::new(),
+            queues: (0..n_levels).map(|_| LevelQueue::new()).collect(),
+            lat: Percentiles::new(),
+            handled: vec![0; n_levels + 1],
+            correct: 0,
+            served: 0,
+            shed: 0,
+            llm_calls: 0,
+            admitted: 0,
+            peak_pending: 0,
+        }
+    }
+
+    /// Nothing left to do once inputs are closed?
+    fn idle(&self) -> bool {
+        self.pending.is_empty()
+            && self.probe_truth.is_empty()
+            && self
+                .queues
+                .iter()
+                .all(|q| q.jobs.is_empty() && q.in_flight.is_none())
+    }
 }
 
 /// The streaming cascade server.
 pub struct Server {
     workers: Vec<Worker>,
+    specs: Vec<WorkerSpec>,
+    stats: Vec<Arc<WorkerStats>>,
+    reply_tx: Sender<WorkerReply>,
     reply_rx: Receiver<WorkerReply>,
     cfg: CascadeConfig,
+    serve_cfg: ServeConfig,
     classes: usize,
-    policy: BatchPolicy,
     expert: Expert,
     pipeline: Pipeline,
     rng: Rng,
+    chaos: Option<Chaos>,
+    restarts: Vec<usize>,
     // learner state (mirrors Cascade)
     caches: Vec<Ring<(Arc<Featurized>, usize)>>,
     calib_caches: Vec<Ring<(Vec<f32>, f32)>>,
@@ -218,35 +427,53 @@ impl Server {
         cfg: CascadeConfig,
         classes: usize,
         expert: Expert,
-        policy: BatchPolicy,
+        serve_cfg: ServeConfig,
         artifacts_dir: &str,
     ) -> Result<Self> {
-        let (reply_tx, reply_rx) = channel();
-        let mut workers = Vec::new();
-        for (i, lc) in cfg.levels.iter().enumerate() {
-            workers.push(spawn_worker(
-                i,
-                lc.model,
-                classes,
-                cfg.seed ^ ((i as u64 + 1) * 0x5E77E),
-                cfg.engine,
-                artifacts_dir.to_string(),
-                reply_tx.clone(),
+        if serve_cfg.batch_max == 0 || serve_cfg.max_pending == 0 {
+            return Err(Error::Config(
+                "serve batch_max and max_pending must be positive".into(),
             ));
         }
+        let (reply_tx, reply_rx) = channel();
+        let specs: Vec<WorkerSpec> = cfg
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(i, lc)| WorkerSpec {
+                level: i,
+                kind: lc.model,
+                classes,
+                seed: cfg.seed ^ ((i as u64 + 1) * 0x5E77E),
+                engine: cfg.engine,
+                artifacts_dir: artifacts_dir.to_string(),
+            })
+            .collect();
+        let stats: Vec<Arc<WorkerStats>> =
+            specs.iter().map(|_| Arc::new(WorkerStats::default())).collect();
+        let workers: Vec<Worker> = specs
+            .iter()
+            .zip(&stats)
+            .map(|(spec, st)| spawn_worker(spec, 0, reply_tx.clone(), st.clone()))
+            .collect();
         let n = cfg.levels.len();
         Ok(Server {
             workers,
+            specs,
+            stats,
+            reply_tx,
             reply_rx,
+            serve_cfg,
             classes,
-            policy,
             expert,
             pipeline: Pipeline::default(),
             rng: Rng::new(cfg.seed ^ 0x5E57E),
+            chaos: None,
+            restarts: vec![0; n],
             caches: cfg
                 .levels
                 .iter()
-                .map(|l| Ring::new(l.cache_size.max(l.batch_size) * 16))
+                .map(|l| Ring::new(l.cache_size.max(l.batch_size) * REPLAY_FACTOR))
                 .collect(),
             calib_caches: (0..n).map(|_| Ring::new(128)).collect(),
             pendings: vec![0; n],
@@ -262,6 +489,13 @@ impl Server {
         self.threshold_scale = s;
     }
 
+    /// Arm fault injection (supervision tests): crash one level worker
+    /// mid-stream. `kill_level` must name an existing level.
+    pub fn inject_chaos(&mut self, chaos: Chaos) {
+        assert!(chaos.kill_level < self.cfg.levels.len(), "chaos level out of range");
+        self.chaos = Some(chaos);
+    }
+
     /// Serve a stream of requests arriving through `rx`; send responses
     /// to `tx`. Returns the report when `rx` closes and drains.
     pub fn serve(
@@ -271,48 +505,21 @@ impl Server {
     ) -> Result<ServeReport> {
         let t_start = Instant::now();
         let n_levels = self.cfg.levels.len();
-        let mut pending: std::collections::HashMap<u64, Pending> =
-            std::collections::HashMap::new();
-        let mut queues: Vec<LevelQueue> = (0..n_levels)
-            .map(|_| LevelQueue { jobs: VecDeque::new(), oldest: None, in_flight: false })
-            .collect();
-        let mut lat = Percentiles::new();
-        let mut handled = vec![0usize; n_levels + 1];
-        let mut correct = 0usize;
-        let mut served = 0usize;
-        let mut llm_calls = 0u64;
+        let mut st = RunState::new(n_levels);
         let mut inputs_open = true;
 
         loop {
-            // 1. admit new requests (non-blocking drain).
+            // 0. supervision: respawn dead workers, requeue their batches.
+            for i in 0..n_levels {
+                if self.workers[i].handle.is_finished() {
+                    self.respawn(i, &mut st.queues)?;
+                }
+            }
+
+            // 1. admit new requests (non-blocking drain + admission control).
             while inputs_open {
                 match rx.try_recv() {
-                    Ok(req) => {
-                        let f = Arc::new(self.pipeline.featurize(&req.text));
-                        let state = Pending {
-                            f: f.clone(),
-                            truth: req.truth,
-                            sample: req.sample,
-                            t0: Instant::now(),
-                            seen: vec![None; n_levels],
-                        };
-                        pending.insert(req.id, state);
-                        // DAgger jump straight to the expert?
-                        let jump = self.betas[0] > 0.0 && self.rng.coin(self.betas[0]);
-                        for b in &mut self.betas {
-                            let decay = self.cfg.levels[0].beta_decay;
-                            *b *= decay;
-                        }
-                        if jump {
-                            self.to_expert(
-                                req.id, &mut pending, &tx, &mut lat, &mut handled,
-                                &mut correct, &mut served, &mut llm_calls,
-                            );
-                        } else {
-                            queues[0].jobs.push_back(Job { req_id: req.id, f });
-                            queues[0].oldest.get_or_insert_with(Instant::now);
-                        }
-                    }
+                    Ok(req) => self.admit(req, &mut st, &tx),
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
                     Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                         inputs_open = false;
@@ -321,75 +528,39 @@ impl Server {
             }
 
             // 2. flush batches that are full or past deadline.
-            for (i, q) in queues.iter_mut().enumerate() {
-                let due = q.jobs.len() >= self.policy.batch_max
-                    || q.oldest
-                        .map(|t| t.elapsed() >= self.policy.deadline)
-                        .unwrap_or(false)
-                    || (!inputs_open && !q.jobs.is_empty());
-                if due && !q.in_flight && !q.jobs.is_empty() {
-                    let take = q.jobs.len().min(self.policy.batch_max);
-                    let jobs: Vec<Job> = q.jobs.drain(..take).collect();
-                    q.oldest = if q.jobs.is_empty() { None } else { Some(Instant::now()) };
-                    q.in_flight = true;
-                    self.workers[i]
-                        .tx
-                        .send(WorkerMsg::Infer(jobs))
-                        .map_err(|_| Error::Worker(format!("level {i} died")))?;
+            for i in 0..n_levels {
+                if st.queues[i].in_flight.is_none()
+                    && st.queues[i].due(
+                        self.serve_cfg.batch_max,
+                        self.serve_cfg.deadline,
+                        !inputs_open,
+                    )
+                {
+                    let jobs = st.queues[i].take(self.serve_cfg.batch_max);
+                    let ok =
+                        self.workers[i].tx.send(WorkerMsg::Infer(jobs.clone())).is_ok();
+                    st.queues[i].in_flight = Some(jobs);
+                    if !ok {
+                        // Worker gone: respawn now; the batch we just
+                        // parked in `in_flight` is requeued inside.
+                        self.respawn(i, &mut st.queues)?;
+                    }
                 }
             }
 
             // 3. handle one worker reply (with a small timeout so the
-            //    loop keeps admitting/flushing).
+            //    loop keeps admitting/flushing/supervising).
             match self.reply_rx.recv_timeout(Duration::from_micros(200)) {
-                Ok(reply) => {
-                    let lvl = reply.level;
-                    queues[lvl].in_flight = false;
-                    for (req_id, probs, score) in reply.results {
-                        let Some(state) = pending.get_mut(&req_id) else { continue };
-                        state.seen[lvl] = Some(probs.clone());
-                        let tau =
-                            self.cfg.levels[lvl].calibration * self.threshold_scale;
-                        let defer = (score as f64) > tau;
-                        if !defer {
-                            // exit here
-                            let pred = argmax(&probs);
-                            let state = pending.remove(&req_id).expect("state");
-                            lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
-                            handled[lvl] += 1;
-                            if pred == state.truth {
-                                correct += 1;
-                            }
-                            served += 1;
-                            let _ = tx.send(Response {
-                                id: req_id,
-                                pred,
-                                handled_by: lvl,
-                                latency: state.t0.elapsed(),
-                                truth: state.truth,
-                            });
-                        } else if lvl + 1 < n_levels {
-                            let f = state.f.clone();
-                            queues[lvl + 1].jobs.push_back(Job { req_id, f });
-                            queues[lvl + 1].oldest.get_or_insert_with(Instant::now);
-                        } else {
-                            self.to_expert(
-                                req_id, &mut pending, &tx, &mut lat, &mut handled,
-                                &mut correct, &mut served, &mut llm_calls,
-                            );
-                        }
-                    }
-                }
+                Ok(reply) => self.on_reply(reply, &mut st, &tx),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(Error::Worker("all workers died".into()));
+                    // Unreachable: the server holds its own reply_tx
+                    // clone precisely so respawns can re-wire workers.
+                    return Err(Error::Worker("reply channel closed".into()));
                 }
             }
 
-            if !inputs_open
-                && pending.is_empty()
-                && queues.iter().all(|q| q.jobs.is_empty() && !q.in_flight)
-            {
+            if !inputs_open && st.idle() {
                 break;
             }
         }
@@ -403,79 +574,306 @@ impl Server {
         }
         let wall = t_start.elapsed().as_secs_f64();
         Ok(ServeReport {
-            served,
-            throughput: served as f64 / wall.max(1e-9),
+            served: st.served,
+            shed: st.shed,
+            throughput: st.served as f64 / wall.max(1e-9),
             wall_secs: wall,
-            latency_ms: lat,
-            handled,
-            accuracy: if served == 0 { 0.0 } else { correct as f64 / served as f64 },
-            llm_calls,
+            latency_ms: st.lat,
+            handled: st.handled,
+            accuracy: if st.served == 0 {
+                0.0
+            } else {
+                st.correct as f64 / st.served as f64
+            },
+            llm_calls: st.llm_calls,
+            restarts: self.restarts.clone(),
+            peak_pending: st.peak_pending,
+            final_betas: self.betas.clone(),
+            train_batches: self
+                .stats
+                .iter()
+                .map(|s| s.train_chunks.load(Ordering::Relaxed))
+                .collect(),
+            calib_batches: self
+                .stats
+                .iter()
+                .map(|s| s.calib_chunks.load(Ordering::Relaxed))
+                .collect(),
         })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn to_expert(
-        &mut self,
-        req_id: u64,
-        pending: &mut std::collections::HashMap<u64, Pending>,
-        tx: &Sender<Response>,
-        lat: &mut Percentiles,
-        handled: &mut [usize],
-        correct: &mut usize,
-        served: &mut usize,
-        llm_calls: &mut u64,
-    ) {
-        let Some(state) = pending.remove(&req_id) else { return };
+    /// Admission: shed when over the bound, otherwise run the cascade's
+    /// level-0 DAgger gate and enqueue (or jump straight to the expert).
+    fn admit(&mut self, req: Request, st: &mut RunState, tx: &Sender<Response>) {
+        if st.pending.len() >= self.serve_cfg.max_pending {
+            st.shed += 1;
+            let _ = tx.send(Response {
+                id: req.id,
+                pred: 0,
+                handled_by: self.cfg.levels.len() + 1,
+                latency: Duration::ZERO,
+                truth: req.truth,
+                shed: true,
+            });
+            return;
+        }
+        st.admitted += 1;
+        if let Some(c) = self.chaos {
+            if st.admitted == c.after_requests {
+                // Best-effort: the worker may already be dead.
+                let _ = self.workers[c.kill_level].tx.send(WorkerMsg::Crash);
+            }
+        }
+        let f = Arc::new(self.pipeline.featurize(&req.text));
+        st.pending.insert(
+            req.id,
+            Pending {
+                f: f.clone(),
+                truth: req.truth,
+                sample: req.sample,
+                t0: Instant::now(),
+                seen: vec![None; self.cfg.levels.len()],
+                betas_at_admit: self.betas.clone(),
+            },
+        );
+        st.peak_pending = st.peak_pending.max(st.pending.len());
+        // DAgger jump straight to the expert? Level 0's own β gates the
+        // walk's entry; each level's β decays with its *own* factor —
+        // exactly one decay step per admitted request, matching
+        // `Cascade::process` (one per processed sample).
+        let jump = self.betas[0] > 0.0 && self.rng.coin(self.betas[0]);
+        for (b, lc) in self.betas.iter_mut().zip(self.cfg.levels.iter()) {
+            *b *= lc.beta_decay;
+        }
+        if jump {
+            self.to_expert(req.id, st, tx);
+        } else {
+            st.queues[0].push(Job { req_id: req.id, f, enq: Instant::now() });
+        }
+    }
+
+    /// Process one worker reply batch: exits, deferrals (with per-level
+    /// DAgger gates), and calibration-probe completions.
+    fn on_reply(&mut self, reply: WorkerReply, st: &mut RunState, tx: &Sender<Response>) {
+        let lvl = reply.level;
+        if reply.epoch != self.workers[lvl].epoch {
+            // A reply from a worker generation the supervisor already
+            // replaced — its jobs were requeued; whichever copy answers
+            // first wins, the other is dropped here or at the pending
+            // lookup below.
+            return;
+        }
+        st.queues[lvl].in_flight = None;
         let n_levels = self.cfg.levels.len();
-        let y_star = self
-            .expert
-            .annotate(&state.sample, self.classes)
-            .unwrap_or(0);
-        *llm_calls += 1;
-        // online learning: feed caches, train at cadence
+        for (req_id, probs, score) in reply.results {
+            // Calibration probe for an already-answered request?
+            if let Some(w) = st.probe_truth.get_mut(&req_id) {
+                let y_star = w.y_star;
+                w.left -= 1;
+                if w.left == 0 {
+                    st.probe_truth.remove(&req_id);
+                }
+                self.push_calib(lvl, probs, y_star);
+                continue;
+            }
+            let Some(state) = st.pending.get_mut(&req_id) else { continue };
+            state.seen[lvl] = Some((probs.clone(), score));
+            let tau = self.cfg.levels[lvl].calibration * self.threshold_scale;
+            let defer = (score as f64) > tau;
+            if !defer {
+                // exit here
+                let pred = argmax(&probs);
+                let state = st.pending.remove(&req_id).expect("state");
+                st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+                st.handled[lvl] += 1;
+                if pred == state.truth {
+                    st.correct += 1;
+                }
+                st.served += 1;
+                let _ = tx.send(Response {
+                    id: req_id,
+                    pred,
+                    handled_by: lvl,
+                    latency: state.t0.elapsed(),
+                    truth: state.truth,
+                    shed: false,
+                });
+            } else if lvl + 1 < n_levels {
+                // Cascade parity: the next level's own β is consulted
+                // before its model runs — at the value snapshotted at
+                // this request's admission, so queueing delay never
+                // skews the jump probability relative to the cascade.
+                let next = lvl + 1;
+                let b_next = state.betas_at_admit[next];
+                let jump = b_next > 0.0 && self.rng.coin(b_next);
+                if jump {
+                    self.to_expert(req_id, st, tx);
+                } else {
+                    let f = state.f.clone();
+                    st.queues[next].push(Job { req_id, f, enq: Instant::now() });
+                }
+            } else {
+                self.to_expert(req_id, st, tx);
+            }
+        }
+    }
+
+    /// Push one calibration example and run the shared replay-training
+    /// cadence (`CALIB_REPLAY` × 8 at `mlp_lr × MLP_LR_SCALE`) —
+    /// mirrors `Cascade::train_calibrator`.
+    fn push_calib(&mut self, i: usize, probs: Vec<f32>, y_star: usize) {
+        let z = if argmax(&probs) != y_star { 1.0 } else { 0.0 };
+        self.calib_caches[i].push((probs, z));
+        self.calib_pendings[i] += 1;
+        if self.calib_pendings[i] >= 8 && self.calib_caches[i].len() >= 8 {
+            let items = self.calib_caches[i].to_vec();
+            let mut batch = Vec::with_capacity(CALIB_REPLAY * 8);
+            for _ in 0..CALIB_REPLAY {
+                for j in self.rng.sample_indices(items.len(), 8) {
+                    batch.push(items[j].clone());
+                }
+            }
+            let _ = self.workers[i].tx.send(WorkerMsg::TrainCalib(
+                batch,
+                self.cfg.levels[i].mlp_lr * MLP_LR_SCALE,
+            ));
+            self.calib_pendings[i] = 0;
+        }
+    }
+
+    /// Replace a dead level worker: fresh thread from the same spec,
+    /// bumped epoch (stale replies get dropped), in-flight batch
+    /// requeued at the front of the level queue.
+    fn respawn(&mut self, i: usize, queues: &mut [LevelQueue]) -> Result<()> {
+        self.restarts[i] += 1;
+        if self.restarts[i] > MAX_RESTARTS {
+            return Err(Error::Worker(format!(
+                "level {i} worker exceeded {MAX_RESTARTS} restarts"
+            )));
+        }
+        let epoch = self.workers[i].epoch + 1;
+        let fresh =
+            spawn_worker(&self.specs[i], epoch, self.reply_tx.clone(), self.stats[i].clone());
+        let old = std::mem::replace(&mut self.workers[i], fresh);
+        drop(old.tx);
+        // The old thread has already exited (that is how we got here),
+        // so this join returns immediately; it reaps panics too.
+        let _ = old.handle.join();
+        if let Some(jobs) = queues[i].in_flight.take() {
+            queues[i].requeue_front(jobs);
+        }
+        Ok(())
+    }
+
+    /// Expert annotation + the online-learning cadence (mirrors
+    /// `Cascade::absorb_annotation`, including evaluating walk-skipped
+    /// levels for calibration — async, via probe jobs). An expert
+    /// outage routes to [`Server::expert_outage_fallback`] instead:
+    /// no fabricated label, no training, no expert-call accounting.
+    fn to_expert(&mut self, req_id: u64, st: &mut RunState, tx: &Sender<Response>) {
+        let annotation = match st.pending.get(&req_id) {
+            Some(state) => self.expert.annotate(&state.sample, self.classes),
+            None => return,
+        };
+        let Some(y_star) = annotation else {
+            self.expert_outage_fallback(req_id, st, tx);
+            return;
+        };
+        let state = st.pending.remove(&req_id).expect("pending state");
+        let n_levels = self.cfg.levels.len();
+        st.llm_calls += 1;
+        let mut probes = 0usize;
         for i in 0..n_levels {
             self.caches[i].push((state.f.clone(), y_star));
             self.pendings[i] += 1;
-            if let Some(probs) = &state.seen[i] {
-                let z = if argmax(probs) != y_star { 1.0 } else { 0.0 };
-                self.calib_caches[i].push((probs.clone(), z));
-                self.calib_pendings[i] += 1;
+            match &state.seen[i] {
+                Some((probs, _)) => self.push_calib(i, probs.clone(), y_star),
+                None => {
+                    // Cascade parity (Eq. 5): levels the walk skipped
+                    // are evaluated so every calibrator receives its
+                    // (m_i(x), z_i) example. In the serving topology
+                    // that evaluation rides the level's batch queue.
+                    st.queues[i].push(Job {
+                        req_id,
+                        f: state.f.clone(),
+                        enq: Instant::now(),
+                    });
+                    probes += 1;
+                }
             }
             let bs = self.cfg.levels[i].batch_size;
             if self.pendings[i] >= bs && self.caches[i].len() >= bs {
                 let items = self.caches[i].to_vec();
-                let idx = self.rng.sample_indices(items.len(), bs.min(items.len()));
+                let picks = replay_picks(&mut self.rng, items.len(), bs);
                 let batch: Vec<(Arc<Featurized>, usize)> =
-                    idx.iter().map(|&j| items[j].clone()).collect();
+                    picks.iter().map(|&j| items[j].clone()).collect();
                 let _ = self.workers[i]
                     .tx
                     .send(WorkerMsg::Train(batch, self.cfg.levels[i].model_lr));
                 self.pendings[i] = 0;
             }
-            if self.calib_pendings[i] >= 8 && self.calib_caches[i].len() >= 8 {
-                let items = self.calib_caches[i].to_vec();
-                let idx = self.rng.sample_indices(items.len(), 8);
-                let batch: Vec<(Vec<f32>, f32)> =
-                    idx.iter().map(|&j| items[j].clone()).collect();
-                let _ = self.workers[i].tx.send(WorkerMsg::TrainCalib(
-                    batch,
-                    self.cfg.levels[i].mlp_lr * 50.0,
-                ));
-                self.calib_pendings[i] = 0;
-            }
         }
-        lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
-        handled[n_levels] += 1;
+        if probes > 0 {
+            st.probe_truth.insert(req_id, ProbeWait { y_star, left: probes });
+        }
+        st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+        st.handled[n_levels] += 1;
         if y_star == state.truth {
-            *correct += 1;
+            st.correct += 1;
         }
-        *served += 1;
+        st.served += 1;
         let _ = tx.send(Response {
             id: req_id,
             pred: y_star,
             handled_by: n_levels,
             latency: state.t0.elapsed(),
             truth: state.truth,
+            shed: false,
+        });
+    }
+
+    /// Expert outage (failure injection / upstream outage): answer
+    /// without an annotation, mirroring `Cascade::fallback_pred` — a
+    /// confidence-weighted mixture over the level predictions gathered
+    /// on the walk, no training, no expert-call accounting. A request
+    /// with no predictions yet (admission jump) re-enters the walk at
+    /// level 0 instead, so it accumulates predictions to answer from.
+    fn expert_outage_fallback(
+        &mut self,
+        req_id: u64,
+        st: &mut RunState,
+        tx: &Sender<Response>,
+    ) {
+        let Some(state) = st.pending.get(&req_id) else { return };
+        if state.seen.iter().all(|s| s.is_none()) {
+            let f = state.f.clone();
+            st.queues[0].push(Job { req_id, f, enq: Instant::now() });
+            return;
+        }
+        let state = st.pending.remove(&req_id).expect("pending state");
+        let mut mix = vec![0.0f32; self.classes];
+        for (probs, score) in state.seen.iter().flatten() {
+            let w = (1.0 - *score).max(0.05);
+            for (m, &p) in mix.iter_mut().zip(probs) {
+                *m += w * p;
+            }
+        }
+        let pred = argmax(&mix);
+        // The deepest level answers (cascade-parity attribution).
+        let lvl = self.cfg.levels.len() - 1;
+        st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+        st.handled[lvl] += 1;
+        if pred == state.truth {
+            st.correct += 1;
+        }
+        st.served += 1;
+        let _ = tx.send(Response {
+            id: req_id,
+            pred,
+            handled_by: lvl,
+            latency: state.t0.elapsed(),
+            truth: state.truth,
+            shed: false,
         });
     }
 }
@@ -501,7 +899,7 @@ mod tests {
         );
         let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
         let server =
-            Server::new(cfg, 2, expert, BatchPolicy::default(), "artifacts").unwrap();
+            Server::new(cfg, 2, expert, ServeConfig::default(), "artifacts").unwrap();
         let (req_tx, req_rx) = channel();
         let (resp_tx, resp_rx) = channel();
         let submit = std::thread::spawn(move || {
@@ -520,7 +918,7 @@ mod tests {
         let report = server.serve(req_rx, resp_tx).unwrap();
         submit.join().unwrap();
         let responses: Vec<Response> = resp_rx.iter().collect();
-        assert_eq!(report.served, n);
+        assert_eq!(report.served + report.shed, n);
         assert_eq!(responses.len(), n);
         // every request answered exactly once
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
@@ -528,6 +926,61 @@ mod tests {
         assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
         assert!(report.accuracy > 0.5, "acc {}", report.accuracy);
         assert!(report.throughput > 10.0, "thr {}", report.throughput);
-        assert_eq!(report.handled.iter().sum::<usize>(), n);
+        assert_eq!(report.handled.iter().sum::<usize>(), report.served);
+        // a quiet run: no restarts, bounded pending, betas decayed
+        assert_eq!(report.restarts, vec![0, 0]);
+        assert!(report.peak_pending <= ServeConfig::default().max_pending);
+        assert_eq!(report.final_betas.len(), 2);
+        assert!(report.final_betas.iter().all(|&b| b < 1.0));
+        // online learning actually reached the workers
+        assert!(report.train_batches.iter().any(|&t| t > 0), "{:?}", report.train_batches);
+        assert!(report.calib_batches.iter().any(|&t| t > 0), "{:?}", report.calib_batches);
+    }
+
+    fn job(id: u64, enq: Instant) -> Job {
+        Job { req_id: id, f: Arc::new(Pipeline::default().featurize("doc")), enq }
+    }
+
+    #[test]
+    fn partial_drain_keeps_true_queue_age() {
+        // ISSUE satellite: after a partial drain the surviving jobs'
+        // deadline must measure true queue age, not restart from the
+        // drain instant. Large deadline + batch_max = 1 exercises the
+        // partial-drain path explicitly.
+        let old = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .expect("monotonic clock too young");
+        let mut q = LevelQueue::new();
+        q.push(job(1, old));
+        q.push(job(2, old));
+        let taken = q.take(1); // batch_max = 1 → partial drain
+        assert_eq!(taken.len(), 1);
+        assert_eq!(taken[0].req_id, 1);
+        // The survivor still reports its ORIGINAL enqueue instant...
+        assert_eq!(q.oldest_enq(), Some(old));
+        // ...so a deadline below its true age fires immediately,
+        assert!(q.due(8, Duration::from_millis(10), false));
+        // ...while a large deadline leaves only size/drain triggers.
+        assert!(!q.due(8, Duration::from_secs(3600), false));
+        assert!(q.due(1, Duration::from_secs(3600), false));
+        assert!(q.due(8, Duration::from_secs(3600), true));
+        // Requeue-on-death preserves order and timestamps.
+        q.requeue_front(taken);
+        assert_eq!(q.jobs.front().unwrap().req_id, 1);
+        assert_eq!(q.oldest_enq(), Some(old));
+    }
+
+    #[test]
+    fn rejects_degenerate_serve_config() {
+        let b = Benchmark::build_sized(BenchmarkId::Imdb, 1, 4);
+        let expert = Expert::new(
+            ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+            b.strata_fractions(),
+            100.0,
+            1,
+        );
+        let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        let bad = ServeConfig { max_pending: 0, ..ServeConfig::default() };
+        assert!(Server::new(cfg, 2, expert, bad, "artifacts").is_err());
     }
 }

@@ -87,13 +87,7 @@ impl Percentiles {
 
     /// p in [0,100]; nearest-rank. Returns 0.0 when empty.
     pub fn pct(&self, p: f64) -> f64 {
-        if self.xs.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.xs.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).expect("nan percentile"));
-        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-        v[rank.min(v.len() - 1)]
+        self.pcts(&[p])[0]
     }
 
     /// Arithmetic mean.
@@ -103,6 +97,28 @@ impl Percentiles {
         } else {
             self.xs.iter().sum::<f64>() / self.xs.len() as f64
         }
+    }
+
+    /// Largest observation (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(0.0)
+    }
+
+    /// Several percentiles with a single sort (SLO checks, JSON
+    /// baselines) — one entry per requested `p`, same semantics as
+    /// [`Percentiles::pct`].
+    pub fn pcts(&self, ps: &[f64]) -> Vec<f64> {
+        if self.xs.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        let mut v = self.xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("nan percentile"));
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+                v[rank.min(v.len() - 1)]
+            })
+            .collect()
     }
 }
 
@@ -259,6 +275,13 @@ mod tests {
         assert_eq!(p.pct(100.0), 100.0);
         assert!((p.pct(50.0) - 50.0).abs() <= 1.0);
         assert!((p.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(p.max(), 100.0);
+        let many = p.pcts(&[0.0, 50.0, 100.0]);
+        assert_eq!(many[0], p.pct(0.0));
+        assert_eq!(many[1], p.pct(50.0));
+        assert_eq!(many[2], p.pct(100.0));
+        assert_eq!(Percentiles::new().max(), 0.0);
+        assert_eq!(Percentiles::new().pcts(&[50.0]), vec![0.0]);
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Serve-layer load, supervision, and learner-parity tests (host
+//! engine; no artifacts required): worker-death recovery under an
+//! open-loop arrival process, overload shedding with a bounded router,
+//! and the Server ↔ Cascade parity invariants (per-level DAgger β
+//! trajectories, training-batch counts) that pin the two online
+//! learners together.
+
+use std::sync::mpsc::channel;
+
+use ocl::cascade::Cascade;
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
+use ocl::data::Benchmark;
+use ocl::serve::{load, Chaos, Request, Response, Server};
+use ocl::sim::{Expert, ExpertProfile};
+
+fn expert_for(b: &Benchmark, seed: u64) -> Expert {
+    let mean_len =
+        b.samples.iter().map(|s| s.len as f64).sum::<f64>() / b.samples.len() as f64;
+    Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+        b.strata_fractions(),
+        mean_len,
+        seed,
+    )
+}
+
+/// A ServeConfig that never sheds (parity / recovery runs).
+fn unbounded() -> ServeConfig {
+    ServeConfig { max_pending: 1 << 16, ..ServeConfig::default() }
+}
+
+/// Blast the whole benchmark into the request channel with no pacing.
+fn blast(b: &Benchmark) -> (std::sync::mpsc::Receiver<Request>, std::thread::JoinHandle<()>) {
+    let (req_tx, req_rx) = channel();
+    let samples = b.samples.clone();
+    let h = std::thread::spawn(move || {
+        for (i, s) in samples.iter().enumerate() {
+            if req_tx
+                .send(Request {
+                    id: i as u64,
+                    text: s.text.clone(),
+                    truth: s.label,
+                    sample: s.clone(),
+                })
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+    (req_rx, h)
+}
+
+fn assert_answered_exactly_once(responses: &[Response], n: usize) {
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "some request answered 0 or 2+ times");
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+}
+
+#[test]
+fn worker_death_mid_stream_recovers_and_meets_slo() {
+    let n = 400;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 31, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 31;
+        c
+    };
+    let mut server =
+        Server::new(cfg, b.classes, expert_for(&b, 31), unbounded(), "artifacts")
+            .unwrap();
+    server.inject_chaos(Chaos { kill_level: 0, after_requests: 50 });
+
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    // Open-loop Poisson arrivals: the kill lands mid-stream while the
+    // generator keeps submitting on its own clock.
+    let submit =
+        load::drive(b.samples.clone(), load::Arrival::Poisson { rate: 4000.0 }, 7, req_tx);
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    assert_eq!(submit.join().unwrap(), n);
+
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_eq!(responses.len(), n);
+    assert_answered_exactly_once(&responses, n);
+    assert_eq!(report.served + report.shed, n);
+    assert_eq!(report.shed, 0, "unbounded run must not shed");
+    assert!(
+        report.restarts.iter().sum::<usize>() >= 1,
+        "injected worker death must be detected and repaired: {:?}",
+        report.restarts
+    );
+    assert_eq!(report.handled.iter().sum::<usize>(), report.served);
+    // Latency SLO: generous bounds (shared CI machines), but the run
+    // must stay sane through the respawn window — a supervisor stall
+    // or requeue livelock would blow these by orders of magnitude.
+    load::Slo { p50_ms: 500.0, p99_ms: 5_000.0 }
+        .check(&report.latency_ms)
+        .unwrap();
+}
+
+#[test]
+fn overload_sheds_and_bounds_the_router() {
+    let n = 1200;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 33, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 33;
+        c
+    };
+    let serve_cfg = ServeConfig { max_pending: 16, ..ServeConfig::default() };
+    let server =
+        Server::new(cfg, b.classes, expert_for(&b, 33), serve_cfg, "artifacts").unwrap();
+
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_eq!(responses.len(), n, "shed requests are still answered");
+    assert_answered_exactly_once(&responses, n);
+    assert_eq!(report.served + report.shed, n);
+    assert!(
+        report.shed > 0,
+        "arrival rate >> service rate must shed (served {}, shed {})",
+        report.served,
+        report.shed
+    );
+    assert!(
+        report.peak_pending <= 16,
+        "admission bound violated: peak {}",
+        report.peak_pending
+    );
+    assert_eq!(
+        responses.iter().filter(|r| r.shed).count(),
+        report.shed,
+        "shed responses must be marked as such"
+    );
+    // shed responses carry the virtual shed level, served ones do not
+    for r in &responses {
+        assert_eq!(r.shed, r.handled_by == report.handled.len());
+    }
+}
+
+#[test]
+fn beta_trajectories_match_cascade_exactly() {
+    let n = 300;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 35, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 35;
+        c
+    };
+
+    let server =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 35), unbounded(), "artifacts")
+            .unwrap();
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+    drop(resp_rx);
+    assert_eq!(report.shed, 0);
+
+    let mut casc = Cascade::new(cfg, b.classes, expert_for(&b, 35), None, n + 1).unwrap();
+    for s in &b.samples {
+        casc.process(s);
+    }
+
+    // One decay step per request, each level with its *own* factor:
+    // the served β trajectory must be bit-for-bit the cascade's.
+    assert_eq!(report.final_betas, casc.betas());
+    assert!(report.final_betas[0] < 0.01, "β₀ should have decayed");
+}
+
+#[test]
+fn deferral_gate_consults_the_deferred_levels_own_beta() {
+    // Pin the gate half of the β-parity bugfix. Config: β₀ decays to 0
+    // after the very first admission (levels[0].beta_decay = 0), while
+    // level 1's β stays pinned at 1 (decay = 1). Level 1's threshold is
+    // raised so that *if its model ever ran* it would certainly exit
+    // there. With the per-level gate, every deferral out of level 0
+    // jumps to the expert on level 1's own β = 1 before level 1 runs —
+    // so level 1 must answer nothing. A regression to the old
+    // betas[0]-only gating (no per-level jump at deferral) would route
+    // those requests into level 1 and make handled[1] > 0.
+    let n = 200;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 45, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 45;
+        c.beta0 = 1.0;
+        c.levels[0].beta_decay = 0.0;
+        c.levels[1].beta_decay = 1.0;
+        c.levels[1].calibration = 10.0; // level 1 always exits if it runs
+        c
+    };
+    let server =
+        Server::new(cfg, b.classes, expert_for(&b, 45), unbounded(), "artifacts").unwrap();
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_answered_exactly_once(&responses, n);
+    assert_eq!(report.served, n);
+    assert_eq!(
+        report.handled[1], 0,
+        "every deferral into level 1 must jump on level 1's own β = 1: {:?}",
+        report.handled
+    );
+    assert_eq!(
+        report.handled[0] + report.handled[2],
+        n,
+        "traffic splits between level-0 exits and the expert: {:?}",
+        report.handled
+    );
+    assert!(report.handled[2] >= 1, "the expert must see the jumps");
+    assert_eq!(report.llm_calls, report.handled[2] as u64);
+}
+
+#[test]
+fn expert_outage_answers_without_training_or_fabricated_labels() {
+    // Cascade parity: an expert outage must not fabricate label 0,
+    // train on it, or count expert calls — the router answers from a
+    // confidence-weighted mixture of level predictions instead
+    // (Cascade::fallback_pred's serving analogue).
+    let n = 250;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 43, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 43;
+        c
+    };
+    let mut expert = expert_for(&b, 43);
+    expert.set_available(false);
+    let server =
+        Server::new(cfg.clone(), b.classes, expert, unbounded(), "artifacts").unwrap();
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_answered_exactly_once(&responses, n);
+    assert_eq!(report.served, n);
+    assert_eq!(report.llm_calls, 0, "outage must not count expert calls");
+    assert_eq!(
+        report.handled[cfg.levels.len()],
+        0,
+        "the expert never answers during an outage"
+    );
+    assert_eq!(
+        report.train_batches,
+        vec![0u64; cfg.levels.len()],
+        "no annotations → no model training"
+    );
+    assert_eq!(
+        report.calib_batches,
+        vec![0u64; cfg.levels.len()],
+        "no annotations → no calibrator training"
+    );
+}
+
+#[test]
+fn forced_expert_training_batch_counts_match_cascade() {
+    // β ≡ 1 (no decay): every request jumps to the expert in both
+    // learners, so both see identical annotation streams and must fire
+    // identical training cadences — the count parity the batch-drop
+    // and calibrator-truncation bugfixes restore.
+    let n = 240;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 41, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 41;
+        c.beta0 = 1.0;
+        for l in &mut c.levels {
+            l.beta_decay = 1.0;
+        }
+        c
+    };
+
+    let server =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 5), unbounded(), "artifacts")
+            .unwrap();
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_answered_exactly_once(&responses, n);
+    assert_eq!(report.handled[cfg.levels.len()], n, "all requests must hit the expert");
+
+    let mut casc = Cascade::new(cfg, b.classes, expert_for(&b, 5), None, n + 1).unwrap();
+    for s in &b.samples {
+        casc.process(s);
+    }
+    let counts = casc.train_counts();
+    let model_chunks: Vec<u64> = counts.iter().map(|c| c.0).collect();
+    let calib_chunks: Vec<u64> = counts.iter().map(|c| c.1).collect();
+    assert_eq!(
+        report.train_batches, model_chunks,
+        "per-level model training chunk counts must match the cascade"
+    );
+    assert_eq!(
+        report.calib_batches, calib_chunks,
+        "per-level calibrator chunk counts must match the cascade \
+         (walk-skipped levels are probed for calibration)"
+    );
+    assert!(
+        report.train_batches.iter().all(|&t| t > 0),
+        "training must actually have run: {:?}",
+        report.train_batches
+    );
+    assert!(
+        report.calib_batches.iter().all(|&t| t > 0),
+        "calibrator training must actually have run: {:?}",
+        report.calib_batches
+    );
+}
