@@ -1,23 +1,28 @@
 //! Bench: serve-layer sustained throughput under open-loop load —
 //! steady Poisson, ramp, and burst arrival processes against the
-//! supervised router (`serve::Server`). Prints the usual table and
-//! emits the JSON baseline (`target/bench_serve.json`, override with
-//! `BENCH_SERVE_JSON`) that CI uploads as the perf-trajectory
-//! artifact; `BENCH_SERVE_REQUESTS` pins the scale (default 1200).
+//! supervised router (`serve::Server`), plus a sharded/replicated
+//! topology run when `BENCH_SERVE_SHARDS`/`BENCH_SERVE_REPLICAS` ask
+//! for one. Prints the usual table and emits the JSON baseline
+//! (`target/bench_serve.json`, override with `BENCH_SERVE_JSON`) that
+//! CI uploads as the perf-trajectory artifact; `BENCH_SERVE_REQUESTS`
+//! pins the scale (default 1200). Gate a run against a stored baseline
+//! with `--baseline <file>` (or `BENCH_BASELINE`): >tolerance
+//! median-of-medians regressions fail the process.
 //! `cargo bench --bench bench_serve`
 
 use std::cell::RefCell;
 use std::sync::mpsc::channel;
 use std::time::Duration;
 
-use ocl::bench_support::Bench;
+use ocl::bench_support::{self, Bench};
 use ocl::codec::Json;
-use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig, ShardConfig};
 use ocl::data::Benchmark;
-use ocl::serve::{load, Server, ServeReport};
+use ocl::serve::shard::{ShardFront, ShardReport};
+use ocl::serve::{load, ServeReport, Server};
 use ocl::sim::{Expert, ExpertProfile};
 
-fn run_scenario(arrival: load::Arrival, n: usize, seed: u64) -> ServeReport {
+fn setup(n: usize, seed: u64) -> (Benchmark, Expert, CascadeConfig) {
     let b = Benchmark::build_sized(BenchmarkId::Imdb, seed, n);
     let mean_len =
         b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n.max(1) as f64;
@@ -29,6 +34,11 @@ fn run_scenario(arrival: load::Arrival, n: usize, seed: u64) -> ServeReport {
     );
     let mut cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
     cfg.seed = seed;
+    (b, expert, cfg)
+}
+
+fn run_scenario(arrival: load::Arrival, n: usize, seed: u64) -> ServeReport {
+    let (b, expert, cfg) = setup(n, seed);
     let mut server =
         Server::new(cfg, b.classes, expert, ServeConfig::default(), "artifacts")
             .expect("server");
@@ -45,11 +55,38 @@ fn run_scenario(arrival: load::Arrival, n: usize, seed: u64) -> ServeReport {
     report
 }
 
+fn run_sharded(
+    arrival: load::Arrival,
+    n: usize,
+    seed: u64,
+    shard: ShardConfig,
+) -> ShardReport {
+    let (b, expert, cfg) = setup(n, seed);
+    let serve_cfg = ServeConfig { shard, ..ServeConfig::default() };
+    let mut front =
+        ShardFront::new(cfg, b.classes, expert, serve_cfg, "artifacts").expect("front");
+    front.set_threshold_scale(0.7);
+
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let drain = std::thread::spawn(move || resp_rx.iter().count());
+    let submit = load::drive(b.samples.clone(), arrival, seed ^ 0xA, req_tx);
+    let report = front.serve(req_rx, resp_tx).expect("serve sharded");
+    assert_eq!(submit.join().expect("submit"), n);
+    assert_eq!(drain.join().expect("drain"), n, "every request answered");
+    assert_eq!(report.served() + report.shed(), n);
+    report
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 fn main() {
-    let n: usize = std::env::var("BENCH_SERVE_REQUESTS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1200);
+    let n = env_usize("BENCH_SERVE_REQUESTS", 1200);
+    let shards = env_usize("BENCH_SERVE_SHARDS", 1);
+    let replicas = env_usize("BENCH_SERVE_REPLICAS", 1);
+    let sync = env_usize("BENCH_SERVE_SYNC", 16);
     let scenarios: [(&str, load::Arrival); 3] = [
         ("poisson-steady-1200rps", load::Arrival::Poisson { rate: 1200.0 }),
         ("ramp-300-to-3000rps", load::Arrival::Ramp { start: 300.0, end: 3000.0 }),
@@ -64,11 +101,32 @@ fn main() {
         ),
     ];
 
+    // Topology selects the workload: the default 1×1 run measures the
+    // three single-router scenarios; a sharded run (CI's second pass)
+    // measures ONLY the sharded steady-state scenario, so the two CI
+    // invocations never duplicate work.
+    let single_router = shards == 1 && replicas == 1;
     let mut bench = Bench::new("serve load (open loop)", 0, 1);
     let reports: RefCell<Vec<ServeReport>> = RefCell::new(Vec::new());
-    for (i, (name, arrival)) in scenarios.iter().enumerate() {
-        bench.case_throughput(name, n as f64, || {
-            reports.borrow_mut().push(run_scenario(*arrival, n, 51 + i as u64));
+    if single_router {
+        for (i, (name, arrival)) in scenarios.iter().enumerate() {
+            bench.case_throughput(name, n as f64, || {
+                reports.borrow_mut().push(run_scenario(*arrival, n, 51 + i as u64));
+            });
+        }
+    }
+    // sync_interval only activates when shards > 1 (ShardFront wires it).
+    let shard_cfg = ShardConfig { shards, replicas_per_level: replicas, sync_interval: sync };
+    let sharded: RefCell<Option<ShardReport>> = RefCell::new(None);
+    if !single_router {
+        let name = format!("poisson-steady-1200rps-s{shards}r{replicas}");
+        bench.case_throughput(&name, n as f64, || {
+            *sharded.borrow_mut() = Some(run_sharded(
+                load::Arrival::Poisson { rate: 1200.0 },
+                n,
+                61,
+                shard_cfg,
+            ));
         });
     }
     bench.print();
@@ -85,31 +143,56 @@ fn main() {
             r.latency_ms.max()
         );
     }
+    let sharded = sharded.into_inner();
+    if let Some(r) = &sharded {
+        let lat = r.latency_ms();
+        println!(
+            "sharded s{shards}r{replicas}: served {} shed {} p50 {:.2}ms p99 {:.2}ms \
+             max snapshot lag {} chunks",
+            r.served(),
+            r.shed(),
+            lat.pct(50.0),
+            lat.pct(99.0),
+            r.max_snapshot_lag()
+        );
+    }
     // SLO gate: intentionally generous (shared CI runners) — the point
     // is catching order-of-magnitude regressions, not µs drift.
-    load::Slo { p50_ms: 2_000.0, p99_ms: 15_000.0 }
-        .check(&reports[0].latency_ms)
-        .expect("steady-state SLO");
+    let slo = load::Slo { p50_ms: 2_000.0, p99_ms: 15_000.0 };
+    if let Some(r) = reports.first() {
+        slo.check(&r.latency_ms).expect("steady-state SLO");
+    }
+    if let Some(r) = &sharded {
+        slo.check_sharded(r).expect("sharded steady-state SLO");
+    }
 
-    // JSON baseline: harness timings + per-scenario serve reports.
+    // JSON baseline: harness timings + per-scenario serve reports (the
+    // sharded run reports its aggregate, staleness included).
+    let mut serve_entries: Vec<Json> = scenarios
+        .iter()
+        .zip(&reports)
+        .map(|((name, _), r)| {
+            Json::obj(vec![
+                ("name", Json::Str((*name).to_string())),
+                ("requests", Json::Num(n as f64)),
+                ("report", r.to_json()),
+            ])
+        })
+        .collect();
+    if let Some(r) = &sharded {
+        serve_entries.push(Json::obj(vec![
+            (
+                "name",
+                Json::Str(format!("poisson-steady-1200rps-s{shards}r{replicas}")),
+            ),
+            ("requests", Json::Num(n as f64)),
+            ("topology", shard_cfg.to_json()),
+            ("report", r.to_json()),
+        ]));
+    }
     let json = Json::obj(vec![
         ("harness", bench.to_json()),
-        (
-            "serve",
-            Json::Arr(
-                scenarios
-                    .iter()
-                    .zip(&reports)
-                    .map(|((name, _), r)| {
-                        Json::obj(vec![
-                            ("name", Json::Str((*name).to_string())),
-                            ("requests", Json::Num(n as f64)),
-                            ("report", r.to_json()),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
+        ("serve", Json::Arr(serve_entries)),
     ]);
     // Default next to the workspace target dir (cargo runs benches with
     // cwd = the package root, so a bare relative path would land in
@@ -122,4 +205,12 @@ fn main() {
     }
     std::fs::write(&path, json.to_string_pretty()).expect("write json baseline");
     println!("json baseline written to {path}");
+
+    // Regression gate (opt-in): compare this run's median-of-medians
+    // against a stored baseline file.
+    if let Some((baseline, tol)) = bench_support::baseline_from_env() {
+        bench_support::check_baseline_file(&bench, &baseline, tol)
+            .expect("baseline regression gate");
+        println!("baseline gate passed vs {baseline} (tolerance {tol}%)");
+    }
 }

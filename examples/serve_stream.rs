@@ -14,7 +14,8 @@ use std::sync::mpsc::channel;
 
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::data::Benchmark;
-use ocl::serve::{load, Server, ServeConfig};
+use ocl::serve::shard::ShardFront;
+use ocl::serve::{load, ServeConfig};
 use ocl::sim::{Expert, ExpertProfile};
 
 /// Prefer PJRT when the build and the artifacts allow it.
@@ -61,6 +62,17 @@ fn main() -> ocl::Result<()> {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.0);
+    let flag_usize = |name: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    // Scale-out topology: router shards and per-level worker replicas.
+    let shards = flag_usize("--shards", 1);
+    let replicas = flag_usize("--replicas", 1);
+    let sync = flag_usize("--sync", 16);
 
     let bench = BenchmarkId::Imdb;
     let b = Benchmark::build_sized(bench, 7, n);
@@ -73,16 +85,23 @@ fn main() -> ocl::Result<()> {
     );
     let mut cfg = CascadeConfig::small(bench, ExpertId::Gpt35);
     cfg.engine = engine;
-    println!("engine: {engine:?}, requests: {n}");
+    println!(
+        "engine: {engine:?}, requests: {n}, shards: {shards}, replicas: {replicas}"
+    );
 
-    let mut server = Server::new(
+    // The broadcast only activates when shards > 1 (ShardFront wires it).
+    let mut serve_cfg = ServeConfig::default();
+    serve_cfg.shard.shards = shards;
+    serve_cfg.shard.replicas_per_level = replicas;
+    serve_cfg.shard.sync_interval = sync;
+    let mut front = ShardFront::new(
         cfg,
         b.classes,
         expert,
-        ServeConfig::default(),
+        serve_cfg,
         ocl::runtime::DEFAULT_ARTIFACTS_DIR,
     )?;
-    server.set_threshold_scale(0.7);
+    front.set_threshold_scale(0.7);
 
     let (req_tx, req_rx) = channel();
     let (resp_tx, resp_rx) = channel::<ocl::serve::Response>();
@@ -105,31 +124,46 @@ fn main() -> ocl::Result<()> {
         (correct, total)
     });
 
-    let report = server.serve(req_rx, resp_tx)?;
+    let report = front.serve(req_rx, resp_tx)?;
     submit.join().ok();
     let (client_correct, client_total) = drain.join().unwrap_or((0, 0));
 
+    let lat = report.latency_ms();
     println!("\n== serving report ==");
-    println!("served              {}", report.served);
+    println!("shards              {}", report.shards.len());
+    println!("served              {}", report.served());
     println!("wall                {:.2} s", report.wall_secs);
-    println!("throughput          {:.0} req/s", report.throughput);
+    println!("throughput          {:.0} req/s", report.throughput());
     println!(
         "latency p50/p95/p99 {:.2} / {:.2} / {:.2} ms",
-        report.latency_ms.pct(50.0),
-        report.latency_ms.pct(95.0),
-        report.latency_ms.pct(99.0)
+        lat.pct(50.0),
+        lat.pct(95.0),
+        lat.pct(99.0)
     );
-    println!("accuracy            {:.2}%", report.accuracy * 100.0);
+    println!("accuracy            {:.2}%", report.accuracy() * 100.0);
     println!(
         "client-side check   {}/{} correct",
         client_correct, client_total
     );
-    println!("llm calls           {}", report.llm_calls);
-    println!("handled per level   {:?}", report.handled);
-    println!("shed / restarts     {} / {:?}", report.shed, report.restarts);
-    println!("peak in-system      {}", report.peak_pending);
+    println!("llm calls           {}", report.llm_calls());
+    println!("max snapshot lag    {} train chunks", report.max_snapshot_lag());
+    for (i, r) in report.shards.iter().enumerate() {
+        println!(
+            "shard {i}: served {} shed {} handled {:?} restarts {:?} (cap {}) \
+             warm {:?} snapshots {:?} lag {:?} replica-jobs {:?}",
+            r.served,
+            r.shed,
+            r.handled,
+            r.restarts,
+            r.restart_cap,
+            r.warm_respawns,
+            r.snapshots,
+            r.snapshot_lag,
+            r.replica_jobs
+        );
+    }
     assert_eq!(
-        report.served + report.shed,
+        report.served() + report.shed(),
         n,
         "every request must be answered (served or shed)"
     );

@@ -4,11 +4,26 @@
 //! table/figure, register timed closures, and print a fixed-width
 //! report with warmup, repetition statistics, and throughput. Also
 //! hosts [`black_box`] to keep the optimizer honest.
+//!
+//! **Regression gating** (the ROADMAP "criterion-ize" item): the JSON
+//! baseline ([`Bench::to_json`]) carries a median-of-medians statistic
+//! per case — robust to the fat-tailed outliers shared CI runners
+//! produce — and [`Bench::compare_baseline`] fails the run when a case
+//! regresses more than a tolerance against a stored baseline file.
+//! Bench binaries opt in with `--baseline <file>` (cargo forwards args
+//! after `--`) or the `BENCH_BASELINE` env var; see
+//! [`baseline_from_env`].
 
 use std::hint::black_box as std_black_box;
 use std::time::Instant;
 
+use crate::codec::Json;
+use crate::error::{Error, Result};
 use crate::util::Percentiles;
+
+/// Default allowed slowdown vs baseline, percent (generous: shared CI
+/// runners; the gate is for order-of-magnitude regressions).
+pub const DEFAULT_TOLERANCE_PCT: f64 = 50.0;
 
 /// Re-exported optimizer barrier.
 pub fn black_box<T>(x: T) -> T {
@@ -30,6 +45,37 @@ impl CaseResult {
     /// Mean ms/iteration.
     pub fn mean_ms(&self) -> f64 {
         self.iters_ms.iter().sum::<f64>() / self.iters_ms.len().max(1) as f64
+    }
+
+    /// Median-of-medians ms/iteration: the timings are split into up
+    /// to 5 contiguous groups, each group's median taken, and the
+    /// median of those returned. A single cold-cache or noisy-neighbor
+    /// spike can move the mean by an unbounded amount but shifts at
+    /// most one group median — this is the statistic the regression
+    /// gate compares. With few iterations it degrades gracefully to
+    /// the plain median.
+    pub fn mom_ms(&self) -> f64 {
+        fn median(xs: &[f64]) -> f64 {
+            if xs.is_empty() {
+                return 0.0;
+            }
+            let mut v = xs.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("nan timing"));
+            v[v.len() / 2]
+        }
+        let n = self.iters_ms.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let groups = n.min(5);
+        let meds: Vec<f64> = (0..groups)
+            .map(|g| {
+                let lo = g * n / groups;
+                let hi = ((g + 1) * n / groups).max(lo + 1).min(n);
+                median(&self.iters_ms[lo..hi])
+            })
+            .collect();
+        median(&meds)
     }
 }
 
@@ -112,8 +158,7 @@ impl Bench {
     /// [`Bench::report`]. CI uploads these per-bench baselines as
     /// artifacts (`BENCH_*.json`) so perf trajectories can be diffed
     /// across commits without scraping the text tables.
-    pub fn to_json(&self) -> crate::codec::Json {
-        use crate::codec::Json;
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("bench", Json::Str(self.name.clone())),
             ("schema", Json::Num(1.0)),
@@ -132,6 +177,7 @@ impl Bench {
                             Json::obj(vec![
                                 ("name", Json::Str(r.name.clone())),
                                 ("mean_ms", Json::Num(r.mean_ms())),
+                                ("mom_ms", Json::Num(r.mom_ms())),
                                 ("p50_ms", Json::Num(q[0])),
                                 ("p95_ms", Json::Num(q[1])),
                                 ("p99_ms", Json::Num(q[2])),
@@ -151,6 +197,85 @@ impl Bench {
             ),
         ])
     }
+
+    /// Fail when any case regressed more than `tol_pct` percent vs the
+    /// stored baseline (matching on case name; median-of-medians, with
+    /// mean as the fallback for pre-`mom_ms` baselines). Cases absent
+    /// from the baseline pass — a new case has nothing to regress
+    /// against. The error is [`Error::Slo`]: a perf bound is a service
+    /// objective like any latency bound.
+    pub fn compare_baseline(&self, baseline: &Json, tol_pct: f64) -> Result<()> {
+        // Accept either a bare Bench::to_json value or a wrapper
+        // object that carries one under "harness" (bench_serve's
+        // composite baseline).
+        let base = baseline.get("harness").unwrap_or(baseline);
+        let cases = base
+            .get("cases")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| Error::Config("baseline has no 'cases' array".into()))?;
+        let mut failures = Vec::new();
+        for r in &self.results {
+            let Some(prev) = cases.iter().find(|c| {
+                c.get("name").and_then(|n| n.as_str()) == Some(r.name.as_str())
+            }) else {
+                continue;
+            };
+            let Some(prev_ms) = prev
+                .get("mom_ms")
+                .or_else(|| prev.get("mean_ms"))
+                .and_then(|v| v.as_f64())
+            else {
+                continue;
+            };
+            let now_ms = r.mom_ms();
+            if prev_ms > 0.0 && now_ms > prev_ms * (1.0 + tol_pct / 100.0) {
+                failures.push(format!(
+                    "{}: {:.3} ms vs baseline {:.3} ms (+{:.0}% > {:.0}%)",
+                    r.name,
+                    now_ms,
+                    prev_ms,
+                    (now_ms / prev_ms - 1.0) * 100.0,
+                    tol_pct
+                ));
+            }
+        }
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Slo(format!("perf regression: {}", failures.join("; "))))
+        }
+    }
+}
+
+/// Baseline-gate opt-in for `harness = false` bench binaries: reads
+/// `--baseline <file>` (and optional `--baseline-tol <pct>`) from the
+/// process args (cargo forwards everything after `--`), falling back
+/// to the `BENCH_BASELINE` / `BENCH_BASELINE_TOL` env vars. Returns
+/// the baseline path and tolerance, or `None` when no gate was asked
+/// for.
+pub fn baseline_from_env() -> Option<(String, f64)> {
+    let args: Vec<String> = std::env::args().collect();
+    let flag = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let path = flag("--baseline").or_else(|| std::env::var("BENCH_BASELINE").ok())?;
+    let tol = flag("--baseline-tol")
+        .or_else(|| std::env::var("BENCH_BASELINE_TOL").ok())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_TOLERANCE_PCT);
+    Some((path, tol))
+}
+
+/// Load a baseline file and gate `bench` against it at `tol_pct`
+/// (convenience wrapper bench mains call once after printing).
+pub fn check_baseline_file(bench: &Bench, path: &str, tol_pct: f64) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("baseline '{path}': {e}")))?;
+    let json = crate::codec::parse(&text)?;
+    bench.compare_baseline(&json, tol_pct)
 }
 
 #[cfg(test)]
@@ -175,6 +300,60 @@ mod tests {
         assert!(rep.contains("spin"));
         assert!(rep.contains("/s"));
         assert!(b.results()[1].mean_ms() >= 0.2);
+    }
+
+    #[test]
+    fn median_of_medians_shrugs_off_outliers() {
+        let spiky = CaseResult {
+            name: "spiky".into(),
+            // 14 honest ~1ms timings + one 1000ms noisy-neighbor spike
+            iters_ms: (0..14).map(|i| 1.0 + (i as f64) * 0.01).chain([1000.0]).collect(),
+            items_per_iter: None,
+        };
+        assert!(spiky.mean_ms() > 60.0, "mean is wrecked: {}", spiky.mean_ms());
+        assert!(spiky.mom_ms() < 1.2, "mom must hold: {}", spiky.mom_ms());
+        // degenerate sizes
+        let one = CaseResult { name: "one".into(), iters_ms: vec![3.0], items_per_iter: None };
+        assert_eq!(one.mom_ms(), 3.0);
+        let none = CaseResult { name: "none".into(), iters_ms: vec![], items_per_iter: None };
+        assert_eq!(none.mom_ms(), 0.0);
+    }
+
+    #[test]
+    fn baseline_gate_fails_only_on_regression() {
+        let mut b = Bench::new("gate", 0, 3);
+        b.case("work", || {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        });
+        let now = b.results()[0].mom_ms();
+        // Baseline much slower than now → pass; much faster → fail.
+        let mk = |ms: f64| {
+            crate::codec::parse(&format!(
+                r#"{{"bench":"gate","cases":[{{"name":"work","mom_ms":{ms}}}]}}"#
+            ))
+            .unwrap()
+        };
+        b.compare_baseline(&mk(now * 10.0), 25.0).unwrap();
+        let err = b.compare_baseline(&mk(now / 10.0), 25.0).unwrap_err();
+        assert!(err.to_string().contains("perf regression"), "{err}");
+        // wrapper form ({"harness": ...}) and unknown-case tolerance
+        let wrapped = crate::codec::parse(&format!(
+            r#"{{"harness":{{"cases":[{{"name":"work","mom_ms":{}}}]}},"serve":[]}}"#,
+            now * 10.0
+        ))
+        .unwrap();
+        b.compare_baseline(&wrapped, 25.0).unwrap();
+        let other = crate::codec::parse(
+            r#"{"cases":[{"name":"someone-else","mom_ms":0.0001}]}"#,
+        )
+        .unwrap();
+        b.compare_baseline(&other, 25.0).unwrap();
+        // mean_ms fallback for pre-mom baselines
+        let legacy = crate::codec::parse(
+            r#"{"cases":[{"name":"work","mean_ms":0.000001}]}"#,
+        )
+        .unwrap();
+        assert!(b.compare_baseline(&legacy, 25.0).is_err());
     }
 
     #[test]

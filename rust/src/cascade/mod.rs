@@ -56,8 +56,10 @@ pub struct StepOutcome {
     pub flops: f64,
 }
 
-/// Calibration replay cache depth (see Level::calib_cache).
-const CALIB_CACHE: usize = 128;
+/// Calibration replay cache depth (see Level::calib_cache) — shared
+/// with the serve router so the two learners size their calibration
+/// replay identically (learner parity).
+pub const CALIB_CACHE: usize = 128;
 
 /// Replay depth multiplier over the paper's "Cache Size" column.
 ///

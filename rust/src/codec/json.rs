@@ -75,6 +75,24 @@ impl Json {
         }
     }
 
+    /// Encode an `f32` slice as a number array. Every finite `f32` is
+    /// exactly representable as `f64` and the writer emits shortest
+    /// round-trip decimals, so `as_f32_vec(parse(write(x))) == x`
+    /// bit-for-bit — the property model snapshots rely on.
+    pub fn f32_arr(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Decode a number array into `f32`s (`None` on any non-number).
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        let arr = self.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()? as f32);
+        }
+        Some(out)
+    }
+
     /// As object map.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {

@@ -353,9 +353,47 @@ impl CascadeConfig {
     }
 }
 
-/// Serve-layer knobs: dynamic batching + admission control. The router
-/// in `serve::Server` owns no hyperparameters of its own — everything
-/// operationally tunable lives here so experiment specs can pin it.
+/// Scale-out topology: router shards × per-level worker replicas.
+///
+/// `shards = 1, replicas_per_level = 1, sync_interval = 0` is the
+/// single-router topology and reproduces it bit-for-bit (the learner
+/// parity pinned by `tests/test_serve_load.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardConfig {
+    /// Number of independent routers behind the front dispatcher.
+    pub shards: usize,
+    /// Worker-pool capacity per cascade level per shard. Worker 0 is
+    /// the *learner authority* (applies all training); workers 1.. are
+    /// read-only inference replicas fed by published snapshots.
+    pub replicas_per_level: usize,
+    /// Cross-shard annotation broadcast: every `sync_interval` expert
+    /// annotations a shard replicates them to its peers so every
+    /// shard's learners converge toward the single-learner trajectory.
+    /// 0 disables the broadcast.
+    pub sync_interval: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { shards: 1, replicas_per_level: 1, sync_interval: 0 }
+    }
+}
+
+impl ShardConfig {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("replicas_per_level", Json::Num(self.replicas_per_level as f64)),
+            ("sync_interval", Json::Num(self.sync_interval as f64)),
+        ])
+    }
+}
+
+/// Serve-layer knobs: dynamic batching + admission control +
+/// supervision + scale-out topology. The router in `serve::Server`
+/// owns no hyperparameters of its own — everything operationally
+/// tunable lives here so experiment specs can pin it.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ServeConfig {
     /// Max jobs per inference batch dispatched to a level worker.
@@ -369,6 +407,16 @@ pub struct ServeConfig {
     /// `shed` response instead of growing the router's state without
     /// bound. Sheds are counted separately in [`crate::serve::ServeReport`].
     pub max_pending: usize,
+    /// Respawn budget per level — a supervision loop exceeding it
+    /// indicates a deterministic crash (bad config/artifacts), not a
+    /// transient fault. Reported back in [`crate::serve::ServeReport`].
+    pub max_restarts: usize,
+    /// Model-training triggers between snapshot publications by each
+    /// level's learner authority (pool layer). 0 disables publication —
+    /// replicas then serve init weights and respawns are cold.
+    pub publish_every: usize,
+    /// Scale-out topology (shards × replicas × sync cadence).
+    pub shard: ShardConfig,
 }
 
 impl Default for ServeConfig {
@@ -377,6 +425,9 @@ impl Default for ServeConfig {
             batch_max: 8,
             deadline: std::time::Duration::from_millis(2),
             max_pending: 1024,
+            max_restarts: 16,
+            publish_every: 4,
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -388,6 +439,9 @@ impl ServeConfig {
             ("batch_max", Json::Num(self.batch_max as f64)),
             ("deadline_us", Json::Num(self.deadline.as_micros() as f64)),
             ("max_pending", Json::Num(self.max_pending as f64)),
+            ("max_restarts", Json::Num(self.max_restarts as f64)),
+            ("publish_every", Json::Num(self.publish_every as f64)),
+            ("shard", self.shard.to_json()),
         ])
     }
 }
@@ -496,10 +550,18 @@ mod tests {
         assert_eq!(s.batch_max, 8);
         assert_eq!(s.max_pending, 1024);
         assert_eq!(s.deadline, std::time::Duration::from_millis(2));
+        assert_eq!(s.max_restarts, 16);
+        assert_eq!(s.publish_every, 4);
+        assert_eq!(s.shard, ShardConfig::default());
         let v = crate::codec::parse(&s.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("batch_max").unwrap().as_usize(), Some(8));
         assert_eq!(v.get("deadline_us").unwrap().as_f64(), Some(2000.0));
         assert_eq!(v.get("max_pending").unwrap().as_usize(), Some(1024));
+        assert_eq!(v.get("max_restarts").unwrap().as_usize(), Some(16));
+        let sh = v.get("shard").unwrap();
+        assert_eq!(sh.get("shards").unwrap().as_usize(), Some(1));
+        assert_eq!(sh.get("replicas_per_level").unwrap().as_usize(), Some(1));
+        assert_eq!(sh.get("sync_interval").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -40,6 +40,20 @@ impl HostLr {
         v
     }
 
+    /// Flat-blob length for a `(dim, classes)` model.
+    pub fn flat_len(dim: usize, classes: usize) -> usize {
+        dim * classes + classes
+    }
+
+    /// Restore parameters in place from a [`HostLr::to_flat`] blob
+    /// (warm respawn / snapshot install; no reallocation).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), Self::flat_len(self.dim, self.classes));
+        let nw = self.dim * self.classes;
+        self.w.copy_from_slice(&flat[..nw]);
+        self.b.copy_from_slice(&flat[nw..]);
+    }
+
     /// Number of classes.
     pub fn classes(&self) -> usize {
         self.classes

@@ -63,6 +63,27 @@ impl HostMlp {
         v
     }
 
+    /// Number of classes the calibrator scores over.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Flat-blob length for a `classes`-way calibrator.
+    pub fn flat_len(classes: usize) -> usize {
+        (classes + 2) * HIDDEN + HIDDEN + HIDDEN + 1
+    }
+
+    /// Restore parameters in place from a [`HostMlp::to_flat`] blob
+    /// (warm respawn / snapshot install; no reallocation).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), Self::flat_len(self.classes));
+        let n1 = self.in_dim * HIDDEN;
+        self.w1.copy_from_slice(&flat[..n1]);
+        self.b1.copy_from_slice(&flat[n1..n1 + HIDDEN]);
+        self.w2.copy_from_slice(&flat[n1 + HIDDEN..n1 + 2 * HIDDEN]);
+        self.b2 = flat[n1 + 2 * HIDDEN];
+    }
+
     fn features(&self, probs: &[f32], out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(probs);

@@ -243,6 +243,52 @@ impl HostTfm {
         v
     }
 
+    /// Flat-blob length for an `(arch, classes)` model (`param_spec`
+    /// order — embed, pos, per-layer tensors, final LN, head).
+    pub fn flat_len(arch: TfmArch, classes: usize) -> usize {
+        let (v, l, d, _h, layers, f) = arch.dims();
+        let per_layer = 2 * d + 4 * (d * d + d) + 2 * d + d * f + f + f * d + d;
+        v * d + l * d + layers * per_layer + 2 * d + d * classes + classes
+    }
+
+    /// Restore parameters in place from a [`HostTfm::to_flat`] blob
+    /// (warm respawn / snapshot install).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), Self::flat_len(self.arch, self.classes));
+        let mut off = 0usize;
+        let mut fill = |dst: &mut [f32]| {
+            dst.copy_from_slice(&flat[off..off + dst.len()]);
+            off += dst.len();
+        };
+        let p = &mut self.params;
+        fill(&mut p.embed);
+        fill(&mut p.pos);
+        for lay in &mut p.layers {
+            fill(&mut lay.ln1_g);
+            fill(&mut lay.ln1_b);
+            fill(&mut lay.wq);
+            fill(&mut lay.bq);
+            fill(&mut lay.wk);
+            fill(&mut lay.bk);
+            fill(&mut lay.wv);
+            fill(&mut lay.bv);
+            fill(&mut lay.wo);
+            fill(&mut lay.bo);
+            fill(&mut lay.ln2_g);
+            fill(&mut lay.ln2_b);
+            fill(&mut lay.w1);
+            fill(&mut lay.b1);
+            fill(&mut lay.w2);
+            fill(&mut lay.b2);
+        }
+        fill(&mut p.lnf_g);
+        fill(&mut p.lnf_b);
+        fill(&mut p.head_w);
+        fill(&mut p.head_b);
+        drop(fill);
+        assert_eq!(off, flat.len());
+    }
+
     /// Architecture.
     pub fn arch(&self) -> TfmArch {
         self.arch

@@ -8,7 +8,8 @@ use ocl::cli::Command;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
-use ocl::serve::{Request, Server, ServeConfig};
+use ocl::serve::shard::ShardFront;
+use ocl::serve::{Request, ServeConfig};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -56,7 +57,10 @@ fn commands() -> Vec<Command> {
             .opt("requests", "2000", "number of requests")
             .opt("engine", "host", "host|pjrt")
             .opt("seed", "0", "rng seed")
-            .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)"),
+            .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)")
+            .opt("shards", "1", "router shards behind the front dispatcher")
+            .opt("replicas", "1", "worker-pool capacity per cascade level")
+            .opt("sync", "16", "cross-shard annotation broadcast interval (0 = off)"),
         Command::new("selftest", "quick end-to-end smoke test"),
     ]
 }
@@ -208,19 +212,23 @@ fn dispatch(argv: &[String]) -> Result<()> {
             let n: usize = args.parse("requests")?;
             let seed: u64 = args.parse("seed")?;
             let engine = Engine::from_name(args.get("engine"))?;
+            let shards: usize = args.parse("shards")?;
+            let replicas: usize = args.parse("replicas")?;
+            let sync: usize = args.parse("sync")?;
             let h = Harness::new(1.0, seed);
             let (b, e) = h.setup(bench, expert);
             let mut cfg = CascadeConfig::small(bench, expert);
             cfg.engine = engine;
             cfg.seed = seed;
-            let mut server = Server::new(
-                cfg,
-                b.classes,
-                e,
-                ServeConfig::default(),
-                args.get("artifacts"),
-            )?;
-            server.set_threshold_scale(eval::BUDGETED_SCALE);
+            // A single-shard front has no peers to sync with — the
+            // broadcast is only wired when shards > 1 (ShardFront).
+            let mut serve_cfg = ServeConfig::default();
+            serve_cfg.shard.shards = shards;
+            serve_cfg.shard.replicas_per_level = replicas;
+            serve_cfg.shard.sync_interval = sync;
+            let mut front =
+                ShardFront::new(cfg, b.classes, e, serve_cfg, args.get("artifacts"))?;
+            front.set_threshold_scale(eval::BUDGETED_SCALE);
             let (req_tx, req_rx) = std::sync::mpsc::channel();
             let (resp_tx, resp_rx) = std::sync::mpsc::channel();
             let samples: Vec<_> = b.samples.iter().take(n).cloned().collect();
@@ -235,25 +243,40 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 }
             });
             let drain = std::thread::spawn(move || resp_rx.iter().count());
-            let report = server.serve(req_rx, resp_tx)?;
+            let report = front.serve(req_rx, resp_tx)?;
             submit.join().ok();
             let drained = drain.join().unwrap_or(0);
+            let lat = report.latency_ms();
             println!(
-                "served={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
-                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} \
-                 restarts={:?} handled={:?}",
-                report.served,
-                report.shed,
+                "shards={} served={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
+                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} max_snapshot_lag={}",
+                report.shards.len(),
+                report.served(),
+                report.shed(),
                 drained,
-                report.accuracy * 100.0,
-                report.throughput,
-                report.latency_ms.pct(50.0),
-                report.latency_ms.pct(95.0),
-                report.latency_ms.pct(99.0),
-                report.llm_calls,
-                report.restarts,
-                report.handled
+                report.accuracy() * 100.0,
+                report.throughput(),
+                lat.pct(50.0),
+                lat.pct(95.0),
+                lat.pct(99.0),
+                report.llm_calls(),
+                report.max_snapshot_lag()
             );
+            for (i, r) in report.shards.iter().enumerate() {
+                println!(
+                    "shard {i}: served={} handled={:?} restarts={:?} (cap {}) \
+                     warm_respawns={:?} snapshots={:?} snapshot_lag={:?} \
+                     replica_jobs={:?}",
+                    r.served,
+                    r.handled,
+                    r.restarts,
+                    r.restart_cap,
+                    r.warm_respawns,
+                    r.snapshots,
+                    r.snapshot_lag,
+                    r.replica_jobs
+                );
+            }
             Ok(())
         }
         "selftest" => {

@@ -17,9 +17,7 @@ use xla::Literal;
 use crate::config::dims::BATCH_STEP;
 use crate::config::dims::{HASH_DIM, SEQ_LEN};
 use crate::config::ModelKind;
-use crate::error::Result;
-#[cfg(feature = "pjrt")]
-use crate::error::Error;
+use crate::error::{Error, Result};
 use crate::features::{HashingVectorizer, VocabIndexer};
 use crate::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch};
 #[cfg(feature = "pjrt")]
@@ -68,6 +66,72 @@ impl Pipeline {
     }
 }
 
+/// A serializable parameter snapshot of one level model or calibrator.
+///
+/// This is the unit of state that moves between threads (authority →
+/// replica installs in `serve::pool`), across respawns (warm restart),
+/// and across processes (JSON round-trip). `data` is the model's flat
+/// parameter blob in its canonical `to_flat` order; restore is
+/// bit-for-bit (`f32` survives the f64 JSON encoding exactly — see
+/// [`crate::codec::Json::f32_arr`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// What produced the blob: a [`ModelKind::entry_prefix`] for level
+    /// models, `"mlp"` for calibrators.
+    pub kind: String,
+    /// Number of classes the producer was built for.
+    pub classes: usize,
+    /// Flat parameter blob (canonical `to_flat` order).
+    pub data: Vec<f32>,
+}
+
+impl Snapshot {
+    /// JSON encoding (state files, cross-process restore).
+    pub fn to_json(&self) -> crate::codec::Json {
+        use crate::codec::Json;
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.clone())),
+            ("classes", Json::Num(self.classes as f64)),
+            ("data", Json::f32_arr(&self.data)),
+        ])
+    }
+
+    /// Decode from [`Snapshot::to_json`] output.
+    pub fn from_json(v: &crate::codec::Json) -> Result<Self> {
+        let kind = v
+            .require("kind")?
+            .as_str()
+            .ok_or_else(|| Error::Config("snapshot kind must be a string".into()))?
+            .to_string();
+        let classes = v
+            .require("classes")?
+            .as_usize()
+            .ok_or_else(|| Error::Config("snapshot classes must be a usize".into()))?;
+        let data = v
+            .require("data")?
+            .as_f32_vec()
+            .ok_or_else(|| Error::Config("snapshot data must be numbers".into()))?;
+        Ok(Snapshot { kind, classes, data })
+    }
+
+    /// Guard a restore target against a foreign snapshot.
+    fn check(&self, kind: &str, classes: usize, flat_len: usize) -> Result<()> {
+        if self.kind != kind || self.classes != classes || self.data.len() != flat_len {
+            return Err(Error::Config(format!(
+                "snapshot mismatch: got kind '{}' classes {} len {}, \
+                 restore target wants kind '{}' classes {} len {}",
+                self.kind,
+                self.classes,
+                self.data.len(),
+                kind,
+                classes,
+                flat_len
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// One trainable cascade level (`m_i`, i < N).
 pub trait LevelModel {
     /// Which paper model this level instantiates.
@@ -82,6 +146,12 @@ pub trait LevelModel {
     fn predict_batch(&mut self, fs: &[&Featurized]) -> Vec<Vec<f32>> {
         fs.iter().map(|f| self.predict(f)).collect()
     }
+    /// Export the current parameters (`None` when the backend cannot
+    /// serialize its state).
+    fn snapshot(&self) -> Option<Snapshot>;
+    /// Restore parameters from a snapshot taken on a model of the same
+    /// kind/classes (bit-for-bit; errors on a foreign snapshot).
+    fn restore(&mut self, snap: &Snapshot) -> Result<()>;
 }
 
 /// A deferral function `f_i` (post-hoc confidence calibrator).
@@ -90,6 +160,10 @@ pub trait Calibrator {
     fn score(&mut self, probs: &[f32]) -> f32;
     /// One OGD minibatch step on (probs, z) pairs (Eq. 5); returns loss.
     fn train(&mut self, batch: &[(&[f32], f32)], lr: f32) -> f32;
+    /// Export the current parameters (`None` when unsupported).
+    fn snapshot(&self) -> Option<Snapshot>;
+    /// Restore parameters from a same-shape calibrator snapshot.
+    fn restore(&mut self, snap: &Snapshot) -> Result<()>;
 }
 
 // ---------------------------------------------------------------------------
@@ -122,6 +196,23 @@ impl LevelModel for HostLrLevel {
         let xs: Vec<&[f32]> = batch.iter().map(|(f, _)| f.x.as_slice()).collect();
         let ys: Vec<usize> = batch.iter().map(|&(_, y)| y).collect();
         self.inner.train_batch(&xs, &ys, lr)
+    }
+    fn snapshot(&self) -> Option<Snapshot> {
+        Some(Snapshot {
+            kind: ModelKind::Lr.entry_prefix().into(),
+            classes: self.inner.classes(),
+            data: self.inner.to_flat(),
+        })
+    }
+    fn restore(&mut self, snap: &Snapshot) -> Result<()> {
+        let classes = self.inner.classes();
+        snap.check(
+            ModelKind::Lr.entry_prefix(),
+            classes,
+            HostLr::flat_len(HASH_DIM, classes),
+        )?;
+        self.inner.load_flat(&snap.data);
+        Ok(())
     }
 }
 
@@ -169,6 +260,23 @@ impl LevelModel for HostTfmLevel {
         let ys: Vec<usize> = batch.iter().map(|&(_, y)| y).collect();
         self.inner.train_batch(&ids, &masks, &ys, lr)
     }
+    fn snapshot(&self) -> Option<Snapshot> {
+        Some(Snapshot {
+            kind: self.kind.entry_prefix().into(),
+            classes: self.inner.classes(),
+            data: self.inner.to_flat(),
+        })
+    }
+    fn restore(&mut self, snap: &Snapshot) -> Result<()> {
+        let classes = self.inner.classes();
+        snap.check(
+            self.kind.entry_prefix(),
+            classes,
+            HostTfm::flat_len(self.inner.arch(), classes),
+        )?;
+        self.inner.load_flat(&snap.data);
+        Ok(())
+    }
 }
 
 /// Host calibrator.
@@ -183,6 +291,13 @@ impl HostCalibrator {
     }
 }
 
+impl HostCalibrator {
+    /// Classes the calibrator scores over.
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+}
+
 impl Calibrator for HostCalibrator {
     fn score(&mut self, probs: &[f32]) -> f32 {
         self.inner.predict(probs)
@@ -191,6 +306,19 @@ impl Calibrator for HostCalibrator {
         let ps: Vec<&[f32]> = batch.iter().map(|&(p, _)| p).collect();
         let zs: Vec<f32> = batch.iter().map(|&(_, z)| z).collect();
         self.inner.train_batch(&ps, &zs, lr)
+    }
+    fn snapshot(&self) -> Option<Snapshot> {
+        Some(Snapshot {
+            kind: "mlp".into(),
+            classes: self.classes(),
+            data: self.inner.to_flat(),
+        })
+    }
+    fn restore(&mut self, snap: &Snapshot) -> Result<()> {
+        let classes = self.classes();
+        snap.check("mlp", classes, HostMlp::flat_len(classes))?;
+        self.inner.load_flat(&snap.data);
+        Ok(())
     }
 }
 
@@ -331,6 +459,45 @@ impl LevelModel for PjrtLevel {
         self.params = out; // params' in call order
         loss
     }
+    fn snapshot(&self) -> Option<Snapshot> {
+        pjrt_snapshot(self.kind.entry_prefix(), self.classes, &self.params)
+    }
+    fn restore(&mut self, snap: &Snapshot) -> Result<()> {
+        pjrt_restore(self.kind.entry_prefix(), self.classes, &mut self.params, snap)
+    }
+}
+
+/// Export PJRT parameter literals as one flat host blob (call order).
+#[cfg(feature = "pjrt")]
+fn pjrt_snapshot(kind: &str, classes: usize, params: &[Literal]) -> Option<Snapshot> {
+    let mut data = Vec::new();
+    for p in params {
+        data.extend(p.to_vec::<f32>().ok()?);
+    }
+    Some(Snapshot { kind: kind.into(), classes, data })
+}
+
+/// Rebuild PJRT parameter literals from a flat blob, using the current
+/// literals' shapes as the split spec (bit-for-bit restore).
+#[cfg(feature = "pjrt")]
+fn pjrt_restore(
+    kind: &str,
+    classes: usize,
+    params: &mut [Literal],
+    snap: &Snapshot,
+) -> Result<()> {
+    let total: usize = params.iter().map(|p| p.element_count()).sum();
+    snap.check(kind, classes, total)?;
+    let mut off = 0usize;
+    for p in params.iter_mut() {
+        let n = p.element_count();
+        let shape: Vec<i64> = p.shape().to_vec();
+        *p = Literal::vec1(&snap.data[off..off + n])
+            .reshape(&shape)
+            .map_err(|e| Error::Runtime(format!("snapshot reshape: {e}")))?;
+        off += n;
+    }
+    Ok(())
 }
 
 /// PJRT calibrator (deferral MLP through artifacts).
@@ -388,6 +555,12 @@ impl Calibrator for PjrtCalibrator {
         let loss = out.pop().expect("loss").to_vec::<f32>().expect("loss literal")[0];
         self.params = out;
         loss
+    }
+    fn snapshot(&self) -> Option<Snapshot> {
+        pjrt_snapshot("mlp", self.classes, &self.params)
+    }
+    fn restore(&mut self, snap: &Snapshot) -> Result<()> {
+        pjrt_restore("mlp", self.classes, &mut self.params, snap)
     }
 }
 
@@ -472,6 +645,26 @@ mod tests {
             c.train(&batch, 0.1);
         }
         assert!(c.score(lo) > c.score(hi));
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_is_bit_for_bit() {
+        let p = Pipeline::default();
+        let f = p.featurize("kw0x001 kw1x002 neg00");
+        let mut lr = HostLrLevel::new(2);
+        lr.train(&[(&f, 1usize)], 0.5);
+        let snap = lr.snapshot().expect("host snapshot");
+        let text = snap.to_json().to_string_compact();
+        let back = Snapshot::from_json(&crate::codec::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap, "f32 blob must survive the JSON trip exactly");
+        let mut fresh = HostLrLevel::new(2);
+        fresh.restore(&back).unwrap();
+        assert_eq!(fresh.predict(&f), lr.predict(&f));
+        // foreign snapshots are rejected, not silently installed
+        let mut seven = HostTfmLevel::new(ModelKind::TfmBase, 7, 0);
+        assert!(seven.restore(&back).is_err());
+        let mut c = HostCalibrator::new(2, 0);
+        assert!(c.restore(&back).is_err(), "model blob must not restore a calibrator");
     }
 
     #[test]

@@ -132,6 +132,14 @@ pub struct Slo {
 }
 
 impl Slo {
+    /// Assert the SLO against a multi-shard run: the bound applies to
+    /// the *merged* latency distribution (union of shard samples), the
+    /// only view a client sees — per-shard p99s can each pass while the
+    /// union fails when one shard carries the tail.
+    pub fn check_sharded(&self, report: &crate::serve::shard::ShardReport) -> Result<()> {
+        self.check(&report.latency_ms())
+    }
+
     /// Assert the SLO against a latency distribution; the error names
     /// the violated bound ([`Error::Slo`]).
     pub fn check(&self, latency_ms: &Percentiles) -> Result<()> {

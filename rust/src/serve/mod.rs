@@ -1,6 +1,6 @@
-//! Streaming serving mode: request router + dynamic batcher + per-model
-//! worker threads (the vLLM-style leader/worker topology), with worker
-//! supervision and admission control.
+//! Streaming serving mode: request router + dynamic batcher + per-level
+//! worker pools (the vLLM-style leader/worker topology), with worker
+//! supervision, admission control, and scale-out sharding.
 //!
 //! Why threads-per-model: `PjRtClient` is `Rc`-based and cannot cross
 //! threads, so each worker *builds its own engine* on its own thread;
@@ -9,6 +9,21 @@
 //! execute model inference/updates — queries are batched per level (up
 //! to `batch_max` or `deadline`), which is what amortizes PJRT dispatch
 //! overhead on the hot path (§Perf L3).
+//!
+//! **Topology.** Three nested layers (DESIGN.md §9):
+//! - [`shard`] — N routers behind a hashing front dispatcher, with an
+//!   optional cross-shard annotation broadcast so every shard's
+//!   learners converge toward the single-learner trajectory.
+//! - [`pool`] — per level, a *learner authority* worker that applies
+//!   all training plus read-only replicas that install the authority's
+//!   published snapshots for inference fan-out. Respawns are *warm*:
+//!   they restore the latest snapshot instead of fresh weights.
+//! - [`crate::models::Snapshot`] — the bit-for-bit serializable weight
+//!   state that moves authority → replica, across respawns, and (via
+//!   JSON) across processes.
+//!
+//! With `shards = 1, replicas = 1, sync = 0` all of this degenerates
+//! to the single supervised router, bit-for-bit.
 //!
 //! **Learner parity.** The router's online-learning mirror of
 //! [`crate::cascade::Cascade`] consults each level's *own* DAgger β at
@@ -20,16 +35,18 @@
 //! [`crate::cascade::MLP_LR_SCALE`], and evaluates walk-skipped levels
 //! through async calibration probes — so the served cascade learns the
 //! same way the offline one does (asserted in `tests/test_serve_load.rs`).
+//! All training flows through each pool's single authority, which is
+//! what keeps the trajectory serialized even at replica capacity > 1.
 //!
-//! **Supervision.** A dead level worker (panic, send/recv failure, or
+//! **Supervision.** A dead pool worker (panic, send/recv failure, or
 //! injected [`Chaos`]) is detected by the router loop, respawned from
 //! config, and its in-flight batch is requeued at the front of the
 //! level queue — every admitted request is still answered exactly once
 //! (stale replies from the old worker generation are dropped by epoch).
-//! The respawned model restarts from fresh weights, but the replay
-//! caches live in the router, so the next training trigger re-teaches
-//! it from retained annotations; only gradient steps queued inside the
-//! dead worker are lost.
+//! The respawn restores the latest published snapshot (warm restart);
+//! only gradient steps since the last publication are lost, and the
+//! replay caches living in the router re-teach those on the next
+//! training trigger. The restart budget is [`ServeConfig::max_restarts`].
 //!
 //! **Admission control.** The router's in-system population is bounded
 //! by [`ServeConfig::max_pending`]; arrivals beyond the bound are shed
@@ -38,27 +55,26 @@
 //! growing queues without bound.
 
 pub mod load;
+pub mod pool;
+pub mod shard;
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::cascade::{replay_picks, CALIB_REPLAY, MLP_LR_SCALE, REPLAY_FACTOR};
-use crate::config::{CascadeConfig, Engine, ModelKind};
-pub use crate::config::ServeConfig;
+use crate::cascade::{replay_picks, CALIB_CACHE, CALIB_REPLAY, MLP_LR_SCALE, REPLAY_FACTOR};
+use crate::config::CascadeConfig;
+pub use crate::config::{ServeConfig, ShardConfig};
 use crate::data::Sample;
 use crate::error::{Error, Result};
-use crate::models::{build_calibrator, build_level, Featurized, Pipeline};
+use crate::models::{Featurized, Pipeline};
 use crate::prng::Rng;
 use crate::sim::Expert;
 use crate::util::{argmax, Percentiles, Ring};
 
-/// Restart budget per level — a respawn loop beyond this indicates a
-/// deterministic crash (bad config/artifacts), not a transient fault.
-const MAX_RESTARTS: usize = 16;
+use pool::{LevelPool, WorkerReply, WorkerSpec};
 
 /// A client request: one document to classify.
 #[derive(Clone, Debug)]
@@ -92,7 +108,7 @@ pub struct Response {
 }
 
 /// Serving report: latency distribution + throughput + routing mix +
-/// supervision/overload accounting.
+/// supervision/overload/snapshot accounting.
 #[derive(Debug)]
 pub struct ServeReport {
     /// Requests served (excludes shed).
@@ -111,8 +127,21 @@ pub struct ServeReport {
     pub accuracy: f64,
     /// Expert calls.
     pub llm_calls: u64,
-    /// Worker respawns per level.
+    /// Worker respawns per level (pool-wide).
     pub restarts: Vec<usize>,
+    /// The restart budget the run was configured with
+    /// ([`ServeConfig::max_restarts`]).
+    pub restart_cap: usize,
+    /// Respawns that restored a published snapshot (warm restarts).
+    pub warm_respawns: Vec<usize>,
+    /// Snapshot publications per level.
+    pub snapshots: Vec<u64>,
+    /// Snapshot staleness per level at the end of the run: authority
+    /// training chunks not yet captured by a publication.
+    pub snapshot_lag: Vec<u64>,
+    /// Inference jobs dispatched per level per pool member (member 0 =
+    /// the learner authority) — the per-replica throughput counters.
+    pub replica_jobs: Vec<Vec<u64>>,
     /// Largest in-system population observed (≤ `max_pending`).
     pub peak_pending: usize,
     /// Per-level DAgger β after the run (cascade-parity diagnostic).
@@ -128,6 +157,12 @@ impl ServeReport {
     pub fn to_json(&self) -> crate::codec::Json {
         use crate::codec::Json;
         let q = self.latency_ms.pcts(&[50.0, 95.0, 99.0]);
+        let nums = |xs: &[usize]| {
+            Json::Arr(xs.iter().map(|&r| Json::Num(r as f64)).collect())
+        };
+        let nums64 = |xs: &[u64]| {
+            Json::Arr(xs.iter().map(|&r| Json::Num(r as f64)).collect())
+        };
         Json::obj(vec![
             ("served", Json::Num(self.served as f64)),
             ("shed", Json::Num(self.shed as f64)),
@@ -138,154 +173,52 @@ impl ServeReport {
             ("p99_ms", Json::Num(q[2])),
             ("accuracy", Json::Num(self.accuracy)),
             ("llm_calls", Json::Num(self.llm_calls as f64)),
+            ("restarts", nums(&self.restarts)),
+            ("restart_cap", Json::Num(self.restart_cap as f64)),
+            ("warm_respawns", nums(&self.warm_respawns)),
+            ("snapshots", nums64(&self.snapshots)),
+            ("snapshot_lag", nums64(&self.snapshot_lag)),
             (
-                "restarts",
-                Json::Arr(self.restarts.iter().map(|&r| Json::Num(r as f64)).collect()),
+                "replica_jobs",
+                Json::Arr(self.replica_jobs.iter().map(|r| nums64(r)).collect()),
             ),
             ("peak_pending", Json::Num(self.peak_pending as f64)),
-            (
-                "handled",
-                Json::Arr(self.handled.iter().map(|&h| Json::Num(h as f64)).collect()),
-            ),
+            ("handled", nums(&self.handled)),
         ])
     }
 }
 
-/// Fault injection: crash one level worker after the N-th admission
+/// Fault injection: crash one pool worker after the N-th admission
 /// (the serve-layer twin of `Expert::set_available(false)`).
 #[derive(Clone, Copy, Debug)]
 pub struct Chaos {
-    /// Which level worker to kill.
+    /// Which level's pool to hit.
     pub kill_level: usize,
+    /// Which pool member to kill (0 = the learner authority).
+    pub kill_replica: usize,
     /// Crash after this many admitted (non-shed) requests.
     pub after_requests: usize,
 }
 
-// --- worker protocol -------------------------------------------------------
+// --- router ----------------------------------------------------------------
 
+/// One unit of level work: an inference (or calibration-probe) job.
+/// `pub(crate)` because it crosses into [`pool`]'s worker protocol.
 #[derive(Clone)]
-struct Job {
-    req_id: u64,
-    f: Arc<Featurized>,
+pub(crate) struct Job {
+    /// Request id for inference jobs; router-allocated probe id for
+    /// calibration probes. The two id spaces may overlap — `probe`
+    /// disambiguates (client ids are arbitrary u64s, so no id range
+    /// can be reserved for probes).
+    pub(crate) req_id: u64,
+    /// True for calibration-probe jobs (their replies feed
+    /// `probe_truth`, never the pending map).
+    pub(crate) probe: bool,
+    pub(crate) f: Arc<Featurized>,
     /// Enqueue instant — the batch deadline is measured from here, so a
     /// partial drain never re-arms the clock for surviving jobs.
-    enq: Instant,
+    pub(crate) enq: Instant,
 }
-
-enum WorkerMsg {
-    Infer(Vec<Job>),
-    Train(Vec<(Arc<Featurized>, usize)>, f32),
-    TrainCalib(Vec<(Vec<f32>, f32)>, f32),
-    /// Simulated crash (supervision tests): the worker thread exits
-    /// without replying, exactly like a panic would leave it.
-    Crash,
-    Shutdown,
-}
-
-struct WorkerReply {
-    level: usize,
-    /// Worker generation — replies from a generation the supervisor
-    /// already replaced are dropped (their jobs were requeued).
-    epoch: u64,
-    results: Vec<(u64, Vec<f32>, f32)>, // (req_id, probs, score)
-}
-
-/// Training-work counters shared router ↔ worker (survive respawns:
-/// the supervisor re-hands the same `Arc` to the replacement worker).
-#[derive(Default)]
-struct WorkerStats {
-    train_chunks: AtomicU64,
-    calib_chunks: AtomicU64,
-}
-
-/// Everything needed to (re)build one level worker.
-#[derive(Clone)]
-struct WorkerSpec {
-    level: usize,
-    kind: ModelKind,
-    classes: usize,
-    seed: u64,
-    engine: Engine,
-    artifacts_dir: String,
-}
-
-/// Handle to one level worker thread.
-struct Worker {
-    tx: Sender<WorkerMsg>,
-    handle: JoinHandle<()>,
-    epoch: u64,
-}
-
-fn spawn_worker(
-    spec: &WorkerSpec,
-    epoch: u64,
-    reply_tx: Sender<WorkerReply>,
-    stats: Arc<WorkerStats>,
-) -> Worker {
-    let (tx, rx): (Sender<WorkerMsg>, Receiver<WorkerMsg>) = channel();
-    let spec = spec.clone();
-    let handle = std::thread::spawn(move || {
-        // The engine is constructed on this thread (PjRtClient is !Send).
-        let is_pjrt = spec.engine.is_pjrt();
-        let pjrt = if is_pjrt {
-            Some(crate::runtime::worker_engine(&spec.artifacts_dir))
-        } else {
-            None
-        };
-        let mut model = build_level(pjrt.as_ref(), spec.kind, spec.classes, spec.seed)
-            .expect("worker model");
-        let mut calib = build_calibrator(pjrt.as_ref(), spec.classes, spec.seed)
-            .expect("worker calibrator");
-        while let Ok(msg) = rx.recv() {
-            match msg {
-                WorkerMsg::Infer(jobs) => {
-                    let fs: Vec<&Featurized> =
-                        jobs.iter().map(|j| j.f.as_ref()).collect();
-                    let probs = model.predict_batch(&fs);
-                    let results = jobs
-                        .iter()
-                        .zip(probs)
-                        .map(|(j, p)| {
-                            let s = calib.score(&p);
-                            (j.req_id, p, s)
-                        })
-                        .collect();
-                    let reply = WorkerReply { level: spec.level, epoch, results };
-                    if reply_tx.send(reply).is_err() {
-                        break;
-                    }
-                }
-                WorkerMsg::Train(batch, lr) => {
-                    for chunk in batch.chunks(8) {
-                        if chunk.len() < 8 && is_pjrt {
-                            break; // pjrt step executables are fixed at batch 8
-                        }
-                        let b: Vec<(&Featurized, usize)> =
-                            chunk.iter().map(|(f, y)| (f.as_ref(), *y)).collect();
-                        model.train(&b, lr);
-                        stats.train_chunks.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                WorkerMsg::TrainCalib(batch, lr) => {
-                    for chunk in batch.chunks(8) {
-                        if chunk.len() < 8 && is_pjrt {
-                            break; // same fixed-batch constraint as Train
-                        }
-                        let b: Vec<(&[f32], f32)> =
-                            chunk.iter().map(|(p, z)| (p.as_slice(), *z)).collect();
-                        calib.train(&b, lr);
-                        stats.calib_chunks.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                WorkerMsg::Crash => return,
-                WorkerMsg::Shutdown => break,
-            }
-        }
-    });
-    Worker { tx, handle, epoch }
-}
-
-// --- router ----------------------------------------------------------------
 
 struct Pending {
     f: Arc<Featurized>,
@@ -308,15 +241,20 @@ struct ProbeWait {
     left: usize,
 }
 
+/// A batch of expert annotations replicated from a peer shard
+/// ([`shard`] sync; see `ShardConfig::sync_interval`).
+pub(crate) struct SyncBatch(pub(crate) Vec<(Arc<Featurized>, usize)>);
+
 struct LevelQueue {
     jobs: VecDeque<Job>,
-    /// The batch currently at the worker — kept for requeue-on-death.
-    in_flight: Option<Vec<Job>>,
+    /// Batches currently at pool members — kept for requeue-on-death
+    /// (one slot per replica).
+    in_flight: Vec<Option<Vec<Job>>>,
 }
 
 impl LevelQueue {
-    fn new() -> Self {
-        LevelQueue { jobs: VecDeque::new(), in_flight: None }
+    fn new(replicas: usize) -> Self {
+        LevelQueue { jobs: VecDeque::new(), in_flight: vec![None; replicas] }
     }
 
     fn push(&mut self, job: Job) {
@@ -342,6 +280,14 @@ impl LevelQueue {
     fn take(&mut self, max: usize) -> Vec<Job> {
         let take = self.jobs.len().min(max);
         self.jobs.drain(..take).collect()
+    }
+
+    /// Least-loaded free pool member (ties → lowest index); `None`
+    /// when every member has a batch in flight.
+    fn free_replica(&self, jobs_done: &[u64]) -> Option<usize> {
+        (0..self.in_flight.len())
+            .filter(|&r| self.in_flight[r].is_none())
+            .min_by_key(|&r| jobs_done[r])
     }
 
     /// Put a requeued batch back at the front, preserving order and the
@@ -370,11 +316,11 @@ struct RunState {
 }
 
 impl RunState {
-    fn new(n_levels: usize) -> Self {
+    fn new(n_levels: usize, replicas: usize) -> Self {
         RunState {
             pending: HashMap::new(),
             probe_truth: HashMap::new(),
-            queues: (0..n_levels).map(|_| LevelQueue::new()).collect(),
+            queues: (0..n_levels).map(|_| LevelQueue::new(replicas)).collect(),
             lat: Percentiles::new(),
             handled: vec![0; n_levels + 1],
             correct: 0,
@@ -390,19 +336,15 @@ impl RunState {
     fn idle(&self) -> bool {
         self.pending.is_empty()
             && self.probe_truth.is_empty()
-            && self
-                .queues
-                .iter()
-                .all(|q| q.jobs.is_empty() && q.in_flight.is_none())
+            && self.queues.iter().all(|q| {
+                q.jobs.is_empty() && q.in_flight.iter().all(|f| f.is_none())
+            })
     }
 }
 
-/// The streaming cascade server.
+/// The streaming cascade server (one router shard).
 pub struct Server {
-    workers: Vec<Worker>,
-    specs: Vec<WorkerSpec>,
-    stats: Vec<Arc<WorkerStats>>,
-    reply_tx: Sender<WorkerReply>,
+    pools: Vec<LevelPool>,
     reply_rx: Receiver<WorkerReply>,
     cfg: CascadeConfig,
     serve_cfg: ServeConfig,
@@ -411,7 +353,15 @@ pub struct Server {
     pipeline: Pipeline,
     rng: Rng,
     chaos: Option<Chaos>,
-    restarts: Vec<usize>,
+    // cross-shard annotation sync (wired by `shard::ShardFront`)
+    sync_out: Vec<Sender<SyncBatch>>,
+    sync_in: Option<Receiver<SyncBatch>>,
+    sync_staged: Vec<(Arc<Featurized>, usize)>,
+    /// Probe-id allocator: every annotation event (local or remote)
+    /// that spawns calibration probes gets one fresh key into
+    /// `probe_truth`. Probe jobs are tagged (`Job::probe`), so this
+    /// space never clashes with client request ids.
+    probe_seq: u64,
     // learner state (mirrors Cascade)
     caches: Vec<Ring<(Arc<Featurized>, usize)>>,
     calib_caches: Vec<Ring<(Vec<f32>, f32)>>,
@@ -422,7 +372,7 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn workers and build the router.
+    /// Spawn the level pools and build the router.
     pub fn new(
         cfg: CascadeConfig,
         classes: usize,
@@ -435,33 +385,36 @@ impl Server {
                 "serve batch_max and max_pending must be positive".into(),
             ));
         }
+        if serve_cfg.shard.replicas_per_level == 0 || serve_cfg.shard.shards == 0 {
+            return Err(Error::Config(
+                "serve shards and replicas_per_level must be positive".into(),
+            ));
+        }
         let (reply_tx, reply_rx) = channel();
-        let specs: Vec<WorkerSpec> = cfg
+        let pools: Vec<LevelPool> = cfg
             .levels
             .iter()
             .enumerate()
-            .map(|(i, lc)| WorkerSpec {
-                level: i,
-                kind: lc.model,
-                classes,
-                seed: cfg.seed ^ ((i as u64 + 1) * 0x5E77E),
-                engine: cfg.engine,
-                artifacts_dir: artifacts_dir.to_string(),
+            .map(|(i, lc)| {
+                LevelPool::new(
+                    WorkerSpec {
+                        level: i,
+                        kind: lc.model,
+                        classes,
+                        seed: cfg.seed ^ ((i as u64 + 1) * 0x5E77E),
+                        engine: cfg.engine,
+                        artifacts_dir: artifacts_dir.to_string(),
+                    },
+                    serve_cfg.shard.replicas_per_level,
+                    serve_cfg.publish_every,
+                    reply_tx.clone(),
+                )
             })
             .collect();
-        let stats: Vec<Arc<WorkerStats>> =
-            specs.iter().map(|_| Arc::new(WorkerStats::default())).collect();
-        let workers: Vec<Worker> = specs
-            .iter()
-            .zip(&stats)
-            .map(|(spec, st)| spawn_worker(spec, 0, reply_tx.clone(), st.clone()))
-            .collect();
+        drop(reply_tx); // each pool holds its own clone for respawns
         let n = cfg.levels.len();
         Ok(Server {
-            workers,
-            specs,
-            stats,
-            reply_tx,
+            pools,
             reply_rx,
             serve_cfg,
             classes,
@@ -469,13 +422,16 @@ impl Server {
             pipeline: Pipeline::default(),
             rng: Rng::new(cfg.seed ^ 0x5E57E),
             chaos: None,
-            restarts: vec![0; n],
+            sync_out: Vec::new(),
+            sync_in: None,
+            sync_staged: Vec::new(),
+            probe_seq: 0,
             caches: cfg
                 .levels
                 .iter()
                 .map(|l| Ring::new(l.cache_size.max(l.batch_size) * REPLAY_FACTOR))
                 .collect(),
-            calib_caches: (0..n).map(|_| Ring::new(128)).collect(),
+            calib_caches: (0..n).map(|_| Ring::new(CALIB_CACHE)).collect(),
             pendings: vec![0; n],
             calib_pendings: vec![0; n],
             betas: vec![cfg.beta0; n],
@@ -489,11 +445,26 @@ impl Server {
         self.threshold_scale = s;
     }
 
-    /// Arm fault injection (supervision tests): crash one level worker
-    /// mid-stream. `kill_level` must name an existing level.
+    /// Arm fault injection (supervision tests): crash one pool worker
+    /// mid-stream. `kill_level`/`kill_replica` must exist.
     pub fn inject_chaos(&mut self, chaos: Chaos) {
         assert!(chaos.kill_level < self.cfg.levels.len(), "chaos level out of range");
+        assert!(
+            chaos.kill_replica < self.pools[chaos.kill_level].replicas(),
+            "chaos replica out of range"
+        );
         self.chaos = Some(chaos);
+    }
+
+    /// Wire the cross-shard annotation broadcast (called by
+    /// [`shard::ShardFront`]; a stand-alone server has no peers).
+    pub(crate) fn wire_sync(
+        &mut self,
+        out: Vec<Sender<SyncBatch>>,
+        inbox: Receiver<SyncBatch>,
+    ) {
+        self.sync_out = out;
+        self.sync_in = Some(inbox);
     }
 
     /// Serve a stream of requests arriving through `rx`; send responses
@@ -505,14 +476,16 @@ impl Server {
     ) -> Result<ServeReport> {
         let t_start = Instant::now();
         let n_levels = self.cfg.levels.len();
-        let mut st = RunState::new(n_levels);
+        let mut st = RunState::new(n_levels, self.serve_cfg.shard.replicas_per_level);
         let mut inputs_open = true;
 
         loop {
             // 0. supervision: respawn dead workers, requeue their batches.
             for i in 0..n_levels {
-                if self.workers[i].handle.is_finished() {
-                    self.respawn(i, &mut st.queues)?;
+                for r in 0..self.pools[i].replicas() {
+                    if self.pools[i].workers[r].handle.is_finished() {
+                        self.respawn(i, r, &mut st.queues)?;
+                    }
                 }
             }
 
@@ -527,23 +500,32 @@ impl Server {
                 }
             }
 
-            // 2. flush batches that are full or past deadline.
+            // 1b. absorb peer-shard annotations (cross-shard sync).
+            self.drain_sync(&mut st);
+
+            // 2. flush batches that are full or past deadline to free
+            //    pool members (least-loaded first).
             for i in 0..n_levels {
-                if st.queues[i].in_flight.is_none()
-                    && st.queues[i].due(
+                loop {
+                    let Some(r) =
+                        st.queues[i].free_replica(&self.pools[i].replica_jobs)
+                    else {
+                        break;
+                    };
+                    if !st.queues[i].due(
                         self.serve_cfg.batch_max,
                         self.serve_cfg.deadline,
                         !inputs_open,
-                    )
-                {
+                    ) {
+                        break;
+                    }
                     let jobs = st.queues[i].take(self.serve_cfg.batch_max);
-                    let ok =
-                        self.workers[i].tx.send(WorkerMsg::Infer(jobs.clone())).is_ok();
-                    st.queues[i].in_flight = Some(jobs);
+                    let ok = self.pools[i].send_infer(r, jobs.clone());
+                    st.queues[i].in_flight[r] = Some(jobs);
                     if !ok {
                         // Worker gone: respawn now; the batch we just
                         // parked in `in_flight` is requeued inside.
-                        self.respawn(i, &mut st.queues)?;
+                        self.respawn(i, r, &mut st.queues)?;
                     }
                 }
             }
@@ -554,8 +536,8 @@ impl Server {
                 Ok(reply) => self.on_reply(reply, &mut st, &tx),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    // Unreachable: the server holds its own reply_tx
-                    // clone precisely so respawns can re-wire workers.
+                    // Unreachable: every pool holds a reply_tx clone
+                    // precisely so respawns can re-wire workers.
                     return Err(Error::Worker("reply channel closed".into()));
                 }
             }
@@ -565,12 +547,9 @@ impl Server {
             }
         }
 
-        // shutdown workers
-        for w in &self.workers {
-            let _ = w.tx.send(WorkerMsg::Shutdown);
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.handle.join();
+        // shutdown pools
+        for p in &mut self.pools {
+            p.shutdown();
         }
         let wall = t_start.elapsed().as_secs_f64();
         Ok(ServeReport {
@@ -586,18 +565,23 @@ impl Server {
                 st.correct as f64 / st.served as f64
             },
             llm_calls: st.llm_calls,
-            restarts: self.restarts.clone(),
+            restarts: self.pools.iter().map(|p| p.restarts).collect(),
+            restart_cap: self.serve_cfg.max_restarts,
+            warm_respawns: self.pools.iter().map(|p| p.warm_respawns).collect(),
+            snapshots: self.pools.iter().map(|p| p.published()).collect(),
+            snapshot_lag: self.pools.iter().map(|p| p.snapshot_lag()).collect(),
+            replica_jobs: self.pools.iter().map(|p| p.replica_jobs.clone()).collect(),
             peak_pending: st.peak_pending,
             final_betas: self.betas.clone(),
             train_batches: self
-                .stats
+                .pools
                 .iter()
-                .map(|s| s.train_chunks.load(Ordering::Relaxed))
+                .map(|p| p.stats.train_chunks.load(Ordering::Relaxed))
                 .collect(),
             calib_batches: self
-                .stats
+                .pools
                 .iter()
-                .map(|s| s.calib_chunks.load(Ordering::Relaxed))
+                .map(|p| p.stats.calib_chunks.load(Ordering::Relaxed))
                 .collect(),
         })
     }
@@ -621,7 +605,7 @@ impl Server {
         if let Some(c) = self.chaos {
             if st.admitted == c.after_requests {
                 // Best-effort: the worker may already be dead.
-                let _ = self.workers[c.kill_level].tx.send(WorkerMsg::Crash);
+                self.pools[c.kill_level].crash(c.kill_replica);
             }
         }
         let f = Arc::new(self.pipeline.featurize(&req.text));
@@ -648,32 +632,47 @@ impl Server {
         if jump {
             self.to_expert(req.id, st, tx);
         } else {
-            st.queues[0].push(Job { req_id: req.id, f, enq: Instant::now() });
+            st.queues[0].push(Job {
+                req_id: req.id,
+                probe: false,
+                f,
+                enq: Instant::now(),
+            });
         }
+    }
+
+    /// Allocate a fresh probe-bookkeeping id (`probe_truth` key).
+    fn next_probe_id(&mut self) -> u64 {
+        self.probe_seq += 1;
+        self.probe_seq
     }
 
     /// Process one worker reply batch: exits, deferrals (with per-level
     /// DAgger gates), and calibration-probe completions.
     fn on_reply(&mut self, reply: WorkerReply, st: &mut RunState, tx: &Sender<Response>) {
         let lvl = reply.level;
-        if reply.epoch != self.workers[lvl].epoch {
+        if reply.epoch != self.pools[lvl].workers[reply.replica].epoch {
             // A reply from a worker generation the supervisor already
             // replaced — its jobs were requeued; whichever copy answers
             // first wins, the other is dropped here or at the pending
             // lookup below.
             return;
         }
-        st.queues[lvl].in_flight = None;
+        st.queues[lvl].in_flight[reply.replica] = None;
         let n_levels = self.cfg.levels.len();
-        for (req_id, probs, score) in reply.results {
-            // Calibration probe for an already-answered request?
-            if let Some(w) = st.probe_truth.get_mut(&req_id) {
-                let y_star = w.y_star;
-                w.left -= 1;
-                if w.left == 0 {
-                    st.probe_truth.remove(&req_id);
+        for (req_id, is_probe, probs, score) in reply.results {
+            // Calibration probe for an already-answered (or remote)
+            // annotation? Probe jobs are tagged explicitly — client
+            // request ids and probe ids live in overlapping u64 spaces.
+            if is_probe {
+                if let Some(w) = st.probe_truth.get_mut(&req_id) {
+                    let y_star = w.y_star;
+                    w.left -= 1;
+                    if w.left == 0 {
+                        st.probe_truth.remove(&req_id);
+                    }
+                    self.push_calib(lvl, probs, y_star);
                 }
-                self.push_calib(lvl, probs, y_star);
                 continue;
             }
             let Some(state) = st.pending.get_mut(&req_id) else { continue };
@@ -710,7 +709,12 @@ impl Server {
                     self.to_expert(req_id, st, tx);
                 } else {
                     let f = state.f.clone();
-                    st.queues[next].push(Job { req_id, f, enq: Instant::now() });
+                    st.queues[next].push(Job {
+                        req_id,
+                        probe: false,
+                        f,
+                        enq: Instant::now(),
+                    });
                 }
             } else {
                 self.to_expert(req_id, st, tx);
@@ -733,36 +737,88 @@ impl Server {
                     batch.push(items[j].clone());
                 }
             }
-            let _ = self.workers[i].tx.send(WorkerMsg::TrainCalib(
-                batch,
-                self.cfg.levels[i].mlp_lr * MLP_LR_SCALE,
-            ));
+            self.pools[i]
+                .send_train_calib(batch, self.cfg.levels[i].mlp_lr * MLP_LR_SCALE);
             self.calib_pendings[i] = 0;
         }
     }
 
-    /// Replace a dead level worker: fresh thread from the same spec,
-    /// bumped epoch (stale replies get dropped), in-flight batch
-    /// requeued at the front of the level queue.
-    fn respawn(&mut self, i: usize, queues: &mut [LevelQueue]) -> Result<()> {
-        self.restarts[i] += 1;
-        if self.restarts[i] > MAX_RESTARTS {
-            return Err(Error::Worker(format!(
-                "level {i} worker exceeded {MAX_RESTARTS} restarts"
-            )));
-        }
-        let epoch = self.workers[i].epoch + 1;
-        let fresh =
-            spawn_worker(&self.specs[i], epoch, self.reply_tx.clone(), self.stats[i].clone());
-        let old = std::mem::replace(&mut self.workers[i], fresh);
-        drop(old.tx);
-        // The old thread has already exited (that is how we got here),
-        // so this join returns immediately; it reaps panics too.
-        let _ = old.handle.join();
-        if let Some(jobs) = queues[i].in_flight.take() {
+    /// Replace a dead pool worker: fresh thread from the same spec,
+    /// bumped epoch (stale replies get dropped), warm-started from the
+    /// latest published snapshot, in-flight batch requeued at the front
+    /// of the level queue.
+    fn respawn(&mut self, i: usize, r: usize, queues: &mut [LevelQueue]) -> Result<()> {
+        self.pools[i].respawn(r, self.serve_cfg.max_restarts)?;
+        if let Some(jobs) = queues[i].in_flight[r].take() {
             queues[i].requeue_front(jobs);
         }
         Ok(())
+    }
+
+    /// Drain annotations replicated from peer shards and absorb them
+    /// into the learner state (cross-shard convergence).
+    fn drain_sync(&mut self, st: &mut RunState) {
+        let mut remote: Vec<(Arc<Featurized>, usize)> = Vec::new();
+        let mut disconnected = false;
+        if let Some(rx) = &self.sync_in {
+            loop {
+                match rx.try_recv() {
+                    Ok(SyncBatch(items)) => remote.extend(items),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if disconnected {
+            // Peers shut down first (stream end); no more syncs.
+            self.sync_in = None;
+        }
+        for (f, y_star) in remote {
+            self.absorb_remote(f, y_star, st);
+        }
+    }
+
+    /// Absorb one peer-shard annotation: replay caches + training
+    /// cadence + calibration probes, exactly like a local expert
+    /// annotation — but with no response, no latency/accuracy
+    /// accounting, no β side effects, and no expert-call charge (the
+    /// origin shard already paid for the call).
+    fn absorb_remote(&mut self, f: Arc<Featurized>, y_star: usize, st: &mut RunState) {
+        let n_levels = self.cfg.levels.len();
+        let probe_id = self.next_probe_id();
+        let mut probes = 0usize;
+        for i in 0..n_levels {
+            self.caches[i].push((f.clone(), y_star));
+            self.pendings[i] += 1;
+            // Every level is "walk-skipped" for a remote annotation:
+            // its calibration example rides the level queue as a probe.
+            st.queues[i].push(Job {
+                req_id: probe_id,
+                probe: true,
+                f: f.clone(),
+                enq: Instant::now(),
+            });
+            probes += 1;
+            self.maybe_train(i);
+        }
+        st.probe_truth.insert(probe_id, ProbeWait { y_star, left: probes });
+    }
+
+    /// Fire the level's model-training trigger when its cadence is due
+    /// (shared by local annotations and cross-shard absorbs).
+    fn maybe_train(&mut self, i: usize) {
+        let bs = self.cfg.levels[i].batch_size;
+        if self.pendings[i] >= bs && self.caches[i].len() >= bs {
+            let items = self.caches[i].to_vec();
+            let picks = replay_picks(&mut self.rng, items.len(), bs);
+            let batch: Vec<(Arc<Featurized>, usize)> =
+                picks.iter().map(|&j| items[j].clone()).collect();
+            self.pools[i].send_train(batch, self.cfg.levels[i].model_lr);
+            self.pendings[i] = 0;
+        }
     }
 
     /// Expert annotation + the online-learning cadence (mirrors
@@ -782,6 +838,18 @@ impl Server {
         let state = st.pending.remove(&req_id).expect("pending state");
         let n_levels = self.cfg.levels.len();
         st.llm_calls += 1;
+        // Cross-shard sync: stage the annotation for broadcast.
+        if !self.sync_out.is_empty() && self.serve_cfg.shard.sync_interval > 0 {
+            self.sync_staged.push((state.f.clone(), y_star));
+            if self.sync_staged.len() >= self.serve_cfg.shard.sync_interval {
+                let staged = std::mem::take(&mut self.sync_staged);
+                for peer in &self.sync_out {
+                    // A peer that already drained and exited is fine.
+                    let _ = peer.send(SyncBatch(staged.clone()));
+                }
+            }
+        }
+        let probe_id = self.next_probe_id();
         let mut probes = 0usize;
         for i in 0..n_levels {
             self.caches[i].push((state.f.clone(), y_star));
@@ -794,27 +862,18 @@ impl Server {
                     // (m_i(x), z_i) example. In the serving topology
                     // that evaluation rides the level's batch queue.
                     st.queues[i].push(Job {
-                        req_id,
+                        req_id: probe_id,
+                        probe: true,
                         f: state.f.clone(),
                         enq: Instant::now(),
                     });
                     probes += 1;
                 }
             }
-            let bs = self.cfg.levels[i].batch_size;
-            if self.pendings[i] >= bs && self.caches[i].len() >= bs {
-                let items = self.caches[i].to_vec();
-                let picks = replay_picks(&mut self.rng, items.len(), bs);
-                let batch: Vec<(Arc<Featurized>, usize)> =
-                    picks.iter().map(|&j| items[j].clone()).collect();
-                let _ = self.workers[i]
-                    .tx
-                    .send(WorkerMsg::Train(batch, self.cfg.levels[i].model_lr));
-                self.pendings[i] = 0;
-            }
+            self.maybe_train(i);
         }
         if probes > 0 {
-            st.probe_truth.insert(req_id, ProbeWait { y_star, left: probes });
+            st.probe_truth.insert(probe_id, ProbeWait { y_star, left: probes });
         }
         st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
         st.handled[n_levels] += 1;
@@ -847,7 +906,7 @@ impl Server {
         let Some(state) = st.pending.get(&req_id) else { return };
         if state.seen.iter().all(|s| s.is_none()) {
             let f = state.f.clone();
-            st.queues[0].push(Job { req_id, f, enq: Instant::now() });
+            st.queues[0].push(Job { req_id, probe: false, f, enq: Instant::now() });
             return;
         }
         let state = st.pending.remove(&req_id).expect("pending state");
@@ -929,16 +988,30 @@ mod tests {
         assert_eq!(report.handled.iter().sum::<usize>(), report.served);
         // a quiet run: no restarts, bounded pending, betas decayed
         assert_eq!(report.restarts, vec![0, 0]);
+        assert_eq!(report.warm_respawns, vec![0, 0]);
+        assert_eq!(report.restart_cap, ServeConfig::default().max_restarts);
         assert!(report.peak_pending <= ServeConfig::default().max_pending);
         assert_eq!(report.final_betas.len(), 2);
         assert!(report.final_betas.iter().all(|&b| b < 1.0));
         // online learning actually reached the workers
         assert!(report.train_batches.iter().any(|&t| t > 0), "{:?}", report.train_batches);
         assert!(report.calib_batches.iter().any(|&t| t > 0), "{:?}", report.calib_batches);
+        // the authority published snapshots on the default cadence, and
+        // all inference ran on the single pool member
+        assert!(report.snapshots.iter().any(|&s| s > 0), "{:?}", report.snapshots);
+        assert_eq!(report.replica_jobs.len(), 2);
+        for lvl in &report.replica_jobs {
+            assert_eq!(lvl.len(), 1, "default topology is one member per pool");
+        }
     }
 
     fn job(id: u64, enq: Instant) -> Job {
-        Job { req_id: id, f: Arc::new(Pipeline::default().featurize("doc")), enq }
+        Job {
+            req_id: id,
+            probe: false,
+            f: Arc::new(Pipeline::default().featurize("doc")),
+            enq,
+        }
     }
 
     #[test]
@@ -950,7 +1023,7 @@ mod tests {
         let old = Instant::now()
             .checked_sub(Duration::from_millis(50))
             .expect("monotonic clock too young");
-        let mut q = LevelQueue::new();
+        let mut q = LevelQueue::new(1);
         q.push(job(1, old));
         q.push(job(2, old));
         let taken = q.take(1); // batch_max = 1 → partial drain
@@ -971,6 +1044,17 @@ mod tests {
     }
 
     #[test]
+    fn free_replica_prefers_least_loaded() {
+        let mut q = LevelQueue::new(3);
+        assert_eq!(q.free_replica(&[5, 2, 9]), Some(1));
+        q.in_flight[1] = Some(vec![]);
+        assert_eq!(q.free_replica(&[5, 2, 9]), Some(0));
+        q.in_flight[0] = Some(vec![]);
+        q.in_flight[2] = Some(vec![]);
+        assert_eq!(q.free_replica(&[5, 2, 9]), None);
+    }
+
+    #[test]
     fn rejects_degenerate_serve_config() {
         let b = Benchmark::build_sized(BenchmarkId::Imdb, 1, 4);
         let expert = Expert::new(
@@ -981,6 +1065,11 @@ mod tests {
         );
         let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
         let bad = ServeConfig { max_pending: 0, ..ServeConfig::default() };
+        assert!(Server::new(cfg.clone(), 2, expert.clone(), bad, "artifacts").is_err());
+        let bad = ServeConfig {
+            shard: ShardConfig { replicas_per_level: 0, ..ShardConfig::default() },
+            ..ServeConfig::default()
+        };
         assert!(Server::new(cfg, 2, expert, bad, "artifacts").is_err());
     }
 }

@@ -1,0 +1,508 @@
+//! Per-level worker pools: one *learner authority* plus read-only
+//! inference replicas, glued together by published model snapshots.
+//!
+//! **Why an authority.** Online learning must stay a single serialized
+//! trajectory to preserve learner parity with [`crate::cascade::Cascade`]
+//! (same batches, same order, same weights). So all `Train`/`TrainCalib`
+//! messages go to worker 0 of each pool; replicas never train. The
+//! authority periodically exports a [`Snapshot`] pair into a shared
+//! [`SnapshotSlot`]; replicas install the latest snapshot lazily before
+//! serving an inference batch. Replica predictions therefore lag the
+//! authority by at most `publish_every` training triggers — the
+//! staleness trade-off reported as [`LevelPool::snapshot_lag`].
+//!
+//! **Warm respawn.** A respawned worker (authority or replica)
+//! restores the latest published snapshot at startup instead of
+//! resetting to fresh initialization — the learned level weights are
+//! the asset the pool exists to preserve. Only gradient steps after
+//! the last publication are lost (and the router's replay caches
+//! re-teach those on the next training trigger).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::{Engine, ModelKind};
+use crate::error::{Error, Result};
+use crate::models::{build_calibrator, build_level, Featurized, Snapshot};
+
+use super::Job;
+
+/// One published (model, calibrator) state pair.
+#[derive(Clone, Debug)]
+pub struct LevelSnapshot {
+    /// Publication sequence number (1-based; monotone per level).
+    pub seq: u64,
+    /// Level-model parameters.
+    pub model: Snapshot,
+    /// Deferral-calibrator parameters.
+    pub calib: Snapshot,
+}
+
+/// Shared slot the authority publishes into and replicas/respawns read.
+/// Lives in an `Arc` owned by the pool so it survives worker respawns.
+pub(crate) struct SnapshotSlot {
+    seq: AtomicU64,
+    /// Authority `train_chunks` at the last publication (staleness
+    /// accounting: lag = live chunks − published chunks).
+    published_chunks: AtomicU64,
+    latest: Mutex<Option<Arc<LevelSnapshot>>>,
+}
+
+impl SnapshotSlot {
+    fn new() -> Self {
+        SnapshotSlot {
+            seq: AtomicU64::new(0),
+            published_chunks: AtomicU64::new(0),
+            latest: Mutex::new(None),
+        }
+    }
+
+    /// Latest publication sequence (0 = never published).
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// The latest published snapshot, if any.
+    pub fn latest(&self) -> Option<Arc<LevelSnapshot>> {
+        self.latest.lock().expect("snapshot slot poisoned").clone()
+    }
+
+    fn publish(&self, model: Snapshot, calib: Snapshot, chunks: u64) {
+        let seq = self.seq.load(Ordering::Acquire) + 1;
+        let snap = Arc::new(LevelSnapshot { seq, model, calib });
+        *self.latest.lock().expect("snapshot slot poisoned") = Some(snap);
+        self.published_chunks.store(chunks, Ordering::Release);
+        // seq is bumped last: a reader that observes the new seq is
+        // guaranteed to find the new snapshot in the slot.
+        self.seq.store(seq, Ordering::Release);
+    }
+}
+
+pub(crate) enum WorkerMsg {
+    Infer(Vec<Job>),
+    Train(Vec<(Arc<Featurized>, usize)>, f32),
+    TrainCalib(Vec<(Vec<f32>, f32)>, f32),
+    /// Authority only: export current weights into the shared slot.
+    Publish,
+    /// Simulated crash (supervision tests): the worker thread exits
+    /// without replying, exactly like a panic would leave it.
+    Crash,
+    Shutdown,
+}
+
+pub(crate) struct WorkerReply {
+    pub level: usize,
+    /// Which pool member answered (0 = authority).
+    pub replica: usize,
+    /// Worker generation — replies from a generation the supervisor
+    /// already replaced are dropped (their jobs were requeued).
+    pub epoch: u64,
+    /// (req_id, probe-job?, probs, score) — the probe flag is echoed
+    /// from [`Job::probe`] so the router never has to guess which id
+    /// space a reply belongs to.
+    pub results: Vec<(u64, bool, Vec<f32>, f32)>,
+}
+
+/// Training-work counters shared router ↔ authority (survive respawns:
+/// the supervisor re-hands the same `Arc` to the replacement worker).
+#[derive(Default)]
+pub(crate) struct WorkerStats {
+    pub train_chunks: AtomicU64,
+    pub calib_chunks: AtomicU64,
+}
+
+/// Everything needed to (re)build one pool worker.
+#[derive(Clone)]
+pub(crate) struct WorkerSpec {
+    pub level: usize,
+    pub kind: ModelKind,
+    pub classes: usize,
+    pub seed: u64,
+    pub engine: Engine,
+    pub artifacts_dir: String,
+}
+
+/// Handle to one worker thread.
+pub(crate) struct Worker {
+    pub tx: Sender<WorkerMsg>,
+    pub handle: JoinHandle<()>,
+    pub epoch: u64,
+}
+
+fn spawn_worker(
+    spec: &WorkerSpec,
+    replica: usize,
+    epoch: u64,
+    reply_tx: Sender<WorkerReply>,
+    stats: Arc<WorkerStats>,
+    slot: Arc<SnapshotSlot>,
+) -> Worker {
+    let (tx, rx): (Sender<WorkerMsg>, Receiver<WorkerMsg>) = channel();
+    let spec = spec.clone();
+    let handle = std::thread::spawn(move || {
+        // The engine is constructed on this thread (PjRtClient is !Send).
+        let is_pjrt = spec.engine.is_pjrt();
+        let pjrt = if is_pjrt {
+            Some(crate::runtime::worker_engine(&spec.artifacts_dir))
+        } else {
+            None
+        };
+        let mut model = build_level(pjrt.as_ref(), spec.kind, spec.classes, spec.seed)
+            .expect("worker model");
+        let mut calib = build_calibrator(pjrt.as_ref(), spec.classes, spec.seed)
+            .expect("worker calibrator");
+        // Warm start: every spawn (first or respawn, authority or
+        // replica) resumes from the latest published weights.
+        let mut installed = 0u64;
+        if let Some(s) = slot.latest() {
+            model.restore(&s.model).expect("warm-start model restore");
+            calib.restore(&s.calib).expect("warm-start calibrator restore");
+            installed = s.seq;
+        }
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                WorkerMsg::Infer(jobs) => {
+                    // Replicas track the slot; the authority's live
+                    // weights are always at least as fresh as it.
+                    if replica > 0 && slot.seq() > installed {
+                        if let Some(s) = slot.latest() {
+                            model.restore(&s.model).expect("replica model install");
+                            calib.restore(&s.calib).expect("replica calib install");
+                            installed = s.seq;
+                        }
+                    }
+                    let fs: Vec<&Featurized> =
+                        jobs.iter().map(|j| j.f.as_ref()).collect();
+                    let probs = model.predict_batch(&fs);
+                    let results = jobs
+                        .iter()
+                        .zip(probs)
+                        .map(|(j, p)| {
+                            let s = calib.score(&p);
+                            (j.req_id, j.probe, p, s)
+                        })
+                        .collect();
+                    let reply =
+                        WorkerReply { level: spec.level, replica, epoch, results };
+                    if reply_tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                WorkerMsg::Train(batch, lr) => {
+                    for chunk in batch.chunks(8) {
+                        if chunk.len() < 8 && is_pjrt {
+                            break; // pjrt step executables are fixed at batch 8
+                        }
+                        let b: Vec<(&Featurized, usize)> =
+                            chunk.iter().map(|(f, y)| (f.as_ref(), *y)).collect();
+                        model.train(&b, lr);
+                        stats.train_chunks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                WorkerMsg::TrainCalib(batch, lr) => {
+                    for chunk in batch.chunks(8) {
+                        if chunk.len() < 8 && is_pjrt {
+                            break; // same fixed-batch constraint as Train
+                        }
+                        let b: Vec<(&[f32], f32)> =
+                            chunk.iter().map(|(p, z)| (p.as_slice(), *z)).collect();
+                        calib.train(&b, lr);
+                        stats.calib_chunks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                WorkerMsg::Publish => {
+                    // Backends that cannot export state (no host
+                    // mirror) simply skip publication — replicas then
+                    // keep serving their init weights and respawns are
+                    // cold, which is the pre-pool behavior.
+                    if let (Some(m), Some(c)) = (model.snapshot(), calib.snapshot()) {
+                        slot.publish(m, c, stats.train_chunks.load(Ordering::Relaxed));
+                    }
+                }
+                WorkerMsg::Crash => return,
+                WorkerMsg::Shutdown => break,
+            }
+        }
+    });
+    Worker { tx, handle, epoch }
+}
+
+/// The worker pool for one cascade level: authority + replicas +
+/// snapshot slot + supervision bookkeeping.
+pub(crate) struct LevelPool {
+    spec: WorkerSpec,
+    pub workers: Vec<Worker>,
+    pub stats: Arc<WorkerStats>,
+    slot: Arc<SnapshotSlot>,
+    reply_tx: Sender<WorkerReply>,
+    /// Respawns so far (all pool members count toward the level cap).
+    pub restarts: usize,
+    /// Respawns that installed a published snapshot (vs cold resets).
+    pub warm_respawns: usize,
+    /// Inference jobs dispatched per pool member.
+    pub replica_jobs: Vec<u64>,
+    /// Model-training triggers sent to the authority.
+    train_sends: u64,
+    /// Training triggers between snapshot publications (0 = never).
+    publish_every: usize,
+}
+
+impl LevelPool {
+    pub fn new(
+        spec: WorkerSpec,
+        replicas: usize,
+        publish_every: usize,
+        reply_tx: Sender<WorkerReply>,
+    ) -> Self {
+        assert!(replicas >= 1, "a pool needs at least the authority");
+        let stats = Arc::new(WorkerStats::default());
+        let slot = Arc::new(SnapshotSlot::new());
+        let workers = (0..replicas)
+            .map(|r| spawn_worker(&spec, r, 0, reply_tx.clone(), stats.clone(), slot.clone()))
+            .collect();
+        LevelPool {
+            spec,
+            workers,
+            stats,
+            slot,
+            reply_tx,
+            restarts: 0,
+            warm_respawns: 0,
+            replica_jobs: vec![0; replicas],
+            train_sends: 0,
+            publish_every,
+        }
+    }
+
+    /// Pool capacity (authority + replicas).
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dispatch an inference batch to pool member `replica`; returns
+    /// false when the worker is gone (caller respawns + requeues).
+    pub fn send_infer(&mut self, replica: usize, jobs: Vec<Job>) -> bool {
+        let n = jobs.len() as u64;
+        let ok = self.workers[replica].tx.send(WorkerMsg::Infer(jobs)).is_ok();
+        if ok {
+            self.replica_jobs[replica] += n;
+        }
+        ok
+    }
+
+    /// Send a model-training trigger to the learner authority, and a
+    /// snapshot publication on the configured cadence.
+    pub fn send_train(&mut self, batch: Vec<(Arc<Featurized>, usize)>, lr: f32) {
+        let _ = self.workers[0].tx.send(WorkerMsg::Train(batch, lr));
+        self.train_sends += 1;
+        if self.publish_every > 0 && self.train_sends % self.publish_every as u64 == 0 {
+            let _ = self.workers[0].tx.send(WorkerMsg::Publish);
+        }
+    }
+
+    /// Send a calibrator-training trigger to the learner authority.
+    pub fn send_train_calib(&mut self, batch: Vec<(Vec<f32>, f32)>, lr: f32) {
+        let _ = self.workers[0].tx.send(WorkerMsg::TrainCalib(batch, lr));
+    }
+
+    /// Inject a crash into pool member `replica` (best-effort).
+    pub fn crash(&self, replica: usize) {
+        let _ = self.workers[replica].tx.send(WorkerMsg::Crash);
+    }
+
+    /// Replace a dead pool member: fresh thread from the same spec,
+    /// bumped epoch (stale replies get dropped). The replacement warm
+    /// starts from the latest published snapshot when one exists.
+    pub fn respawn(&mut self, replica: usize, cap: usize) -> Result<()> {
+        self.restarts += 1;
+        if self.restarts > cap {
+            return Err(Error::Worker(format!(
+                "level {} worker pool exceeded {cap} restarts",
+                self.spec.level
+            )));
+        }
+        if self.slot.seq() > 0 {
+            self.warm_respawns += 1;
+        }
+        let epoch = self.workers[replica].epoch + 1;
+        let fresh = spawn_worker(
+            &self.spec,
+            replica,
+            epoch,
+            self.reply_tx.clone(),
+            self.stats.clone(),
+            self.slot.clone(),
+        );
+        let old = std::mem::replace(&mut self.workers[replica], fresh);
+        drop(old.tx);
+        // The old thread has already exited (that is how we got here),
+        // so this join returns immediately; it reaps panics too.
+        let _ = old.handle.join();
+        Ok(())
+    }
+
+    /// Shut down every pool member and join the threads.
+    pub fn shutdown(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.handle.join();
+        }
+    }
+
+    /// Snapshot publications so far.
+    pub fn published(&self) -> u64 {
+        self.slot.seq()
+    }
+
+    /// The latest published snapshot (tests, external checkpointing).
+    pub fn latest_snapshot(&self) -> Option<Arc<LevelSnapshot>> {
+        self.slot.latest()
+    }
+
+    /// Snapshot staleness: authority training chunks not yet captured
+    /// by a publication (what a replica or warm respawn would lose).
+    pub fn snapshot_lag(&self) -> u64 {
+        self.stats
+            .train_chunks
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.slot.published_chunks.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    use crate::models::{HostCalibrator, HostLrLevel, LevelModel, Pipeline};
+
+    fn spec() -> WorkerSpec {
+        WorkerSpec {
+            level: 0,
+            kind: ModelKind::Lr,
+            classes: 2,
+            seed: 7,
+            engine: Engine::Host,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    fn train_batch(p: &Pipeline) -> Vec<(Arc<Featurized>, usize)> {
+        (0..8)
+            .map(|i| {
+                let text = if i % 2 == 0 { "kw0x001 kw0x002" } else { "kw1x001 kw1x002" };
+                (Arc::new(p.featurize(text)), i % 2)
+            })
+            .collect()
+    }
+
+    fn wait_for<F: Fn() -> bool>(what: &str, f: F) {
+        let t0 = Instant::now();
+        while !f() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timeout waiting for {what}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn killed_worker_resumes_from_its_latest_snapshot() {
+        // The warm-respawn contract: train the authority, publish, kill
+        // it, respawn — the replacement must serve predictions
+        // bit-for-bit equal to a host model restored from the slot,
+        // not fresh-initialization predictions.
+        let (reply_tx, reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 1, 1, reply_tx);
+        let p = Pipeline::default();
+        pool.send_train(train_batch(&p), 0.5); // publish_every = 1 → publishes
+        wait_for("publication", || pool.published() >= 1);
+        let snap = pool.latest_snapshot().expect("published snapshot");
+
+        pool.crash(0);
+        wait_for("crash", || pool.workers[0].handle.is_finished());
+        pool.respawn(0, 16).unwrap();
+        assert_eq!(pool.restarts, 1);
+        assert_eq!(pool.warm_respawns, 1, "respawn with a snapshot must be warm");
+
+        let probe = Arc::new(p.featurize("kw0x001 kw1x003"));
+        assert!(pool.send_infer(0, vec![Job {
+            req_id: 99,
+            probe: false,
+            f: probe.clone(),
+            enq: Instant::now(),
+        }]));
+        let reply = reply_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.epoch, 1);
+        let (_, _, probs, score) = &reply.results[0];
+
+        let mut expect_model = HostLrLevel::new(2);
+        expect_model.restore(&snap.model).unwrap();
+        let mut expect_calib = HostCalibrator::new(2, 7);
+        crate::models::Calibrator::restore(&mut expect_calib, &snap.calib).unwrap();
+        let want = expect_model.predict(&probe);
+        assert_ne!(
+            HostLrLevel::new(2).predict(&probe),
+            want,
+            "trained weights must differ from fresh init for this test to mean anything"
+        );
+        assert_eq!(probs, &want, "respawned worker must serve the snapshot weights");
+        assert_eq!(
+            *score,
+            crate::models::Calibrator::score(&mut expect_calib, probs),
+            "calibrator state must warm-restore too"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn replicas_install_published_snapshots() {
+        let (reply_tx, reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 2, 1, reply_tx);
+        let p = Pipeline::default();
+        pool.send_train(train_batch(&p), 0.5);
+        wait_for("publication", || pool.published() >= 1);
+        let snap = pool.latest_snapshot().unwrap();
+
+        let probe = Arc::new(p.featurize("kw0x001"));
+        assert!(pool.send_infer(1, vec![Job {
+            req_id: 1,
+            probe: false,
+            f: probe.clone(),
+            enq: Instant::now(),
+        }]));
+        let reply = reply_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.replica, 1);
+        let mut expect = HostLrLevel::new(2);
+        expect.restore(&snap.model).unwrap();
+        assert_eq!(
+            reply.results[0].2,
+            expect.predict(&probe),
+            "replica must serve the published (trained) weights, not init"
+        );
+        assert_eq!(pool.replica_jobs, vec![0, 1]);
+        assert_eq!(pool.snapshot_lag(), 0, "everything trained is published");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn publish_cadence_and_lag_accounting() {
+        let (reply_tx, _reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 1, 2, reply_tx);
+        let p = Pipeline::default();
+        pool.send_train(train_batch(&p), 0.5); // 1st trigger: no publish
+        pool.send_train(train_batch(&p), 0.5); // 2nd trigger: publish
+        pool.send_train(train_batch(&p), 0.5); // 3rd trigger: lag grows
+        wait_for("publication", || pool.published() >= 1);
+        // Wait for the 3rd train to finish (train is serialized after
+        // the publish on the authority's channel).
+        wait_for("training", || {
+            pool.stats.train_chunks.load(Ordering::Relaxed) >= 3
+        });
+        assert_eq!(pool.published(), 1);
+        assert_eq!(pool.snapshot_lag(), 1, "one trigger past the last publication");
+        pool.shutdown();
+    }
+}

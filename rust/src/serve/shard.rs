@@ -1,0 +1,305 @@
+//! Multi-router scale-out: N independent [`Server`] shards behind a
+//! hashing front dispatcher, with an optional cross-shard annotation
+//! broadcast.
+//!
+//! **Why shards.** One router thread serializes admission, the DAgger
+//! walk, and the learning cadence; past a few thousand req/s it is the
+//! bottleneck regardless of worker capacity. Sharding runs N routers —
+//! each with its own worker pools, learner state, and RNG — and splits
+//! traffic by a multiplicative hash of the request id, so scale-out is
+//! a topology change, not an algorithm change.
+//!
+//! **Why the broadcast.** A shard only learns from the annotations its
+//! own traffic buys, so N shards each see ~1/N of the single router's
+//! training signal. With `ShardConfig::sync_interval = k`, every k
+//! expert annotations a shard replicates them (featurized query +
+//! label) to its peers, which absorb them through the same replay
+//! caches and training cadence as local annotations — every shard's
+//! learners then converge toward the single-learner trajectory while
+//! still answering only their own traffic. β schedules stay local (one
+//! decay per *admitted* request), which is the deviation from exact
+//! single-learner parity this topology accepts; `shards = 1` remains
+//! bit-for-bit the single router.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::config::CascadeConfig;
+use crate::error::{Error, Result};
+use crate::sim::Expert;
+use crate::util::Percentiles;
+
+use super::{Chaos, Request, Response, Server, ServeConfig, ServeReport, SyncBatch};
+
+/// Which shard a request id lands on (Fibonacci multiplicative hash —
+/// sequential client ids spread uniformly).
+pub fn shard_of(id: u64, shards: usize) -> usize {
+    ((id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize) % shards.max(1)
+}
+
+/// Aggregated result of a multi-shard run.
+#[derive(Debug)]
+pub struct ShardReport {
+    /// Per-shard reports, in shard order.
+    pub shards: Vec<ServeReport>,
+    /// Wall clock of the whole run (front's view).
+    pub wall_secs: f64,
+}
+
+impl ShardReport {
+    /// Total requests served (excludes shed).
+    pub fn served(&self) -> usize {
+        self.shards.iter().map(|r| r.served).sum()
+    }
+
+    /// Total requests shed by admission control.
+    pub fn shed(&self) -> usize {
+        self.shards.iter().map(|r| r.shed).sum()
+    }
+
+    /// Total expert calls.
+    pub fn llm_calls(&self) -> u64 {
+        self.shards.iter().map(|r| r.llm_calls).sum()
+    }
+
+    /// Served requests per second across all shards.
+    pub fn throughput(&self) -> f64 {
+        self.served() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Serve-weighted accuracy across shards.
+    pub fn accuracy(&self) -> f64 {
+        let served = self.served();
+        if served == 0 {
+            return 0.0;
+        }
+        self.shards
+            .iter()
+            .map(|r| r.accuracy * r.served as f64)
+            .sum::<f64>()
+            / served as f64
+    }
+
+    /// Latency distribution over the union of all shards' samples.
+    pub fn latency_ms(&self) -> Percentiles {
+        let mut p = Percentiles::new();
+        for r in &self.shards {
+            p.merge(&r.latency_ms);
+        }
+        p
+    }
+
+    /// Worst end-of-run snapshot staleness across shards and levels.
+    pub fn max_snapshot_lag(&self) -> u64 {
+        self.shards
+            .iter()
+            .flat_map(|r| r.snapshot_lag.iter().copied())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// JSON encoding (bench baselines, report files).
+    pub fn to_json(&self) -> crate::codec::Json {
+        use crate::codec::Json;
+        let q = self.latency_ms().pcts(&[50.0, 95.0, 99.0]);
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards.len() as f64)),
+            ("served", Json::Num(self.served() as f64)),
+            ("shed", Json::Num(self.shed() as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("throughput", Json::Num(self.throughput())),
+            ("p50_ms", Json::Num(q[0])),
+            ("p95_ms", Json::Num(q[1])),
+            ("p99_ms", Json::Num(q[2])),
+            ("accuracy", Json::Num(self.accuracy())),
+            ("llm_calls", Json::Num(self.llm_calls() as f64)),
+            ("max_snapshot_lag", Json::Num(self.max_snapshot_lag() as f64)),
+            (
+                "per_shard",
+                Json::Arr(self.shards.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The front dispatcher: builds N router shards, wires the cross-shard
+/// annotation broadcast, hashes requests to shards, and merges reports.
+pub struct ShardFront {
+    servers: Vec<Server>,
+}
+
+impl ShardFront {
+    /// Build `serve_cfg.shard.shards` routers. Shard 0 keeps
+    /// `cfg.seed` untouched, so the 1-shard front is bit-for-bit the
+    /// single [`Server`]; further shards decorrelate their RNG streams
+    /// by folding the shard index into the seed.
+    pub fn new(
+        cfg: CascadeConfig,
+        classes: usize,
+        expert: Expert,
+        serve_cfg: ServeConfig,
+        artifacts_dir: &str,
+    ) -> Result<Self> {
+        let n = serve_cfg.shard.shards;
+        if n == 0 {
+            return Err(Error::Config("shards must be positive".into()));
+        }
+        let mut servers = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut shard_cfg = cfg.clone();
+            shard_cfg.seed = cfg.seed ^ ((i as u64) * 0x51A2_D007);
+            servers.push(Server::new(
+                shard_cfg,
+                classes,
+                expert.clone(),
+                serve_cfg,
+                artifacts_dir,
+            )?);
+        }
+        // Wire the annotation broadcast: every shard gets a sender to
+        // every peer and its own inbox.
+        if n > 1 && serve_cfg.shard.sync_interval > 0 {
+            let links: Vec<(Sender<SyncBatch>, Receiver<SyncBatch>)> =
+                (0..n).map(|_| channel()).collect();
+            let senders: Vec<Sender<SyncBatch>> =
+                links.iter().map(|(tx, _)| tx.clone()).collect();
+            for (i, (_, inbox)) in links.into_iter().enumerate() {
+                let peers: Vec<Sender<SyncBatch>> = senders
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(_, tx)| tx.clone())
+                    .collect();
+                servers[i].wire_sync(peers, inbox);
+            }
+        }
+        Ok(ShardFront { servers })
+    }
+
+    /// Number of shards behind the front.
+    pub fn shards(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Set the cost-pressure knob on every shard.
+    pub fn set_threshold_scale(&mut self, s: f64) {
+        for srv in &mut self.servers {
+            srv.set_threshold_scale(s);
+        }
+    }
+
+    /// Arm fault injection on one shard.
+    pub fn inject_chaos(&mut self, shard: usize, chaos: Chaos) {
+        self.servers[shard].inject_chaos(chaos);
+    }
+
+    /// Serve a stream: dispatch `rx` across the shards by request-id
+    /// hash, fan all responses into `tx`, and aggregate the reports.
+    pub fn serve(
+        self,
+        rx: Receiver<Request>,
+        tx: Sender<Response>,
+    ) -> Result<ShardReport> {
+        let t0 = std::time::Instant::now();
+        let n = self.servers.len();
+        let mut shard_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for srv in self.servers {
+            let (shard_tx, shard_rx) = channel::<Request>();
+            let resp_tx = tx.clone();
+            shard_txs.push(shard_tx);
+            handles.push(std::thread::spawn(move || srv.serve(shard_rx, resp_tx)));
+        }
+        drop(tx);
+        // Dispatch on this thread: the front is pure routing (hash +
+        // channel send), so it never becomes the serialization point
+        // the per-shard routers are.
+        for req in rx.iter() {
+            let s = shard_of(req.id, n);
+            if shard_txs[s].send(req).is_err() {
+                // The shard died; its join below surfaces the error.
+                break;
+            }
+        }
+        drop(shard_txs); // shards drain and stop
+        let mut reports = Vec::with_capacity(n);
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(report)) => reports.push(report),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or(Some(Error::Worker("shard thread panicked".into())))
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(ShardReport { shards: reports, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_spreads_sequential_ids() {
+        let shards = 4;
+        let mut counts = vec![0usize; shards];
+        for id in 0..4000u64 {
+            counts[shard_of(id, shards)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (700..=1300).contains(&c),
+                "shard {s} got {c}/4000 — hash is not spreading"
+            );
+        }
+        assert_eq!(shard_of(123, 1), 0);
+    }
+
+    #[test]
+    fn report_aggregates_across_shards() {
+        fn report(served: usize, acc: f64, lat: &[f64]) -> ServeReport {
+            let mut p = Percentiles::new();
+            for &x in lat {
+                p.push(x);
+            }
+            ServeReport {
+                served,
+                shed: 1,
+                latency_ms: p,
+                wall_secs: 2.0,
+                throughput: served as f64 / 2.0,
+                handled: vec![served],
+                accuracy: acc,
+                llm_calls: 3,
+                restarts: vec![0],
+                restart_cap: 16,
+                warm_respawns: vec![0],
+                snapshots: vec![2],
+                snapshot_lag: vec![served as u64],
+                replica_jobs: vec![vec![served as u64]],
+                peak_pending: 1,
+                final_betas: vec![0.5],
+                train_batches: vec![1],
+                calib_batches: vec![1],
+            }
+        }
+        let r = ShardReport {
+            shards: vec![report(100, 0.9, &[1.0, 2.0]), report(300, 0.7, &[3.0, 4.0])],
+            wall_secs: 2.0,
+        };
+        assert_eq!(r.served(), 400);
+        assert_eq!(r.shed(), 2);
+        assert_eq!(r.llm_calls(), 6);
+        assert!((r.accuracy() - 0.75).abs() < 1e-12, "serve-weighted: {}", r.accuracy());
+        assert_eq!(r.latency_ms().len(), 4);
+        assert_eq!(r.max_snapshot_lag(), 300);
+        let v = crate::codec::parse(&r.to_json().to_string_compact()).unwrap();
+        assert_eq!(v.get("served").unwrap().as_usize(), Some(400));
+        assert_eq!(v.get("per_shard").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

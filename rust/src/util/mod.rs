@@ -104,6 +104,13 @@ impl Percentiles {
         self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(0.0)
     }
 
+    /// Absorb another distribution's observations (cross-shard report
+    /// aggregation: percentiles over the union, not averages of
+    /// per-shard percentiles).
+    pub fn merge(&mut self, other: &Percentiles) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
     /// Several percentiles with a single sort (SLO checks, JSON
     /// baselines) — one entry per requested `p`, same semantics as
     /// [`Percentiles::pct`].

@@ -1,15 +1,17 @@
 //! Serve-layer load, supervision, and learner-parity tests (host
 //! engine; no artifacts required): worker-death recovery under an
-//! open-loop arrival process, overload shedding with a bounded router,
-//! and the Server ↔ Cascade parity invariants (per-level DAgger β
-//! trajectories, training-batch counts) that pin the two online
-//! learners together.
+//! open-loop arrival process (warm respawn from the latest snapshot),
+//! overload shedding with a bounded router, multi-shard/multi-replica
+//! scale-out, and the Server ↔ Cascade parity invariants (per-level
+//! DAgger β trajectories, training-batch counts) that pin the two
+//! online learners together.
 
 use std::sync::mpsc::channel;
 
 use ocl::cascade::Cascade;
-use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig, ShardConfig};
 use ocl::data::Benchmark;
+use ocl::serve::shard::{shard_of, ShardFront};
 use ocl::serve::{load, Chaos, Request, Response, Server};
 use ocl::sim::{Expert, ExpertProfile};
 
@@ -71,7 +73,7 @@ fn worker_death_mid_stream_recovers_and_meets_slo() {
     let mut server =
         Server::new(cfg, b.classes, expert_for(&b, 31), unbounded(), "artifacts")
             .unwrap();
-    server.inject_chaos(Chaos { kill_level: 0, after_requests: 50 });
+    server.inject_chaos(Chaos { kill_level: 0, kill_replica: 0, after_requests: 50 });
 
     let (req_tx, req_rx) = channel();
     let (resp_tx, resp_rx) = channel();
@@ -143,6 +145,136 @@ fn overload_sheds_and_bounds_the_router() {
     for r in &responses {
         assert_eq!(r.shed, r.handled_by == report.handled.len());
     }
+}
+
+#[test]
+fn worker_death_after_training_respawns_warm() {
+    // The warm-respawn acceptance: by the time the kill lands (after
+    // 120 admissions with β₁ = 1 early, training has certainly fired
+    // and published), the supervisor must restore the replacement from
+    // the latest snapshot — not reset it to fresh weights.
+    let n = 400;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 37, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 37;
+        c
+    };
+    let serve_cfg = ServeConfig { publish_every: 1, ..unbounded() };
+    let mut server =
+        Server::new(cfg, b.classes, expert_for(&b, 37), serve_cfg, "artifacts").unwrap();
+    server.inject_chaos(Chaos { kill_level: 0, kill_replica: 0, after_requests: 120 });
+
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = server.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_answered_exactly_once(&responses, n);
+    assert!(
+        report.restarts[0] >= 1,
+        "injected death must be detected: {:?}",
+        report.restarts
+    );
+    assert!(
+        report.snapshots[0] >= 1,
+        "publish_every = 1 with training must have published: {:?}",
+        report.snapshots
+    );
+    assert_eq!(
+        report.warm_respawns, report.restarts,
+        "every respawn after the first publication must restore the snapshot"
+    );
+    assert_eq!(report.restart_cap, serve_cfg.max_restarts);
+}
+
+#[test]
+fn restart_cap_is_configurable_and_enforced() {
+    // A zero budget turns the first injected death into a hard error —
+    // the satellite contract that the 16/level constant became config.
+    let n = 200;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 39, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 39;
+        c
+    };
+    let serve_cfg = ServeConfig { max_restarts: 0, ..unbounded() };
+    let mut server =
+        Server::new(cfg, b.classes, expert_for(&b, 39), serve_cfg, "artifacts").unwrap();
+    server.inject_chaos(Chaos { kill_level: 0, kill_replica: 0, after_requests: 20 });
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let err = server.serve(req_rx, resp_tx).unwrap_err();
+    submit.join().unwrap();
+    drop(resp_rx);
+    assert!(
+        err.to_string().contains("restarts"),
+        "cap breach must name the budget: {err}"
+    );
+}
+
+#[test]
+fn two_shards_two_replicas_answer_exactly_once_and_sync_learning() {
+    let n = 600;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 49, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 49;
+        c
+    };
+    let serve_cfg = ServeConfig {
+        max_pending: 1 << 16,
+        shard: ShardConfig { shards: 2, replicas_per_level: 2, sync_interval: 8 },
+        ..ServeConfig::default()
+    };
+    let front =
+        ShardFront::new(cfg, b.classes, expert_for(&b, 49), serve_cfg, "artifacts")
+            .unwrap();
+    assert_eq!(front.shards(), 2);
+    let (req_rx, submit) = blast(&b);
+    let (resp_tx, resp_rx) = channel();
+    let report = front.serve(req_rx, resp_tx).unwrap();
+    submit.join().unwrap();
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_answered_exactly_once(&responses, n);
+    assert_eq!(report.served() + report.shed(), n);
+    assert_eq!(report.shed(), 0, "unbounded run must not shed");
+    // traffic actually split across the shards
+    for (s, r) in report.shards.iter().enumerate() {
+        assert!(
+            r.served + r.shed >= n / 8,
+            "shard {s} starved: {} of {n}",
+            r.served
+        );
+        // pool shape: 2 members per level, and the topology knobs echo
+        for lvl in &r.replica_jobs {
+            assert_eq!(lvl.len(), 2);
+        }
+    }
+    // the dispatcher hash and the per-shard serve counts agree
+    let mut want = vec![0usize; 2];
+    for id in 0..n as u64 {
+        want[shard_of(id, 2)] += 1;
+    }
+    let got: Vec<usize> = report.shards.iter().map(|r| r.served + r.shed).collect();
+    assert_eq!(got, want);
+    // cross-shard sync: every shard's every level trained, including
+    // from annotations its own traffic never bought
+    for (s, r) in report.shards.iter().enumerate() {
+        assert!(
+            r.train_batches.iter().all(|&t| t > 0),
+            "shard {s} levels must all train under sync: {:?}",
+            r.train_batches
+        );
+    }
+    // snapshot machinery ran and staleness is reported
+    assert!(
+        report.shards.iter().any(|r| r.snapshots.iter().any(|&p| p > 0)),
+        "snapshots must publish under training"
+    );
+    let _ = report.max_snapshot_lag(); // reported (0 is fine at drain)
+    load::Slo { p50_ms: 2_000.0, p99_ms: 20_000.0 }.check_sharded(&report).unwrap();
 }
 
 #[test]

@@ -1,0 +1,141 @@
+//! Snapshot-layer contracts: bit-for-bit weight extraction/restore for
+//! every host model and calibrator, including the JSON round-trip that
+//! moves state across processes — the substrate the pool layer's
+//! replica fan-out and warm respawn are built on (DESIGN.md §9).
+
+use ocl::codec;
+use ocl::config::ModelKind;
+use ocl::models::{
+    Calibrator, HostCalibrator, HostLrLevel, HostTfmLevel, LevelModel, Pipeline,
+    Snapshot,
+};
+use ocl::prng::Rng;
+
+fn docs(n: usize, seed: u64) -> Vec<ocl::models::Featurized> {
+    let p = Pipeline::default();
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let words: Vec<String> = (0..8)
+                .map(|_| format!("kw{}x{:03}", rng.below(2), rng.below(40)))
+                .collect();
+            p.featurize(&words.join(" "))
+        })
+        .collect()
+}
+
+/// Train a little, snapshot, push through JSON text, restore into a
+/// freshly initialized twin, and demand bit-identical predictions on
+/// held-out inputs — for both training state and a post-restore train
+/// step (restored state must *continue* identically, not just predict).
+fn roundtrip_level(mut model: Box<dyn LevelModel>, mut fresh: Box<dyn LevelModel>) {
+    let ds = docs(24, 9);
+    for chunk in ds[..16].chunks(8) {
+        let batch: Vec<(&ocl::models::Featurized, usize)> =
+            chunk.iter().enumerate().map(|(i, f)| (f, i % 2)).collect();
+        model.train(&batch, 0.05);
+    }
+    let snap = model.snapshot().expect("host models must snapshot");
+    let text = snap.to_json().to_string_pretty();
+    let back = Snapshot::from_json(&codec::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, snap, "JSON round-trip must be bit-for-bit");
+
+    for f in &ds[16..] {
+        assert_ne!(
+            fresh.predict(f),
+            model.predict(f),
+            "trained weights must differ from init for the test to bite"
+        );
+    }
+    fresh.restore(&back).unwrap();
+    for f in &ds[16..] {
+        assert_eq!(fresh.predict(f), model.predict(f), "restore must be exact");
+    }
+    // identical continuation: one more identical train step on both
+    let batch: Vec<(&ocl::models::Featurized, usize)> =
+        ds[16..].iter().enumerate().map(|(i, f)| (f, i % 2)).collect();
+    model.train(&batch, 0.05);
+    fresh.train(&batch, 0.05);
+    for f in &ds[..4] {
+        assert_eq!(
+            fresh.predict(f),
+            model.predict(f),
+            "post-restore training must stay on the same trajectory"
+        );
+    }
+}
+
+#[test]
+fn lr_snapshot_roundtrips_bit_for_bit() {
+    roundtrip_level(Box::new(HostLrLevel::new(2)), Box::new(HostLrLevel::new(2)));
+}
+
+#[test]
+fn tfm_base_snapshot_roundtrips_bit_for_bit() {
+    roundtrip_level(
+        Box::new(HostTfmLevel::new(ModelKind::TfmBase, 2, 11)),
+        Box::new(HostTfmLevel::new(ModelKind::TfmBase, 2, 999)),
+    );
+}
+
+#[test]
+fn tfm_large_snapshot_roundtrips_bit_for_bit() {
+    roundtrip_level(
+        Box::new(HostTfmLevel::new(ModelKind::TfmLarge, 7, 13)),
+        Box::new(HostTfmLevel::new(ModelKind::TfmLarge, 7, 131)),
+    );
+}
+
+#[test]
+fn calibrator_snapshot_roundtrips_bit_for_bit() {
+    let mut c = HostCalibrator::new(2, 21);
+    let lo: &[f32] = &[0.55, 0.45];
+    let hi: &[f32] = &[0.97, 0.03];
+    for _ in 0..50 {
+        c.train(&[(lo, 1.0f32), (hi, 0.0f32)], 0.05);
+    }
+    let snap = Calibrator::snapshot(&c).expect("host calibrator must snapshot");
+    let back =
+        Snapshot::from_json(&codec::parse(&snap.to_json().to_string_compact()).unwrap())
+            .unwrap();
+    let mut fresh = HostCalibrator::new(2, 22);
+    assert_ne!(fresh.score(lo), c.score(lo));
+    fresh.restore(&back).unwrap();
+    assert_eq!(fresh.score(lo), c.score(lo));
+    assert_eq!(fresh.score(hi), c.score(hi));
+}
+
+#[test]
+fn foreign_snapshots_are_rejected() {
+    let lr2 = HostLrLevel::new(2).snapshot().unwrap();
+    // wrong classes
+    let mut lr7 = HostLrLevel::new(7);
+    assert!(lr7.restore(&lr2).is_err());
+    // wrong kind
+    let mut tfm = HostTfmLevel::new(ModelKind::TfmBase, 2, 0);
+    assert!(tfm.restore(&lr2).is_err());
+    // wrong arch within the same classes
+    let base = HostTfmLevel::new(ModelKind::TfmBase, 2, 0).snapshot().unwrap();
+    let mut large = HostTfmLevel::new(ModelKind::TfmLarge, 2, 0);
+    assert!(large.restore(&base).is_err());
+    // model blob into a calibrator
+    let mut c = HostCalibrator::new(2, 0);
+    assert!(c.restore(&lr2).is_err());
+    // truncated blob of the right kind/classes
+    let mut cut = lr2.clone();
+    cut.data.pop();
+    let mut lr = HostLrLevel::new(2);
+    assert!(lr.restore(&cut).is_err());
+}
+
+#[test]
+fn snapshot_json_shape_is_stable() {
+    let snap = HostLrLevel::new(2).snapshot().unwrap();
+    let v = codec::parse(&snap.to_json().to_string_compact()).unwrap();
+    assert_eq!(v.get("kind").unwrap().as_str(), Some("lr"));
+    assert_eq!(v.get("classes").unwrap().as_usize(), Some(2));
+    assert_eq!(
+        v.get("data").unwrap().as_arr().unwrap().len(),
+        snap.data.len()
+    );
+}
