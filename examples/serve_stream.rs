@@ -15,7 +15,7 @@ use std::sync::mpsc::channel;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::data::Benchmark;
 use ocl::serve::shard::ShardFront;
-use ocl::serve::{load, ServeConfig};
+use ocl::serve::{load, ServeConfig, ShardConfig};
 use ocl::sim::{Expert, ExpertProfile};
 
 /// Prefer PJRT when the build and the artifacts allow it.
@@ -69,10 +69,28 @@ fn main() -> ocl::Result<()> {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     };
+    let flag_str = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
     // Scale-out topology: router shards and per-level worker replicas.
     let shards = flag_usize("--shards", 1);
     let replicas = flag_usize("--replicas", 1);
     let sync = flag_usize("--sync", 16);
+    // Durability: `--ckpt-dir <dir>` persists the learner state;
+    // `--resume strict|best-effort` restores it first.
+    let ckpt = match flag_str("--ckpt-dir") {
+        Some(dir) => Some(ocl::serve::ckpt::CkptOptions {
+            dir,
+            resume: match flag_str("--resume") {
+                Some(m) => Some(ocl::serve::ckpt::ResumeMode::from_name(&m)?),
+                None => None,
+            },
+        }),
+        None => None,
+    };
 
     let bench = BenchmarkId::Imdb;
     let b = Benchmark::build_sized(bench, 7, n);
@@ -90,25 +108,29 @@ fn main() -> ocl::Result<()> {
     );
 
     // The broadcast only activates when shards > 1 (ShardFront wires it).
-    let mut serve_cfg = ServeConfig::default();
-    serve_cfg.shard.shards = shards;
-    serve_cfg.shard.replicas_per_level = replicas;
-    serve_cfg.shard.sync_interval = sync;
-    let mut front = ShardFront::new(
+    let serve_cfg = ServeConfig {
+        shard: ShardConfig { shards, replicas_per_level: replicas, sync_interval: sync },
+        ..ServeConfig::default()
+    };
+    let mut front = ShardFront::with_ckpt(
         cfg,
         b.classes,
         expert,
         serve_cfg,
         ocl::runtime::DEFAULT_ARTIFACTS_DIR,
+        ckpt,
     )?;
     front.set_threshold_scale(0.7);
+    // A restored run resubmits only the stream tail, original ids kept.
+    let cursor = (front.resume_cursor() as usize).min(n);
 
     let (req_tx, req_rx) = channel();
     let (resp_tx, resp_rx) = channel::<ocl::serve::Response>();
     // Open-loop submission: a positive --rate drives a Poisson arrival
     // process; 0 degenerates to back-to-back submission.
     let arrival = load::Arrival::Poisson { rate: if rate > 0.0 { rate } else { 1e9 } };
-    let submit = load::drive(b.samples.clone(), arrival, 7, req_tx);
+    let submit =
+        load::drive_from(b.samples[cursor..].to_vec(), arrival, 7, req_tx, cursor as u64);
     let drain = std::thread::spawn(move || {
         let mut correct = 0usize;
         let mut total = 0usize;
@@ -147,6 +169,12 @@ fn main() -> ocl::Result<()> {
     );
     println!("llm calls           {}", report.llm_calls());
     println!("max snapshot lag    {} train chunks", report.max_snapshot_lag());
+    println!(
+        "durability          resumed={} cursor={} ckpts={}",
+        report.resumed(),
+        cursor,
+        report.ckpts()
+    );
     for (i, r) in report.shards.iter().enumerate() {
         println!(
             "shard {i}: served {} shed {} handled {:?} restarts {:?} (cap {}) \

@@ -1,7 +1,7 @@
 //! Declarative CLI argument parser (no `clap` in the offline image).
 //!
-//! Supports `ocl <subcommand> [--key value] [--flag]`. Unknown flags
-//! are errors; every flag documents itself for `--help`.
+//! Supports `ocl <subcommand> [--key value] [--key=value] [--flag]`.
+//! Unknown flags are errors; every flag documents itself for `--help`.
 
 use std::collections::BTreeMap;
 
@@ -90,16 +90,27 @@ impl Command {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            let name = a
+            let body = a
                 .strip_prefix("--")
                 .ok_or_else(|| Error::Usage(format!("unexpected argument '{a}'")))?;
+            // `--key=value` and `--key value` are equivalent.
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v)),
+                None => (body, None),
+            };
             let spec = self
                 .opts
                 .iter()
                 .find(|o| o.name == name)
                 .ok_or_else(|| Error::Usage(format!("unknown flag --{name}")))?;
             if spec.is_switch {
+                if inline.is_some() {
+                    return Err(Error::Usage(format!("--{name} takes no value")));
+                }
                 args.switches.insert(name.to_string(), true);
+                i += 1;
+            } else if let Some(v) = inline {
+                args.vals.insert(name.to_string(), v.to_string());
                 i += 1;
             } else {
                 let v = argv.get(i + 1).ok_or_else(|| {
@@ -166,6 +177,22 @@ mod tests {
         assert!(cmd().parse(&v(&["positional"])).is_err());
         let a = cmd().parse(&v(&["--n", "abc"])).unwrap();
         assert!(a.parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cmd()
+            .parse(&v(&["--n=7", "--benchmark=isear", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.parse::<usize>("n").unwrap(), 7);
+        assert_eq!(a.get("benchmark"), "isear");
+        assert!(a.switch("verbose"));
+        // values may themselves contain '=' (only the first splits)
+        let a = cmd().parse(&v(&["--benchmark=a=b"])).unwrap();
+        assert_eq!(a.get("benchmark"), "a=b");
+        // switches reject inline values; unknown keys still error
+        assert!(cmd().parse(&v(&["--verbose=1"])).is_err());
+        assert!(cmd().parse(&v(&["--bogus=1"])).is_err());
     }
 
     #[test]

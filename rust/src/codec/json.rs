@@ -93,6 +93,19 @@ impl Json {
         Some(out)
     }
 
+    /// Encode a `u64` losslessly as a hex string. JSON numbers travel
+    /// through `f64` in this codec, which silently rounds integers
+    /// above 2^53 — full-range words (PRNG state in checkpoints) use
+    /// this instead; [`Json::as_u64_hex`] is the inverse.
+    pub fn u64_hex(x: u64) -> Json {
+        Json::Str(format!("{x:016x}"))
+    }
+
+    /// Decode a [`Json::u64_hex`] string (`None` on any other value).
+    pub fn as_u64_hex(&self) -> Option<u64> {
+        u64::from_str_radix(self.as_str()?, 16).ok()
+    }
+
     /// As object map.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
@@ -472,6 +485,17 @@ mod tests {
     fn whitespace_tolerated() {
         let v = parse(" { \"a\" : [ 1 , 2 ] } ").unwrap();
         assert_eq!(v.get("a").unwrap().as_usize_vec().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn u64_hex_is_lossless_at_full_range() {
+        for x in [0u64, 1, (1 << 53) + 1, u64::MAX, 0x9E3779B97F4A7C15] {
+            let j = Json::u64_hex(x);
+            let back = parse(&j.to_string_compact()).unwrap();
+            assert_eq!(back.as_u64_hex(), Some(x));
+        }
+        assert_eq!(Json::Num(3.0).as_u64_hex(), None);
+        assert_eq!(Json::Str("zz".into()).as_u64_hex(), None);
     }
 
     #[test]

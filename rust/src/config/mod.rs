@@ -415,6 +415,13 @@ pub struct ServeConfig {
     /// level's learner authority (pool layer). 0 disables publication —
     /// replicas then serve init weights and respawns are cold.
     pub publish_every: usize,
+    /// Expert annotations between durable checkpoints when a checkpoint
+    /// directory is configured (`serve::ckpt`). Each cadence checkpoint
+    /// is a quiescent barrier: the router briefly stops admitting,
+    /// drains in-flight work, then snapshots — which is what makes a
+    /// resumed trajectory bit-identical (DESIGN.md §9). 0 disables the
+    /// cadence; the graceful-shutdown checkpoint is still written.
+    pub ckpt_every: usize,
     /// Scale-out topology (shards × replicas × sync cadence).
     pub shard: ShardConfig,
 }
@@ -427,6 +434,7 @@ impl Default for ServeConfig {
             max_pending: 1024,
             max_restarts: 16,
             publish_every: 4,
+            ckpt_every: 64,
             shard: ShardConfig::default(),
         }
     }
@@ -441,6 +449,7 @@ impl ServeConfig {
             ("max_pending", Json::Num(self.max_pending as f64)),
             ("max_restarts", Json::Num(self.max_restarts as f64)),
             ("publish_every", Json::Num(self.publish_every as f64)),
+            ("ckpt_every", Json::Num(self.ckpt_every as f64)),
             ("shard", self.shard.to_json()),
         ])
     }
@@ -552,12 +561,14 @@ mod tests {
         assert_eq!(s.deadline, std::time::Duration::from_millis(2));
         assert_eq!(s.max_restarts, 16);
         assert_eq!(s.publish_every, 4);
+        assert_eq!(s.ckpt_every, 64);
         assert_eq!(s.shard, ShardConfig::default());
         let v = crate::codec::parse(&s.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("batch_max").unwrap().as_usize(), Some(8));
         assert_eq!(v.get("deadline_us").unwrap().as_f64(), Some(2000.0));
         assert_eq!(v.get("max_pending").unwrap().as_usize(), Some(1024));
         assert_eq!(v.get("max_restarts").unwrap().as_usize(), Some(16));
+        assert_eq!(v.get("ckpt_every").unwrap().as_usize(), Some(64));
         let sh = v.get("shard").unwrap();
         assert_eq!(sh.get("shards").unwrap().as_usize(), Some(1));
         assert_eq!(sh.get("replicas_per_level").unwrap().as_usize(), Some(1));

@@ -36,6 +36,10 @@ pub enum Error {
     /// (serve-layer load harness assertions).
     Slo(String),
 
+    /// Checkpoint save/restore failure (missing, truncated, or
+    /// version-incompatible checkpoint state; see `serve::ckpt`).
+    Ckpt(String),
+
     /// Data/benchmark construction failure.
     Data(String),
 
@@ -60,6 +64,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Worker(m) => write!(f, "worker error: {m}"),
             Error::Slo(m) => write!(f, "slo violation: {m}"),
+            Error::Ckpt(m) => write!(f, "checkpoint error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
         }
@@ -108,6 +113,7 @@ mod tests {
         assert_eq!(Error::Runtime("r".into()).to_string(), "runtime error: r");
         assert_eq!(Error::Worker("w".into()).to_string(), "worker error: w");
         assert_eq!(Error::Slo("s".into()).to_string(), "slo violation: s");
+        assert_eq!(Error::Ckpt("k".into()).to_string(), "checkpoint error: k");
         assert_eq!(Error::Data("d".into()).to_string(), "data error: d");
     }
 

@@ -9,7 +9,7 @@ use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
 use ocl::serve::shard::ShardFront;
-use ocl::serve::{Request, ServeConfig};
+use ocl::serve::{ckpt, load, ServeConfig, ShardConfig};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -55,12 +55,16 @@ fn commands() -> Vec<Command> {
             .opt("benchmark", "imdb", "benchmark")
             .opt("expert", "gpt35", "gpt35|llama70b")
             .opt("requests", "2000", "number of requests")
+            .opt("rate", "0", "open-loop arrival rate, req/s (0 = unpaced)")
             .opt("engine", "host", "host|pjrt")
             .opt("seed", "0", "rng seed")
             .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)")
             .opt("shards", "1", "router shards behind the front dispatcher")
             .opt("replicas", "1", "worker-pool capacity per cascade level")
-            .opt("sync", "16", "cross-shard annotation broadcast interval (0 = off)"),
+            .opt("sync", "16", "cross-shard annotation broadcast interval (0 = off)")
+            .opt("ckpt-dir", "", "checkpoint directory (empty = durability off)")
+            .opt("ckpt-every", "64", "expert annotations between checkpoints (0 = shutdown only)")
+            .opt("resume", "off", "off|strict|best-effort: restore from --ckpt-dir"),
         Command::new("selftest", "quick end-to-end smoke test"),
     ]
 }
@@ -77,7 +81,9 @@ fn main() {
 }
 
 fn usage(cmds: &[Command]) -> String {
-    let mut s = String::from("ocl — Online Cascade Learning (ICML 2024) reproduction\n\nsubcommands:\n");
+    let mut s = String::from(
+        "ocl — Online Cascade Learning (ICML 2024) reproduction\n\nsubcommands:\n",
+    );
     for c in cmds {
         s.push_str(&format!("  {:<10} {}\n", c.name, c.about));
     }
@@ -210,6 +216,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
             let bench = BenchmarkId::from_name(args.get("benchmark"))?;
             let expert = ExpertId::from_name(args.get("expert"))?;
             let n: usize = args.parse("requests")?;
+            let rate: f64 = args.parse("rate")?;
             let seed: u64 = args.parse("seed")?;
             let engine = Engine::from_name(args.get("engine"))?;
             let shards: usize = args.parse("shards")?;
@@ -222,34 +229,60 @@ fn dispatch(argv: &[String]) -> Result<()> {
             cfg.seed = seed;
             // A single-shard front has no peers to sync with — the
             // broadcast is only wired when shards > 1 (ShardFront).
-            let mut serve_cfg = ServeConfig::default();
-            serve_cfg.shard.shards = shards;
-            serve_cfg.shard.replicas_per_level = replicas;
-            serve_cfg.shard.sync_interval = sync;
-            let mut front =
-                ShardFront::new(cfg, b.classes, e, serve_cfg, args.get("artifacts"))?;
+            let serve_cfg = ServeConfig {
+                ckpt_every: args.parse("ckpt-every")?,
+                shard: ShardConfig {
+                    shards,
+                    replicas_per_level: replicas,
+                    sync_interval: sync,
+                },
+                ..ServeConfig::default()
+            };
+            let ckpt_dir = args.get("ckpt-dir").to_string();
+            let resume = args.get("resume");
+            let ckpt = if ckpt_dir.is_empty() {
+                if resume != "off" {
+                    return Err(Error::Usage("--resume requires --ckpt-dir".into()));
+                }
+                None
+            } else {
+                let mode = match resume {
+                    "off" => None,
+                    m => Some(ckpt::ResumeMode::from_name(m)?),
+                };
+                Some(ckpt::CkptOptions { dir: ckpt_dir, resume: mode })
+            };
+            let mut front = ShardFront::with_ckpt(
+                cfg,
+                b.classes,
+                e,
+                serve_cfg,
+                args.get("artifacts"),
+                ckpt,
+            )?;
             front.set_threshold_scale(eval::BUDGETED_SCALE);
+            // Resume: requests below the cursor were already absorbed
+            // by the interrupted run — resubmit only the stream tail,
+            // with its original ids (shard hashing + cursor continuity).
+            let cursor = (front.resume_cursor() as usize).min(n);
             let (req_tx, req_rx) = std::sync::mpsc::channel();
             let (resp_tx, resp_rx) = std::sync::mpsc::channel();
-            let samples: Vec<_> = b.samples.iter().take(n).cloned().collect();
-            let submit = std::thread::spawn(move || {
-                for (i, s) in samples.iter().enumerate() {
-                    let _ = req_tx.send(Request {
-                        id: i as u64,
-                        text: s.text.clone(),
-                        truth: s.label,
-                        sample: s.clone(),
-                    });
-                }
-            });
+            let samples: Vec<_> =
+                b.samples.iter().take(n).skip(cursor).cloned().collect();
+            let arrival = load::Arrival::Poisson {
+                rate: if rate > 0.0 { rate } else { 1e9 },
+            };
+            let submit =
+                load::drive_from(samples, arrival, seed ^ 0xA, req_tx, cursor as u64);
             let drain = std::thread::spawn(move || resp_rx.iter().count());
             let report = front.serve(req_rx, resp_tx)?;
             submit.join().ok();
             let drained = drain.join().unwrap_or(0);
             let lat = report.latency_ms();
             println!(
-                "shards={} served={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
-                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} max_snapshot_lag={}",
+                "shards={} served_total={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
+                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} max_snapshot_lag={} \
+                 resumed={} resume_cursor={cursor} ckpts={}",
                 report.shards.len(),
                 report.served(),
                 report.shed(),
@@ -260,13 +293,15 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 lat.pct(95.0),
                 lat.pct(99.0),
                 report.llm_calls(),
-                report.max_snapshot_lag()
+                report.max_snapshot_lag(),
+                report.resumed(),
+                report.ckpts()
             );
             for (i, r) in report.shards.iter().enumerate() {
                 println!(
                     "shard {i}: served={} handled={:?} restarts={:?} (cap {}) \
                      warm_respawns={:?} snapshots={:?} snapshot_lag={:?} \
-                     replica_jobs={:?}",
+                     replica_jobs={:?} final_betas={:?}",
                     r.served,
                     r.handled,
                     r.restarts,
@@ -274,7 +309,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
                     r.warm_respawns,
                     r.snapshots,
                     r.snapshot_lag,
-                    r.replica_jobs
+                    r.replica_jobs,
+                    r.final_betas
                 );
             }
             Ok(())

@@ -15,7 +15,7 @@ use xla::Literal;
 
 #[cfg(feature = "pjrt")]
 use crate::config::dims::BATCH_STEP;
-use crate::config::dims::{HASH_DIM, SEQ_LEN};
+use crate::config::dims::{HASH_DIM, SEQ_LEN, VOCAB};
 use crate::config::ModelKind;
 use crate::error::{Error, Result};
 use crate::features::{HashingVectorizer, VocabIndexer};
@@ -25,7 +25,7 @@ use crate::runtime::engine::{literal_f32, literal_i32, load_group_literals};
 use crate::runtime::PjrtEngine;
 
 /// A query featurized once and shared by every cascade level.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Featurized {
     /// Hashed bag-of-words (LR input), len = `HASH_DIM`.
     pub x: Vec<f32>,
@@ -33,6 +33,68 @@ pub struct Featurized {
     pub ids: Vec<i32>,
     /// Padding mask, len = `SEQ_LEN`.
     pub mask: Vec<f32>,
+}
+
+impl Featurized {
+    /// JSON encoding (checkpoint replay caches). The hashed BoW vector
+    /// is stored sparsely as (index, value) pairs — a document touches
+    /// a few dozen of the `HASH_DIM` buckets, so the dense form would
+    /// be ~100× larger on disk. Bit-for-bit like [`Snapshot`]: every
+    /// f32 survives the f64 JSON trip exactly.
+    pub fn to_json(&self) -> crate::codec::Json {
+        use crate::codec::Json;
+        let mut xi = Vec::new();
+        let mut xv = Vec::new();
+        for (i, &v) in self.x.iter().enumerate() {
+            if v != 0.0 {
+                xi.push(Json::Num(i as f64));
+                xv.push(Json::Num(v as f64));
+            }
+        }
+        Json::obj(vec![
+            ("xi", Json::Arr(xi)),
+            ("xv", Json::Arr(xv)),
+            (
+                "ids",
+                Json::Arr(self.ids.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("mask", Json::f32_arr(&self.mask)),
+        ])
+    }
+
+    /// Decode from [`Featurized::to_json`] output.
+    pub fn from_json(v: &crate::codec::Json) -> Result<Self> {
+        let bad = |what: &str| Error::Ckpt(format!("featurized: bad '{what}'"));
+        let xi = v.require("xi")?.as_usize_vec().ok_or_else(|| bad("xi"))?;
+        let xv = v.require("xv")?.as_f32_vec().ok_or_else(|| bad("xv"))?;
+        if xi.len() != xv.len() {
+            return Err(bad("xi/xv length mismatch"));
+        }
+        let mut x = vec![0.0f32; HASH_DIM];
+        for (&i, &val) in xi.iter().zip(xv.iter()) {
+            if i >= HASH_DIM {
+                return Err(bad("xi index out of range"));
+            }
+            x[i] = val;
+        }
+        let ids_arr = v.require("ids")?.as_arr().ok_or_else(|| bad("ids"))?;
+        let mut ids = Vec::with_capacity(ids_arr.len());
+        for t in ids_arr {
+            let id = t.as_f64().ok_or_else(|| bad("ids"))?;
+            // A restored cache feeds these straight into embedding-row
+            // lookups — an out-of-vocab id must fail here, not panic
+            // mid-training after a "successful" restore.
+            if id < 0.0 || id >= VOCAB as f64 || id.fract() != 0.0 {
+                return Err(bad("ids token out of vocab range"));
+            }
+            ids.push(id as i32);
+        }
+        let mask = v.require("mask")?.as_f32_vec().ok_or_else(|| bad("mask"))?;
+        if ids.len() != SEQ_LEN || mask.len() != SEQ_LEN {
+            return Err(bad("ids/mask length"));
+        }
+        Ok(Featurized { x, ids, mask })
+    }
 }
 
 /// Featurization pipeline (tokenize → hash/index).
@@ -665,6 +727,24 @@ mod tests {
         assert!(seven.restore(&back).is_err());
         let mut c = HostCalibrator::new(2, 0);
         assert!(c.restore(&back).is_err(), "model blob must not restore a calibrator");
+    }
+
+    #[test]
+    fn featurized_json_roundtrip_is_bit_for_bit() {
+        let p = Pipeline::default();
+        let f = p.featurize("kw0x001 kw1x002 neg00 c1w0003");
+        let text = f.to_json().to_string_compact();
+        let back = Featurized::from_json(&crate::codec::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, f, "sparse encoding must reproduce x/ids/mask exactly");
+        // malformed inputs fail cleanly, not silently
+        let bad = crate::codec::parse(r#"{"xi":[1],"xv":[],"ids":[],"mask":[]}"#).unwrap();
+        assert!(Featurized::from_json(&bad).is_err());
+        // out-of-vocab token ids are rejected at decode time (they
+        // would otherwise panic inside embedding lookups much later)
+        let mut oov = f.clone();
+        oov.ids[0] = -1;
+        let text = oov.to_json().to_string_compact();
+        assert!(Featurized::from_json(&crate::codec::parse(&text).unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,905 @@
+//! Durable checkpoint/resume for the serving stack.
+//!
+//! A process restart used to reset every cascade level to fresh
+//! weights, re-paying the LLM demonstration cost the online learner
+//! had already amortized — exactly the cost OCL exists to avoid. This
+//! module serializes the **full router learner state** to versioned
+//! JSON files so a restarted `Server`/`ShardFront` continues the
+//! no-regret trajectory instead of starting it over:
+//!
+//! * per-level model + calibrator [`Snapshot`]s (bit-for-bit, via the
+//!   shortest-round-trip f64 printing in `codec::json`),
+//! * DAgger β values (their decay state *is* the value — one multiply
+//!   per admitted request),
+//! * train/calib chunk counters and the per-level trigger cadence
+//!   counters (`pendings`/`calib_pendings`), so the next training
+//!   trigger fires at exactly the admission it would have,
+//! * replay-cache and calibration-cache contents,
+//! * the router RNG state, the probe-id allocator, and the cross-shard
+//!   annotation sync cursor (`sync_staged`),
+//! * cumulative serve counters and the stream cursor, so a resumed
+//!   run's `ServeReport` continues the interrupted run's totals.
+//!
+//! **What is *not* captured:** in-flight batches, queued jobs, and
+//! pending (admitted, unanswered) requests. Checkpoints are only
+//! taken at *quiescent* points — the cadence checkpoint is a barrier
+//! (the router stops admitting, drains, snapshots, resumes) and the
+//! shutdown checkpoint happens after the drain — so at every
+//! checkpoint the pending set is empty by construction. That is what
+//! makes the resumed β/chunk-count trajectory bit-identical to an
+//! uninterrupted run (pinned in `tests/test_ckpt.rs`): nothing
+//! half-processed needs reconstructing, and the stream cursor is an
+//! exact high-water mark.
+//!
+//! **Atomicity & layout.** Each shard's state is one JSON file written
+//! via write-to-temp + rename. A checkpoint *commits* when a manifest
+//! (also written atomically) referencing the current file of **every**
+//! shard appears; `load_latest` only ever reads through a manifest, so
+//! a crash mid-write leaves at worst an orphaned temp file, never a
+//! torn checkpoint. Old checkpoints are pruned, keeping the two newest
+//! manifests and the files they reference.
+//!
+//! **Resume semantics.** `shards = 1` resume continues the exact
+//! learner trajectory. After a *graceful* shutdown it is also
+//! at-most-once per request (the final quiescent cursor covers a
+//! contiguous fully-answered prefix); after a SIGKILL, requests
+//! answered between the last checkpoint and the kill are re-served —
+//! at-least-once across the restart, exactly-once within each run.
+//! With multiple shards, each shard checkpoints at its own quiescent
+//! instants, so the global resume cursor is the minimum over shards
+//! and shards that were ahead re-observe a few requests even on a
+//! graceful restart (DESIGN.md §9).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::codec::{self, Json};
+use crate::config::CascadeConfig;
+use crate::error::{Error, Result};
+use crate::models::{Featurized, Snapshot};
+
+/// Checkpoint format version (the manifest's `version` field); a
+/// mismatch is a hard [`Error::Ckpt`], never a silent reinterpret.
+pub const CKPT_VERSION: u64 = 1;
+
+/// How `--resume` treats the checkpoint directory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResumeMode {
+    /// The newest manifest must exist and fully validate; anything
+    /// else (no checkpoint, truncated file, bad version, missing shard
+    /// entry) is a hard error.
+    Strict,
+    /// Walk manifests newest-first and restore the first valid one;
+    /// when none validates, fall back to a fresh start. This is the
+    /// only mode that silently discards unusable checkpoints.
+    BestEffort,
+}
+
+impl ResumeMode {
+    /// Parse from CLI string.
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "strict" | "require" => Ok(ResumeMode::Strict),
+            "best-effort" | "best_effort" => Ok(ResumeMode::BestEffort),
+            _ => Err(Error::Usage(format!(
+                "unknown resume mode '{s}' (strict|best-effort)"
+            ))),
+        }
+    }
+}
+
+/// Checkpoint wiring for `ShardFront::with_ckpt`: where checkpoints
+/// live and whether/how to restore from them at startup.
+#[derive(Clone, Debug)]
+pub struct CkptOptions {
+    /// Checkpoint directory (created if missing).
+    pub dir: String,
+    /// `None` = start fresh but write checkpoints; `Some(mode)` =
+    /// restore from the directory first.
+    pub resume: Option<ResumeMode>,
+}
+
+/// One cascade level's durable state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LevelState {
+    /// Level-model parameters.
+    pub model: Snapshot,
+    /// Deferral-calibrator parameters.
+    pub calib: Snapshot,
+    /// Cumulative 8-sample model-training chunks.
+    pub train_chunks: u64,
+    /// Cumulative 8-sample calibrator-training chunks.
+    pub calib_chunks: u64,
+    /// Model-training triggers sent (snapshot publish cadence cursor).
+    pub train_sends: u64,
+    /// Annotations since the last model-training trigger.
+    pub pending: usize,
+    /// Calibration examples since the last calibrator trigger.
+    pub calib_pending: usize,
+    /// Replay cache contents, oldest → newest.
+    pub cache: Vec<(Arc<Featurized>, usize)>,
+    /// Calibration cache contents, oldest → newest.
+    pub calib_cache: Vec<(Vec<f32>, f32)>,
+}
+
+/// Everything one router shard needs to continue its trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardState {
+    /// Which shard produced this state.
+    pub shard: usize,
+    /// Stream high-water mark: every request id below this has been
+    /// fully absorbed (quiescent checkpoints make this exact).
+    pub cursor: u64,
+    /// Router RNG words (xoshiro256**).
+    pub rng_s: [u64; 4],
+    /// Cached Box–Muller half, if any.
+    pub rng_cached: Option<f64>,
+    /// Per-level DAgger β values (pre-decay for the next admission).
+    pub betas: Vec<f64>,
+    /// Cost-pressure knob.
+    pub threshold_scale: f64,
+    /// Probe-id allocator position.
+    pub probe_seq: u64,
+    /// Annotations staged for the cross-shard broadcast but not yet
+    /// sent (the annotation sync cursor).
+    pub sync_staged: Vec<(Arc<Featurized>, usize)>,
+    /// Cumulative requests served.
+    pub served: usize,
+    /// Cumulative requests shed.
+    pub shed: usize,
+    /// Cumulative correct answers (accuracy numerator).
+    pub correct: usize,
+    /// Cumulative expert calls.
+    pub llm_calls: u64,
+    /// Cumulative per-level handled counts (last = expert).
+    pub handled: Vec<usize>,
+    /// Per-level durable state.
+    pub levels: Vec<LevelState>,
+}
+
+fn bad(what: &str) -> Error {
+    Error::Ckpt(format!("bad shard state: {what}"))
+}
+
+/// Encode a `(feature-index, label)` pair against the intern table.
+fn fref(
+    f: &Arc<Featurized>,
+    y: usize,
+    intern: &mut Vec<Json>,
+    ids: &mut HashMap<usize, usize>,
+) -> Json {
+    let key = Arc::as_ptr(f) as usize;
+    let idx = *ids.entry(key).or_insert_with(|| {
+        intern.push(f.to_json());
+        intern.len() - 1
+    });
+    Json::Arr(vec![Json::Num(idx as f64), Json::Num(y as f64)])
+}
+
+/// Decode a `(feature-index, label)` pair against the intern table.
+fn unfref(v: &Json, features: &[Arc<Featurized>]) -> Result<(Arc<Featurized>, usize)> {
+    let pair = v.as_arr().ok_or_else(|| bad("cache entry"))?;
+    if pair.len() != 2 {
+        return Err(bad("cache entry arity"));
+    }
+    let idx = pair[0].as_usize().ok_or_else(|| bad("cache feature index"))?;
+    let y = pair[1].as_usize().ok_or_else(|| bad("cache label"))?;
+    let f = features
+        .get(idx)
+        .ok_or_else(|| bad("cache feature index out of range"))?;
+    Ok((f.clone(), y))
+}
+
+impl ShardState {
+    /// JSON encoding. Featurized queries are interned: the same
+    /// annotation lives in every level's replay cache (and possibly
+    /// `sync_staged`), so each unique query is written once and caches
+    /// store indices into the shared `features` table.
+    pub fn to_json(&self) -> Json {
+        let mut features: Vec<Json> = Vec::new();
+        let mut ids: HashMap<usize, usize> = HashMap::new();
+        let levels: Vec<Json> = self
+            .levels
+            .iter()
+            .map(|l| {
+                let cache: Vec<Json> = l
+                    .cache
+                    .iter()
+                    .map(|(f, y)| fref(f, *y, &mut features, &mut ids))
+                    .collect();
+                let calib_cache: Vec<Json> = l
+                    .calib_cache
+                    .iter()
+                    .map(|(p, z)| {
+                        Json::Arr(vec![Json::f32_arr(p), Json::Num(*z as f64)])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("model", l.model.to_json()),
+                    ("calib", l.calib.to_json()),
+                    ("train_chunks", Json::Num(l.train_chunks as f64)),
+                    ("calib_chunks", Json::Num(l.calib_chunks as f64)),
+                    ("train_sends", Json::Num(l.train_sends as f64)),
+                    ("pending", Json::Num(l.pending as f64)),
+                    ("calib_pending", Json::Num(l.calib_pending as f64)),
+                    ("cache", Json::Arr(cache)),
+                    ("calib_cache", Json::Arr(calib_cache)),
+                ])
+            })
+            .collect();
+        let staged: Vec<Json> = self
+            .sync_staged
+            .iter()
+            .map(|(f, y)| fref(f, *y, &mut features, &mut ids))
+            .collect();
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("cursor", Json::Num(self.cursor as f64)),
+            (
+                "rng",
+                Json::Arr(self.rng_s.iter().map(|&w| Json::u64_hex(w)).collect()),
+            ),
+            (
+                "rng_cached",
+                match self.rng_cached {
+                    Some(z) => Json::Num(z),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "betas",
+                Json::Arr(self.betas.iter().map(|&b| Json::Num(b)).collect()),
+            ),
+            ("threshold_scale", Json::Num(self.threshold_scale)),
+            ("probe_seq", Json::Num(self.probe_seq as f64)),
+            ("sync_staged", Json::Arr(staged)),
+            ("served", Json::Num(self.served as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("correct", Json::Num(self.correct as f64)),
+            ("llm_calls", Json::Num(self.llm_calls as f64)),
+            (
+                "handled",
+                Json::Arr(self.handled.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+            ("features", Json::Arr(features)),
+            ("levels", Json::Arr(levels)),
+        ])
+    }
+
+    /// Decode from [`ShardState::to_json`] output.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let features: Vec<Arc<Featurized>> = v
+            .require("features")?
+            .as_arr()
+            .ok_or_else(|| bad("features"))?
+            .iter()
+            .map(|f| Featurized::from_json(f).map(Arc::new))
+            .collect::<Result<_>>()?;
+        let levels = v
+            .require("levels")?
+            .as_arr()
+            .ok_or_else(|| bad("levels"))?
+            .iter()
+            .map(|l| {
+                let cache = l
+                    .require("cache")?
+                    .as_arr()
+                    .ok_or_else(|| bad("cache"))?
+                    .iter()
+                    .map(|e| unfref(e, &features))
+                    .collect::<Result<_>>()?;
+                let calib_cache = l
+                    .require("calib_cache")?
+                    .as_arr()
+                    .ok_or_else(|| bad("calib_cache"))?
+                    .iter()
+                    .map(|e| {
+                        let pair = e.as_arr().ok_or_else(|| bad("calib entry"))?;
+                        if pair.len() != 2 {
+                            return Err(bad("calib entry arity"));
+                        }
+                        let p = pair[0].as_f32_vec().ok_or_else(|| bad("calib probs"))?;
+                        let z = pair[1].as_f64().ok_or_else(|| bad("calib z"))? as f32;
+                        Ok((p, z))
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(LevelState {
+                    model: Snapshot::from_json(l.require("model")?)?,
+                    calib: Snapshot::from_json(l.require("calib")?)?,
+                    train_chunks: num_u64(l, "train_chunks")?,
+                    calib_chunks: num_u64(l, "calib_chunks")?,
+                    train_sends: num_u64(l, "train_sends")?,
+                    pending: num_usize(l, "pending")?,
+                    calib_pending: num_usize(l, "calib_pending")?,
+                    cache,
+                    calib_cache,
+                })
+            })
+            .collect::<Result<Vec<LevelState>>>()?;
+        let rng_words: Vec<u64> = v
+            .require("rng")?
+            .as_arr()
+            .ok_or_else(|| bad("rng"))?
+            .iter()
+            .map(|w| w.as_u64_hex())
+            .collect::<Option<_>>()
+            .ok_or_else(|| bad("rng word"))?;
+        let rng_s: [u64; 4] =
+            rng_words.try_into().map_err(|_| bad("rng word count"))?;
+        let rng_cached = match v.require("rng_cached")? {
+            Json::Null => None,
+            other => Some(other.as_f64().ok_or_else(|| bad("rng_cached"))?),
+        };
+        let betas = v
+            .require("betas")?
+            .as_arr()
+            .ok_or_else(|| bad("betas"))?
+            .iter()
+            .map(Json::as_f64)
+            .collect::<Option<_>>()
+            .ok_or_else(|| bad("beta value"))?;
+        Ok(ShardState {
+            shard: num_usize(v, "shard")?,
+            cursor: num_u64(v, "cursor")?,
+            rng_s,
+            rng_cached,
+            betas,
+            threshold_scale: v
+                .require("threshold_scale")?
+                .as_f64()
+                .ok_or_else(|| bad("threshold_scale"))?,
+            probe_seq: num_u64(v, "probe_seq")?,
+            sync_staged: v
+                .require("sync_staged")?
+                .as_arr()
+                .ok_or_else(|| bad("sync_staged"))?
+                .iter()
+                .map(|e| unfref(e, &features))
+                .collect::<Result<_>>()?,
+            served: num_usize(v, "served")?,
+            shed: num_usize(v, "shed")?,
+            correct: num_usize(v, "correct")?,
+            llm_calls: num_u64(v, "llm_calls")?,
+            handled: v
+                .require("handled")?
+                .as_usize_vec()
+                .ok_or_else(|| bad("handled"))?,
+            levels,
+        })
+    }
+
+    /// Validate this state against the cascade config it is about to
+    /// be restored into — shape drift (level count, model kind, class
+    /// count) is a clean error, never a silent partial restore.
+    pub fn check_config(&self, cfg: &CascadeConfig, classes: usize) -> Result<()> {
+        if self.levels.len() != cfg.levels.len() {
+            return Err(Error::Ckpt(format!(
+                "checkpoint has {} levels, config wants {}",
+                self.levels.len(),
+                cfg.levels.len()
+            )));
+        }
+        if self.betas.len() != cfg.levels.len() {
+            return Err(Error::Ckpt("β vector length mismatch".into()));
+        }
+        if self.handled.len() != cfg.levels.len() + 1 {
+            return Err(Error::Ckpt("handled vector length mismatch".into()));
+        }
+        for (i, (l, lc)) in self.levels.iter().zip(&cfg.levels).enumerate() {
+            if l.model.kind != lc.model.entry_prefix() || l.model.classes != classes {
+                return Err(Error::Ckpt(format!(
+                    "level {i}: checkpoint is '{}'/{} classes, config wants '{}'/{}",
+                    l.model.kind,
+                    l.model.classes,
+                    lc.model.entry_prefix(),
+                    classes
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn num_u64(v: &Json, key: &str) -> Result<u64> {
+    let f = v
+        .require(key)?
+        .as_f64()
+        .ok_or_else(|| bad(&format!("'{key}' must be a number")))?;
+    if f < 0.0 || f.fract() != 0.0 {
+        return Err(bad(&format!("'{key}' must be a non-negative integer")));
+    }
+    Ok(f as u64)
+}
+
+fn num_usize(v: &Json, key: &str) -> Result<usize> {
+    v.require(key)?
+        .as_usize()
+        .ok_or_else(|| bad(&format!("'{key}' must be a non-negative integer")))
+}
+
+// --- on-disk layout --------------------------------------------------------
+
+fn write_atomic(path: &Path, data: &str) -> Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension("tmp");
+    let ioerr = |p: &Path, e: std::io::Error| Error::io(p.display().to_string(), e);
+    let mut f = fs::File::create(&tmp).map_err(|e| ioerr(&tmp, e))?;
+    f.write_all(data.as_bytes()).map_err(|e| ioerr(&tmp, e))?;
+    // fsync *before* the rename: without it the rename's metadata can
+    // reach disk ahead of the data blocks, and a power loss leaves a
+    // committed-looking but torn file — exactly the state the
+    // temp+rename dance exists to rule out.
+    f.sync_all().map_err(|e| ioerr(&tmp, e))?;
+    drop(f);
+    fs::rename(&tmp, path).map_err(|e| ioerr(path, e))?;
+    // Best-effort directory sync so the rename itself is durable.
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Trailing `-<seq>.json` sequence number of a checkpoint file name.
+fn file_seq(name: &str) -> Option<u64> {
+    name.strip_suffix(".json")?.rsplit('-').next()?.parse().ok()
+}
+
+fn manifest_name(seq: u64) -> String {
+    format!("manifest-{seq:08}.json")
+}
+
+/// List `(seq, file name)` of every manifest in `dir`, newest first.
+fn list_manifests(dir: &Path) -> Result<Vec<(u64, String)>> {
+    let mut out = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out), // missing dir = no checkpoints
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with("manifest-") {
+            if let Some(seq) = file_seq(&name) {
+                out.push((seq, name));
+            }
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// The checkpoint writer shared by every shard of one topology.
+///
+/// Shards deposit their state at their own (quiescent) instants; every
+/// deposit atomically replaces that shard's file, and once all shards
+/// have deposited at least once each further deposit commits a new
+/// manifest covering the current file of every shard.
+pub struct CkptSink {
+    dir: PathBuf,
+    inner: Mutex<SinkInner>,
+}
+
+struct SinkInner {
+    seq: u64,
+    /// Current file name per shard (None until its first deposit).
+    latest: Vec<Option<String>>,
+    /// Committed manifests: (seq, manifest name, referenced files).
+    manifests: Vec<(u64, String, Vec<String>)>,
+}
+
+impl CkptSink {
+    /// Open (creating if needed) a checkpoint directory for `shards`
+    /// shards. Sequence numbering continues past any checkpoints
+    /// already on disk, so "newest" stays monotone across restarts —
+    /// and manifests already on disk are *adopted* into the prune
+    /// list, so the keep-two-newest bound holds across process
+    /// restarts, not just within one process's lifetime.
+    pub fn create(dir: impl AsRef<Path>, shards: usize) -> Result<Arc<Self>> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+        let mut seq = 0;
+        for entry in fs::read_dir(&dir)
+            .map_err(|e| Error::io(dir.display().to_string(), e))?
+            .flatten()
+        {
+            if let Some(s) = file_seq(&entry.file_name().to_string_lossy()) {
+                seq = seq.max(s);
+            }
+        }
+        // Adopt prior-process manifests, oldest first (the prune order).
+        // An unreadable manifest is adopted with no file list: pruning
+        // will eventually delete the manifest itself, and any files
+        // only it referenced are covered by the superseded-file sweep.
+        let mut existing = list_manifests(&dir)?;
+        existing.reverse();
+        let manifests = existing
+            .into_iter()
+            .map(|(mseq, mname)| {
+                let files: Vec<String> = fs::read_to_string(dir.join(&mname))
+                    .ok()
+                    .and_then(|t| codec::parse(&t).ok())
+                    .and_then(|v| {
+                        v.get("files").and_then(|arr| arr.as_arr()).map(|arr| {
+                            arr.iter()
+                                .filter_map(|f| f.as_str().map(String::from))
+                                .collect()
+                        })
+                    })
+                    .unwrap_or_default();
+                (mseq, mname, files)
+            })
+            .collect();
+        Ok(Arc::new(CkptSink {
+            dir,
+            inner: Mutex::new(SinkInner {
+                seq,
+                latest: vec![None; shards],
+                manifests,
+            }),
+        }))
+    }
+
+    /// Checkpoint directory path.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Persist one shard's state; commits a manifest when every shard
+    /// has a current file. Returns whether a manifest was committed.
+    pub fn deposit(&self, shard: usize, state: &ShardState) -> Result<bool> {
+        let mut inner = self.inner.lock().expect("ckpt sink poisoned");
+        inner.seq += 1;
+        let seq = inner.seq;
+        let fname = format!("shard{shard}-{seq:08}.json");
+        write_atomic(&self.dir.join(&fname), &state.to_json().to_string_compact())?;
+        let old = inner.latest[shard].replace(fname);
+        let committed = if inner.latest.iter().all(Option::is_some) {
+            let files: Vec<String> =
+                inner.latest.iter().map(|f| f.clone().expect("all some")).collect();
+            let manifest = Json::obj(vec![
+                ("version", Json::Num(CKPT_VERSION as f64)),
+                ("seq", Json::Num(seq as f64)),
+                ("shards", Json::Num(files.len() as f64)),
+                (
+                    "files",
+                    Json::Arr(files.iter().map(|f| Json::Str(f.clone())).collect()),
+                ),
+            ]);
+            let mname = manifest_name(seq);
+            write_atomic(&self.dir.join(&mname), &manifest.to_string_pretty())?;
+            inner.manifests.push((seq, mname, files));
+            self.prune(&mut inner);
+            true
+        } else {
+            false
+        };
+        // A superseded shard file not referenced by any kept manifest
+        // is garbage immediately.
+        if let Some(old) = old {
+            let referenced = inner
+                .manifests
+                .iter()
+                .any(|(_, _, files)| files.contains(&old));
+            if !referenced {
+                let _ = fs::remove_file(self.dir.join(old));
+            }
+        }
+        Ok(committed)
+    }
+
+    /// Keep the two newest manifests (and their files); delete older
+    /// manifests and any shard files only they referenced.
+    fn prune(&self, inner: &mut SinkInner) {
+        while inner.manifests.len() > 2 {
+            let (_, mname, files) = inner.manifests.remove(0);
+            let keep: Vec<&String> = inner
+                .manifests
+                .iter()
+                .flat_map(|(_, _, fs)| fs.iter())
+                .chain(inner.latest.iter().flatten())
+                .collect();
+            for f in &files {
+                if !keep.contains(&f) {
+                    let _ = fs::remove_file(self.dir.join(f));
+                }
+            }
+            let _ = fs::remove_file(self.dir.join(mname));
+        }
+    }
+}
+
+/// Restore the newest valid checkpoint from `dir` for a topology of
+/// `expected_shards` shards. Returns `Ok(None)` only in
+/// [`ResumeMode::BestEffort`] when nothing usable exists — strict mode
+/// turns every defect (no checkpoint, truncated file, bad version,
+/// missing shard entry, topology mismatch) into a clean [`Error::Ckpt`].
+pub fn load_latest(
+    dir: impl AsRef<Path>,
+    mode: ResumeMode,
+    expected_shards: usize,
+) -> Result<Option<Vec<ShardState>>> {
+    let dir = dir.as_ref();
+    let manifests = list_manifests(dir)?;
+    if manifests.is_empty() {
+        return match mode {
+            ResumeMode::Strict => Err(Error::Ckpt(format!(
+                "no checkpoint manifest in '{}'",
+                dir.display()
+            ))),
+            ResumeMode::BestEffort => Ok(None),
+        };
+    }
+    for (_, mname) in &manifests {
+        match load_manifest(dir, mname, expected_shards) {
+            Ok(states) => return Ok(Some(states)),
+            // Strict: the newest manifest must be the one we restore —
+            // silently sliding back to an older checkpoint would mask
+            // corruption and replay more stream than the operator asked
+            // for.
+            Err(e) if mode == ResumeMode::Strict => return Err(e),
+            Err(_) => continue,
+        }
+    }
+    Ok(None) // best-effort: nothing validated → fresh start
+}
+
+fn load_manifest(dir: &Path, mname: &str, expected_shards: usize) -> Result<Vec<ShardState>> {
+    let path = dir.join(mname);
+    let text = fs::read_to_string(&path)
+        .map_err(|e| Error::Ckpt(format!("manifest '{}': {e}", path.display())))?;
+    let v = codec::parse(&text)
+        .map_err(|e| Error::Ckpt(format!("manifest '{}': {e}", path.display())))?;
+    let version = num_u64(&v, "version")
+        .map_err(|_| Error::Ckpt(format!("manifest '{mname}': missing version")))?;
+    if version != CKPT_VERSION {
+        return Err(Error::Ckpt(format!(
+            "unsupported checkpoint version {version} (this build reads {CKPT_VERSION})"
+        )));
+    }
+    let shards = num_usize(&v, "shards")?;
+    if shards != expected_shards {
+        return Err(Error::Ckpt(format!(
+            "checkpoint covers {shards} shards, topology wants {expected_shards}"
+        )));
+    }
+    let files = v
+        .require("files")
+        .map_err(|_| Error::Ckpt(format!("manifest '{mname}': missing files")))?
+        .as_arr()
+        .ok_or_else(|| Error::Ckpt(format!("manifest '{mname}': files must be an array")))?;
+    if files.len() != shards {
+        return Err(Error::Ckpt(format!(
+            "manifest '{mname}' lists {} shard files for {shards} shards",
+            files.len()
+        )));
+    }
+    let mut states: Vec<Option<ShardState>> = (0..shards).map(|_| None).collect();
+    for f in files {
+        let fname = f
+            .as_str()
+            .ok_or_else(|| Error::Ckpt(format!("manifest '{mname}': bad file entry")))?;
+        let fpath = dir.join(fname);
+        let text = fs::read_to_string(&fpath).map_err(|e| {
+            Error::Ckpt(format!("missing shard checkpoint '{}': {e}", fpath.display()))
+        })?;
+        let sv = codec::parse(&text).map_err(|e| {
+            Error::Ckpt(format!("shard checkpoint '{}': {e}", fpath.display()))
+        })?;
+        let state = ShardState::from_json(&sv)?;
+        let idx = state.shard;
+        if idx >= shards || states[idx].is_some() {
+            return Err(Error::Ckpt(format!(
+                "manifest '{mname}': shard index {idx} out of range or duplicated"
+            )));
+        }
+        states[idx] = Some(state);
+    }
+    Ok(states.into_iter().map(|s| s.expect("all shards placed")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Pipeline;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ocl-ckpt-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn demo_state(shard: usize, cursor: u64) -> ShardState {
+        let p = Pipeline::default();
+        let f1 = Arc::new(p.featurize("kw0x001 kw0x002"));
+        let f2 = Arc::new(p.featurize("kw1x003"));
+        let snap = |kind: &str, n: usize| Snapshot {
+            kind: kind.into(),
+            classes: 2,
+            data: (0..n).map(|i| i as f32 * 0.5).collect(),
+        };
+        ShardState {
+            shard,
+            cursor,
+            rng_s: [u64::MAX, 1, (1 << 60) + 7, 42],
+            rng_cached: Some(-0.75),
+            betas: vec![0.5, 0.25],
+            threshold_scale: 0.7,
+            probe_seq: 9,
+            sync_staged: vec![(f1.clone(), 1)],
+            served: 100,
+            shed: 2,
+            correct: 80,
+            llm_calls: 30,
+            handled: vec![50, 20, 30],
+            levels: vec![
+                LevelState {
+                    model: snap("lr", 16),
+                    calib: snap("mlp", 8),
+                    train_chunks: 12,
+                    calib_chunks: 7,
+                    train_sends: 3,
+                    pending: 5,
+                    calib_pending: 2,
+                    cache: vec![(f1.clone(), 1), (f2.clone(), 0), (f1.clone(), 1)],
+                    calib_cache: vec![(vec![0.9, 0.1], 0.0), (vec![0.4, 0.6], 1.0)],
+                },
+                LevelState {
+                    model: snap("tfm_base", 24),
+                    calib: snap("mlp", 8),
+                    train_chunks: 4,
+                    calib_chunks: 4,
+                    train_sends: 1,
+                    pending: 0,
+                    calib_pending: 7,
+                    cache: vec![(f2, 0), (f1, 1)],
+                    calib_cache: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn shard_state_json_roundtrip_is_exact() {
+        let s = demo_state(0, 123);
+        let text = s.to_json().to_string_compact();
+        let back = ShardState::from_json(&codec::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s, "every field must survive the JSON trip bit-for-bit");
+        // interning: f1 appears 4× across caches/staged but is written once
+        let v = codec::parse(&text).unwrap();
+        assert_eq!(
+            v.get("features").unwrap().as_arr().unwrap().len(),
+            2,
+            "shared Arc queries must be interned, not duplicated"
+        );
+    }
+
+    #[test]
+    fn sink_commits_manifests_and_prunes() {
+        let dir = tmpdir("sink");
+        let sink = CkptSink::create(&dir, 2).unwrap();
+        // No manifest until every shard deposited once.
+        assert!(!sink.deposit(0, &demo_state(0, 10)).unwrap());
+        assert!(load_latest(&dir, ResumeMode::BestEffort, 2).unwrap().is_none());
+        assert!(sink.deposit(1, &demo_state(1, 8)).unwrap());
+        let states = load_latest(&dir, ResumeMode::Strict, 2).unwrap().unwrap();
+        assert_eq!(states.len(), 2);
+        assert_eq!(states[0].cursor, 10);
+        assert_eq!(states[1].cursor, 8);
+        // More deposits → newer manifests win; pruning keeps the dir bounded.
+        for k in 0..5 {
+            sink.deposit(0, &demo_state(0, 20 + k)).unwrap();
+            sink.deposit(1, &demo_state(1, 20 + k)).unwrap();
+        }
+        let states = load_latest(&dir, ResumeMode::Strict, 2).unwrap().unwrap();
+        assert_eq!(states[0].cursor, 24);
+        let manifests = list_manifests(&dir).unwrap();
+        assert!(manifests.len() <= 2, "pruning must bound manifests: {manifests:?}");
+        // Seq numbering continues across sink restarts, and prior-run
+        // manifests are adopted into the prune list — the directory
+        // stays bounded across process restarts, not just within one.
+        let sink2 = CkptSink::create(&dir, 2).unwrap();
+        sink2.deposit(0, &demo_state(0, 99)).unwrap();
+        sink2.deposit(1, &demo_state(1, 99)).unwrap();
+        let states = load_latest(&dir, ResumeMode::Strict, 2).unwrap().unwrap();
+        assert_eq!(states[0].cursor, 99, "a reopened sink must supersede, not shadow");
+        let manifests = list_manifests(&dir).unwrap();
+        assert!(
+            manifests.len() <= 2,
+            "pruning must cover manifests inherited from earlier processes: {manifests:?}"
+        );
+        let shard_files = fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("shard"))
+            .count();
+        assert!(
+            shard_files <= 2 * 2 + 2,
+            "stale shard files must be swept, got {shard_files}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_checkpoints_error_cleanly() {
+        let dir = tmpdir("corrupt");
+        let sink = CkptSink::create(&dir, 1).unwrap();
+        sink.deposit(0, &demo_state(0, 50)).unwrap();
+        let manifests = list_manifests(&dir).unwrap();
+        let (_, mname) = &manifests[0];
+        let mtext = fs::read_to_string(dir.join(mname)).unwrap();
+        let shard_file = {
+            let v = codec::parse(&mtext).unwrap();
+            v.get("files").unwrap().as_arr().unwrap()[0]
+                .as_str()
+                .unwrap()
+                .to_string()
+        };
+
+        // 1. truncated shard file → strict errors, best-effort falls back fresh
+        let full = fs::read_to_string(dir.join(&shard_file)).unwrap();
+        fs::write(dir.join(&shard_file), &full[..full.len() / 2]).unwrap();
+        let err = load_latest(&dir, ResumeMode::Strict, 1).unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+        assert!(load_latest(&dir, ResumeMode::BestEffort, 1).unwrap().is_none());
+        fs::write(dir.join(&shard_file), &full).unwrap();
+        assert!(load_latest(&dir, ResumeMode::Strict, 1).unwrap().is_some());
+
+        // 2. bad version field → strict errors
+        fs::write(dir.join(mname), mtext.replace("\"version\": 1", "\"version\": 99"))
+            .unwrap();
+        let err = load_latest(&dir, ResumeMode::Strict, 1).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        assert!(load_latest(&dir, ResumeMode::BestEffort, 1).unwrap().is_none());
+        fs::write(dir.join(mname), &mtext).unwrap();
+
+        // 3. missing shard file named by the manifest → strict errors
+        fs::remove_file(dir.join(&shard_file)).unwrap();
+        let err = load_latest(&dir, ResumeMode::Strict, 1).unwrap_err();
+        assert!(err.to_string().contains("missing shard"), "{err}");
+        assert!(load_latest(&dir, ResumeMode::BestEffort, 1).unwrap().is_none());
+
+        // 4. topology mismatch → strict errors even on a valid file set
+        fs::write(dir.join(&shard_file), &full).unwrap();
+        let err = load_latest(&dir, ResumeMode::Strict, 2).unwrap_err();
+        assert!(err.to_string().contains("topology"), "{err}");
+
+        // 5. empty dir: strict errors, best-effort starts fresh
+        let empty = tmpdir("empty");
+        assert!(load_latest(&empty, ResumeMode::Strict, 1).is_err());
+        assert!(load_latest(&empty, ResumeMode::BestEffort, 1).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+        let _ = fs::remove_dir_all(&empty);
+    }
+
+    #[test]
+    fn resume_mode_parsing() {
+        assert_eq!(ResumeMode::from_name("strict").unwrap(), ResumeMode::Strict);
+        assert_eq!(
+            ResumeMode::from_name("best-effort").unwrap(),
+            ResumeMode::BestEffort
+        );
+        assert!(ResumeMode::from_name("maybe").is_err());
+    }
+
+    #[test]
+    fn config_shape_mismatches_are_rejected() {
+        use crate::config::{BenchmarkId, ExpertId};
+        let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        let mut s = demo_state(0, 1);
+        s.check_config(&cfg, 2).unwrap();
+        s.levels[1].model.kind = "lr".into();
+        assert!(s.check_config(&cfg, 2).is_err(), "kind drift must be rejected");
+        let mut s = demo_state(0, 1);
+        s.betas.pop();
+        assert!(s.check_config(&cfg, 2).is_err(), "β length drift must be rejected");
+        let s = demo_state(0, 1);
+        assert!(s.check_config(&cfg, 7).is_err(), "class drift must be rejected");
+    }
+}

@@ -96,6 +96,20 @@ pub fn drive(
     seed: u64,
     tx: Sender<Request>,
 ) -> JoinHandle<usize> {
+    drive_from(samples, arrival, seed, tx, 0)
+}
+
+/// [`drive`] with request ids starting at `first_id` instead of 0 —
+/// the checkpoint-resume driver: a restored run resubmits the stream
+/// tail with its *original* positions, so shard hashing and the
+/// server's stream cursor line up with the interrupted run.
+pub fn drive_from(
+    samples: Vec<Sample>,
+    arrival: Arrival,
+    seed: u64,
+    tx: Sender<Request>,
+    first_id: u64,
+) -> JoinHandle<usize> {
     std::thread::spawn(move || {
         let mut rng = Rng::new(seed);
         let schedule = arrival.schedule(samples.len(), &mut rng);
@@ -107,7 +121,7 @@ pub fn drive(
             }
             let ok = tx
                 .send(Request {
-                    id: i as u64,
+                    id: first_id + i as u64,
                     text: s.text.clone(),
                     truth: s.label,
                     sample: s.clone(),

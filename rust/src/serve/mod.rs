@@ -48,18 +48,30 @@
 //! replay caches living in the router re-teach those on the next
 //! training trigger. The restart budget is [`ServeConfig::max_restarts`].
 //!
-//! **Admission control.** The router's in-system population is bounded
-//! by [`ServeConfig::max_pending`]; arrivals beyond the bound are shed
-//! with an immediate [`Response`] (`shed = true`) and counted
-//! separately, so overload degrades by refusing work instead of by
-//! growing queues without bound.
+//! **Admission control.** The in-system population is bounded by a
+//! single [`ServeConfig::max_pending`] budget shared by *every* shard
+//! behind a front (an [`AdmissionGate`]; a stand-alone router owns a
+//! private gate, which degenerates to the old per-router bound).
+//! Arrivals beyond the budget are shed with an immediate [`Response`]
+//! (`shed = true`) and counted separately, so overload degrades by
+//! refusing work instead of by growing queues without bound — and a
+//! hot shard can no longer hide behind an idle peer's headroom.
+//!
+//! **Durability.** With a checkpoint directory configured ([`ckpt`]),
+//! the router persists its full learner state every
+//! [`ServeConfig::ckpt_every`] expert annotations and at graceful
+//! shutdown. Cadence checkpoints are quiescent barriers: admission
+//! pauses, in-flight work drains, the state is written atomically,
+//! admission resumes — which is what makes a resumed β/chunk-count
+//! trajectory bit-identical to an uninterrupted run.
 
+pub mod ckpt;
 pub mod load;
 pub mod pool;
 pub mod shard;
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -74,7 +86,8 @@ use crate::prng::Rng;
 use crate::sim::Expert;
 use crate::util::{argmax, Percentiles, Ring};
 
-use pool::{LevelPool, WorkerReply, WorkerSpec};
+use ckpt::{CkptSink, LevelState, ShardState};
+use pool::{LevelPool, PoolInit, WorkerReply, WorkerSpec};
 
 /// A client request: one document to classify.
 #[derive(Clone, Debug)]
@@ -119,7 +132,9 @@ pub struct ServeReport {
     pub latency_ms: Percentiles,
     /// Wall-clock duration of the run (seconds).
     pub wall_secs: f64,
-    /// Served requests per second.
+    /// Requests served per second *by this run* (a resumed run's
+    /// cumulative `served` includes the interrupted run's work, which
+    /// this rate deliberately excludes).
     pub throughput: f64,
     /// Per-level handled counts (last = expert).
     pub handled: Vec<usize>,
@@ -142,8 +157,16 @@ pub struct ServeReport {
     /// Inference jobs dispatched per level per pool member (member 0 =
     /// the learner authority) — the per-replica throughput counters.
     pub replica_jobs: Vec<Vec<u64>>,
-    /// Largest in-system population observed (≤ `max_pending`).
+    /// Largest in-system population observed (≤ `max_pending`; local
+    /// to this shard — the shared budget's peak is reported by
+    /// `shard::ShardReport::peak_pending`).
     pub peak_pending: usize,
+    /// True when this run restored a checkpoint (counters above then
+    /// continue the interrupted run's totals).
+    pub resumed: bool,
+    /// Durable checkpoints written during this run (cadence + the
+    /// graceful-shutdown one).
+    pub ckpts: u64,
     /// Per-level DAgger β after the run (cascade-parity diagnostic).
     pub final_betas: Vec<f64>,
     /// 8-sample model-training chunks executed per level worker.
@@ -183,8 +206,60 @@ impl ServeReport {
                 Json::Arr(self.replica_jobs.iter().map(|r| nums64(r)).collect()),
             ),
             ("peak_pending", Json::Num(self.peak_pending as f64)),
+            ("resumed", Json::Bool(self.resumed)),
+            ("ckpts", Json::Num(self.ckpts as f64)),
             ("handled", nums(&self.handled)),
         ])
+    }
+}
+
+/// The shared in-system budget ([`ServeConfig::max_pending`]). One
+/// gate is shared by every shard behind a [`shard::ShardFront`], so
+/// admission is bounded *globally* — previously each shard owned its
+/// own `max_pending`, letting an N-shard deployment hold N× the
+/// configured population.
+pub(crate) struct AdmissionGate {
+    cap: usize,
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl AdmissionGate {
+    pub(crate) fn new(cap: usize) -> Self {
+        AdmissionGate { cap, cur: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+    }
+
+    /// Reserve one in-system slot; `false` when the budget is full
+    /// (the caller sheds). Lock-free: shards race through CAS.
+    pub(crate) fn try_admit(&self) -> bool {
+        let mut cur = self.cur.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cap {
+                return false;
+            }
+            match self.cur.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + 1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Release one slot (request answered).
+    pub(crate) fn release(&self) {
+        self.cur.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Largest population the gate ever admitted.
+    pub(crate) fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
     }
 }
 
@@ -299,6 +374,19 @@ impl LevelQueue {
     }
 }
 
+/// Cumulative counters restored from a checkpoint (all zero for a
+/// fresh run) — a resumed run's `ServeReport` continues the totals the
+/// interrupted run had banked.
+#[derive(Clone, Default)]
+struct RunBase {
+    served: usize,
+    shed: usize,
+    correct: usize,
+    llm_calls: u64,
+    handled: Vec<usize>,
+    cursor: u64,
+}
+
 /// Mutable per-run state of the serve loop (split from `Server` so the
 /// router methods can borrow both independently).
 struct RunState {
@@ -313,22 +401,33 @@ struct RunState {
     llm_calls: u64,
     admitted: usize,
     peak_pending: usize,
+    /// Stream high-water mark: 1 + the largest request id seen. At a
+    /// quiescent checkpoint (pending empty) this is exactly the resume
+    /// cursor — every id below it has been fully absorbed. Assumes the
+    /// driver assigns sequential ids, which `load::drive` and `ocl
+    /// serve` do.
+    cursor: u64,
 }
 
 impl RunState {
-    fn new(n_levels: usize, replicas: usize) -> Self {
+    fn new(n_levels: usize, replicas: usize, base: &RunBase) -> Self {
         RunState {
             pending: HashMap::new(),
             probe_truth: HashMap::new(),
             queues: (0..n_levels).map(|_| LevelQueue::new(replicas)).collect(),
             lat: Percentiles::new(),
-            handled: vec![0; n_levels + 1],
-            correct: 0,
-            served: 0,
-            shed: 0,
-            llm_calls: 0,
+            handled: if base.handled.is_empty() {
+                vec![0; n_levels + 1]
+            } else {
+                base.handled.clone()
+            },
+            correct: base.correct,
+            served: base.served,
+            shed: base.shed,
+            llm_calls: base.llm_calls,
             admitted: 0,
             peak_pending: 0,
+            cursor: base.cursor,
         }
     }
 
@@ -369,16 +468,51 @@ pub struct Server {
     calib_pendings: Vec<usize>,
     betas: Vec<f64>,
     threshold_scale: f64,
+    // admission + durability
+    admission: Arc<AdmissionGate>,
+    ckpt_sink: Option<Arc<CkptSink>>,
+    shard_idx: usize,
+    resumed: bool,
+    anns_since_ckpt: usize,
+    ckpts_written: u64,
+    base: RunBase,
 }
 
 impl Server {
-    /// Spawn the level pools and build the router.
+    /// Spawn the level pools and build the router (fresh learner state).
     pub fn new(
         cfg: CascadeConfig,
         classes: usize,
         expert: Expert,
         serve_cfg: ServeConfig,
         artifacts_dir: &str,
+    ) -> Result<Self> {
+        Self::build(cfg, classes, expert, serve_cfg, artifacts_dir, None)
+    }
+
+    /// Rebuild a router from a checkpointed shard state: the pools'
+    /// snapshot slots are seeded with the checkpointed weights before
+    /// any worker spawns, and every learner field (β, RNG, caches,
+    /// cadence counters, sync stage, cumulative report counters)
+    /// continues exactly where the checkpoint left it.
+    pub fn resume(
+        cfg: CascadeConfig,
+        classes: usize,
+        expert: Expert,
+        serve_cfg: ServeConfig,
+        artifacts_dir: &str,
+        state: ShardState,
+    ) -> Result<Self> {
+        Self::build(cfg, classes, expert, serve_cfg, artifacts_dir, Some(state))
+    }
+
+    fn build(
+        cfg: CascadeConfig,
+        classes: usize,
+        expert: Expert,
+        serve_cfg: ServeConfig,
+        artifacts_dir: &str,
+        state: Option<ShardState>,
     ) -> Result<Self> {
         if serve_cfg.batch_max == 0 || serve_cfg.max_pending == 0 {
             return Err(Error::Config(
@@ -390,12 +524,25 @@ impl Server {
                 "serve shards and replicas_per_level must be positive".into(),
             ));
         }
+        if let Some(s) = &state {
+            s.check_config(&cfg, classes)?;
+        }
         let (reply_tx, reply_rx) = channel();
         let pools: Vec<LevelPool> = cfg
             .levels
             .iter()
             .enumerate()
             .map(|(i, lc)| {
+                let init = state.as_ref().map(|s| {
+                    let l = &s.levels[i];
+                    PoolInit {
+                        model: l.model.clone(),
+                        calib: l.calib.clone(),
+                        train_chunks: l.train_chunks,
+                        calib_chunks: l.calib_chunks,
+                        train_sends: l.train_sends,
+                    }
+                });
                 LevelPool::new(
                     WorkerSpec {
                         level: i,
@@ -408,36 +555,99 @@ impl Server {
                     serve_cfg.shard.replicas_per_level,
                     serve_cfg.publish_every,
                     reply_tx.clone(),
+                    init,
                 )
             })
             .collect();
         drop(reply_tx); // each pool holds its own clone for respawns
         let n = cfg.levels.len();
+        let mut caches: Vec<Ring<(Arc<Featurized>, usize)>> = cfg
+            .levels
+            .iter()
+            .map(|l| Ring::new(l.cache_size.max(l.batch_size) * REPLAY_FACTOR))
+            .collect();
+        let mut calib_caches: Vec<Ring<(Vec<f32>, f32)>> =
+            (0..n).map(|_| Ring::new(CALIB_CACHE)).collect();
+        let mut pendings = vec![0; n];
+        let mut calib_pendings = vec![0; n];
+        let mut betas = vec![cfg.beta0; n];
+        let mut rng = Rng::new(cfg.seed ^ 0x5E57E);
+        let mut probe_seq = 0;
+        let mut threshold_scale = 1.0;
+        let mut sync_staged = Vec::new();
+        let mut shard_idx = 0;
+        let mut base = RunBase::default();
+        let resumed = state.is_some();
+        if let Some(s) = state {
+            base = RunBase {
+                served: s.served,
+                shed: s.shed,
+                correct: s.correct,
+                llm_calls: s.llm_calls,
+                handled: s.handled,
+                cursor: s.cursor,
+            };
+            for (i, l) in s.levels.into_iter().enumerate() {
+                for item in l.cache {
+                    caches[i].push(item);
+                }
+                for item in l.calib_cache {
+                    calib_caches[i].push(item);
+                }
+                pendings[i] = l.pending;
+                calib_pendings[i] = l.calib_pending;
+            }
+            betas = s.betas;
+            rng = Rng::from_state(s.rng_s, s.rng_cached);
+            probe_seq = s.probe_seq;
+            threshold_scale = s.threshold_scale;
+            sync_staged = s.sync_staged;
+            shard_idx = s.shard;
+        }
         Ok(Server {
             pools,
             reply_rx,
-            serve_cfg,
             classes,
             expert,
             pipeline: Pipeline::default(),
-            rng: Rng::new(cfg.seed ^ 0x5E57E),
+            rng,
             chaos: None,
             sync_out: Vec::new(),
             sync_in: None,
-            sync_staged: Vec::new(),
-            probe_seq: 0,
-            caches: cfg
-                .levels
-                .iter()
-                .map(|l| Ring::new(l.cache_size.max(l.batch_size) * REPLAY_FACTOR))
-                .collect(),
-            calib_caches: (0..n).map(|_| Ring::new(CALIB_CACHE)).collect(),
-            pendings: vec![0; n],
-            calib_pendings: vec![0; n],
-            betas: vec![cfg.beta0; n],
-            threshold_scale: 1.0,
+            sync_staged,
+            probe_seq,
+            caches,
+            calib_caches,
+            pendings,
+            calib_pendings,
+            betas,
+            threshold_scale,
+            admission: Arc::new(AdmissionGate::new(serve_cfg.max_pending)),
+            ckpt_sink: None,
+            shard_idx,
+            resumed,
+            anns_since_ckpt: 0,
+            ckpts_written: 0,
+            base,
+            serve_cfg,
             cfg,
         })
+    }
+
+    /// Wire durable checkpointing: the router will deposit its state
+    /// into `sink` as shard `shard_idx` every
+    /// [`ServeConfig::ckpt_every`] annotations and at graceful
+    /// shutdown.
+    pub fn attach_ckpt(&mut self, sink: Arc<CkptSink>, shard_idx: usize) {
+        self.ckpt_sink = Some(sink);
+        self.shard_idx = shard_idx;
+    }
+
+    /// Share a global admission budget (called by
+    /// [`shard::ShardFront`]; a stand-alone server keeps its private
+    /// gate).
+    pub(crate) fn set_admission(&mut self, gate: Arc<AdmissionGate>) {
+        self.admission = gate;
     }
 
     /// Set the cost-pressure knob (see [`crate::cascade::Cascade`]).
@@ -476,8 +686,15 @@ impl Server {
     ) -> Result<ServeReport> {
         let t_start = Instant::now();
         let n_levels = self.cfg.levels.len();
-        let mut st = RunState::new(n_levels, self.serve_cfg.shard.replicas_per_level);
+        let mut st =
+            RunState::new(n_levels, self.serve_cfg.shard.replicas_per_level, &self.base);
         let mut inputs_open = true;
+        // Checkpoint barrier: while set, admission pauses so in-flight
+        // work drains to a quiescent point the checkpoint can capture.
+        let mut ckpt_due = false;
+        // One-shot end-of-stream broadcast of below-interval staged
+        // annotations (the drain-on-exit flush).
+        let mut sync_flushed = false;
 
         loop {
             // 0. supervision: respawn dead workers, requeue their batches.
@@ -489,8 +706,19 @@ impl Server {
                 }
             }
 
-            // 1. admit new requests (non-blocking drain + admission control).
-            while inputs_open {
+            // 0b. arm the checkpoint barrier when the cadence is due.
+            if inputs_open
+                && self.ckpt_sink.is_some()
+                && self.serve_cfg.ckpt_every > 0
+                && self.anns_since_ckpt >= self.serve_cfg.ckpt_every
+            {
+                ckpt_due = true;
+            }
+
+            // 1. admit new requests (non-blocking drain + admission
+            //    control); paused while a checkpoint barrier drains —
+            //    arrivals wait in the channel, not in router state.
+            while inputs_open && !ckpt_due {
                 match rx.try_recv() {
                     Ok(req) => self.admit(req, &mut st, &tx),
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
@@ -500,8 +728,11 @@ impl Server {
                 }
             }
 
-            // 1b. absorb peer-shard annotations (cross-shard sync).
-            self.drain_sync(&mut st);
+            // 1b. absorb peer-shard annotations (cross-shard sync);
+            //     also paused during a barrier so the drain converges.
+            if !ckpt_due {
+                self.drain_sync(&mut st);
+            }
 
             // 2. flush batches that are full or past deadline to free
             //    pool members (least-loaded first).
@@ -515,7 +746,7 @@ impl Server {
                     if !st.queues[i].due(
                         self.serve_cfg.batch_max,
                         self.serve_cfg.deadline,
-                        !inputs_open,
+                        !inputs_open || ckpt_due,
                     ) {
                         break;
                     }
@@ -542,8 +773,56 @@ impl Server {
                 }
             }
 
+            // 4. barrier reached quiescence → write the checkpoint and
+            //    re-open admission. A pool member dying between the
+            //    supervision sweep and the export must not abort the
+            //    run: leave the barrier armed — the next iteration's
+            //    supervision respawns the worker and the barrier
+            //    retries (admission stays paused meanwhile).
+            if ckpt_due && st.idle() {
+                match self.write_ckpt(&st) {
+                    Ok(()) => ckpt_due = false,
+                    Err(Error::Worker(_)) => {}
+                    Err(e) => return Err(e),
+                }
+            }
+
             if !inputs_open && st.idle() {
-                break;
+                if !sync_flushed {
+                    // Stream end: our outgoing annotation stream is
+                    // complete (remote absorbs never annotate), so
+                    // broadcast the below-interval leftovers and drop
+                    // our senders — peers' inboxes can then disconnect.
+                    self.flush_sync();
+                    sync_flushed = true;
+                }
+                // Keep absorbing peers' annotations until every peer
+                // has flushed and hung up (no peer: exits immediately).
+                if self.sync_in.is_none() {
+                    break;
+                }
+            }
+        }
+
+        // Graceful-shutdown checkpoint: the drain above left the
+        // router quiescent, so this captures an exact resume point. A
+        // worker crash racing shutdown gets one supervised respawn and
+        // retry — it must not cost the final checkpoint (the respawn
+        // warm-starts from the latest publication, the usual warm-
+        // respawn staleness bound).
+        if self.ckpt_sink.is_some() {
+            if let Err(e) = self.write_ckpt(&st) {
+                if !matches!(e, Error::Worker(_)) {
+                    return Err(e);
+                }
+                for i in 0..n_levels {
+                    for r in 0..self.pools[i].replicas() {
+                        if self.pools[i].workers[r].handle.is_finished() {
+                            self.respawn(i, r, &mut st.queues)?;
+                        }
+                    }
+                }
+                self.write_ckpt(&st)?;
             }
         }
 
@@ -555,7 +834,9 @@ impl Server {
         Ok(ServeReport {
             served: st.served,
             shed: st.shed,
-            throughput: st.served as f64 / wall.max(1e-9),
+            // This run's own rate: exclude the restored base, else a
+            // resumed tail reports the whole stream over its short wall.
+            throughput: (st.served - self.base.served) as f64 / wall.max(1e-9),
             wall_secs: wall,
             latency_ms: st.lat,
             handled: st.handled,
@@ -572,6 +853,8 @@ impl Server {
             snapshot_lag: self.pools.iter().map(|p| p.snapshot_lag()).collect(),
             replica_jobs: self.pools.iter().map(|p| p.replica_jobs.clone()).collect(),
             peak_pending: st.peak_pending,
+            resumed: self.resumed,
+            ckpts: self.ckpts_written,
             final_betas: self.betas.clone(),
             train_batches: self
                 .pools
@@ -586,10 +869,12 @@ impl Server {
         })
     }
 
-    /// Admission: shed when over the bound, otherwise run the cascade's
-    /// level-0 DAgger gate and enqueue (or jump straight to the expert).
+    /// Admission: shed when the (possibly shard-shared) budget is
+    /// full, otherwise run the cascade's level-0 DAgger gate and
+    /// enqueue (or jump straight to the expert).
     fn admit(&mut self, req: Request, st: &mut RunState, tx: &Sender<Response>) {
-        if st.pending.len() >= self.serve_cfg.max_pending {
+        st.cursor = st.cursor.max(req.id + 1);
+        if !self.admission.try_admit() {
             st.shed += 1;
             let _ = tx.send(Response {
                 id: req.id,
@@ -683,6 +968,7 @@ impl Server {
                 // exit here
                 let pred = argmax(&probs);
                 let state = st.pending.remove(&req_id).expect("state");
+                self.admission.release();
                 st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
                 st.handled[lvl] += 1;
                 if pred == state.truth {
@@ -753,6 +1039,76 @@ impl Server {
             queues[i].requeue_front(jobs);
         }
         Ok(())
+    }
+
+    /// End-of-stream sync flush: broadcast annotations still staged
+    /// below the `sync_interval` threshold (they used to be silently
+    /// dropped — the fix for the "annotations near stream end are
+    /// lost" gap), then drop our peer senders so their inboxes can
+    /// disconnect. Called exactly once, at the first locally-idle
+    /// moment after the input stream closes; from then on this shard
+    /// can only *absorb* (remote absorbs never produce annotations),
+    /// so its outgoing stream really is complete.
+    fn flush_sync(&mut self) {
+        if !self.sync_out.is_empty() && !self.sync_staged.is_empty() {
+            let staged = std::mem::take(&mut self.sync_staged);
+            for peer in &self.sync_out {
+                let _ = peer.send(SyncBatch(staged.clone()));
+            }
+        }
+        self.sync_out.clear();
+    }
+
+    /// Capture the full learner state at a quiescent point and persist
+    /// it through the sink (atomic write + manifest commit).
+    fn write_ckpt(&mut self, st: &RunState) -> Result<()> {
+        let Some(sink) = self.ckpt_sink.clone() else {
+            return Ok(());
+        };
+        debug_assert!(st.idle(), "checkpoints must capture a quiescent router");
+        let state = self.export_state(st)?;
+        sink.deposit(self.shard_idx, &state)?;
+        self.anns_since_ckpt = 0;
+        self.ckpts_written += 1;
+        Ok(())
+    }
+
+    /// Assemble the durable [`ShardState`]: live authority weights
+    /// (synchronous pool export), learner-cadence counters, replay
+    /// caches, RNG, β, the sync stage, and cumulative serve counters.
+    fn export_state(&self, st: &RunState) -> Result<ShardState> {
+        let mut levels = Vec::with_capacity(self.pools.len());
+        for (i, pool) in self.pools.iter().enumerate() {
+            let (model, calib) = pool.export()?;
+            levels.push(LevelState {
+                model,
+                calib,
+                train_chunks: pool.stats.train_chunks.load(Ordering::Relaxed),
+                calib_chunks: pool.stats.calib_chunks.load(Ordering::Relaxed),
+                train_sends: pool.train_sends(),
+                pending: self.pendings[i],
+                calib_pending: self.calib_pendings[i],
+                cache: self.caches[i].to_vec(),
+                calib_cache: self.calib_caches[i].to_vec(),
+            });
+        }
+        let (rng_s, rng_cached) = self.rng.state();
+        Ok(ShardState {
+            shard: self.shard_idx,
+            cursor: st.cursor,
+            rng_s,
+            rng_cached,
+            betas: self.betas.clone(),
+            threshold_scale: self.threshold_scale,
+            probe_seq: self.probe_seq,
+            sync_staged: self.sync_staged.clone(),
+            served: st.served,
+            shed: st.shed,
+            correct: st.correct,
+            llm_calls: st.llm_calls,
+            handled: st.handled.clone(),
+            levels,
+        })
     }
 
     /// Drain annotations replicated from peer shards and absorb them
@@ -836,8 +1192,10 @@ impl Server {
             return;
         };
         let state = st.pending.remove(&req_id).expect("pending state");
+        self.admission.release();
         let n_levels = self.cfg.levels.len();
         st.llm_calls += 1;
+        self.anns_since_ckpt += 1;
         // Cross-shard sync: stage the annotation for broadcast.
         if !self.sync_out.is_empty() && self.serve_cfg.shard.sync_interval > 0 {
             self.sync_staged.push((state.f.clone(), y_star));
@@ -910,6 +1268,7 @@ impl Server {
             return;
         }
         let state = st.pending.remove(&req_id).expect("pending state");
+        self.admission.release();
         let mut mix = vec![0.0f32; self.classes];
         for (probs, score) in state.seen.iter().flatten() {
             let w = (1.0 - *score).max(0.05);
@@ -989,6 +1348,8 @@ mod tests {
         // a quiet run: no restarts, bounded pending, betas decayed
         assert_eq!(report.restarts, vec![0, 0]);
         assert_eq!(report.warm_respawns, vec![0, 0]);
+        assert!(!report.resumed, "fresh server must not claim a restore");
+        assert_eq!(report.ckpts, 0, "no sink attached → no checkpoints");
         assert_eq!(report.restart_cap, ServeConfig::default().max_restarts);
         assert!(report.peak_pending <= ServeConfig::default().max_pending);
         assert_eq!(report.final_betas.len(), 2);

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::config::{Engine, ModelKind};
 use crate::error::{Error, Result};
@@ -86,6 +87,11 @@ pub(crate) enum WorkerMsg {
     TrainCalib(Vec<(Vec<f32>, f32)>, f32),
     /// Authority only: export current weights into the shared slot.
     Publish,
+    /// Authority only: reply with the live (model, calibrator)
+    /// snapshots over the provided one-shot channel (checkpointing).
+    /// Queued behind any in-flight `Train`, so the export captures
+    /// every training trigger sent before it.
+    Export(Sender<(Option<Snapshot>, Option<Snapshot>)>),
     /// Simulated crash (supervision tests): the worker thread exits
     /// without replying, exactly like a panic would leave it.
     Crash,
@@ -111,6 +117,24 @@ pub(crate) struct WorkerReply {
 pub(crate) struct WorkerStats {
     pub train_chunks: AtomicU64,
     pub calib_chunks: AtomicU64,
+}
+
+/// Authority state restored from a durable checkpoint. Seeds the
+/// pool's snapshot slot *before* any worker spawns, so the first spawn
+/// of every member (authority included) warm-starts from the
+/// checkpointed weights, and seeds the shared chunk counters so
+/// train/calib accounting continues across the restart.
+pub(crate) struct PoolInit {
+    /// Level-model parameters at the checkpoint.
+    pub model: Snapshot,
+    /// Calibrator parameters at the checkpoint.
+    pub calib: Snapshot,
+    /// Cumulative 8-sample model-training chunks at the checkpoint.
+    pub train_chunks: u64,
+    /// Cumulative 8-sample calibrator-training chunks at the checkpoint.
+    pub calib_chunks: u64,
+    /// Model-training triggers sent (publish-cadence continuity).
+    pub train_sends: u64,
 }
 
 /// Everything needed to (re)build one pool worker.
@@ -221,6 +245,9 @@ fn spawn_worker(
                         slot.publish(m, c, stats.train_chunks.load(Ordering::Relaxed));
                     }
                 }
+                WorkerMsg::Export(reply) => {
+                    let _ = reply.send((model.snapshot(), calib.snapshot()));
+                }
                 WorkerMsg::Crash => return,
                 WorkerMsg::Shutdown => break,
             }
@@ -255,10 +282,21 @@ impl LevelPool {
         replicas: usize,
         publish_every: usize,
         reply_tx: Sender<WorkerReply>,
+        init: Option<PoolInit>,
     ) -> Self {
         assert!(replicas >= 1, "a pool needs at least the authority");
         let stats = Arc::new(WorkerStats::default());
         let slot = Arc::new(SnapshotSlot::new());
+        let mut train_sends = 0;
+        if let Some(init) = init {
+            // Checkpoint restore: seed the slot before any spawn so the
+            // authority itself warm-starts from the checkpointed
+            // weights (counts as publication #1 in `published()`).
+            stats.train_chunks.store(init.train_chunks, Ordering::Relaxed);
+            stats.calib_chunks.store(init.calib_chunks, Ordering::Relaxed);
+            train_sends = init.train_sends;
+            slot.publish(init.model, init.calib, init.train_chunks);
+        }
         let workers = (0..replicas)
             .map(|r| spawn_worker(&spec, r, 0, reply_tx.clone(), stats.clone(), slot.clone()))
             .collect();
@@ -271,9 +309,43 @@ impl LevelPool {
             restarts: 0,
             warm_respawns: 0,
             replica_jobs: vec![0; replicas],
-            train_sends: 0,
+            train_sends,
             publish_every,
         }
+    }
+
+    /// Synchronously export the authority's live (model, calibrator)
+    /// parameters for checkpointing. Blocks until the authority drains
+    /// everything queued ahead of the request, so the export reflects
+    /// every training trigger sent before this call.
+    pub fn export(&self) -> Result<(Snapshot, Snapshot)> {
+        let (tx, rx) = channel();
+        self.workers[0]
+            .tx
+            .send(WorkerMsg::Export(tx))
+            .map_err(|_| {
+                Error::Worker(format!(
+                    "level {} authority gone at checkpoint export",
+                    self.spec.level
+                ))
+            })?;
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok((Some(model), Some(calib))) => Ok((model, calib)),
+            Ok(_) => Err(Error::Ckpt(format!(
+                "level {} backend cannot snapshot its state",
+                self.spec.level
+            ))),
+            Err(_) => Err(Error::Worker(format!(
+                "level {} authority died during checkpoint export",
+                self.spec.level
+            ))),
+        }
+    }
+
+    /// Model-training triggers sent so far (publish-cadence cursor,
+    /// persisted in checkpoints).
+    pub fn train_sends(&self) -> u64 {
+        self.train_sends
     }
 
     /// Pool capacity (authority + replicas).
@@ -415,7 +487,7 @@ mod tests {
         // bit-for-bit equal to a host model restored from the slot,
         // not fresh-initialization predictions.
         let (reply_tx, reply_rx) = channel();
-        let mut pool = LevelPool::new(spec(), 1, 1, reply_tx);
+        let mut pool = LevelPool::new(spec(), 1, 1, reply_tx, None);
         let p = Pipeline::default();
         pool.send_train(train_batch(&p), 0.5); // publish_every = 1 → publishes
         wait_for("publication", || pool.published() >= 1);
@@ -460,7 +532,7 @@ mod tests {
     #[test]
     fn replicas_install_published_snapshots() {
         let (reply_tx, reply_rx) = channel();
-        let mut pool = LevelPool::new(spec(), 2, 1, reply_tx);
+        let mut pool = LevelPool::new(spec(), 2, 1, reply_tx, None);
         let p = Pipeline::default();
         pool.send_train(train_batch(&p), 0.5);
         wait_for("publication", || pool.published() >= 1);
@@ -488,9 +560,59 @@ mod tests {
     }
 
     #[test]
+    fn export_then_seed_restores_the_exact_weights() {
+        // The checkpoint contract at the pool layer: export the trained
+        // authority, rebuild a pool from that state, and the fresh
+        // authority must serve bit-identical predictions with counters
+        // continuing from the export point.
+        let (reply_tx, _reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 1, 0, reply_tx, None);
+        let p = Pipeline::default();
+        pool.send_train(train_batch(&p), 0.5);
+        let (model, calib) = pool.export().expect("export after train");
+        let chunks = pool.stats.train_chunks.load(Ordering::Relaxed);
+        assert_eq!(chunks, 1, "one 8-sample chunk trained before export");
+        pool.shutdown();
+
+        let (reply_tx2, reply_rx2) = channel();
+        let mut pool2 = LevelPool::new(
+            spec(),
+            1,
+            0,
+            reply_tx2,
+            Some(PoolInit {
+                model: model.clone(),
+                calib,
+                train_chunks: chunks,
+                calib_chunks: 0,
+                train_sends: 1,
+            }),
+        );
+        assert_eq!(pool2.stats.train_chunks.load(Ordering::Relaxed), chunks);
+        assert_eq!(pool2.train_sends(), 1);
+        assert_eq!(pool2.snapshot_lag(), 0, "seeded slot covers restored chunks");
+        let probe = Arc::new(p.featurize("kw0x001 kw1x003"));
+        assert!(pool2.send_infer(0, vec![Job {
+            req_id: 5,
+            probe: false,
+            f: probe.clone(),
+            enq: Instant::now(),
+        }]));
+        let reply = reply_rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+        let mut expect = HostLrLevel::new(2);
+        expect.restore(&model).unwrap();
+        assert_eq!(
+            reply.results[0].2,
+            expect.predict(&probe),
+            "restored authority must serve the exported weights"
+        );
+        pool2.shutdown();
+    }
+
+    #[test]
     fn publish_cadence_and_lag_accounting() {
         let (reply_tx, _reply_rx) = channel();
-        let mut pool = LevelPool::new(spec(), 1, 2, reply_tx);
+        let mut pool = LevelPool::new(spec(), 1, 2, reply_tx, None);
         let p = Pipeline::default();
         pool.send_train(train_batch(&p), 0.5); // 1st trigger: no publish
         pool.send_train(train_batch(&p), 0.5); // 2nd trigger: publish

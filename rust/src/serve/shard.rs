@@ -22,13 +22,17 @@
 //! bit-for-bit the single router.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use crate::config::CascadeConfig;
 use crate::error::{Error, Result};
 use crate::sim::Expert;
 use crate::util::Percentiles;
 
-use super::{Chaos, Request, Response, Server, ServeConfig, ServeReport, SyncBatch};
+use super::ckpt::{self, CkptOptions, CkptSink, ShardState};
+use super::{
+    AdmissionGate, Chaos, Request, Response, Server, ServeConfig, ServeReport, SyncBatch,
+};
 
 /// Which shard a request id lands on (Fibonacci multiplicative hash —
 /// sequential client ids spread uniformly).
@@ -43,6 +47,10 @@ pub struct ShardReport {
     pub shards: Vec<ServeReport>,
     /// Wall clock of the whole run (front's view).
     pub wall_secs: f64,
+    /// Largest population the *global* admission budget ever held —
+    /// bounded by `ServeConfig::max_pending` across all shards
+    /// combined, not per shard.
+    pub peak_pending: usize,
 }
 
 impl ShardReport {
@@ -97,6 +105,16 @@ impl ShardReport {
             .unwrap_or(0)
     }
 
+    /// True when any shard restored from a checkpoint.
+    pub fn resumed(&self) -> bool {
+        self.shards.iter().any(|r| r.resumed)
+    }
+
+    /// Total durable checkpoints written across shards this run.
+    pub fn ckpts(&self) -> u64 {
+        self.shards.iter().map(|r| r.ckpts).sum()
+    }
+
     /// JSON encoding (bench baselines, report files).
     pub fn to_json(&self) -> crate::codec::Json {
         use crate::codec::Json;
@@ -113,6 +131,9 @@ impl ShardReport {
             ("accuracy", Json::Num(self.accuracy())),
             ("llm_calls", Json::Num(self.llm_calls() as f64)),
             ("max_snapshot_lag", Json::Num(self.max_snapshot_lag() as f64)),
+            ("peak_pending", Json::Num(self.peak_pending as f64)),
+            ("resumed", Json::Bool(self.resumed())),
+            ("ckpts", Json::Num(self.ckpts() as f64)),
             (
                 "per_shard",
                 Json::Arr(self.shards.iter().map(|r| r.to_json()).collect()),
@@ -122,9 +143,12 @@ impl ShardReport {
 }
 
 /// The front dispatcher: builds N router shards, wires the cross-shard
-/// annotation broadcast, hashes requests to shards, and merges reports.
+/// annotation broadcast and the shared admission budget, hashes
+/// requests to shards, and merges reports.
 pub struct ShardFront {
     servers: Vec<Server>,
+    gate: Arc<AdmissionGate>,
+    resume_cursor: u64,
 }
 
 impl ShardFront {
@@ -139,21 +163,91 @@ impl ShardFront {
         serve_cfg: ServeConfig,
         artifacts_dir: &str,
     ) -> Result<Self> {
+        Self::with_ckpt(cfg, classes, expert, serve_cfg, artifacts_dir, None)
+    }
+
+    /// [`ShardFront::new`] plus durable checkpointing: with
+    /// [`CkptOptions`], every shard deposits its state into a shared
+    /// [`CkptSink`] (cadence + graceful shutdown), and when
+    /// `opts.resume` is set the front first restores the newest valid
+    /// checkpoint — each shard continuing its own learner trajectory —
+    /// and exposes the stream position to resubmit from as
+    /// [`ShardFront::resume_cursor`].
+    pub fn with_ckpt(
+        cfg: CascadeConfig,
+        classes: usize,
+        expert: Expert,
+        serve_cfg: ServeConfig,
+        artifacts_dir: &str,
+        ckpt: Option<CkptOptions>,
+    ) -> Result<Self> {
         let n = serve_cfg.shard.shards;
         if n == 0 {
             return Err(Error::Config("shards must be positive".into()));
         }
+        let mut states: Vec<Option<ShardState>> = (0..n).map(|_| None).collect();
+        let mut resume_cursor = 0;
+        let sink = match &ckpt {
+            Some(opts) => {
+                if let Some(mode) = opts.resume {
+                    if let Some(loaded) = ckpt::load_latest(&opts.dir, mode, n)? {
+                        // Shape drift (level count/kind/classes vs the
+                        // config being started) follows the same policy
+                        // as every other checkpoint defect: strict
+                        // errors, best-effort falls back to fresh.
+                        let shape = loaded
+                            .iter()
+                            .try_for_each(|s| s.check_config(&cfg, classes));
+                        match (shape, mode) {
+                            (Err(e), ckpt::ResumeMode::Strict) => return Err(e),
+                            (Err(_), ckpt::ResumeMode::BestEffort) => {}
+                            (Ok(()), _) => {
+                                // The global resume point is the most
+                                // conservative shard cursor: shards that
+                                // checkpointed further ahead re-observe
+                                // a few requests (at-least-once across
+                                // the restart).
+                                resume_cursor =
+                                    loaded.iter().map(|s| s.cursor).min().unwrap_or(0);
+                                for s in loaded {
+                                    let i = s.shard;
+                                    states[i] = Some(s);
+                                }
+                            }
+                        }
+                    }
+                }
+                Some(CkptSink::create(&opts.dir, n)?)
+            }
+            None => None,
+        };
+        let gate = Arc::new(AdmissionGate::new(serve_cfg.max_pending));
         let mut servers = Vec::with_capacity(n);
-        for i in 0..n {
+        for (i, state) in states.iter_mut().enumerate() {
             let mut shard_cfg = cfg.clone();
             shard_cfg.seed = cfg.seed ^ ((i as u64) * 0x51A2_D007);
-            servers.push(Server::new(
-                shard_cfg,
-                classes,
-                expert.clone(),
-                serve_cfg,
-                artifacts_dir,
-            )?);
+            let mut srv = match state.take() {
+                Some(s) => Server::resume(
+                    shard_cfg,
+                    classes,
+                    expert.clone(),
+                    serve_cfg,
+                    artifacts_dir,
+                    s,
+                )?,
+                None => Server::new(
+                    shard_cfg,
+                    classes,
+                    expert.clone(),
+                    serve_cfg,
+                    artifacts_dir,
+                )?,
+            };
+            srv.set_admission(gate.clone());
+            if let Some(sink) = &sink {
+                srv.attach_ckpt(sink.clone(), i);
+            }
+            servers.push(srv);
         }
         // Wire the annotation broadcast: every shard gets a sender to
         // every peer and its own inbox.
@@ -172,7 +266,15 @@ impl ShardFront {
                 servers[i].wire_sync(peers, inbox);
             }
         }
-        Ok(ShardFront { servers })
+        Ok(ShardFront { servers, gate, resume_cursor })
+    }
+
+    /// Stream position to resubmit from after a restore: every request
+    /// id below this was fully absorbed by its shard before the
+    /// checkpoint (0 for fresh starts). Ids at or above it must be
+    /// offered again.
+    pub fn resume_cursor(&self) -> u64 {
+        self.resume_cursor
     }
 
     /// Number of shards behind the front.
@@ -200,10 +302,11 @@ impl ShardFront {
         tx: Sender<Response>,
     ) -> Result<ShardReport> {
         let t0 = std::time::Instant::now();
-        let n = self.servers.len();
+        let ShardFront { servers, gate, resume_cursor: _ } = self;
+        let n = servers.len();
         let mut shard_txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
-        for srv in self.servers {
+        for srv in servers {
             let (shard_tx, shard_rx) = channel::<Request>();
             let resp_tx = tx.clone();
             shard_txs.push(shard_tx);
@@ -236,7 +339,11 @@ impl ShardFront {
         if let Some(e) = first_err {
             return Err(e);
         }
-        Ok(ShardReport { shards: reports, wall_secs: t0.elapsed().as_secs_f64() })
+        Ok(ShardReport {
+            shards: reports,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            peak_pending: gate.peak(),
+        })
     }
 }
 
@@ -283,6 +390,8 @@ mod tests {
                 snapshot_lag: vec![served as u64],
                 replica_jobs: vec![vec![served as u64]],
                 peak_pending: 1,
+                resumed: false,
+                ckpts: 0,
                 final_betas: vec![0.5],
                 train_batches: vec![1],
                 calib_batches: vec![1],
@@ -291,6 +400,7 @@ mod tests {
         let r = ShardReport {
             shards: vec![report(100, 0.9, &[1.0, 2.0]), report(300, 0.7, &[3.0, 4.0])],
             wall_secs: 2.0,
+            peak_pending: 7,
         };
         assert_eq!(r.served(), 400);
         assert_eq!(r.shed(), 2);
@@ -298,8 +408,12 @@ mod tests {
         assert!((r.accuracy() - 0.75).abs() < 1e-12, "serve-weighted: {}", r.accuracy());
         assert_eq!(r.latency_ms().len(), 4);
         assert_eq!(r.max_snapshot_lag(), 300);
+        assert!(!r.resumed());
+        assert_eq!(r.ckpts(), 0);
         let v = crate::codec::parse(&r.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("served").unwrap().as_usize(), Some(400));
+        assert_eq!(v.get("peak_pending").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("resumed").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("per_shard").unwrap().as_arr().unwrap().len(), 2);
     }
 }

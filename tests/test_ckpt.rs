@@ -1,0 +1,336 @@
+//! Checkpoint/resume end-to-end tests (host engine, no artifacts):
+//! the kill-and-resume parity contract — a server killed after a
+//! durable checkpoint and resumed from disk must continue the *exact*
+//! learner trajectory an uninterrupted run would have produced
+//! (bit-identical β values, bit-identical train/calib chunk counts,
+//! cumulative serve counters) — plus the cadence-checkpoint barrier
+//! and the cumulative-report semantics of a resumed run.
+//!
+//! Corrupt-checkpoint handling (truncated file, bad version, missing
+//! shard entry, topology mismatch) is unit-tested in `serve::ckpt`.
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
+use ocl::data::Benchmark;
+use ocl::serve::ckpt::{self, CkptOptions, CkptSink, ResumeMode};
+use ocl::serve::shard::ShardFront;
+use ocl::serve::{load, Request, Response, ServeReport, Server};
+use ocl::sim::{Expert, ExpertProfile};
+
+fn expert_for(b: &Benchmark, seed: u64) -> Expert {
+    let mean_len =
+        b.samples.iter().map(|s| s.len as f64).sum::<f64>() / b.samples.len() as f64;
+    Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+        b.strata_fractions(),
+        mean_len,
+        seed,
+    )
+}
+
+/// Never sheds, no cadence checkpoints (graceful-shutdown one only).
+fn unbounded() -> ServeConfig {
+    ServeConfig { max_pending: 1 << 16, ckpt_every: 0, ..ServeConfig::default() }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ocl-ckpt-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Serve samples `lo..hi` (original stream ids) through `server`,
+/// returning the report and the responses.
+fn run_range(
+    server: Server,
+    b: &Benchmark,
+    lo: usize,
+    hi: usize,
+) -> (ServeReport, Vec<Response>) {
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let samples: Vec<_> = b.samples[lo..hi].to_vec();
+    let submit = std::thread::spawn(move || {
+        for (k, s) in samples.iter().enumerate() {
+            if req_tx
+                .send(Request {
+                    id: (lo + k) as u64,
+                    text: s.text.clone(),
+                    truth: s.label,
+                    sample: s.clone(),
+                })
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+    let report = server.serve(req_rx, resp_tx).expect("serve");
+    submit.join().unwrap();
+    (report, resp_rx.iter().collect())
+}
+
+#[test]
+fn kill_and_resume_beta_trajectory_is_bit_identical() {
+    // The tentpole acceptance: run K requests with durability on, kill
+    // the process (drop the server — its in-memory state is gone),
+    // restore from disk, serve the remaining N−K, and the final β
+    // vector must be bit-for-bit what one uninterrupted N-request run
+    // produces. β decays once per admitted request with each level's
+    // own factor, so any restore defect (lost decay state, replayed
+    // admissions, wrong cursor) shifts the trajectory.
+    let n = 300;
+    let k = 140;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 35, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 35;
+        c
+    };
+
+    // Uninterrupted reference.
+    let reference =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 35), unbounded(), "artifacts")
+            .unwrap();
+    let (ref_report, ref_responses) = run_range(reference, &b, 0, n);
+    assert_eq!(ref_report.served, n);
+    assert_eq!(ref_responses.len(), n);
+
+    // Interrupted run: first K requests, graceful drain writes the
+    // shutdown checkpoint, then the process "dies" (server dropped).
+    let dir = tmpdir("beta");
+    let sink = CkptSink::create(&dir, 1).unwrap();
+    let mut srv1 =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 35), unbounded(), "artifacts")
+            .unwrap();
+    srv1.attach_ckpt(sink, 0);
+    let (report1, _) = run_range(srv1, &b, 0, k);
+    assert_eq!(report1.served, k);
+    assert_eq!(report1.ckpts, 1, "graceful shutdown must write one checkpoint");
+
+    // Resume from disk and serve the tail.
+    let mut states = ckpt::load_latest(&dir, ResumeMode::Strict, 1)
+        .unwrap()
+        .expect("checkpoint present");
+    let state = states.remove(0);
+    assert_eq!(state.cursor, k as u64, "quiescent cursor covers the served prefix");
+    let srv2 = Server::resume(
+        cfg.clone(),
+        b.classes,
+        expert_for(&b, 35),
+        unbounded(),
+        "artifacts",
+        state,
+    )
+    .unwrap();
+    let (report2, responses2) = run_range(srv2, &b, k, n);
+    assert!(report2.resumed, "resumed run must say so");
+    assert_eq!(responses2.len(), n - k, "only the tail is re-served");
+    assert_eq!(report2.served, n, "cumulative counters continue the first run");
+    assert_eq!(
+        report2.handled.iter().sum::<usize>(),
+        n,
+        "cumulative handled mix covers the whole stream"
+    );
+    assert_eq!(report2.final_betas.len(), ref_report.final_betas.len());
+    for (i, (got, want)) in report2
+        .final_betas
+        .iter()
+        .zip(&ref_report.final_betas)
+        .enumerate()
+    {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "level {i} β must be bit-identical: resumed {got} vs uninterrupted {want}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_and_resume_train_chunk_counts_match_uninterrupted() {
+    // Chunk-count half of the parity contract, under the same forced
+    // expert regime the Cascade-parity test uses (β ≡ 1, no decay:
+    // every request is annotated, so the training cadence is fully
+    // determined by the annotation count and the restored trigger
+    // counters). Restoring caches + `pendings` + chunk counters means
+    // the resumed run's cumulative train/calib chunk counts must land
+    // exactly on the uninterrupted run's.
+    let n = 240;
+    let k = 120;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 41, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 41;
+        c.beta0 = 1.0;
+        for l in &mut c.levels {
+            l.beta_decay = 1.0;
+        }
+        c
+    };
+
+    let reference =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 5), unbounded(), "artifacts")
+            .unwrap();
+    let (ref_report, _) = run_range(reference, &b, 0, n);
+    assert!(
+        ref_report.train_batches.iter().all(|&t| t > 0),
+        "reference must actually train: {:?}",
+        ref_report.train_batches
+    );
+
+    let dir = tmpdir("chunks");
+    let sink = CkptSink::create(&dir, 1).unwrap();
+    let mut srv1 =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 5), unbounded(), "artifacts")
+            .unwrap();
+    srv1.attach_ckpt(sink, 0);
+    let (report1, _) = run_range(srv1, &b, 0, k);
+    assert_eq!(report1.handled[cfg.levels.len()], k, "β ≡ 1: all to the expert");
+
+    let mut states =
+        ckpt::load_latest(&dir, ResumeMode::Strict, 1).unwrap().expect("ckpt");
+    let srv2 = Server::resume(
+        cfg.clone(),
+        b.classes,
+        expert_for(&b, 5),
+        unbounded(),
+        "artifacts",
+        states.remove(0),
+    )
+    .unwrap();
+    let (report2, _) = run_range(srv2, &b, k, n);
+    assert_eq!(
+        report2.train_batches, ref_report.train_batches,
+        "cumulative model chunk counts must be bit-identical to uninterrupted"
+    );
+    assert_eq!(
+        report2.calib_batches, ref_report.calib_batches,
+        "cumulative calibrator chunk counts must be bit-identical to uninterrupted"
+    );
+    assert_eq!(report2.llm_calls, ref_report.llm_calls, "expert-call totals too");
+    assert_eq!(report2.served, n);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_config_drift_errors_strict_and_falls_back_best_effort() {
+    // A checkpoint taken under the 2-level small cascade must not be
+    // restored into a 3-level large cascade: strict resume errors
+    // cleanly; best-effort falls back to a fresh start — the same
+    // policy as every other checkpoint defect.
+    let n = 80;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 61, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 61;
+        c
+    };
+    let dir = tmpdir("drift");
+    let sink = CkptSink::create(&dir, 1).unwrap();
+    let mut srv =
+        Server::new(cfg, b.classes, expert_for(&b, 61), unbounded(), "artifacts")
+            .unwrap();
+    srv.attach_ckpt(sink, 0);
+    let (report, _) = run_range(srv, &b, 0, n);
+    assert_eq!(report.ckpts, 1);
+
+    let large = CascadeConfig::large(BenchmarkId::Imdb, ExpertId::Gpt35);
+    let dir_s = dir.to_string_lossy().to_string();
+    let err = ShardFront::with_ckpt(
+        large.clone(),
+        b.classes,
+        expert_for(&b, 61),
+        unbounded(),
+        "artifacts",
+        Some(CkptOptions { dir: dir_s.clone(), resume: Some(ResumeMode::Strict) }),
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("checkpoint"),
+        "shape drift must be a clean checkpoint error: {err}"
+    );
+    let front = ShardFront::with_ckpt(
+        large,
+        b.classes,
+        expert_for(&b, 61),
+        unbounded(),
+        "artifacts",
+        Some(CkptOptions { dir: dir_s, resume: Some(ResumeMode::BestEffort) }),
+    )
+    .unwrap();
+    assert_eq!(front.resume_cursor(), 0, "best-effort drift → fresh start");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cadence_checkpoints_fire_and_capture_quiescent_cursors() {
+    // Mid-stream durability: with `ckpt_every` set, checkpoints land
+    // during the run (each at a drained barrier), the newest one is
+    // loadable, and a resume that serves nothing extra reproduces the
+    // run's final state exactly.
+    let n = 300;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 53, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 53;
+        c
+    };
+    let serve_cfg = ServeConfig { ckpt_every: 16, ..unbounded() };
+    let dir = tmpdir("cadence");
+    let sink = CkptSink::create(&dir, 1).unwrap();
+    let mut srv =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 53), serve_cfg, "artifacts")
+            .unwrap();
+    srv.attach_ckpt(sink, 0);
+    // Paced arrivals: a cadence checkpoint is a quiescent barrier, so
+    // the stream must still be *open* when the annotation count trips
+    // it — an unpaced blast closes the input before the first trigger.
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let submit = load::drive(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 1500.0 },
+        13,
+        req_tx,
+    );
+    let report = srv.serve(req_rx, resp_tx).expect("serve");
+    assert_eq!(submit.join().unwrap(), n);
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_eq!(responses.len(), n, "the barrier must not lose or duplicate answers");
+    assert_eq!(report.served, n);
+    assert!(
+        report.ckpts >= 2,
+        "cadence checkpoints must fire mid-stream (got {})",
+        report.ckpts
+    );
+
+    let mut states =
+        ckpt::load_latest(&dir, ResumeMode::Strict, 1).unwrap().expect("ckpt");
+    let state = states.remove(0);
+    assert_eq!(state.cursor, n as u64, "final checkpoint covers the whole stream");
+    assert_eq!(state.served, n);
+
+    // Resume with an already-empty stream: pure restore, no new work.
+    let srv2 = Server::resume(
+        cfg.clone(),
+        b.classes,
+        expert_for(&b, 53),
+        serve_cfg,
+        "artifacts",
+        state,
+    )
+    .unwrap();
+    let (report2, responses2) = run_range(srv2, &b, n, n);
+    assert!(report2.resumed);
+    assert!(responses2.is_empty());
+    assert_eq!(report2.served, n, "restored cumulative counters");
+    assert_eq!(report2.final_betas, report.final_betas, "β state restored exactly");
+    assert_eq!(report2.train_batches, report.train_batches);
+    assert_eq!(report2.calib_batches, report.calib_batches);
+    let _ = std::fs::remove_dir_all(&dir);
+}
