@@ -1,0 +1,49 @@
+# Build/verify/reproduce drivers for the ocl workspace.
+#
+# The reproduction record (DESIGN.md §10) regenerates byte-identically
+# at a pinned (scale, seeds): `make reproduce` refreshes the committed
+# `reports/reproduce_full.{json,md}`, `make reproduce-quick` the CI
+# smoke profile. Everything runs offline against the host engine.
+
+CARGO ?= cargo
+BIN   := target/release/ocl
+
+.PHONY: all build test reproduce reproduce-quick reports-check docs bench-serve clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+# Tier-1 verify (ROADMAP.md).
+test: build
+	$(CARGO) test -q
+
+# The pinned reproduction record: full profile (scale 0.1, seeds 1-3).
+# Splice the regenerated tables into DESIGN.md §10 when they change.
+reproduce: build
+	$(BIN) reproduce --profile full --out reports
+
+# CI smoke profile: tiny pinned scale (0.02), one seed. Byte-identical
+# across runs; CI diffs the result against the committed reports/.
+reproduce-quick: build
+	$(BIN) reproduce --profile quick --out reports
+
+# Record gate: the committed report files must parse at the supported
+# schema version AND have every tolerance band passing (a reproduction
+# bound is an SLO; --check exits nonzero on band failures).
+reports-check: build
+	$(BIN) reproduce --check --profile quick --out reports
+	$(BIN) reproduce --check --profile full --out reports
+
+# Rustdoc with warnings denied (the CI docs job).
+docs:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+# Serve-layer throughput numbers quoted in DESIGN.md §10 (machine-
+# dependent — not part of the byte-identical record).
+bench-serve:
+	$(CARGO) bench --bench bench_serve
+
+clean:
+	$(CARGO) clean

@@ -1,19 +1,25 @@
-//! Bench: regenerate the Figs 3/4 cost-accuracy curves (and the Fig 10
-//! PRF metric set via the HateSpeech row) at bench scale.
-//! `cargo bench --bench bench_fig_curves`
+//! Bench: time the Figs 3/4 cost–accuracy curve sweeps (and the Fig 10
+//! PRF metric set via the HateSpeech row) at bench scale. Each case
+//! executes the shared registry's full budget sweep for one
+//! (benchmark, expert) pair — the exact workload `eval::curves`
+//! renders. `cargo bench --bench bench_fig_curves`
 
-use ocl::bench_support::Bench;
+use ocl::bench_support::{black_box, Bench};
 use ocl::config::{BenchmarkId, ExpertId};
-use ocl::eval::{curves, Harness};
+use ocl::eval::Harness;
+use ocl::report::registry;
 
 fn main() {
     let h = Harness::new(0.04, 3);
     let mut b = Bench::new("fig 3/4/10 curves (scaled)", 0, 1);
     for bench in [BenchmarkId::Imdb, BenchmarkId::HateSpeech] {
         for expert in [ExpertId::Gpt35, ExpertId::Llama70b] {
+            let specs = registry::curve_specs(bench, expert, false);
             b.case(&format!("curves {} {}", bench.name(), expert.name()), || {
-                let s = curves(&h, bench, expert, false).expect("curves");
-                println!("{s}");
+                for spec in &specs {
+                    let r = spec.execute(&h).expect("curve spec");
+                    black_box(r.accuracy);
+                }
             });
         }
     }

@@ -1,16 +1,24 @@
-//! Bench: regenerate Fig 9 + Table 2 (distribution-shift robustness)
-//! at bench scale. `cargo bench --bench bench_shift`
+//! Bench: time the Fig 9 + Table 2 distribution-shift grid at bench
+//! scale — one case per §5.4 scenario, each executing the shared
+//! registry's cells for that scenario (the exact workload `eval::shift`
+//! renders). `cargo bench --bench bench_shift`
 
-use ocl::bench_support::Bench;
+use ocl::bench_support::{black_box, Bench};
 use ocl::config::ExpertId;
-use ocl::eval::{shift, Harness};
+use ocl::eval::Harness;
+use ocl::report::registry;
 
 fn main() {
     let h = Harness::new(0.04, 5);
     let mut b = Bench::new("fig 9 / table 2 shifts (scaled)", 0, 1);
-    b.case("imdb shifts gpt35", || {
-        let s = shift(&h, ExpertId::Gpt35).expect("shift");
-        println!("{s}");
-    });
+    for (name, order) in registry::shift_scenarios() {
+        let specs = registry::shift_specs(ExpertId::Gpt35, name, order);
+        b.case(&format!("imdb shift {name} gpt35"), || {
+            for spec in &specs {
+                let r = spec.execute(&h).expect("shift spec");
+                black_box(r.accuracy);
+            }
+        });
+    }
     b.print();
 }

@@ -1,30 +1,38 @@
-//! Bench: regenerate Table 1 rows (method comparison at matched
-//! budgets) at bench scale, and time one full OCL stream per benchmark.
+//! Bench: time the Table 1 OCL cells (method comparison at matched
+//! budgets) at bench scale via the shared experiment registry, then
+//! print one full accuracy table for the record.
+//!
+//! `BENCH_TABLE1_BUDGET` selects the Table 1 budget column (0 = low,
+//! 1 = mid, 2 = high; default mid) — the same knob style as
+//! `bench_serve`'s `BENCH_SERVE_*` env vars.
 //! `cargo bench --bench bench_table1`
 
 use ocl::bench_support::Bench;
 use ocl::config::{BenchmarkId, ExpertId};
-use ocl::data::StreamOrder;
-use ocl::eval::{table1_budgets, Harness};
+use ocl::eval::Harness;
+use ocl::report::registry::{self, Method};
 
 fn main() {
+    let idx: usize = match std::env::var("BENCH_TABLE1_BUDGET") {
+        Ok(v) => v
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("BENCH_TABLE1_BUDGET: cannot parse '{v}'")),
+        Err(_) => 1,
+    };
+    assert!(idx < 3, "BENCH_TABLE1_BUDGET must be 0 (low), 1 (mid), or 2 (high)");
     let h = Harness::new(0.04, 1);
-    let mut b = Bench::new("table1 (scaled)", 0, 3);
+    let mut b = Bench::new(&format!("table1 (scaled, budget column {idx})"), 0, 3);
     for bench in BenchmarkId::ALL {
-        let budget = h.scaled_budget(bench, table1_budgets(bench)[1]);
+        let spec = registry::table1_spec(bench, ExpertId::Gpt35, Method::Ocl, idx);
+        let budget = spec.budget_calls(&h).unwrap_or(0);
         let n = h.stream_len(bench);
-        b.case_throughput(
-            &format!("ocl {} (n={n}, budget={budget})", bench.name()),
-            n as f64,
-            || {
-                let (r, _) = h
-                    .run_ocl(bench, ExpertId::Gpt35, Some(budget), false, StreamOrder::Natural)
-                    .expect("run");
-                ocl::bench_support::black_box(r.accuracy);
-            },
-        );
+        b.case_throughput(&format!("{} (n={n}, budget={budget})", spec.name), n as f64, || {
+            let r = spec.execute(&h).expect("run");
+            ocl::bench_support::black_box(r.accuracy);
+        });
     }
-    // One accuracy table at the mid budget for the record.
+    // One accuracy table at the chosen budget column for the record.
     let h2 = Harness::new(0.04, 2);
     println!("{}", ocl::eval::table1(&h2, &[ExpertId::Gpt35]).expect("table1"));
     b.print();

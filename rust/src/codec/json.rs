@@ -12,11 +12,18 @@ use crate::error::{Error, Result};
 /// A JSON value. Objects use `BTreeMap` for deterministic output.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (integers ride in `f64`; see [`Json::u64_hex`] for
+    /// values that must survive beyond 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys → deterministic encoding).
     Obj(BTreeMap<String, Json>),
 }
 

@@ -1,6 +1,9 @@
 //! Experiment harness: regenerates every table and figure of the paper
-//! (see DESIGN.md §5 for the index). Each public function prints a
-//! paper-style table/series and optionally writes CSV to `reports/`.
+//! (see DESIGN.md §5 for the index). Each public function renders a
+//! paper-style text table/series; `eval::emit` writes it under
+//! `reports/`. The regenerators execute the shared experiment registry
+//! (`report::registry`) — the same seed-pinned specs behind
+//! `ocl reproduce` and the bench harnesses.
 //!
 //! Streams are scaled by `scale` (default 0.2 in the CLI) relative to
 //! the paper's dataset sizes; budgets 𝒩 scale proportionally, so the
@@ -13,8 +16,9 @@ use std::rc::Rc;
 use crate::baselines::{Distillation, OnlineEnsemble};
 use crate::cascade::Cascade;
 use crate::config::{BenchmarkId, CascadeConfig, Engine, ExpertId, ModelKind};
-use crate::data::{Benchmark, StreamOrder};
+use crate::data::{Benchmark, Sample, StreamOrder};
 use crate::error::Result;
+use crate::report::registry::{self, Method};
 use crate::runtime::PjrtEngine;
 use crate::sim::cost::{CostModel, LatencyModel};
 use crate::sim::{Expert, ExpertProfile};
@@ -291,7 +295,9 @@ fn pct(x: f64) -> String {
     format!("{:.2}", x * 100.0)
 }
 
-/// Table 1: methods × budgets × benchmarks (× experts).
+/// Table 1: methods × budgets × benchmarks (× experts). Every cell is
+/// a `registry::table1_spec` execution, so the bench harness and
+/// `ocl reproduce` time/measure exactly this workload.
 pub fn table1(h: &Harness, experts: &[ExpertId]) -> Result<String> {
     let mut out = String::new();
     for &expert in experts {
@@ -324,30 +330,20 @@ pub fn table1(h: &Harness, experts: &[ExpertId]) -> Result<String> {
                 format!("{} (zero-shot)", expert.name()),
                 pct(expert_row.expert_accuracy)
             );
-            let mut rows: Vec<(String, Vec<String>)> = vec![
-                ("Distilled LR".into(), vec![]),
-                ("Distilled BERT-base".into(), vec![]),
-                ("Online Ensemble".into(), vec![]),
-                ("Online Cascade (ours)".into(), vec![]),
-            ];
-            for &nb in &budgets {
-                let budget = h.scaled_budget(bench, nb);
-                let d1 = h.run_distill(bench, expert, ModelKind::Lr, budget)?;
-                let d2 = h.run_distill(bench, expert, ModelKind::TfmBase, budget)?;
-                let oe = h.run_oel_split(bench, expert, budget, StreamOrder::Natural)?;
-                let oc =
-                    h.run_ocl_split(bench, expert, Some(budget), false, StreamOrder::Natural)?;
-                let fmt = |r: &RunResult| {
-                    if hs {
+            let mut rows: Vec<(String, Vec<String>)> = Method::TABLE1
+                .iter()
+                .map(|m| (m.display().to_string(), vec![]))
+                .collect();
+            for bi in 0..budgets.len() {
+                for (mi, &method) in Method::TABLE1.iter().enumerate() {
+                    let r = registry::table1_spec(bench, expert, method, bi).execute(h)?;
+                    let cell = if hs {
                         format!("{}|{}", pct(r.accuracy), pct(r.recall))
                     } else {
                         pct(r.accuracy)
-                    }
-                };
-                rows[0].1.push(fmt(&d1));
-                rows[1].1.push(fmt(&d2));
-                rows[2].1.push(fmt(&oe));
-                rows[3].1.push(fmt(&oc));
+                    };
+                    rows[mi].1.push(cell);
+                }
             }
             for (name, cells) in rows {
                 let _ = writeln!(
@@ -361,14 +357,14 @@ pub fn table1(h: &Harness, experts: &[ExpertId]) -> Result<String> {
     Ok(out)
 }
 
-/// Figures 3/4/10/11: accuracy(+PRF)-vs-cost curves via budget sweep.
+/// Figures 3/4/10/11: accuracy(+PRF)-vs-cost curves — the
+/// `registry::curve_specs` budget sweep.
 pub fn curves(
     h: &Harness,
     bench: BenchmarkId,
     expert: ExpertId,
     large: bool,
 ) -> Result<String> {
-    let fracs = [0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8];
     let t = h.stream_len(bench);
     let mut out = format!(
         "# fig-curve bench={} expert={} large={} stream={}\n",
@@ -382,10 +378,10 @@ pub fn curves(
         "{:<10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
         "budget", "calls", "ocl_acc", "ocl_rec", "ocl_f1", "ocl_prec", "oel_acc", "oel_rec"
     );
-    for &fr in &fracs {
-        let budget = ((t as f64) * fr).round() as u64;
-        let oc = h.run_ocl_split(bench, expert, Some(budget), large, StreamOrder::Natural)?;
-        let oe = h.run_oel_split(bench, expert, budget, StreamOrder::Natural)?;
+    let ocl = if large { Method::OclLarge } else { Method::Ocl };
+    for &fr in &registry::CURVE_FRACS {
+        let oc = registry::curve_spec(bench, expert, ocl, fr).execute(h)?;
+        let oe = registry::curve_spec(bench, expert, Method::OnlineEnsemble, fr).execute(h)?;
         let _ = writeln!(
             out,
             "{:<10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
@@ -443,29 +439,19 @@ pub fn case_analysis(h: &Harness, bench: BenchmarkId, expert: ExpertId) -> Resul
     Ok(out)
 }
 
-/// Figure 9 + Table 2: distribution-shift robustness on IMDB.
+/// Figure 9 + Table 2: distribution-shift robustness on IMDB — the
+/// `registry::shift_specs` grid (scenarios × budget fractions).
 pub fn shift(h: &Harness, expert: ExpertId) -> Result<String> {
-    let bench = BenchmarkId::Imdb;
-    let t = h.stream_len(bench);
-    let fracs = [0.1, 0.2, 0.3, 0.5];
-    let scenarios: [(&str, StreamOrder); 3] = [
-        ("natural", StreamOrder::Natural),
-        ("length-sorted", StreamOrder::LengthAscending),
-        (
-            "category-holdout",
-            StreamOrder::CategoryHoldout(crate::data::IMDB_HELDOUT_CATEGORY),
-        ),
-    ];
     let mut out = format!("# fig9/table2 shift robustness expert={}\n", expert.name());
     let mut avgs = Vec::new();
-    for (name, order) in scenarios {
+    for (name, order) in registry::shift_scenarios() {
         let _ = writeln!(out, "\n[{name}]");
         let _ = writeln!(out, "{:<8} {:>8} {:>9} {:>9}", "budget", "calls", "ocl_acc", "oel_acc");
         let mut accs = Vec::new();
-        for &fr in &fracs {
-            let budget = ((t as f64) * fr).round() as u64;
-            let oc = h.run_ocl_split(bench, expert, Some(budget), false, order)?;
-            let oe = h.run_oel_split(bench, expert, budget, order)?;
+        for &fr in &registry::SHIFT_FRACS {
+            let oc = registry::shift_spec(expert, name, order, Method::Ocl, fr).execute(h)?;
+            let oe =
+                registry::shift_spec(expert, name, order, Method::OnlineEnsemble, fr).execute(h)?;
             accs.push(oc.accuracy);
             let _ = writeln!(
                 out,
@@ -486,12 +472,22 @@ pub fn shift(h: &Harness, expert: ExpertId) -> Result<String> {
     Ok(out)
 }
 
+/// Table 5's length buckets: samples sorted by token length plus the
+/// quintile width `q` (five `q`-wide buckets; the `len % 5` remainder
+/// folds into the last, i.e. bucket `i` is `sorted[i*q ..]` capped at
+/// `(i+1)*q` except the final one). Shared by [`table5`] and the §10
+/// record's Table 5 section so bucket boundaries can never drift apart.
+pub fn length_quintiles(b: &Benchmark) -> (Vec<&Sample>, usize) {
+    let mut sorted: Vec<&Sample> = b.samples.iter().collect();
+    sorted.sort_by_key(|s| s.len);
+    let q = sorted.len() / 5;
+    (sorted, q)
+}
+
 /// Table 5: expert accuracy by document-length bucket (IMDB).
 pub fn table5(h: &Harness, expert: ExpertId) -> Result<String> {
     let (b, e) = h.setup(BenchmarkId::Imdb, expert);
-    let mut sorted: Vec<_> = b.samples.iter().collect();
-    sorted.sort_by_key(|s| s.len);
-    let q = sorted.len() / 5;
+    let (sorted, q) = length_quintiles(&b);
     let mut out = format!(
         "# Table 5: {} accuracy by IMDB length bucket (tokens)\n",
         expert.name()

@@ -8,6 +8,7 @@ use ocl::cli::Command;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
+use ocl::report;
 use ocl::serve::shard::ShardFront;
 use ocl::serve::{ckpt, load, ServeConfig, ShardConfig};
 
@@ -51,6 +52,14 @@ fn commands() -> Vec<Command> {
             .opt("out", "reports", "output directory"),
         Command::new("costmodel", "reproduce App. B.1/C.1 cost analyses")
             .opt("out", "reports", "output directory"),
+        Command::new("reproduce", "regenerate the paper-vs-measured record (DESIGN.md §10)")
+            .opt("benchmark", "all", "imdb|hatespeech|isear|fever|all")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("profile", "full", "quick|full; overridden runs write *-custom files")
+            .opt("scale", "", "stream scale override (default: the profile's pin)")
+            .opt("seeds", "", "comma-separated seed list override, e.g. 1,2,3")
+            .opt("out", "reports", "output directory")
+            .switch("check", "schema-validate the existing report file instead of running"),
         Command::new("serve", "run the streaming serving mode (router+batcher)")
             .opt("benchmark", "imdb", "benchmark")
             .opt("expert", "gpt35", "gpt35|llama70b")
@@ -211,6 +220,59 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "costmodel" => {
             let s = eval::costmodel();
             eval::emit(args.get("out"), "costmodel.txt", &s)
+        }
+        "reproduce" => {
+            let mut opts = report::ReproduceOpts::for_profile(args.get("profile"))?;
+            let customized = args.get("benchmark") != "all"
+                || args.get("expert") != "gpt35"
+                || !args.get("scale").is_empty()
+                || !args.get("seeds").is_empty();
+            opts.expert = ExpertId::from_name(args.get("expert"))?;
+            if args.get("benchmark") != "all" {
+                opts.benches = vec![BenchmarkId::from_name(args.get("benchmark"))?];
+            }
+            if !args.get("scale").is_empty() {
+                opts.scale = args.parse("scale")?;
+            }
+            if !args.get("seeds").is_empty() {
+                opts.seeds = report::parse_seed_list(args.get("seeds"))?;
+            }
+            if args.switch("check") {
+                let path = std::path::Path::new(args.get("out"))
+                    .join(format!("reproduce_{}.json", opts.profile));
+                let rep = report::check_file(&path)?;
+                println!(
+                    "schema v{} ok: {} ({} sections, {} rows, {})",
+                    report::SCHEMA_VERSION,
+                    path.display(),
+                    rep.sections.len(),
+                    rep.rows(),
+                    if rep.passed() { "all bands pass" } else { "band FAILURES" }
+                );
+                // The verdict is part of the contract: a record whose
+                // rows fail their tolerance bands fails the check (a
+                // reproduction bound is an SLO like any latency bound).
+                if !rep.passed() {
+                    return Err(Error::Slo(format!(
+                        "tolerance-band failures in {}",
+                        path.display()
+                    )));
+                }
+                return Ok(());
+            }
+            // Overridden runs must not clobber the pinned record files
+            // the CI drift gate and the §10 splice are tied to.
+            if customized {
+                opts.profile.push_str("-custom");
+            }
+            let rep = report::reproduce(&opts)?;
+            let (jp, mp) = rep.write(args.get("out"))?;
+            println!("{}", rep.to_markdown());
+            eprintln!("[wrote {} and {}]", jp.display(), mp.display());
+            if !rep.passed() {
+                eprintln!("warning: tolerance-band failures; see {}", mp.display());
+            }
+            Ok(())
         }
         "serve" => {
             let bench = BenchmarkId::from_name(args.get("benchmark"))?;

@@ -1,0 +1,1022 @@
+//! The reproduction record: paper-vs-measured reporting (`DESIGN.md §10`).
+//!
+//! This module turns the scattered eval entry points into **one
+//! deterministic pipeline**. A [`registry`] of seed-pinned
+//! [`registry::RunSpec`]s names every regenerable experiment; [`paper`]
+//! carries the transcribed reference operating points of Tables 1/2/5
+//! and Figs 2–4 plus the tolerance bands the reproduction is judged
+//! against; and [`reproduce`] executes a multi-seed sweep and renders
+//! the result as a machine-readable JSON record and a GitHub-markdown
+//! table with paper/measured/Δ/band/status columns.
+//!
+//! Everything here is deterministic at a pinned `(scale, seeds)`: the
+//! benchmark generators, the expert simulator, and the host models are
+//! all seeded, no wall-clock value is ever emitted, and the JSON codec
+//! prints shortest-round-trip decimals — so `ocl reproduce` regenerates
+//! `reports/reproduce_<profile>.{json,md}` **byte-identically**, which
+//! is what CI's `reproduce-quick` job checks (schema drift shows up as
+//! a diff). `DESIGN.md §10` is the curated splice of the `full`
+//! profile's tables.
+
+pub mod paper;
+pub mod registry;
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::cascade::Cascade;
+use crate::codec::{self, Json};
+use crate::config::{BenchmarkId, CascadeConfig, ExpertId};
+use crate::error::{Error, Result};
+use crate::eval::{self, table1_budgets, Harness};
+use crate::sim::cost::LatencyModel;
+
+/// Version stamp of the report JSON layout. Bump on any breaking shape
+/// change; [`Report::from_json`] rejects mismatches, which is CI's
+/// schema-drift gate.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Citation line embedded in every report.
+pub const SOURCE: &str =
+    "Nie et al., Online Cascade Learning for Efficient Inference over Streams (ICML 2024)";
+
+// ---------------------------------------------------------------------------
+// Data model
+// ---------------------------------------------------------------------------
+
+/// How a tolerance band judges the measured-minus-paper delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BandKind {
+    /// Pass when `|Δ| ≤ tol` (reproduction should land *near* the paper).
+    TwoSided,
+    /// Pass when `Δ ≤ tol` (smaller/more negative is fine — e.g. the
+    /// no-regret bound, where beating the best fixed policy is success).
+    UpperBound,
+    /// Pass when `Δ ≥ −tol` (larger is fine — e.g. cost reduction,
+    /// where under-spending the expert budget is success).
+    LowerBound,
+}
+
+impl BandKind {
+    /// Canonical name (JSON encoding).
+    pub fn name(self) -> &'static str {
+        match self {
+            BandKind::TwoSided => "two-sided",
+            BandKind::UpperBound => "upper",
+            BandKind::LowerBound => "lower",
+        }
+    }
+
+    /// Parse a [`BandKind::name`] string.
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "two-sided" => Ok(BandKind::TwoSided),
+            "upper" => Ok(BandKind::UpperBound),
+            "lower" => Ok(BandKind::LowerBound),
+            _ => Err(Error::Config(format!("unknown band kind '{s}'"))),
+        }
+    }
+}
+
+/// A pass/fail tolerance band around a paper reference value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Band {
+    /// Which side(s) of the reference the band constrains.
+    pub kind: BandKind,
+    /// Half-width of the band, in the row's natural unit.
+    pub tol: f64,
+}
+
+impl Band {
+    /// Whether a measured-minus-paper `delta` falls inside the band.
+    pub fn contains(&self, delta: f64) -> bool {
+        match self.kind {
+            BandKind::TwoSided => delta.abs() <= self.tol,
+            BandKind::UpperBound => delta <= self.tol,
+            BandKind::LowerBound => delta >= -self.tol,
+        }
+    }
+}
+
+/// Pass/fail/info verdict of one row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Measured value inside the tolerance band.
+    Pass,
+    /// Measured value outside the tolerance band.
+    Fail,
+    /// No paper reference (context row) — nothing to judge.
+    Info,
+}
+
+impl Status {
+    /// Canonical name (JSON encoding, markdown status column).
+    pub fn name(self) -> &'static str {
+        match self {
+            Status::Pass => "pass",
+            Status::Fail => "FAIL",
+            Status::Info => "info",
+        }
+    }
+}
+
+/// A multi-seed aggregate: mean ± sample standard deviation over `n`
+/// seeded runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Measurement {
+    /// Mean over seeds.
+    pub mean: f64,
+    /// Sample standard deviation (0 when `n < 2`).
+    pub sd: f64,
+    /// Number of seeded runs aggregated.
+    pub n: usize,
+}
+
+impl Measurement {
+    /// Aggregate raw per-seed values.
+    pub fn from_samples(xs: &[f64]) -> Self {
+        let n = xs.len();
+        if n == 0 {
+            return Measurement { mean: 0.0, sd: 0.0, n: 0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let sd = if n < 2 {
+            0.0
+        } else {
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+            var.sqrt()
+        };
+        Measurement { mean, sd, n }
+    }
+}
+
+/// One paper-vs-measured line of the record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Row {
+    /// Metric label ("OCL accuracy @ N=3800 (15.2% of stream)").
+    pub label: String,
+    /// Display unit tag: `"%"` (fraction shown ×100), `"pts"`
+    /// (percentage points), `"s"` (seconds), `"x"` (ratio), or `""`.
+    pub unit: String,
+    /// Paper reference value in the natural unit (`None` → info row).
+    pub paper: Option<f64>,
+    /// Tolerance band (`None` → info row).
+    pub band: Option<Band>,
+    /// Measured multi-seed aggregate.
+    pub measured: Measurement,
+}
+
+impl Row {
+    /// Measured-minus-paper delta (`None` without a reference).
+    pub fn delta(&self) -> Option<f64> {
+        self.paper.map(|p| self.measured.mean - p)
+    }
+
+    /// Verdict of this row under its band.
+    pub fn status(&self) -> Status {
+        match (self.delta(), self.band) {
+            (Some(d), Some(b)) => {
+                if b.contains(d) {
+                    Status::Pass
+                } else {
+                    Status::Fail
+                }
+            }
+            _ => Status::Info,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("unit", Json::Str(self.unit.clone())),
+            (
+                "paper",
+                match self.paper {
+                    Some(p) => Json::Num(p),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "band",
+                match self.band {
+                    Some(b) => Json::obj(vec![
+                        ("kind", Json::Str(b.kind.name().to_string())),
+                        ("tol", Json::Num(b.tol)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            ("mean", Json::Num(self.measured.mean)),
+            ("sd", Json::Num(self.measured.sd)),
+            ("n", Json::Num(self.measured.n as f64)),
+            (
+                "delta",
+                match self.delta() {
+                    Some(d) => Json::Num(d),
+                    None => Json::Null,
+                },
+            ),
+            ("status", Json::Str(self.status().name().to_string())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Row> {
+        let label = v
+            .require("label")?
+            .as_str()
+            .ok_or_else(|| Error::Config("row label must be a string".into()))?
+            .to_string();
+        let unit = v
+            .require("unit")?
+            .as_str()
+            .ok_or_else(|| Error::Config("row unit must be a string".into()))?
+            .to_string();
+        let paper = match v.require("paper")? {
+            Json::Null => None,
+            p => Some(
+                p.as_f64()
+                    .ok_or_else(|| Error::Config("row paper must be a number".into()))?,
+            ),
+        };
+        let band = match v.require("band")? {
+            Json::Null => None,
+            b => Some(Band {
+                kind: BandKind::from_name(
+                    b.require("kind")?
+                        .as_str()
+                        .ok_or_else(|| Error::Config("band kind must be a string".into()))?,
+                )?,
+                tol: b
+                    .require("tol")?
+                    .as_f64()
+                    .ok_or_else(|| Error::Config("band tol must be a number".into()))?,
+            }),
+        };
+        let num = |key: &str| -> Result<f64> {
+            v.require(key)?
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("row {key} must be a number")))
+        };
+        let row = Row {
+            label,
+            unit,
+            paper,
+            band,
+            measured: Measurement {
+                mean: num("mean")?,
+                sd: num("sd")?,
+                n: num("n")? as usize,
+            },
+        };
+        // The stored derived fields must agree with what the loaded
+        // values recompute — a hand-edited verdict cannot pass the gate.
+        let stored_status = v
+            .require("status")?
+            .as_str()
+            .ok_or_else(|| Error::Config("row status must be a string".into()))?;
+        if stored_status != row.status().name() {
+            return Err(Error::Config(format!(
+                "row '{}': stored status '{stored_status}' disagrees with recomputed '{}'",
+                row.label,
+                row.status().name()
+            )));
+        }
+        let stored_delta = match v.require("delta")? {
+            Json::Null => None,
+            d => Some(
+                d.as_f64()
+                    .ok_or_else(|| Error::Config("row delta must be a number".into()))?,
+            ),
+        };
+        if stored_delta != row.delta() {
+            return Err(Error::Config(format!(
+                "row '{}': stored delta disagrees with mean - paper",
+                row.label
+            )));
+        }
+        Ok(row)
+    }
+}
+
+/// A titled group of rows (≈ one paper table or figure).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Section {
+    /// Stable id ("table1-imdb", "shift", ...).
+    pub id: String,
+    /// Markdown heading.
+    pub title: String,
+    /// Paper-vs-measured rows.
+    pub rows: Vec<Row>,
+}
+
+/// The full reproduction record of one `ocl reproduce` invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    /// Profile name ("quick", "full") — selects the output file names.
+    pub profile: String,
+    /// Stream scale relative to the paper's dataset sizes.
+    pub scale: f64,
+    /// Seeds aggregated (mean ± sd over these).
+    pub seeds: Vec<u64>,
+    /// Which LLM expert profile the runs used.
+    pub expert: ExpertId,
+    /// The record itself.
+    pub sections: Vec<Section>,
+}
+
+impl Report {
+    /// Total row count across sections.
+    pub fn rows(&self) -> usize {
+        self.sections.iter().map(|s| s.rows.len()).sum()
+    }
+
+    /// Whether every banded row passed its tolerance band.
+    pub fn passed(&self) -> bool {
+        self.sections
+            .iter()
+            .all(|s| s.rows.iter().all(|r| r.status() != Status::Fail))
+    }
+
+    /// JSON encoding (schema [`SCHEMA_VERSION`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Num(SCHEMA_VERSION as f64)),
+            ("source", Json::Str(SOURCE.to_string())),
+            ("profile", Json::Str(self.profile.clone())),
+            ("scale", Json::Num(self.scale)),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("expert", Json::Str(self.expert.name().to_string())),
+            (
+                "sections",
+                Json::Arr(
+                    self.sections
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("id", Json::Str(s.id.clone())),
+                                ("title", Json::Str(s.title.clone())),
+                                (
+                                    "rows",
+                                    Json::Arr(s.rows.iter().map(Row::to_json).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Decode and schema-validate a [`Report::to_json`] value. Derived
+    /// fields (delta, status) are recomputed, so a record whose stored
+    /// verdicts disagree with its stored values cannot round-trip
+    /// unnoticed.
+    pub fn from_json(v: &Json) -> Result<Report> {
+        let schema = v
+            .require("schema")?
+            .as_usize()
+            .ok_or_else(|| Error::Config("schema must be an integer".into()))?;
+        if schema != SCHEMA_VERSION {
+            return Err(Error::Config(format!(
+                "report schema v{schema} != supported v{SCHEMA_VERSION}"
+            )));
+        }
+        let profile = v
+            .require("profile")?
+            .as_str()
+            .ok_or_else(|| Error::Config("profile must be a string".into()))?
+            .to_string();
+        let scale = v
+            .require("scale")?
+            .as_f64()
+            .ok_or_else(|| Error::Config("scale must be a number".into()))?;
+        let seeds = v
+            .require("seeds")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("seeds must be an array".into()))?
+            .iter()
+            .map(|s| {
+                s.as_f64()
+                    .map(|x| x as u64)
+                    .ok_or_else(|| Error::Config("seed must be a number".into()))
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        let expert = ExpertId::from_name(
+            v.require("expert")?
+                .as_str()
+                .ok_or_else(|| Error::Config("expert must be a string".into()))?,
+        )?;
+        let mut sections = Vec::new();
+        for s in v
+            .require("sections")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("sections must be an array".into()))?
+        {
+            let id = s
+                .require("id")?
+                .as_str()
+                .ok_or_else(|| Error::Config("section id must be a string".into()))?
+                .to_string();
+            let title = s
+                .require("title")?
+                .as_str()
+                .ok_or_else(|| Error::Config("section title must be a string".into()))?
+                .to_string();
+            let rows = s
+                .require("rows")?
+                .as_arr()
+                .ok_or_else(|| Error::Config("section rows must be an array".into()))?
+                .iter()
+                .map(Row::from_json)
+                .collect::<Result<Vec<Row>>>()?;
+            sections.push(Section { id, title, rows });
+        }
+        Ok(Report { profile, scale, seeds, expert, sections })
+    }
+
+    /// Render the GitHub-markdown record. Deterministic: fixed column
+    /// set, fixed decimal formatting, no timestamps or host details.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# Online Cascade Learning — reproduction record");
+        let _ = writeln!(out);
+        let seeds: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
+        let _ = writeln!(
+            out,
+            "profile `{}` · stream scale {} · seeds {{{}}} (mean ± sd) · expert `{}` · schema v{}",
+            self.profile,
+            self.scale,
+            seeds.join(", "),
+            self.expert.name(),
+            SCHEMA_VERSION
+        );
+        let _ = writeln!(out);
+        let _ = writeln!(out, "Paper: {SOURCE}.");
+        let _ = writeln!(
+            out,
+            "Benchmarks are the synthetic substitutes of DESIGN.md §3; budget \
+             *fractions* match the paper exactly (§5–§6). Regenerate this file \
+             byte-identically with `make reproduce-quick` / `make reproduce`."
+        );
+        for s in &self.sections {
+            let _ = writeln!(out);
+            let _ = writeln!(out, "## {}", s.title);
+            let _ = writeln!(out);
+            let _ = writeln!(out, "| metric | paper | measured | Δ | band | status |");
+            let _ = writeln!(out, "|:--|--:|--:|--:|:--:|:--:|");
+            for r in &s.rows {
+                let paper = match r.paper {
+                    Some(p) => fmt_val(&r.unit, p),
+                    None => "-".to_string(),
+                };
+                let measured = format!(
+                    "{} ± {} (n={})",
+                    fmt_val(&r.unit, r.measured.mean),
+                    fmt_sd(&r.unit, r.measured.sd),
+                    r.measured.n
+                );
+                let delta = match r.delta() {
+                    Some(d) => fmt_delta(&r.unit, d),
+                    None => "-".to_string(),
+                };
+                let band = match r.band {
+                    Some(b) => fmt_band(&r.unit, b),
+                    None => "-".to_string(),
+                };
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {} | {} | {} | {} |",
+                    r.label,
+                    paper,
+                    measured,
+                    delta,
+                    band,
+                    r.status().name()
+                );
+            }
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(
+            out,
+            "Verdict: {} of {} banded rows pass.",
+            self.sections
+                .iter()
+                .flat_map(|s| &s.rows)
+                .filter(|r| r.status() == Status::Pass)
+                .count(),
+            self.sections
+                .iter()
+                .flat_map(|s| &s.rows)
+                .filter(|r| r.status() != Status::Info)
+                .count()
+        );
+        out
+    }
+
+    /// Write `reproduce_<profile>.json` + `.md` under `dir`; returns
+    /// both paths.
+    pub fn write(&self, dir: &str) -> Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.to_string(), e))?;
+        let base = Path::new(dir);
+        let jp = base.join(format!("reproduce_{}.json", self.profile));
+        let mp = base.join(format!("reproduce_{}.md", self.profile));
+        let mut js = self.to_json().to_string_pretty();
+        js.push('\n');
+        std::fs::write(&jp, js).map_err(|e| Error::io(jp.display().to_string(), e))?;
+        std::fs::write(&mp, self.to_markdown())
+            .map_err(|e| Error::io(mp.display().to_string(), e))?;
+        Ok((jp, mp))
+    }
+}
+
+/// Load and schema-validate a previously written report file (the CI
+/// drift gate and `ocl reproduce --check`).
+pub fn check_file(path: &Path) -> Result<Report> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    Report::from_json(&codec::parse(&text)?)
+}
+
+fn fmt_val(unit: &str, v: f64) -> String {
+    match unit {
+        "%" => format!("{:.2}%", v * 100.0),
+        "pts" => format!("{v:.2} pts"),
+        "s" => format!("{v:.2} s"),
+        "x" => format!("{v:.3}x"),
+        _ => format!("{v:.4}"),
+    }
+}
+
+fn fmt_sd(unit: &str, v: f64) -> String {
+    match unit {
+        "%" => format!("{:.2}", v * 100.0),
+        _ => format!("{v:.2}"),
+    }
+}
+
+fn fmt_delta(unit: &str, v: f64) -> String {
+    match unit {
+        "%" => format!("{:+.2} pts", v * 100.0),
+        "pts" => format!("{v:+.2} pts"),
+        "s" => format!("{v:+.2} s"),
+        _ => format!("{v:+.4}"),
+    }
+}
+
+fn fmt_band(unit: &str, b: Band) -> String {
+    let tol = match unit {
+        "%" => format!("{:.1} pts", b.tol * 100.0),
+        "pts" => format!("{:.1} pts", b.tol),
+        "s" => format!("{:.1} s", b.tol),
+        _ => format!("{:.2}", b.tol),
+    };
+    match b.kind {
+        BandKind::TwoSided => format!("± {tol}"),
+        BandKind::UpperBound => format!("≤ +{tol}"),
+        BandKind::LowerBound => format!("≥ -{tol}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The reproduce pipeline
+// ---------------------------------------------------------------------------
+
+/// What `ocl reproduce` runs: profile + scale + seeds + scope.
+#[derive(Clone, Debug)]
+pub struct ReproduceOpts {
+    /// Profile name → output file names (`reproduce_<profile>.*`).
+    pub profile: String,
+    /// Stream scale vs the paper's dataset sizes.
+    pub scale: f64,
+    /// Seeds to aggregate over.
+    pub seeds: Vec<u64>,
+    /// Expert profile.
+    pub expert: ExpertId,
+    /// Benchmarks in scope (IMDB additionally triggers the curve,
+    /// shift, Table-5, and no-regret sections).
+    pub benches: Vec<BenchmarkId>,
+}
+
+impl ReproduceOpts {
+    /// The CI smoke profile: tiny pinned scale, one seed.
+    pub fn quick() -> Self {
+        ReproduceOpts {
+            profile: "quick".to_string(),
+            scale: 0.02,
+            seeds: vec![1],
+            expert: ExpertId::Gpt35,
+            benches: BenchmarkId::ALL.to_vec(),
+        }
+    }
+
+    /// The pinned record profile behind `make reproduce` and the
+    /// DESIGN.md §10 tables: scale 0.1, three seeds.
+    pub fn full() -> Self {
+        ReproduceOpts {
+            profile: "full".to_string(),
+            scale: 0.1,
+            seeds: vec![1, 2, 3],
+            expert: ExpertId::Gpt35,
+            benches: BenchmarkId::ALL.to_vec(),
+        }
+    }
+
+    /// Resolve a profile by name.
+    pub fn for_profile(name: &str) -> Result<Self> {
+        match name {
+            "quick" => Ok(ReproduceOpts::quick()),
+            "full" => Ok(ReproduceOpts::full()),
+            _ => Err(Error::Usage(format!("unknown profile '{name}' (quick|full)"))),
+        }
+    }
+}
+
+/// Parse a comma-separated seed list ("1,2,3").
+pub fn parse_seed_list(s: &str) -> Result<Vec<u64>> {
+    let seeds = s
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<u64>()
+                .map_err(|_| Error::Usage(format!("bad seed '{t}' in --seeds")))
+        })
+        .collect::<Result<Vec<u64>>>()?;
+    if seeds.is_empty() {
+        return Err(Error::Usage("--seeds must name at least one seed".into()));
+    }
+    Ok(seeds)
+}
+
+/// Run the full reproduction pipeline and assemble the record.
+pub fn reproduce(opts: &ReproduceOpts) -> Result<Report> {
+    let mut sections = Vec::new();
+    for &bench in &opts.benches {
+        sections.push(table1_section(opts, bench)?);
+    }
+    if opts.benches.contains(&BenchmarkId::Imdb) {
+        sections.push(curves_section(opts)?);
+        sections.push(shift_section(opts)?);
+        sections.push(table5_section(opts)?);
+        sections.push(noregret_section(opts)?);
+    }
+    sections.push(costmodel_section());
+    Ok(Report {
+        profile: opts.profile.clone(),
+        scale: opts.scale,
+        seeds: opts.seeds.clone(),
+        expert: opts.expert,
+        sections,
+    })
+}
+
+/// Table 1 for one benchmark: expert zero-shot accuracy, then OCL
+/// accuracy + cost reduction at each of the paper's three budgets.
+fn table1_section(opts: &ReproduceOpts, bench: BenchmarkId) -> Result<Section> {
+    let budgets = table1_budgets(bench);
+    let mut zero_shot: Vec<f64> = Vec::new();
+    let mut acc: Vec<Vec<f64>> = vec![Vec::new(); budgets.len()];
+    let mut red: Vec<Vec<f64>> = vec![Vec::new(); budgets.len()];
+    for &seed in &opts.seeds {
+        let h = Harness::new(opts.scale, seed);
+        for (bi, _) in budgets.iter().enumerate() {
+            let spec = registry::table1_spec(bench, opts.expert, registry::Method::Ocl, bi);
+            let r = spec.execute(&h)?;
+            if bi == 0 {
+                zero_shot.push(r.expert_accuracy);
+            }
+            acc[bi].push(r.accuracy);
+            red[bi].push(1.0 - r.llm_calls as f64 / h.stream_len(bench) as f64);
+        }
+    }
+    let mut rows = vec![Row {
+        label: format!("{} zero-shot accuracy", expert_display(opts.expert)),
+        unit: "%".to_string(),
+        paper: Some(paper::expert_accuracy(bench, opts.expert)),
+        band: Some(Band { kind: BandKind::TwoSided, tol: paper::EXPERT_TOL }),
+        measured: Measurement::from_samples(&zero_shot),
+    }];
+    for (bi, &nb) in budgets.iter().enumerate() {
+        let frac = nb as f64 / bench.stream_len() as f64;
+        rows.push(Row {
+            label: format!("OCL accuracy @ N={nb} ({:.1}% of stream)", frac * 100.0),
+            unit: "%".to_string(),
+            paper: Some(paper::table1_ocl_accuracy(bench, opts.expert, bi)),
+            band: Some(Band { kind: BandKind::TwoSided, tol: paper::OCL_ACC_TOL }),
+            measured: Measurement::from_samples(&acc[bi]),
+        });
+        rows.push(Row {
+            label: format!("OCL cost reduction @ N={nb}"),
+            unit: "%".to_string(),
+            paper: Some(paper::table1_cost_reduction(bench, bi)),
+            band: Some(Band { kind: BandKind::LowerBound, tol: paper::COST_TOL }),
+            measured: Measurement::from_samples(&red[bi]),
+        });
+    }
+    Ok(Section {
+        id: format!("table1-{}", bench.name()),
+        title: format!("Table 1 — {} ({} expert)", bench.name(), expert_display(opts.expert)),
+        rows,
+    })
+}
+
+/// Cost–accuracy curve operating points (Fig 3, IMDB).
+fn curves_section(opts: &ReproduceOpts) -> Result<Section> {
+    let bench = BenchmarkId::Imdb;
+    let mut rows = Vec::new();
+    for &frac in &paper::CURVE_POINT_FRACS {
+        let mut acc = Vec::new();
+        for &seed in &opts.seeds {
+            let h = Harness::new(opts.scale, seed);
+            let spec = registry::curve_spec(bench, opts.expert, registry::Method::Ocl, frac);
+            acc.push(spec.execute(&h)?.accuracy);
+        }
+        rows.push(Row {
+            label: format!("OCL accuracy @ budget {:.0}% of stream", frac * 100.0),
+            unit: "%".to_string(),
+            paper: paper::fig_curve_accuracy(bench, opts.expert, frac),
+            band: paper::fig_curve_accuracy(bench, opts.expert, frac)
+                .map(|_| Band { kind: BandKind::TwoSided, tol: paper::CURVE_TOL }),
+            measured: Measurement::from_samples(&acc),
+        });
+    }
+    Ok(Section {
+        id: "curves-imdb".to_string(),
+        title: "Fig 3 — cost–accuracy curve operating points (imdb)".to_string(),
+        rows,
+    })
+}
+
+/// §5.4 distribution-shift robustness (Fig 9 / Table 2, IMDB).
+fn shift_section(opts: &ReproduceOpts) -> Result<Section> {
+    let scenarios = registry::shift_scenarios();
+    // Per scenario: per-seed average OCL accuracy across the budget fracs.
+    let mut avgs: Vec<Vec<f64>> = vec![Vec::new(); scenarios.len()];
+    for &seed in &opts.seeds {
+        let h = Harness::new(opts.scale, seed);
+        for (si, (name, order)) in scenarios.iter().enumerate() {
+            let mut accs = Vec::new();
+            for &frac in &registry::SHIFT_FRACS {
+                let spec =
+                    registry::shift_spec(opts.expert, name, *order, registry::Method::Ocl, frac);
+                accs.push(spec.execute(&h)?.accuracy);
+            }
+            avgs[si].push(accs.iter().sum::<f64>() / accs.len() as f64);
+        }
+    }
+    let mut rows = vec![Row {
+        label: "OCL avg accuracy, natural order (across budgets)".to_string(),
+        unit: "%".to_string(),
+        paper: None,
+        band: None,
+        measured: Measurement::from_samples(&avgs[0]),
+    }];
+    for (si, (name, _)) in scenarios.iter().enumerate().skip(1) {
+        // Drop vs natural, in percentage points, per seed.
+        let drops: Vec<f64> = avgs[si]
+            .iter()
+            .zip(&avgs[0])
+            .map(|(s, n)| (s - n) * 100.0)
+            .collect();
+        rows.push(Row {
+            label: format!("accuracy shift under {name} (vs natural)"),
+            unit: "pts".to_string(),
+            paper: paper::table2_shift_drop_pts(opts.expert, name),
+            band: paper::table2_shift_drop_pts(opts.expert, name)
+                .map(|_| Band { kind: BandKind::TwoSided, tol: paper::SHIFT_TOL_PTS }),
+            measured: Measurement::from_samples(&drops),
+        });
+    }
+    Ok(Section {
+        id: "shift".to_string(),
+        title: "Fig 9 / Table 2 — §5.4 distribution-shift robustness (imdb)".to_string(),
+        rows,
+    })
+}
+
+/// Table 5: expert accuracy by document-length quintile (IMDB).
+fn table5_section(opts: &ReproduceOpts) -> Result<Section> {
+    let mut short: Vec<f64> = Vec::new();
+    let mut long: Vec<f64> = Vec::new();
+    for &seed in &opts.seeds {
+        let h = Harness::new(opts.scale, seed);
+        let (b, e) = h.setup(BenchmarkId::Imdb, opts.expert);
+        let (sorted, q) = eval::length_quintiles(&b);
+        let acc = |xs: &[&crate::data::Sample]| {
+            xs.iter().filter(|s| e.peek(s, b.classes) == s.label).count() as f64
+                / xs.len().max(1) as f64
+        };
+        short.push(acc(&sorted[..q]));
+        long.push(acc(&sorted[4 * q..]));
+    }
+    let refs = if opts.expert == ExpertId::Gpt35 {
+        (Some(paper::TABLE5_SHORTEST), Some(paper::TABLE5_LONGEST))
+    } else {
+        (None, None)
+    };
+    let band = |r: Option<f64>| {
+        r.map(|_| Band { kind: BandKind::TwoSided, tol: paper::TABLE5_TOL })
+    };
+    Ok(Section {
+        id: "table5".to_string(),
+        title: "Table 5 — expert accuracy by document length (imdb)".to_string(),
+        rows: vec![
+            Row {
+                label: "expert accuracy, shortest length quintile".to_string(),
+                unit: "%".to_string(),
+                paper: refs.0,
+                band: band(refs.0),
+                measured: Measurement::from_samples(&short),
+            },
+            Row {
+                label: "expert accuracy, longest length quintile".to_string(),
+                unit: "%".to_string(),
+                paper: refs.1,
+                band: band(refs.1),
+                measured: Measurement::from_samples(&long),
+            },
+        ],
+    })
+}
+
+/// Theorem 3.2's empirical no-regret property (the `no_regret` example,
+/// summarized): final average regret γ/T vs the ≤ 0 bound.
+fn noregret_section(opts: &ReproduceOpts) -> Result<Section> {
+    let bench = BenchmarkId::Imdb;
+    let mut avg_regret: Vec<f64> = Vec::new();
+    let mut j_ratio: Vec<f64> = Vec::new();
+    for &seed in &opts.seeds {
+        let h = Harness::new(opts.scale, seed);
+        let (b, e) = h.setup(bench, opts.expert);
+        let mut cfg = CascadeConfig::small(bench, opts.expert);
+        cfg.seed = seed;
+        let mut c = Cascade::new(cfg, b.classes, e, None, usize::MAX / 2)?;
+        c.set_threshold_scale(eval::BUDGETED_SCALE);
+        c.enable_regret_tracking(200);
+        let stream = b.stream();
+        c.run_stream(&stream);
+        let rt = c.regret.as_ref().ok_or_else(|| {
+            Error::Config("regret tracking was enabled but produced no tracker".into())
+        })?;
+        avg_regret.push(rt.average_regret());
+        let best = rt.j_best_fixed();
+        j_ratio.push(if best > 0.0 { rt.j_learned() / best } else { 1.0 });
+    }
+    Ok(Section {
+        id: "noregret".to_string(),
+        title: "Theorem 3.2 — empirical no-regret (imdb, unbudgeted)".to_string(),
+        rows: vec![
+            Row {
+                label: "final average regret γ/T (bound: ≤ 0 as T → ∞)".to_string(),
+                unit: String::new(),
+                paper: Some(0.0),
+                band: Some(Band { kind: BandKind::UpperBound, tol: paper::REGRET_TOL }),
+                measured: Measurement::from_samples(&avg_regret),
+            },
+            Row {
+                label: "J(learned) / J(best fixed policy in hindsight)".to_string(),
+                unit: "x".to_string(),
+                paper: None,
+                band: None,
+                measured: Measurement::from_samples(&j_ratio),
+            },
+        ],
+    })
+}
+
+/// App. B.1 prefill latency + intro server arithmetic (analytic — exact
+/// by construction, kept in the record as an end-to-end sanity anchor).
+fn costmodel_section() -> Section {
+    Section {
+        id: "costmodel".to_string(),
+        title: "App. B.1 — prefill latency model".to_string(),
+        rows: vec![
+            Row {
+                label: "first-token latency, 8192-token prompt".to_string(),
+                unit: "s".to_string(),
+                paper: Some(LatencyModel::PREFILL_SECS_8K),
+                band: Some(Band { kind: BandKind::TwoSided, tol: paper::PREFILL_TOL_SECS }),
+                measured: Measurement::from_samples(&[LatencyModel::prefill_secs(8192.0)]),
+            },
+            Row {
+                label: "servers for 1M docs/hour".to_string(),
+                unit: String::new(),
+                paper: Some(paper::SERVERS_1M),
+                band: Some(Band { kind: BandKind::TwoSided, tol: paper::SERVERS_TOL }),
+                measured: Measurement::from_samples(&[LatencyModel::servers_needed(1e6)]),
+            },
+        ],
+    }
+}
+
+fn expert_display(expert: ExpertId) -> &'static str {
+    match expert {
+        ExpertId::Gpt35 => "GPT-3.5",
+        ExpertId::Llama70b => "Llama-2-70B",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_report() -> Report {
+        Report {
+            profile: "test".to_string(),
+            scale: 0.02,
+            seeds: vec![1, 2],
+            expert: ExpertId::Gpt35,
+            sections: vec![Section {
+                id: "demo".to_string(),
+                title: "Demo".to_string(),
+                rows: vec![
+                    Row {
+                        label: "in-band".to_string(),
+                        unit: "%".to_string(),
+                        paper: Some(0.9),
+                        band: Some(Band { kind: BandKind::TwoSided, tol: 0.05 }),
+                        measured: Measurement { mean: 0.92, sd: 0.01, n: 2 },
+                    },
+                    Row {
+                        label: "info".to_string(),
+                        unit: String::new(),
+                        paper: None,
+                        band: None,
+                        measured: Measurement { mean: 1.5, sd: 0.0, n: 2 },
+                    },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn band_logic() {
+        let two = Band { kind: BandKind::TwoSided, tol: 0.05 };
+        assert!(two.contains(0.05) && two.contains(-0.05));
+        assert!(!two.contains(0.051) && !two.contains(-0.051));
+        let up = Band { kind: BandKind::UpperBound, tol: 0.02 };
+        assert!(up.contains(-5.0) && up.contains(0.02));
+        assert!(!up.contains(0.021));
+        let low = Band { kind: BandKind::LowerBound, tol: 0.02 };
+        assert!(low.contains(5.0) && low.contains(-0.02));
+        assert!(!low.contains(-0.021));
+    }
+
+    #[test]
+    fn measurement_aggregates() {
+        let m = Measurement::from_samples(&[1.0, 3.0]);
+        assert_eq!(m.mean, 2.0);
+        assert_eq!(m.n, 2);
+        assert!((m.sd - (2.0f64).sqrt()).abs() < 1e-12);
+        let one = Measurement::from_samples(&[7.0]);
+        assert_eq!((one.mean, one.sd, one.n), (7.0, 0.0, 1));
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let rep = demo_report();
+        let j = rep.to_json();
+        let back = Report::from_json(&codec::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, rep);
+        assert_eq!(back.to_json(), j);
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let mut j = rep_json_with_schema(99.0);
+        assert!(Report::from_json(&j).is_err());
+        j = rep_json_with_schema(SCHEMA_VERSION as f64);
+        assert!(Report::from_json(&j).is_ok());
+    }
+
+    fn rep_json_with_schema(v: f64) -> Json {
+        let mut j = demo_report().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".to_string(), Json::Num(v));
+        }
+        j
+    }
+
+    #[test]
+    fn markdown_has_record_columns() {
+        let md = demo_report().to_markdown();
+        assert!(md.contains("| metric | paper | measured | Δ | band | status |"));
+        assert!(md.contains("92.00%"));
+        assert!(md.contains("pass"));
+        assert!(md.contains("info"));
+        assert!(md.contains("Verdict: 1 of 1 banded rows pass."));
+    }
+
+    #[test]
+    fn profiles_resolve() {
+        assert_eq!(ReproduceOpts::for_profile("quick").unwrap().profile, "quick");
+        assert_eq!(ReproduceOpts::for_profile("full").unwrap().scale, 0.1);
+        assert!(ReproduceOpts::for_profile("nope").is_err());
+        assert_eq!(parse_seed_list("1, 2,3").unwrap(), vec![1, 2, 3]);
+        assert!(parse_seed_list("1,x").is_err());
+    }
+}

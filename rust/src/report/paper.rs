@@ -1,0 +1,164 @@
+//! Paper-reference operating points (Tables 1/2/5, Figs 2–4, App. B.1)
+//! and the tolerance bands the reproduction is judged against.
+//!
+//! The numbers here are the *targets* `ocl reproduce` compares measured
+//! values to. Two provenance classes:
+//!
+//! * **Paper-exact** — values the paper states directly: the expert
+//!   zero-shot accuracies (shared with `sim::ExpertProfile`, which
+//!   calibrates the simulator to the same numbers), the Table 1 budget
+//!   columns (via `eval::table1_budgets`), the Table 5 length-bucket
+//!   endpoints, and the App. B.1 latency anchors.
+//! * **Chart-read** — per-budget OCL accuracies and shift deltas read
+//!   off the paper's tables/figures at the featured operating points.
+//!
+//! The tolerance bands are deliberately wide where the benchmark
+//! substitution (DESIGN.md §3) adds slack — the synthetic streams
+//! preserve difficulty *composition*, not the exact text distribution —
+//! and tight where the pipeline is analytic (App. B.1) or directly
+//! calibrated (expert accuracy).
+
+use crate::config::{BenchmarkId, ExpertId};
+use crate::eval::table1_budgets;
+use crate::sim::ExpertProfile;
+
+/// Expert zero-shot accuracy (Table 1 LLM rows) — the same constants
+/// `sim::expert` calibrates the simulator against.
+pub fn expert_accuracy(bench: BenchmarkId, expert: ExpertId) -> f64 {
+    ExpertProfile::for_pair(expert, bench).accuracy
+}
+
+/// Table 1 OCL accuracy at budget column `budget_idx` (0 = low,
+/// 1 = mid, 2 = high — the columns of [`table1_budgets`]).
+pub fn table1_ocl_accuracy(bench: BenchmarkId, expert: ExpertId, budget_idx: usize) -> f64 {
+    let a: [f64; 3] = match (expert, bench) {
+        (ExpertId::Gpt35, BenchmarkId::Imdb) => [0.9002, 0.9324, 0.9378],
+        (ExpertId::Gpt35, BenchmarkId::HateSpeech) => [0.7423, 0.8088, 0.8316],
+        (ExpertId::Gpt35, BenchmarkId::Isear) => [0.6412, 0.6631, 0.6905],
+        (ExpertId::Gpt35, BenchmarkId::Fever) => [0.7101, 0.7716, 0.7940],
+        (ExpertId::Llama70b, BenchmarkId::Imdb) => [0.8891, 0.9205, 0.9296],
+        (ExpertId::Llama70b, BenchmarkId::HateSpeech) => [0.7056, 0.7598, 0.7754],
+        (ExpertId::Llama70b, BenchmarkId::Isear) => [0.6130, 0.6397, 0.6718],
+        (ExpertId::Llama70b, BenchmarkId::Fever) => [0.6893, 0.7442, 0.7659],
+    };
+    a[budget_idx]
+}
+
+/// Table 1 cost reduction at budget column `budget_idx`: the paper
+/// charges the budget as spent, so the reference is `1 − 𝒩/T` — up to
+/// 90% at the featured operating points (the abstract's headline).
+pub fn table1_cost_reduction(bench: BenchmarkId, budget_idx: usize) -> f64 {
+    1.0 - table1_budgets(bench)[budget_idx] as f64 / bench.stream_len() as f64
+}
+
+/// Budget fractions at which the record samples the Fig 3 curves.
+pub const CURVE_POINT_FRACS: [f64; 2] = [0.1, 0.3];
+
+/// Fig 3/4 OCL accuracy read at a featured budget fraction (`None`
+/// where the paper plots no such point for the pair).
+pub fn fig_curve_accuracy(bench: BenchmarkId, expert: ExpertId, frac: f64) -> Option<f64> {
+    let pts: &[(f64, f64)] = match (expert, bench) {
+        (ExpertId::Gpt35, BenchmarkId::Imdb) => &[(0.1, 0.9280), (0.3, 0.9360)],
+        (ExpertId::Gpt35, BenchmarkId::HateSpeech) => &[(0.1, 0.7855), (0.3, 0.8189)],
+        _ => &[],
+    };
+    pts.iter().find(|(f, _)| (f - frac).abs() < 1e-9).map(|&(_, a)| a)
+}
+
+/// Table 2 average-accuracy shift vs the natural order, in percentage
+/// points (negative = drop), for a §5.4 scenario name.
+pub fn table2_shift_drop_pts(expert: ExpertId, scenario: &str) -> Option<f64> {
+    if expert != ExpertId::Gpt35 {
+        return None; // Table 2 is reported for the GPT-3.5 expert only.
+    }
+    match scenario {
+        "length-sorted" => Some(-1.1),
+        "category-holdout" => Some(-2.4),
+        _ => None,
+    }
+}
+
+/// Table 5: expert accuracy on the shortest IMDB length quintile.
+pub const TABLE5_SHORTEST: f64 = 0.955;
+/// Table 5: expert accuracy on the longest IMDB length quintile.
+pub const TABLE5_LONGEST: f64 = 0.924;
+
+/// Band half-width for expert zero-shot accuracy (fraction): the
+/// simulator is calibrated to the paper value, so this is tight.
+pub const EXPERT_TOL: f64 = 0.02;
+/// Band half-width for OCL accuracies (fraction): wide — the synthetic
+/// streams preserve difficulty composition, not exact text statistics.
+pub const OCL_ACC_TOL: f64 = 0.06;
+/// Lower-bound slack for cost reduction (fraction): the paced budget
+/// may legitimately under-spend (reduction above the reference always
+/// passes), but must not overshoot the paper's spend by more than this.
+pub const COST_TOL: f64 = 0.05;
+/// Band half-width for Fig 3 curve operating points (fraction).
+pub const CURVE_TOL: f64 = 0.06;
+/// Band half-width for Table 2 shift deltas (percentage points).
+pub const SHIFT_TOL_PTS: f64 = 5.0;
+/// Band half-width for the Table 5 quintile endpoints (fraction).
+pub const TABLE5_TOL: f64 = 0.04;
+/// Upper bound on the final average regret γ/T (Theorem 3.2 says ≤ 0
+/// asymptotically; finite streams get this much headroom).
+pub const REGRET_TOL: f64 = 0.05;
+/// Band half-width for the App. B.1 prefill latency (seconds).
+pub const PREFILL_TOL_SECS: f64 = 0.2;
+/// Intro arithmetic: servers needed for 1M docs/hour.
+pub const SERVERS_1M: f64 = 1000.0;
+/// Band half-width for the server count.
+pub const SERVERS_TOL: f64 = 50.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn references_cover_every_pair_and_budget() {
+        for expert in ExpertId::ALL {
+            for bench in BenchmarkId::ALL {
+                let e = expert_accuracy(bench, expert);
+                assert!((0.5..1.0).contains(&e), "{e}");
+                let mut last = 0.0;
+                for bi in 0..3 {
+                    let a = table1_ocl_accuracy(bench, expert, bi);
+                    // More budget never hurts in the reference tables,
+                    // and OCL parallels (never exceeds) the expert.
+                    assert!(a >= last, "{bench:?} {expert:?} b{bi}");
+                    assert!(a < e + 0.01, "{bench:?} {expert:?} b{bi}: {a} vs expert {e}");
+                    last = a;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cost_reduction_hits_the_headline() {
+        // The abstract: "cutting down inference costs by as much as 90%".
+        let max = BenchmarkId::ALL
+            .iter()
+            .map(|&b| table1_cost_reduction(b, 0))
+            .fold(0.0, f64::max);
+        assert!(max >= 0.90, "{max}");
+        // Every reference reduction is a real saving.
+        for bench in BenchmarkId::ALL {
+            for bi in 0..3 {
+                let r = table1_cost_reduction(bench, bi);
+                assert!((0.2..1.0).contains(&r), "{bench:?} b{bi}: {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn chart_read_points_resolve() {
+        for &f in &CURVE_POINT_FRACS {
+            assert!(fig_curve_accuracy(BenchmarkId::Imdb, ExpertId::Gpt35, f).is_some());
+        }
+        assert!(fig_curve_accuracy(BenchmarkId::Fever, ExpertId::Gpt35, 0.1).is_none());
+        assert!(fig_curve_accuracy(BenchmarkId::Imdb, ExpertId::Gpt35, 0.17).is_none());
+        assert!(table2_shift_drop_pts(ExpertId::Gpt35, "length-sorted").is_some());
+        assert!(table2_shift_drop_pts(ExpertId::Gpt35, "natural").is_none());
+        assert!(table2_shift_drop_pts(ExpertId::Llama70b, "length-sorted").is_none());
+        assert!(TABLE5_SHORTEST > TABLE5_LONGEST);
+    }
+}

@@ -1,0 +1,313 @@
+//! Experiment registry: seed-pinned run specifications.
+//!
+//! Every regenerable experiment — a Table 1 cell, a curve point, a
+//! shift cell — is named by a [`RunSpec`]. `ocl reproduce`, the `eval`
+//! regenerators, and the bench harnesses all *execute the same specs*,
+//! so a number in DESIGN.md §10, a line in a `reports/` file, and a
+//! bench timing always refer to the same workload. Budgets are stated
+//! the way the paper states them (absolute calls at full stream size,
+//! or a stream fraction) and resolved against a [`Harness`]'s scale so
+//! the budget *fraction* axis matches the paper at any scale.
+
+use crate::config::{BenchmarkId, ExpertId, ModelKind};
+use crate::data::{StreamOrder, IMDB_HELDOUT_CATEGORY};
+use crate::error::Result;
+use crate::eval::{table1_budgets, Harness, RunResult};
+
+/// Budget-sweep fractions of the Figs 3/4/10/11 cost–accuracy curves.
+pub const CURVE_FRACS: [f64; 7] = [0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8];
+
+/// Budget fractions of the §5.4 shift experiments (Fig 9 / Table 2).
+pub const SHIFT_FRACS: [f64; 4] = [0.1, 0.2, 0.3, 0.5];
+
+/// Which method a spec runs (the Table 1 row set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Online cascade learning (the paper's method), small cascade.
+    Ocl,
+    /// Online cascade learning with the 4-level cascade (§5.3).
+    OclLarge,
+    /// Online-ensemble baseline.
+    OnlineEnsemble,
+    /// Offline distillation into logistic regression.
+    DistillLr,
+    /// Offline distillation into the BERT-base surrogate.
+    DistillBert,
+}
+
+impl Method {
+    /// The Table 1 method rows, in the paper's row order.
+    pub const TABLE1: [Method; 4] =
+        [Method::DistillLr, Method::DistillBert, Method::OnlineEnsemble, Method::Ocl];
+
+    /// Canonical id fragment (spec names, bench case labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Ocl => "ocl",
+            Method::OclLarge => "ocl-large",
+            Method::OnlineEnsemble => "oel",
+            Method::DistillLr => "distill-lr",
+            Method::DistillBert => "distill-bert",
+        }
+    }
+
+    /// Display name (Table 1 row labels).
+    pub fn display(self) -> &'static str {
+        match self {
+            Method::Ocl => "Online Cascade (ours)",
+            Method::OclLarge => "Online Cascade (large)",
+            Method::OnlineEnsemble => "Online Ensemble",
+            Method::DistillLr => "Distilled LR",
+            Method::DistillBert => "Distilled BERT-base",
+        }
+    }
+}
+
+/// How a spec's expert-call budget 𝒩 is stated.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BudgetSpec {
+    /// No cap on expert calls.
+    Unlimited,
+    /// Absolute calls at the paper's full stream size (Table 1 𝒩),
+    /// rescaled by the harness so the budget fraction stays exact.
+    PaperCalls(usize),
+    /// Fraction of the (scaled) stream length.
+    Fraction(f64),
+}
+
+/// One deterministic, seed-pinned experiment run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Stable id, e.g. `table1/imdb/gpt35/ocl/b1`.
+    pub name: String,
+    /// Benchmark stream.
+    pub bench: BenchmarkId,
+    /// LLM expert profile.
+    pub expert: ExpertId,
+    /// Method under test.
+    pub method: Method,
+    /// Expert-call budget.
+    pub budget: BudgetSpec,
+    /// Stream ordering (distribution-shift scenarios).
+    pub order: StreamOrder,
+}
+
+impl RunSpec {
+    /// Resolve the budget to absolute calls at the harness's scale.
+    pub fn budget_calls(&self, h: &Harness) -> Option<u64> {
+        match self.budget {
+            BudgetSpec::Unlimited => None,
+            BudgetSpec::PaperCalls(n) => Some(h.scaled_budget(self.bench, n)),
+            BudgetSpec::Fraction(f) => {
+                Some(((h.stream_len(self.bench) as f64) * f).round() as u64)
+            }
+        }
+    }
+
+    /// Execute under the Table-1 split protocol (learning and budget
+    /// span the whole stream; accuracy is measured on the second half,
+    /// identical to the distillation test set — see [`Harness`]).
+    ///
+    /// The baselines take their budget as a hard number, so
+    /// [`BudgetSpec::Unlimited`] resolves to the full stream length for
+    /// them — an every-sample annotation budget *is* "uncapped" for
+    /// methods whose spend is proportional to their cap.
+    pub fn execute(&self, h: &Harness) -> Result<RunResult> {
+        let budget = self.budget_calls(h);
+        let capped = budget.unwrap_or(h.stream_len(self.bench) as u64);
+        match self.method {
+            Method::Ocl => {
+                h.run_ocl_split(self.bench, self.expert, budget, false, self.order)
+            }
+            Method::OclLarge => {
+                h.run_ocl_split(self.bench, self.expert, budget, true, self.order)
+            }
+            Method::OnlineEnsemble => {
+                h.run_oel_split(self.bench, self.expert, capped, self.order)
+            }
+            Method::DistillLr => {
+                h.run_distill(self.bench, self.expert, ModelKind::Lr, capped)
+            }
+            Method::DistillBert => {
+                h.run_distill(self.bench, self.expert, ModelKind::TfmBase, capped)
+            }
+        }
+    }
+}
+
+/// The spec for one Table 1 cell: (benchmark, method, budget column).
+/// `budget_idx` indexes [`table1_budgets`] (0 = low, 1 = mid, 2 = high).
+pub fn table1_spec(
+    bench: BenchmarkId,
+    expert: ExpertId,
+    method: Method,
+    budget_idx: usize,
+) -> RunSpec {
+    RunSpec {
+        name: format!(
+            "table1/{}/{}/{}/b{budget_idx}",
+            bench.name(),
+            expert.name(),
+            method.name()
+        ),
+        bench,
+        expert,
+        method,
+        budget: BudgetSpec::PaperCalls(table1_budgets(bench)[budget_idx]),
+        order: StreamOrder::Natural,
+    }
+}
+
+/// Every Table 1 cell for one benchmark (budget columns × method rows).
+pub fn table1_specs(bench: BenchmarkId, expert: ExpertId) -> Vec<RunSpec> {
+    let mut v = Vec::new();
+    for bi in 0..table1_budgets(bench).len() {
+        for m in Method::TABLE1 {
+            v.push(table1_spec(bench, expert, m, bi));
+        }
+    }
+    v
+}
+
+/// One cost–accuracy curve point (Figs 3/4/10/11) at a budget fraction.
+pub fn curve_spec(bench: BenchmarkId, expert: ExpertId, method: Method, frac: f64) -> RunSpec {
+    RunSpec {
+        name: format!(
+            "curves/{}/{}/{}/{:.0}pct",
+            bench.name(),
+            expert.name(),
+            method.name(),
+            frac * 100.0
+        ),
+        bench,
+        expert,
+        method,
+        budget: BudgetSpec::Fraction(frac),
+        order: StreamOrder::Natural,
+    }
+}
+
+/// The full curve sweep `eval::curves` regenerates: OCL (small or
+/// large) plus the online-ensemble baseline at every [`CURVE_FRACS`]
+/// point.
+pub fn curve_specs(bench: BenchmarkId, expert: ExpertId, large: bool) -> Vec<RunSpec> {
+    let ocl = if large { Method::OclLarge } else { Method::Ocl };
+    CURVE_FRACS
+        .iter()
+        .flat_map(|&f| {
+            [
+                curve_spec(bench, expert, ocl, f),
+                curve_spec(bench, expert, Method::OnlineEnsemble, f),
+            ]
+        })
+        .collect()
+}
+
+/// The §5.4 shift scenarios: (name, stream ordering). Index 0 is the
+/// natural-order control the shifted runs are compared against.
+pub fn shift_scenarios() -> [(&'static str, StreamOrder); 3] {
+    [
+        ("natural", StreamOrder::Natural),
+        ("length-sorted", StreamOrder::LengthAscending),
+        ("category-holdout", StreamOrder::CategoryHoldout(IMDB_HELDOUT_CATEGORY)),
+    ]
+}
+
+/// One shift cell (always IMDB — the paper's §5.4 setting).
+pub fn shift_spec(
+    expert: ExpertId,
+    scenario: &str,
+    order: StreamOrder,
+    method: Method,
+    frac: f64,
+) -> RunSpec {
+    RunSpec {
+        name: format!(
+            "shift/{scenario}/{}/{}/{:.0}pct",
+            expert.name(),
+            method.name(),
+            frac * 100.0
+        ),
+        bench: BenchmarkId::Imdb,
+        expert,
+        method,
+        budget: BudgetSpec::Fraction(frac),
+        order,
+    }
+}
+
+/// Every cell of one shift scenario: OCL + the online-ensemble
+/// baseline at each [`SHIFT_FRACS`] budget fraction.
+pub fn shift_specs(expert: ExpertId, scenario: &str, order: StreamOrder) -> Vec<RunSpec> {
+    SHIFT_FRACS
+        .iter()
+        .flat_map(|&f| {
+            [
+                shift_spec(expert, scenario, order, Method::Ocl, f),
+                shift_spec(expert, scenario, order, Method::OnlineEnsemble, f),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_names_are_stable_ids() {
+        let s = table1_spec(BenchmarkId::Imdb, ExpertId::Gpt35, Method::Ocl, 1);
+        assert_eq!(s.name, "table1/imdb/gpt35/ocl/b1");
+        assert_eq!(s.budget, BudgetSpec::PaperCalls(3800));
+        let c = curve_spec(BenchmarkId::Fever, ExpertId::Llama70b, Method::OclLarge, 0.3);
+        assert_eq!(c.name, "curves/fever/llama70b/ocl-large/30pct");
+        let f = shift_spec(
+            ExpertId::Gpt35,
+            "length-sorted",
+            StreamOrder::LengthAscending,
+            Method::OnlineEnsemble,
+            0.5,
+        );
+        assert_eq!(f.name, "shift/length-sorted/gpt35/oel/50pct");
+        assert_eq!(f.bench, BenchmarkId::Imdb);
+    }
+
+    #[test]
+    fn budgets_resolve_at_harness_scale() {
+        let h = Harness::new(0.02, 5);
+        let s = table1_spec(BenchmarkId::Imdb, ExpertId::Gpt35, Method::Ocl, 0);
+        // 1300/25000 at a 500-sample stream → 26 calls (matches
+        // Harness::scaled_budget).
+        assert_eq!(s.budget_calls(&h), Some(26));
+        let c = curve_spec(BenchmarkId::Imdb, ExpertId::Gpt35, Method::Ocl, 0.1);
+        assert_eq!(c.budget_calls(&h), Some(50));
+        let u = RunSpec { budget: BudgetSpec::Unlimited, ..c };
+        assert_eq!(u.budget_calls(&h), None);
+    }
+
+    #[test]
+    fn registries_enumerate_the_paper_grids() {
+        let t = table1_specs(BenchmarkId::Isear, ExpertId::Gpt35);
+        assert_eq!(t.len(), 12); // 3 budgets × 4 methods
+        assert_eq!(t[0].method, Method::DistillLr);
+        assert_eq!(t[3].method, Method::Ocl);
+        let c = curve_specs(BenchmarkId::Imdb, ExpertId::Gpt35, false);
+        assert_eq!(c.len(), CURVE_FRACS.len() * 2);
+        let c = curve_specs(BenchmarkId::Imdb, ExpertId::Gpt35, true);
+        assert_eq!(c[0].method, Method::OclLarge);
+        let sc = shift_scenarios();
+        assert_eq!(sc[0].0, "natural");
+        let sh = shift_specs(ExpertId::Gpt35, sc[1].0, sc[1].1);
+        assert_eq!(sh.len(), SHIFT_FRACS.len() * 2);
+    }
+
+    #[test]
+    fn tiny_spec_executes() {
+        let h = Harness::new(0.02, 7);
+        let r = table1_spec(BenchmarkId::Fever, ExpertId::Gpt35, Method::Ocl, 1)
+            .execute(&h)
+            .unwrap();
+        assert!(r.accuracy > 0.0 && r.accuracy <= 1.0);
+        assert!(r.llm_calls > 0);
+    }
+}

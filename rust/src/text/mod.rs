@@ -73,11 +73,13 @@ pub struct GenParams {
     pub classes: usize,
     /// Class prior weights (unnormalized).
     pub class_weights: Vec<f64>,
-    /// P(easy), P(medium) — hard gets the remainder.
+    /// P(easy) — the hard stratum gets `1 − p_easy − p_medium`.
     pub p_easy: f64,
+    /// P(medium).
     pub p_medium: f64,
-    /// Log-normal length parameters (of the underlying normal).
+    /// Log-normal length location μ (of the underlying normal).
     pub len_mu: f64,
+    /// Log-normal length scale σ (of the underlying normal).
     pub len_sigma: f64,
     /// Strength of the length↔difficulty correlation in [0,1]
     /// (Table 5: longer IMDB reviews are harder).

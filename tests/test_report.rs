@@ -1,0 +1,124 @@
+//! Reproduction-record invariants (`report` module, DESIGN.md §10):
+//!
+//! * the report JSON round-trips through the codec bit-for-bit;
+//! * the markdown emitter is deterministic across runs at a fixed
+//!   (scale, seed) — the property CI's `reproduce-quick` byte-diff
+//!   gate relies on;
+//! * tolerance-band pass/fail logic behaves on synthetic deltas of
+//!   every band kind.
+
+use ocl::codec;
+use ocl::config::{BenchmarkId, ExpertId};
+use ocl::report::{
+    reproduce, Band, BandKind, Measurement, Report, ReproduceOpts, Row, SCHEMA_VERSION, Section,
+    Status,
+};
+
+fn tiny_opts() -> ReproduceOpts {
+    // One non-IMDB benchmark keeps the pipeline to its cheapest shape
+    // (Table 1 + costmodel sections) at the minimum stream size.
+    ReproduceOpts {
+        profile: "test".to_string(),
+        scale: 0.02,
+        seeds: vec![1],
+        expert: ExpertId::Gpt35,
+        benches: vec![BenchmarkId::Fever],
+    }
+}
+
+fn synthetic_row(paper: Option<f64>, band: Option<Band>, mean: f64) -> Row {
+    Row {
+        label: "synthetic".to_string(),
+        unit: "%".to_string(),
+        paper,
+        band,
+        measured: Measurement { mean, sd: 0.01, n: 3 },
+    }
+}
+
+#[test]
+fn tolerance_bands_on_synthetic_deltas() {
+    let two = Some(Band { kind: BandKind::TwoSided, tol: 0.05 });
+    // Inside, at the edge, and outside — both directions.
+    assert_eq!(synthetic_row(Some(0.9), two, 0.9).status(), Status::Pass);
+    assert_eq!(synthetic_row(Some(0.9), two, 0.95).status(), Status::Pass);
+    assert_eq!(synthetic_row(Some(0.9), two, 0.851).status(), Status::Fail);
+    assert_eq!(synthetic_row(Some(0.9), two, 0.96).status(), Status::Fail);
+    // Upper bound: arbitrarily below passes, above the slack fails.
+    let up = Some(Band { kind: BandKind::UpperBound, tol: 0.02 });
+    assert_eq!(synthetic_row(Some(0.0), up, -3.0).status(), Status::Pass);
+    assert_eq!(synthetic_row(Some(0.0), up, 0.021).status(), Status::Fail);
+    // Lower bound: arbitrarily above passes, below the slack fails.
+    let low = Some(Band { kind: BandKind::LowerBound, tol: 0.02 });
+    assert_eq!(synthetic_row(Some(0.5), low, 0.99).status(), Status::Pass);
+    assert_eq!(synthetic_row(Some(0.5), low, 0.47).status(), Status::Fail);
+    // No reference → info, and info rows never fail a report.
+    assert_eq!(synthetic_row(None, None, 0.1).status(), Status::Info);
+    let rep = Report {
+        profile: "t".to_string(),
+        scale: 1.0,
+        seeds: vec![1],
+        expert: ExpertId::Gpt35,
+        sections: vec![Section {
+            id: "s".to_string(),
+            title: "S".to_string(),
+            rows: vec![synthetic_row(None, None, 0.1), synthetic_row(Some(0.9), two, 0.9)],
+        }],
+    };
+    assert!(rep.passed());
+}
+
+#[test]
+fn report_json_round_trips_through_codec() {
+    let rep = reproduce(&tiny_opts()).expect("tiny reproduce");
+    assert!(rep.rows() >= 8, "fever table1 + costmodel rows expected");
+    let json = rep.to_json();
+    let text = json.to_string_pretty();
+    let back = Report::from_json(&codec::parse(&text).expect("parse")).expect("from_json");
+    assert_eq!(back, rep, "Report must survive encode → parse → decode");
+    // Re-encoding is a fixed point (derived fields recompute identically).
+    assert_eq!(back.to_json().to_string_pretty(), text);
+    // Schema drift is rejected.
+    let drifted = text.replacen(
+        &format!("\"schema\": {SCHEMA_VERSION}"),
+        &format!("\"schema\": {}", SCHEMA_VERSION + 1),
+        1,
+    );
+    assert!(Report::from_json(&codec::parse(&drifted).unwrap()).is_err());
+    // A hand-edited verdict is rejected: stored status/delta must agree
+    // with what the loaded values recompute.
+    let tampered = text.replacen("\"status\": \"pass\"", "\"status\": \"FAIL\"", 1);
+    assert_ne!(tampered, text, "record should contain at least one passing row");
+    assert!(Report::from_json(&codec::parse(&tampered).unwrap()).is_err());
+}
+
+#[test]
+fn markdown_and_json_deterministic_at_fixed_seed() {
+    let a = reproduce(&tiny_opts()).expect("run a");
+    let b = reproduce(&tiny_opts()).expect("run b");
+    assert_eq!(a.to_markdown(), b.to_markdown(), "markdown must be byte-identical");
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "json must be byte-identical"
+    );
+    let md = a.to_markdown();
+    assert!(md.contains("| metric | paper | measured | Δ | band | status |"));
+    assert!(md.contains("Table 1 — fever"));
+    assert!(md.contains("App. B.1"));
+    assert!(!md.contains("NaN"), "no NaN may ever reach the record");
+}
+
+#[test]
+fn write_then_check_file_round_trips() {
+    let rep = reproduce(&tiny_opts()).expect("reproduce");
+    let dir = std::env::temp_dir().join(format!("ocl_report_test_{}", std::process::id()));
+    let dir_s = dir.to_str().expect("utf8 tempdir").to_string();
+    let (jp, mp) = rep.write(&dir_s).expect("write");
+    assert!(jp.ends_with("reproduce_test.json") && mp.ends_with("reproduce_test.md"));
+    let back = ocl::report::check_file(&jp).expect("check_file");
+    assert_eq!(back, rep);
+    let md = std::fs::read_to_string(&mp).expect("read md");
+    assert_eq!(md, rep.to_markdown());
+    std::fs::remove_dir_all(&dir).ok();
+}
