@@ -8,6 +8,7 @@
 //! ```bash
 //! make artifacts && cargo run --release --features pjrt --example serve_stream
 //! # host engine (no artifacts or pjrt feature needed): --engine host
+//! # over a real socket (wire protocol + loopback client): --listen 127.0.0.1:0
 //! ```
 
 use std::sync::mpsc::channel;
@@ -15,7 +16,7 @@ use std::sync::mpsc::channel;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::data::Benchmark;
 use ocl::serve::shard::ShardFront;
-use ocl::serve::{load, ServeConfig, ShardConfig};
+use ocl::serve::{load, net, ServeConfig, ShardConfig};
 use ocl::sim::{Expert, ExpertProfile};
 
 /// Prefer PJRT when the build and the artifacts allow it.
@@ -124,31 +125,76 @@ fn main() -> ocl::Result<()> {
     // A restored run resubmits only the stream tail, original ids kept.
     let cursor = (front.resume_cursor() as usize).min(n);
 
-    let (req_tx, req_rx) = channel();
-    let (resp_tx, resp_rx) = channel::<ocl::serve::Response>();
     // Open-loop submission: a positive --rate drives a Poisson arrival
     // process; 0 degenerates to back-to-back submission.
     let arrival = load::Arrival::Poisson { rate: if rate > 0.0 { rate } else { 1e9 } };
-    let submit =
-        load::drive_from(b.samples[cursor..].to_vec(), arrival, 7, req_tx, cursor as u64);
-    let drain = std::thread::spawn(move || {
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for r in resp_rx.iter() {
-            if r.shed {
-                continue; // shed responses carry no prediction
+    // `--listen <addr>` puts the whole front behind the wire protocol
+    // (`serve::net`) and drives the identical stream through a real
+    // loopback socket; the default stays on in-process channels.
+    let (report, client_correct, client_total) = match flag_str("--listen") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(&addr)
+                .map_err(|e| ocl::Error::io(&addr, e))?;
+            let bound = listener
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or(addr);
+            println!("serving over TCP on {bound}");
+            let server = std::thread::spawn(move || net::serve(front, listener));
+            let client =
+                net::Client::connect_retry(&bound, std::time::Duration::from_secs(10))?;
+            let submit = load::drive_from(
+                b.samples[cursor..].to_vec(),
+                arrival,
+                7,
+                client.request_sender(),
+                cursor as u64,
+            );
+            submit.join().ok();
+            let (responses, _wire_report) = client.finish()?;
+            let report = server
+                .join()
+                .map_err(|_| ocl::Error::Worker("serve thread panicked".into()))??;
+            let mut correct = 0usize;
+            let mut total = 0usize;
+            for r in responses.iter().filter(|r| !r.shed) {
+                total += 1;
+                if r.pred == r.truth {
+                    correct += 1;
+                }
             }
-            total += 1;
-            if r.pred == r.truth {
-                correct += 1;
-            }
+            (report, correct, total)
         }
-        (correct, total)
-    });
-
-    let report = front.serve(req_rx, resp_tx)?;
-    submit.join().ok();
-    let (client_correct, client_total) = drain.join().unwrap_or((0, 0));
+        None => {
+            let (req_tx, req_rx) = channel();
+            let (resp_tx, resp_rx) = channel::<ocl::serve::Response>();
+            let submit = load::drive_from(
+                b.samples[cursor..].to_vec(),
+                arrival,
+                7,
+                req_tx,
+                cursor as u64,
+            );
+            let drain = std::thread::spawn(move || {
+                let mut correct = 0usize;
+                let mut total = 0usize;
+                for r in resp_rx.iter() {
+                    if r.shed {
+                        continue; // shed responses carry no prediction
+                    }
+                    total += 1;
+                    if r.pred == r.truth {
+                        correct += 1;
+                    }
+                }
+                (correct, total)
+            });
+            let report = front.serve(req_rx, resp_tx)?;
+            submit.join().ok();
+            let (correct, total) = drain.join().unwrap_or((0, 0));
+            (report, correct, total)
+        }
+    };
 
     let lat = report.latency_ms();
     println!("\n== serving report ==");

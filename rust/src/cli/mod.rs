@@ -40,6 +40,13 @@ impl Args {
         })
     }
 
+    /// Value of `name` if set to something non-empty — the idiom for
+    /// optional flags whose declared default is `""` (e.g. the serve
+    /// subcommand's `--listen` / `--connect` / `--front`).
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        Some(self.get(name)).filter(|v| !v.is_empty())
+    }
+
     /// Boolean switch state.
     pub fn switch(&self, name: &str) -> bool {
         self.switches.get(name).copied().unwrap_or(false)
@@ -168,6 +175,15 @@ mod tests {
         assert_eq!(a.parse::<usize>("n").unwrap(), 5);
         assert!(a.switch("verbose"));
         assert_eq!(a.get("benchmark"), "fever");
+    }
+
+    #[test]
+    fn get_opt_treats_empty_default_as_unset() {
+        let c = Command::new("serve", "test").opt("listen", "", "bind address");
+        let a = c.parse(&v(&[])).unwrap();
+        assert_eq!(a.get_opt("listen"), None);
+        let a = c.parse(&v(&["--listen", "127.0.0.1:4000"])).unwrap();
+        assert_eq!(a.get_opt("listen"), Some("127.0.0.1:4000"));
     }
 
     #[test]

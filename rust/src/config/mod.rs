@@ -422,6 +422,13 @@ pub struct ServeConfig {
     /// resumed trajectory bit-identical (DESIGN.md §9). 0 disables the
     /// cadence; the graceful-shutdown checkpoint is still written.
     pub ckpt_every: usize,
+    /// How long a cadence-checkpoint barrier may wait for a level
+    /// authority to export its weights. A timeout with the authority
+    /// still alive *aborts* the attempt (admission resumes, the next
+    /// cadence re-arms) instead of wedging the barrier — liveness over
+    /// checkpoint freshness. The graceful-shutdown checkpoint ignores
+    /// this bound: with the stream drained there is nothing to stall.
+    pub export_timeout: std::time::Duration,
     /// Scale-out topology (shards × replicas × sync cadence).
     pub shard: ShardConfig,
 }
@@ -435,6 +442,7 @@ impl Default for ServeConfig {
             max_restarts: 16,
             publish_every: 4,
             ckpt_every: 64,
+            export_timeout: std::time::Duration::from_secs(60),
             shard: ShardConfig::default(),
         }
     }
@@ -450,6 +458,7 @@ impl ServeConfig {
             ("max_restarts", Json::Num(self.max_restarts as f64)),
             ("publish_every", Json::Num(self.publish_every as f64)),
             ("ckpt_every", Json::Num(self.ckpt_every as f64)),
+            ("export_timeout_us", Json::Num(self.export_timeout.as_micros() as f64)),
             ("shard", self.shard.to_json()),
         ])
     }
@@ -562,6 +571,7 @@ mod tests {
         assert_eq!(s.max_restarts, 16);
         assert_eq!(s.publish_every, 4);
         assert_eq!(s.ckpt_every, 64);
+        assert_eq!(s.export_timeout, std::time::Duration::from_secs(60));
         assert_eq!(s.shard, ShardConfig::default());
         let v = crate::codec::parse(&s.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("batch_max").unwrap().as_usize(), Some(8));
@@ -569,6 +579,7 @@ mod tests {
         assert_eq!(v.get("max_pending").unwrap().as_usize(), Some(1024));
         assert_eq!(v.get("max_restarts").unwrap().as_usize(), Some(16));
         assert_eq!(v.get("ckpt_every").unwrap().as_usize(), Some(64));
+        assert_eq!(v.get("export_timeout_us").unwrap().as_f64(), Some(60_000_000.0));
         let sh = v.get("shard").unwrap();
         assert_eq!(sh.get("shards").unwrap().as_usize(), Some(1));
         assert_eq!(sh.get("replicas_per_level").unwrap().as_usize(), Some(1));

@@ -1,12 +1,14 @@
 //! Benchmark streams: materialized sample sets, orderings, and the
 //! §5.4 distribution-shift transforms.
 
+use crate::codec::Json;
 use crate::config::BenchmarkId;
+use crate::error::{Error, Result};
 use crate::prng::Rng;
 use crate::text::{Doc, Generator, Stratum};
 
 /// One stream element, fully featurization-ready.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Sample {
     /// Stable id (position in the generated set).
     pub id: usize,
@@ -22,6 +24,49 @@ pub struct Sample {
     pub category: usize,
     /// Document token length.
     pub len: usize,
+}
+
+impl Sample {
+    /// JSON encoding (wire protocol: `serve::net` request frames).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::Str(self.text.clone())),
+            ("label", Json::Num(self.label as f64)),
+            ("stratum", Json::Str(self.stratum.name().to_string())),
+            ("category", Json::Num(self.category as f64)),
+            ("len", Json::Num(self.len as f64)),
+        ])
+    }
+
+    /// Inverse of [`Sample::to_json`].
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let field = |k: &str| {
+            v.get(k)
+                .ok_or_else(|| Error::Wire(format!("sample missing field '{k}'")))
+        };
+        let num = |k: &str| {
+            field(k)?
+                .as_usize()
+                .ok_or_else(|| Error::Wire(format!("sample field '{k}' not a usize")))
+        };
+        let stratum_name = field("stratum")?
+            .as_str()
+            .ok_or_else(|| Error::Wire("sample stratum not a string".into()))?;
+        Ok(Sample {
+            id: num("id")?,
+            text: field("text")?
+                .as_str()
+                .ok_or_else(|| Error::Wire("sample text not a string".into()))?
+                .to_string(),
+            label: num("label")?,
+            stratum: Stratum::from_name(stratum_name).ok_or_else(|| {
+                Error::Wire(format!("unknown sample stratum '{stratum_name}'"))
+            })?,
+            category: num("category")?,
+            len: num("len")?,
+        })
+    }
 }
 
 /// A materialized benchmark: samples + metadata.
@@ -169,6 +214,25 @@ mod tests {
         let first_held = s.iter().position(|x| x.category == 2).unwrap();
         assert!(s[first_held..].iter().all(|x| x.category == 2));
         assert_eq!(s.len(), 400);
+    }
+
+    #[test]
+    fn sample_json_roundtrips_exactly() {
+        let b = small();
+        for s in b.samples.iter().take(16) {
+            let text = s.to_json().to_string_compact();
+            let v = crate::codec::parse(&text).unwrap();
+            assert_eq!(&Sample::from_json(&v).unwrap(), s);
+        }
+        assert!(Sample::from_json(&Json::Null).is_err());
+        let mut v = crate::codec::parse(
+            &b.samples[0].to_json().to_string_compact(),
+        )
+        .unwrap();
+        if let Json::Obj(m) = &mut v {
+            m.insert("stratum".into(), Json::Str("impossible".into()));
+        }
+        assert!(Sample::from_json(&v).is_err(), "unknown stratum must be rejected");
     }
 
     #[test]

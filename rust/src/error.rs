@@ -43,6 +43,12 @@ pub enum Error {
     /// Data/benchmark construction failure.
     Data(String),
 
+    /// Wire-protocol violation (bad frame version/tag, oversized or
+    /// malformed frame; see `serve::net`). Distinct from [`Error::Json`]
+    /// so a server can drop one bad connection without conflating it
+    /// with a corrupt local artifact.
+    Wire(String),
+
     /// I/O error with path context.
     Io {
         /// Path the operation touched.
@@ -66,6 +72,7 @@ impl fmt::Display for Error {
             Error::Slo(m) => write!(f, "slo violation: {m}"),
             Error::Ckpt(m) => write!(f, "checkpoint error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Wire(m) => write!(f, "wire error: {m}"),
             Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
         }
     }
@@ -115,6 +122,7 @@ mod tests {
         assert_eq!(Error::Slo("s".into()).to_string(), "slo violation: s");
         assert_eq!(Error::Ckpt("k".into()).to_string(), "checkpoint error: k");
         assert_eq!(Error::Data("d".into()).to_string(), "data error: d");
+        assert_eq!(Error::Wire("n".into()).to_string(), "wire error: n");
     }
 
     #[test]

@@ -9,8 +9,8 @@ use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
 use ocl::report;
-use ocl::serve::shard::ShardFront;
-use ocl::serve::{ckpt, load, ServeConfig, ShardConfig};
+use ocl::serve::shard::{ShardFront, ShardReport};
+use ocl::serve::{ckpt, load, net, ServeConfig, ShardConfig};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -65,6 +65,7 @@ fn commands() -> Vec<Command> {
             .opt("expert", "gpt35", "gpt35|llama70b")
             .opt("requests", "2000", "number of requests")
             .opt("rate", "0", "open-loop arrival rate, req/s (0 = unpaced)")
+            .opt("scale", "1", "stream scale vs the paper's dataset size")
             .opt("engine", "host", "host|pjrt")
             .opt("seed", "0", "rng seed")
             .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)")
@@ -73,7 +74,13 @@ fn commands() -> Vec<Command> {
             .opt("sync", "16", "cross-shard annotation broadcast interval (0 = off)")
             .opt("ckpt-dir", "", "checkpoint directory (empty = durability off)")
             .opt("ckpt-every", "64", "expert annotations between checkpoints (0 = shutdown only)")
-            .opt("resume", "off", "off|strict|best-effort: restore from --ckpt-dir"),
+            .opt("resume", "off", "off|strict|best-effort: restore from --ckpt-dir")
+            .opt("listen", "", "serve over TCP: bind address (e.g. 127.0.0.1:4100)")
+            .opt("shard-id", "", "with --listen: run as one shard process (0..--shards)")
+            .opt("front", "", "run the thin front over comma-separated shard addresses")
+            .opt("connect", "", "run as a load client against a --listen/--front address")
+            .opt("slo-p50", "0", "client: fail if p50 latency exceeds this many ms (0 = off)")
+            .opt("slo-p99", "0", "client: fail if p99 latency exceeds this many ms (0 = off)"),
         Command::new("selftest", "quick end-to-end smoke test"),
     ]
 }
@@ -284,7 +291,35 @@ fn dispatch(argv: &[String]) -> Result<()> {
             let shards: usize = args.parse("shards")?;
             let replicas: usize = args.parse("replicas")?;
             let sync: usize = args.parse("sync")?;
-            let h = Harness::new(1.0, seed);
+
+            // Wire-client mode: no local cascade at all — connect to a
+            // --listen / --front process and drive it over the socket.
+            if let Some(addr) = args.get_opt("connect") {
+                return serve_client(&args, bench, expert, n, rate, seed, addr);
+            }
+            // Thin front process: also cascade-free; it hash-dispatches
+            // to already-running shard processes.
+            if let Some(addrs) = args.get_opt("front") {
+                let listen = args.get_opt("listen").ok_or_else(|| {
+                    Error::Usage("--front requires --listen <bind addr>".into())
+                })?;
+                let listener = std::net::TcpListener::bind(listen)
+                    .map_err(|e| Error::io(listen, e))?;
+                let peers: Vec<String> = addrs
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                eprintln!("[front on {listen} over {} shard(s)]", peers.len());
+                let merged = net::run_front(&peers, listener)?;
+                println!("front: {}", merged.to_string_compact());
+                return Ok(());
+            }
+            if args.get_opt("shard-id").is_some() && args.get_opt("listen").is_none() {
+                return Err(Error::Usage("--shard-id requires --listen".into()));
+            }
+
+            let h = Harness::new(args.parse("scale")?, seed);
             let (b, e) = h.setup(bench, expert);
             let mut cfg = CascadeConfig::small(bench, expert);
             cfg.engine = engine;
@@ -314,6 +349,39 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 };
                 Some(ckpt::CkptOptions { dir: ckpt_dir, resume: mode })
             };
+
+            // One shard process of a multi-process deployment: a single
+            // Server behind a socket, the shared checkpoint directory
+            // as durable state, sync relayed by the front.
+            if let (Some(listen), Some(sid)) =
+                (args.get_opt("listen"), args.get_opt("shard-id"))
+            {
+                let k: usize = sid.parse().map_err(|_| {
+                    Error::Usage(format!("--shard-id: cannot parse '{sid}'"))
+                })?;
+                let listener = std::net::TcpListener::bind(listen)
+                    .map_err(|e| Error::io(listen, e))?;
+                let (mut srv, cursor) = net::build_shard_server(
+                    cfg,
+                    b.classes,
+                    e,
+                    serve_cfg,
+                    args.get("artifacts"),
+                    net::ShardSlot { id: k, of: shards },
+                    ckpt,
+                )?;
+                srv.set_threshold_scale(eval::BUDGETED_SCALE);
+                eprintln!("[shard {k}/{shards} on {listen}]");
+                let r = net::serve_shard(srv, cursor, k, listener)?;
+                print_shard_line(k, &r);
+                println!(
+                    "shard-process {k}/{shards}: served_total={} shed={} \
+                     llm_calls={} resumed={} resume_cursor={cursor} ckpts={}",
+                    r.served, r.shed, r.llm_calls, r.resumed, r.ckpts
+                );
+                return Ok(());
+            }
+
             let mut front = ShardFront::with_ckpt(
                 cfg,
                 b.classes,
@@ -323,6 +391,21 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 ckpt,
             )?;
             front.set_threshold_scale(eval::BUDGETED_SCALE);
+
+            // Single-process TCP serving: the whole ShardFront (global
+            // admission gate included) behind one accept loop; clients
+            // bring their own stream.
+            if let Some(listen) = args.get_opt("listen") {
+                let cursor = front.resume_cursor() as usize;
+                let listener = std::net::TcpListener::bind(listen)
+                    .map_err(|e| Error::io(listen, e))?;
+                eprintln!("[serving on {listen}]");
+                let report = net::serve(front, listener)?;
+                let drained = report.served() + report.shed();
+                print_serve_summary(&report, drained, cursor);
+                return Ok(());
+            }
+
             // Resume: requests below the cursor were already absorbed
             // by the interrupted run — resubmit only the stream tail,
             // with its original ids (shard hashing + cursor continuity).
@@ -340,41 +423,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
             let report = front.serve(req_rx, resp_tx)?;
             submit.join().ok();
             let drained = drain.join().unwrap_or(0);
-            let lat = report.latency_ms();
-            println!(
-                "shards={} served_total={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
-                 p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} max_snapshot_lag={} \
-                 resumed={} resume_cursor={cursor} ckpts={}",
-                report.shards.len(),
-                report.served(),
-                report.shed(),
-                drained,
-                report.accuracy() * 100.0,
-                report.throughput(),
-                lat.pct(50.0),
-                lat.pct(95.0),
-                lat.pct(99.0),
-                report.llm_calls(),
-                report.max_snapshot_lag(),
-                report.resumed(),
-                report.ckpts()
-            );
-            for (i, r) in report.shards.iter().enumerate() {
-                println!(
-                    "shard {i}: served={} handled={:?} restarts={:?} (cap {}) \
-                     warm_respawns={:?} snapshots={:?} snapshot_lag={:?} \
-                     replica_jobs={:?} final_betas={:?}",
-                    r.served,
-                    r.handled,
-                    r.restarts,
-                    r.restart_cap,
-                    r.warm_respawns,
-                    r.snapshots,
-                    r.snapshot_lag,
-                    r.replica_jobs,
-                    r.final_betas
-                );
-            }
+            print_serve_summary(&report, drained, cursor);
             Ok(())
         }
         "selftest" => {
@@ -395,4 +444,118 @@ fn dispatch(argv: &[String]) -> Result<()> {
         }
         _ => unreachable!(),
     }
+}
+
+/// The one-line run summary + per-shard detail lines shared by the
+/// in-process and `--listen` serving paths (CI smoke jobs grep these).
+fn print_serve_summary(report: &ShardReport, drained: usize, cursor: usize) {
+    let lat = report.latency_ms();
+    println!(
+        "shards={} served_total={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
+         p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} max_snapshot_lag={} \
+         resumed={} resume_cursor={cursor} ckpts={}",
+        report.shards.len(),
+        report.served(),
+        report.shed(),
+        drained,
+        report.accuracy() * 100.0,
+        report.throughput(),
+        lat.pct(50.0),
+        lat.pct(95.0),
+        lat.pct(99.0),
+        report.llm_calls(),
+        report.max_snapshot_lag(),
+        report.resumed(),
+        report.ckpts()
+    );
+    for (i, r) in report.shards.iter().enumerate() {
+        print_shard_line(i, r);
+    }
+}
+
+/// One shard's detail line (`final_betas` is what the crash tests and
+/// ckpt-smoke compare bit-for-bit across resume).
+fn print_shard_line(i: usize, r: &ocl::serve::ServeReport) {
+    println!(
+        "shard {i}: served={} handled={:?} restarts={:?} (cap {}) \
+         warm_respawns={:?} snapshots={:?} snapshot_lag={:?} \
+         replica_jobs={:?} final_betas={:?}",
+        r.served,
+        r.handled,
+        r.restarts,
+        r.restart_cap,
+        r.warm_respawns,
+        r.snapshots,
+        r.snapshot_lag,
+        r.replica_jobs,
+        r.final_betas
+    );
+}
+
+/// `ocl serve --connect`: the wire-client mode. Builds the benchmark
+/// stream locally, resubmits from the server's announced resume
+/// cursor, and (optionally) asserts client-observed latency SLOs —
+/// measured where they matter, on the far side of the socket.
+fn serve_client(
+    args: &ocl::cli::Args,
+    bench: BenchmarkId,
+    expert: ExpertId,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    addr: &str,
+) -> Result<()> {
+    let h = Harness::new(args.parse("scale")?, seed);
+    let (b, _expert) = h.setup(bench, expert);
+    let client = net::Client::connect_retry(addr, std::time::Duration::from_secs(30))?;
+    let cursor = (client.cursor() as usize).min(n);
+    let samples: Vec<_> = b.samples.iter().take(n).skip(cursor).cloned().collect();
+    let arrival = load::Arrival::Poisson {
+        rate: if rate > 0.0 { rate } else { 1e9 },
+    };
+    let submit = load::drive_from(
+        samples,
+        arrival,
+        seed ^ 0xA,
+        client.request_sender(),
+        cursor as u64,
+    );
+    let submitted = submit.join().unwrap_or(0);
+    let (responses, report) = client.finish()?;
+    let mut lat = ocl::util::Percentiles::new();
+    let mut shed = 0usize;
+    let mut correct = 0usize;
+    for r in &responses {
+        if r.shed {
+            shed += 1;
+            continue;
+        }
+        lat.push(r.latency.as_secs_f64() * 1000.0);
+        if r.pred == r.truth {
+            correct += 1;
+        }
+    }
+    let served = responses.len() - shed;
+    println!(
+        "client: submitted={submitted} responses={} served={served} shed={shed} \
+         acc={:.2}% p50={:.2}ms p99={:.2}ms resume_cursor={cursor}",
+        responses.len(),
+        if served > 0 { correct as f64 / served as f64 * 100.0 } else { 0.0 },
+        lat.pct(50.0),
+        lat.pct(99.0),
+    );
+    if let Some(rep) = &report {
+        println!("server report: {}", rep.to_string_compact());
+    }
+    let p50: f64 = args.parse("slo-p50")?;
+    let p99: f64 = args.parse("slo-p99")?;
+    if p50 > 0.0 || p99 > 0.0 {
+        let slo = load::Slo {
+            p50_ms: if p50 > 0.0 { p50 } else { f64::INFINITY },
+            p99_ms: if p99 > 0.0 { p99 } else { f64::INFINITY },
+        };
+        slo.check(&lat)?;
+        println!("slo: ok (p50<={p50}ms p99<={p99}ms)");
+    }
+    Ok(())
 }

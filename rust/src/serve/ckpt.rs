@@ -452,6 +452,20 @@ fn manifest_name(seq: u64) -> String {
     format!("manifest-{seq:08}.json")
 }
 
+/// Best-effort read of a manifest's referenced file list (empty on any
+/// defect — pruning then treats the manifest as protecting nothing).
+fn manifest_files(dir: &Path, mname: &str) -> Vec<String> {
+    fs::read_to_string(dir.join(mname))
+        .ok()
+        .and_then(|t| codec::parse(&t).ok())
+        .and_then(|v| {
+            v.get("files").and_then(|arr| arr.as_arr()).map(|arr| {
+                arr.iter().filter_map(|f| f.as_str().map(String::from)).collect()
+            })
+        })
+        .unwrap_or_default()
+}
+
 /// List `(seq, file name)` of every manifest in `dir`, newest first.
 fn list_manifests(dir: &Path) -> Result<Vec<(u64, String)>> {
     let mut out = Vec::new();
@@ -518,17 +532,7 @@ impl CkptSink {
         let manifests = existing
             .into_iter()
             .map(|(mseq, mname)| {
-                let files: Vec<String> = fs::read_to_string(dir.join(&mname))
-                    .ok()
-                    .and_then(|t| codec::parse(&t).ok())
-                    .and_then(|v| {
-                        v.get("files").and_then(|arr| arr.as_arr()).map(|arr| {
-                            arr.iter()
-                                .filter_map(|f| f.as_str().map(String::from))
-                                .collect()
-                        })
-                    })
-                    .unwrap_or_default();
+                let files = manifest_files(&dir, &mname);
                 (mseq, mname, files)
             })
             .collect();
@@ -549,8 +553,22 @@ impl CkptSink {
 
     /// Persist one shard's state; commits a manifest when every shard
     /// has a current file. Returns whether a manifest was committed.
+    ///
+    /// In the one-process-per-shard topology (`ocl serve --shard-id`)
+    /// every shard process holds its *own* `CkptSink` over the same
+    /// directory, so the in-memory view only ever covers this
+    /// process's shard. Each deposit therefore first adopts the peers'
+    /// on-disk deposits, any peer-committed manifests, and the global
+    /// sequence high-water mark — otherwise manifests would never
+    /// commit (no single process sees "all shards deposited") and a
+    /// shard could garbage-collect a superseded file that a *peer's*
+    /// manifest still references. Concurrent deposits can still race
+    /// two manifests onto the same sequence number; both cover a full,
+    /// valid shard set and `write_atomic`'s rename makes the last one
+    /// win, so the newest manifest on disk is always loadable.
     pub fn deposit(&self, shard: usize, state: &ShardState) -> Result<bool> {
         let mut inner = self.inner.lock().expect("ckpt sink poisoned");
+        self.refresh_from_disk(&mut inner, shard);
         inner.seq += 1;
         let seq = inner.seq;
         let fname = format!("shard{shard}-{seq:08}.json");
@@ -588,6 +606,59 @@ impl CkptSink {
             }
         }
         Ok(committed)
+    }
+
+    /// Adopt peer shard processes' on-disk state into the in-memory
+    /// view: the sequence high-water mark, each *other* shard's newest
+    /// deposit (this process is authoritative for its own slot), and
+    /// any manifests committed by peers (so the superseded-file sweep
+    /// never deletes a file a peer's manifest references).
+    fn refresh_from_disk(&self, inner: &mut SinkInner, own: usize) {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return };
+        let shards = inner.latest.len();
+        let mut newest: Vec<Option<(u64, String)>> = vec![None; shards];
+        for entry in rd.flatten() {
+            let name = entry.file_name().to_string_lossy().to_string();
+            let Some(seq) = file_seq(&name) else { continue };
+            inner.seq = inner.seq.max(seq);
+            let Some(rest) = name.strip_prefix("shard") else { continue };
+            let Some((idx, _)) = rest.split_once('-') else { continue };
+            let Ok(j) = idx.parse::<usize>() else { continue };
+            if j >= shards {
+                continue;
+            }
+            let better = match &newest[j] {
+                Some((s, _)) => seq > *s,
+                None => true,
+            };
+            if better {
+                newest[j] = Some((seq, name));
+            }
+        }
+        for (j, found) in newest.into_iter().enumerate() {
+            if j == own {
+                continue;
+            }
+            if let Some((seq, name)) = found {
+                let held = inner.latest[j]
+                    .as_deref()
+                    .and_then(file_seq)
+                    .unwrap_or(0);
+                if seq > held {
+                    inner.latest[j] = Some(name);
+                }
+            }
+        }
+        if let Ok(on_disk) = list_manifests(&self.dir) {
+            for (mseq, mname) in on_disk.into_iter().rev() {
+                if inner.manifests.iter().any(|(s, _, _)| *s == mseq) {
+                    continue;
+                }
+                let files = manifest_files(&self.dir, &mname);
+                inner.manifests.push((mseq, mname, files));
+            }
+            inner.manifests.sort_by_key(|(s, _, _)| *s);
+        }
     }
 
     /// Keep the two newest manifests (and their files); delete older

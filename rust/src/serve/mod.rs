@@ -67,6 +67,7 @@
 
 pub mod ckpt;
 pub mod load;
+pub mod net;
 pub mod pool;
 pub mod shard;
 
@@ -90,7 +91,7 @@ use ckpt::{CkptSink, LevelState, ShardState};
 use pool::{LevelPool, PoolInit, WorkerReply, WorkerSpec};
 
 /// A client request: one document to classify.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     /// Client-assigned id (returned in the response).
     pub id: u64,
@@ -103,7 +104,7 @@ pub struct Request {
 }
 
 /// The served answer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     /// Request id.
     pub id: u64,
@@ -167,6 +168,11 @@ pub struct ServeReport {
     /// Durable checkpoints written during this run (cadence + the
     /// graceful-shutdown one).
     pub ckpts: u64,
+    /// Cadence checkpoint attempts aborted because the level authority
+    /// was alive but too slow to export within
+    /// [`ServeConfig::export_timeout`] — each abort resumes admission
+    /// and re-arms the next cadence (liveness over ckpt freshness).
+    pub ckpt_aborts: u64,
     /// Per-level DAgger β after the run (cascade-parity diagnostic).
     pub final_betas: Vec<f64>,
     /// 8-sample model-training chunks executed per level worker.
@@ -208,7 +214,12 @@ impl ServeReport {
             ("peak_pending", Json::Num(self.peak_pending as f64)),
             ("resumed", Json::Bool(self.resumed)),
             ("ckpts", Json::Num(self.ckpts as f64)),
+            ("ckpt_aborts", Json::Num(self.ckpt_aborts as f64)),
             ("handled", nums(&self.handled)),
+            (
+                "final_betas",
+                Json::Arr(self.final_betas.iter().map(|&b| Json::Num(b)).collect()),
+            ),
         ])
     }
 }
@@ -475,6 +486,7 @@ pub struct Server {
     resumed: bool,
     anns_since_ckpt: usize,
     ckpts_written: u64,
+    ckpt_aborts: u64,
     base: RunBase,
 }
 
@@ -628,6 +640,7 @@ impl Server {
             resumed,
             anns_since_ckpt: 0,
             ckpts_written: 0,
+            ckpt_aborts: 0,
             base,
             serve_cfg,
             cfg,
@@ -778,10 +791,19 @@ impl Server {
             //    supervision sweep and the export must not abort the
             //    run: leave the barrier armed — the next iteration's
             //    supervision respawns the worker and the barrier
-            //    retries (admission stays paused meanwhile).
+            //    retries (admission stays paused meanwhile). An
+            //    authority that is *alive but slow* must not hold the
+            //    barrier either (the pre-fix stall): the attempt is
+            //    aborted, admission resumes, and the barrier re-arms
+            //    only after another `ckpt_every` annotations.
             if ckpt_due && st.idle() {
-                match self.write_ckpt(&st) {
-                    Ok(()) => ckpt_due = false,
+                match self.write_ckpt(&st, self.serve_cfg.export_timeout) {
+                    Ok(true) => ckpt_due = false,
+                    Ok(false) => {
+                        ckpt_due = false;
+                        self.anns_since_ckpt = 0;
+                        self.ckpt_aborts += 1;
+                    }
                     Err(Error::Worker(_)) => {}
                     Err(e) => return Err(e),
                 }
@@ -811,18 +833,32 @@ impl Server {
         // warm-starts from the latest publication, the usual warm-
         // respawn staleness bound).
         if self.ckpt_sink.is_some() {
-            if let Err(e) = self.write_ckpt(&st) {
-                if !matches!(e, Error::Worker(_)) {
-                    return Err(e);
-                }
-                for i in 0..n_levels {
-                    for r in 0..self.pools[i].replicas() {
-                        if self.pools[i].workers[r].handle.is_finished() {
-                            self.respawn(i, r, &mut st.queues)?;
+            // The shutdown checkpoint is mandatory and the stream is
+            // already drained — there is no admission left to stall —
+            // so it uses a generous fixed export bound rather than
+            // `export_timeout` (which exists to bound how long a
+            // *cadence* barrier may pause admission).
+            let patient = Duration::from_secs(60);
+            let wrote = match self.write_ckpt(&st, patient) {
+                Ok(w) => w,
+                Err(e) => {
+                    if !matches!(e, Error::Worker(_)) {
+                        return Err(e);
+                    }
+                    for i in 0..n_levels {
+                        for r in 0..self.pools[i].replicas() {
+                            if self.pools[i].workers[r].handle.is_finished() {
+                                self.respawn(i, r, &mut st.queues)?;
+                            }
                         }
                     }
+                    self.write_ckpt(&st, patient)?
                 }
-                self.write_ckpt(&st)?;
+            };
+            if !wrote {
+                return Err(Error::Ckpt(
+                    "graceful-shutdown checkpoint export timed out".into(),
+                ));
             }
         }
 
@@ -855,6 +891,7 @@ impl Server {
             peak_pending: st.peak_pending,
             resumed: self.resumed,
             ckpts: self.ckpts_written,
+            ckpt_aborts: self.ckpt_aborts,
             final_betas: self.betas.clone(),
             train_batches: self
                 .pools
@@ -1060,26 +1097,35 @@ impl Server {
     }
 
     /// Capture the full learner state at a quiescent point and persist
-    /// it through the sink (atomic write + manifest commit).
-    fn write_ckpt(&mut self, st: &RunState) -> Result<()> {
+    /// it through the sink (atomic write + manifest commit). `Ok(false)`
+    /// means the attempt was aborted because a live authority did not
+    /// export within `timeout` — nothing was written and the caller
+    /// decides whether to retry or re-arm the next cadence.
+    fn write_ckpt(&mut self, st: &RunState, timeout: Duration) -> Result<bool> {
         let Some(sink) = self.ckpt_sink.clone() else {
-            return Ok(());
+            return Ok(true);
         };
         debug_assert!(st.idle(), "checkpoints must capture a quiescent router");
-        let state = self.export_state(st)?;
+        let Some(state) = self.export_state(st, timeout)? else {
+            return Ok(false);
+        };
         sink.deposit(self.shard_idx, &state)?;
         self.anns_since_ckpt = 0;
         self.ckpts_written += 1;
-        Ok(())
+        Ok(true)
     }
 
     /// Assemble the durable [`ShardState`]: live authority weights
     /// (synchronous pool export), learner-cadence counters, replay
     /// caches, RNG, β, the sync stage, and cumulative serve counters.
-    fn export_state(&self, st: &RunState) -> Result<ShardState> {
+    /// `Ok(None)` when any level authority is alive but failed to
+    /// export within `timeout` (see [`LevelPool::export`]).
+    fn export_state(&self, st: &RunState, timeout: Duration) -> Result<Option<ShardState>> {
         let mut levels = Vec::with_capacity(self.pools.len());
         for (i, pool) in self.pools.iter().enumerate() {
-            let (model, calib) = pool.export()?;
+            let Some((model, calib)) = pool.export(timeout)? else {
+                return Ok(None);
+            };
             levels.push(LevelState {
                 model,
                 calib,
@@ -1093,7 +1139,7 @@ impl Server {
             });
         }
         let (rng_s, rng_cached) = self.rng.state();
-        Ok(ShardState {
+        Ok(Some(ShardState {
             shard: self.shard_idx,
             cursor: st.cursor,
             rng_s,
@@ -1108,7 +1154,7 @@ impl Server {
             llm_calls: st.llm_calls,
             handled: st.handled.clone(),
             levels,
-        })
+        }))
     }
 
     /// Drain annotations replicated from peer shards and absorb them

@@ -1,0 +1,1216 @@
+//! A real wire front for the serving stack: a zero-dependency,
+//! length-prefixed binary protocol over `std::net` TCP.
+//!
+//! **Why sockets.** Every serve-layer guarantee this crate makes —
+//! SLOs under open-loop load, exactly-once response accounting,
+//! admission-control shedding, crash/resume bit-identity — was proven
+//! over in-process `mpsc` channels, which silently exempt the system
+//! from framing, partial reads, connection lifecycle, and process
+//! death. This module is the same [`Request`]/[`Response`] contract
+//! over an actual [`TcpListener`], so those guarantees are asserted
+//! against a deployable surface (`tests/test_net.rs`, CI `net-smoke`
+//! and `ckpt-smoke`).
+//!
+//! **Frame layout.** Every frame is a 6-byte header followed by a
+//! compact-JSON payload:
+//!
+//! ```text
+//! [version: u8][tag: u8][len: u32 BE][payload: `len` bytes of JSON]
+//! ```
+//!
+//! The version byte is checked before anything else ([`WIRE_VERSION`];
+//! a mismatch is a clean [`Error::Wire`], never a reinterpret), the
+//! tag must name a known frame, and `len` is capped at [`MAX_FRAME`]
+//! *from the header alone* — an attacker (or corrupt peer) cannot make
+//! the receiver buffer an unbounded frame. Payloads reuse the crate's
+//! `codec::json` substrate, whose shortest-round-trip f64 printing is
+//! what makes `final_betas` comparisons across the wire bit-exact.
+//!
+//! **Topologies.** Three ways to stand the stack behind a socket:
+//!
+//! - [`serve`] — one process: a [`ShardFront`] (1..N in-process shards
+//!   sharing one global [`super::AdmissionGate`]) behind an accept
+//!   loop. `ocl serve --listen <addr>`.
+//! - [`serve_shard`] — one process per shard: a single [`Server`]
+//!   serving exactly one upstream (the front), with cross-shard
+//!   annotation sync carried as [`Frame::Sync`] frames. `ocl serve
+//!   --listen <addr> --shard-id <k>`.
+//! - [`run_front`] — the thin front process: hash-dispatches client
+//!   requests to shard processes ([`shard_of`]), relays responses
+//!   back, and rebroadcasts each shard's sync frames to its peers.
+//!   `ocl serve --front <addr>,<addr>,...`.
+//!
+//! In the multi-process topology the PR 4 checkpoint manifest is the
+//! shared durable state: every shard process deposits into the same
+//! directory ([`CkptSink`] refreshes peer deposits from disk before
+//! committing a manifest), and [`build_shard_server`] restores from
+//! the newest manifest exactly as the in-process front does. One
+//! honest limitation: admission budgets are per-process there — a
+//! single CAS gate cannot span processes without a coordination
+//! service, so `max_pending` bounds each shard process, not the
+//! deployment (the in-process [`serve`] path keeps the global bound).
+//!
+//! **Delivery semantics.** Within one connection, TCP gives the same
+//! FIFO the in-process channels did, so per-shard sync ordering and
+//! the responses-before-report ordering hold unchanged. Across a
+//! crash, the contract is the checkpoint layer's: at-least-once — a
+//! SIGKILLed server loses answers after its last manifest, the client
+//! reconnects, reads the new [`Frame::Hello`] cursor, and resubmits
+//! from there (`tests/test_net.rs` pins that the resumed trajectory is
+//! bit-identical to an uninterrupted run).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::codec::{self, Json};
+use crate::config::CascadeConfig;
+use crate::data::Sample;
+use crate::error::{Error, Result};
+use crate::models::Featurized;
+use crate::sim::Expert;
+
+use super::ckpt::{self, CkptOptions, CkptSink, ShardState};
+use super::shard::{shard_of, ShardFront, ShardReport};
+use super::{Request, Response, Server, ServeConfig, ServeReport, SyncBatch};
+
+/// Wire-protocol version byte (first byte of every frame).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Maximum payload length a receiver will buffer, enforced from the
+/// frame header before any payload byte is read.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// One protocol frame. The numeric tags in the header are fixed by
+/// [`Frame::tag`]; adding a frame kind means a new tag, changing a
+/// payload means bumping [`WIRE_VERSION`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Server → client greeting: the stream position to (re)submit
+    /// from. 0 for fresh servers; after a resume, the restored cursor.
+    Hello {
+        /// Resume cursor: every request id below it is already
+        /// absorbed in durable state.
+        cursor: u64,
+    },
+    /// Client → server: one document to classify.
+    Request(Request),
+    /// Server → client: the served answer (never a shed — sheds have
+    /// their own tag so a client can count them without inspecting
+    /// flags).
+    Response(Response),
+    /// Server → client: refused by admission control. Carries no
+    /// latency (the refusal is immediate by construction).
+    Shed {
+        /// The refused request's id.
+        id: u64,
+        /// Echoed ground truth (client-side accounting parity with
+        /// [`Response`]).
+        truth: usize,
+        /// `levels + 1`, the shed attribution slot.
+        handled_by: usize,
+    },
+    /// Shard ↔ front: a batch of expert annotations to replicate to
+    /// peer shards (the cross-process twin of [`SyncBatch`]).
+    Sync {
+        /// Originating shard (the front rebroadcasts to everyone else).
+        shard: usize,
+        /// `(featurized query, expert label)` pairs.
+        items: Vec<(Featurized, usize)>,
+    },
+    /// Client → server: no more requests on this connection.
+    Eos,
+    /// Shard ↔ front: the sender's outgoing annotation stream is
+    /// complete (the wire twin of dropping a `SyncBatch` sender).
+    SyncEnd {
+        /// Whose stream ended (informational on the return path).
+        shard: usize,
+    },
+    /// Server → client: the final run report as JSON, sent after the
+    /// last response so a client can assert on `final_betas`,
+    /// `served`, `resumed`, ... without scraping stdout.
+    Report(Json),
+}
+
+impl Frame {
+    /// Header tag byte for this frame kind.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::Request(_) => 2,
+            Frame::Response(_) => 3,
+            Frame::Shed { .. } => 4,
+            Frame::Sync { .. } => 5,
+            Frame::Eos => 6,
+            Frame::SyncEnd { .. } => 7,
+            Frame::Report(_) => 8,
+        }
+    }
+
+    /// JSON payload for this frame. Request/response ids and latency
+    /// nanos ride as `u64_hex` — f64 `Num` would corrupt ids above
+    /// 2^53, and client-assigned ids are arbitrary u64s.
+    fn payload(&self) -> Json {
+        match self {
+            Frame::Hello { cursor } => {
+                Json::obj(vec![("cursor", Json::u64_hex(*cursor))])
+            }
+            Frame::Request(r) => Json::obj(vec![
+                ("id", Json::u64_hex(r.id)),
+                ("text", Json::Str(r.text.clone())),
+                ("truth", Json::Num(r.truth as f64)),
+                ("sample", r.sample.to_json()),
+            ]),
+            Frame::Response(r) => Json::obj(vec![
+                ("id", Json::u64_hex(r.id)),
+                ("pred", Json::Num(r.pred as f64)),
+                ("handled_by", Json::Num(r.handled_by as f64)),
+                ("latency_ns", Json::u64_hex(r.latency.as_nanos() as u64)),
+                ("truth", Json::Num(r.truth as f64)),
+            ]),
+            Frame::Shed { id, truth, handled_by } => Json::obj(vec![
+                ("id", Json::u64_hex(*id)),
+                ("truth", Json::Num(*truth as f64)),
+                ("handled_by", Json::Num(*handled_by as f64)),
+            ]),
+            Frame::Sync { shard, items } => Json::obj(vec![
+                ("shard", Json::Num(*shard as f64)),
+                (
+                    "items",
+                    Json::Arr(
+                        items
+                            .iter()
+                            .map(|(f, y)| {
+                                Json::obj(vec![
+                                    ("f", f.to_json()),
+                                    ("y", Json::Num(*y as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Frame::Eos => Json::obj(vec![]),
+            Frame::SyncEnd { shard } => {
+                Json::obj(vec![("shard", Json::Num(*shard as f64))])
+            }
+            Frame::Report(v) => v.clone(),
+        }
+    }
+
+    /// Decode a frame from its header tag + parsed payload.
+    fn decode(tag: u8, v: &Json) -> Result<Frame> {
+        let wire = |what: &str| Error::Wire(format!("frame tag {tag}: bad '{what}'"));
+        let hex = |k: &str| {
+            v.get(k).and_then(Json::as_u64_hex).ok_or_else(|| wire(k))
+        };
+        let num = |k: &str| v.get(k).and_then(Json::as_usize).ok_or_else(|| wire(k));
+        match tag {
+            1 => Ok(Frame::Hello { cursor: hex("cursor")? }),
+            2 => Ok(Frame::Request(Request {
+                id: hex("id")?,
+                text: v
+                    .get("text")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| wire("text"))?
+                    .to_string(),
+                truth: num("truth")?,
+                sample: Sample::from_json(
+                    v.get("sample").ok_or_else(|| wire("sample"))?,
+                )?,
+            })),
+            3 => Ok(Frame::Response(Response {
+                id: hex("id")?,
+                pred: num("pred")?,
+                handled_by: num("handled_by")?,
+                latency: Duration::from_nanos(hex("latency_ns")?),
+                truth: num("truth")?,
+                shed: false,
+            })),
+            4 => Ok(Frame::Shed {
+                id: hex("id")?,
+                truth: num("truth")?,
+                handled_by: num("handled_by")?,
+            }),
+            5 => Ok(Frame::Sync {
+                shard: num("shard")?,
+                items: v
+                    .get("items")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| wire("items"))?
+                    .iter()
+                    .map(|it| {
+                        let f = Featurized::from_json(
+                            it.get("f").ok_or_else(|| wire("items.f"))?,
+                        )
+                        .map_err(|e| Error::Wire(format!("sync item: {e}")))?;
+                        let y = it
+                            .get("y")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| wire("items.y"))?;
+                        Ok((f, y))
+                    })
+                    .collect::<Result<_>>()?,
+            }),
+            6 => Ok(Frame::Eos),
+            7 => Ok(Frame::SyncEnd { shard: num("shard")? }),
+            8 => Ok(Frame::Report(v.clone())),
+            _ => Err(Error::Wire(format!("unknown frame tag {tag}"))),
+        }
+    }
+}
+
+/// Encode one frame: 6-byte header + compact-JSON payload.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let body = frame.payload().to_string_compact();
+    debug_assert!(body.len() <= MAX_FRAME, "oversized frame produced locally");
+    let mut out = Vec::with_capacity(6 + body.len());
+    out.push(WIRE_VERSION);
+    out.push(frame.tag());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// Incremental frame reassembly over arbitrary read boundaries: push
+/// raw bytes in whatever chunks the socket yields (down to one byte at
+/// a time), pull complete frames out. Malformed input — bad version,
+/// unknown tag, a header length past [`MAX_FRAME`], non-UTF-8 or
+/// non-JSON payload — is an [`Error::Wire`]; the connection is the
+/// unit of failure, so callers drop the peer rather than resync.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// Empty reassembly buffer.
+    pub fn new() -> Self {
+        FrameBuf { buf: Vec::new() }
+    }
+
+    /// Append raw bytes from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Clone the buffered-but-unconsumed bytes (handshake leftovers
+    /// handed from the connect phase to a reader thread).
+    fn clone_buf(&self) -> Vec<u8> {
+        self.buf.clone()
+    }
+
+    /// Next complete frame, `Ok(None)` when more bytes are needed.
+    pub fn next(&mut self) -> Result<Option<Frame>> {
+        if self.buf.len() < 6 {
+            return Ok(None);
+        }
+        let version = self.buf[0];
+        if version != WIRE_VERSION {
+            return Err(Error::Wire(format!(
+                "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+            )));
+        }
+        let tag = self.buf[1];
+        if !(1..=8).contains(&tag) {
+            return Err(Error::Wire(format!("unknown frame tag {tag}")));
+        }
+        let len =
+            u32::from_be_bytes([self.buf[2], self.buf[3], self.buf[4], self.buf[5]])
+                as usize;
+        if len > MAX_FRAME {
+            return Err(Error::Wire(format!(
+                "frame length {len} exceeds the {MAX_FRAME}-byte cap"
+            )));
+        }
+        if self.buf.len() < 6 + len {
+            return Ok(None);
+        }
+        let body = std::str::from_utf8(&self.buf[6..6 + len])
+            .map_err(|_| Error::Wire("frame payload is not UTF-8".into()))?;
+        let payload = codec::parse(body)
+            .map_err(|e| Error::Wire(format!("frame payload: {e}")))?;
+        let frame = Frame::decode(tag, &payload)?;
+        self.buf.drain(..6 + len);
+        Ok(Some(frame))
+    }
+}
+
+// --- socket plumbing -------------------------------------------------------
+
+/// Queue of encoded frames bound for one socket (drained by that
+/// socket's writer thread, in order).
+type WireTx = Sender<Vec<u8>>;
+
+/// Per-connection write half: a thread that drains encoded frames to
+/// the socket in FIFO order. Serializing all writes through one thread
+/// is what preserves the in-process channels' ordering guarantees
+/// (responses before the report, syncs before the sync-end) with
+/// multiple producer threads.
+fn spawn_writer(mut stream: TcpStream) -> (WireTx, JoinHandle<()>) {
+    let (tx, rx) = channel::<Vec<u8>>();
+    let handle = thread::spawn(move || {
+        for bytes in rx.iter() {
+            if stream.write_all(&bytes).is_err() {
+                break; // peer gone; senders' failures are ignored
+            }
+        }
+        let _ = stream.flush();
+    });
+    (tx, handle)
+}
+
+/// Read exactly one frame, blocking. Used for the [`Frame::Hello`]
+/// handshake; the buffer carries over into the connection's read loop
+/// so bytes after the handshake frame are not lost.
+fn read_one(stream: &TcpStream, fb: &mut FrameBuf) -> Result<Frame> {
+    let mut buf = [0u8; 4096];
+    let mut rs = stream;
+    loop {
+        if let Some(f) = fb.next()? {
+            return Ok(f);
+        }
+        match rs.read(&mut buf) {
+            Ok(0) => {
+                return Err(Error::Wire(
+                    "connection closed before a complete frame".into(),
+                ))
+            }
+            Ok(n) => fb.push(&buf[..n]),
+            Err(e) => return Err(Error::Wire(format!("read: {e}"))),
+        }
+    }
+}
+
+/// Connect with retry until `timeout` — the two-terminal quickstart
+/// and multi-process tests start client and server racily.
+pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if t0.elapsed() >= timeout {
+                    return Err(Error::Wire(format!("connect to {addr}: {e}")));
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+// --- client ----------------------------------------------------------------
+
+/// A loopback client: speaks the wire protocol to a [`serve`] /
+/// [`run_front`] process and exposes a `Sender<Request>` so the
+/// open-loop harness ([`super::load::drive_from`]) drives real sockets
+/// unchanged.
+pub struct Client {
+    cursor: u64,
+    req_tx: Sender<Request>,
+    writer: JoinHandle<()>,
+    reader: JoinHandle<(Vec<Response>, Option<Json>)>,
+}
+
+impl Client {
+    /// Connect and perform the [`Frame::Hello`] handshake.
+    pub fn connect(addr: &str) -> Result<Self> {
+        Self::from_stream(TcpStream::connect(addr).map_err(|e| {
+            Error::Wire(format!("connect to {addr}: {e}"))
+        })?)
+    }
+
+    /// [`Client::connect`] with retry until `timeout` (server may
+    /// still be binding).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Self> {
+        Self::from_stream(connect_retry(addr, timeout)?)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Self> {
+        let _ = stream.set_nodelay(true);
+        let mut fb = FrameBuf::new();
+        let cursor = match read_one(&stream, &mut fb)? {
+            Frame::Hello { cursor } => cursor,
+            other => {
+                return Err(Error::Wire(format!(
+                    "expected hello, got tag {}",
+                    other.tag()
+                )))
+            }
+        };
+        let wstream = stream
+            .try_clone()
+            .map_err(|e| Error::Wire(format!("clone stream: {e}")))?;
+        let (req_tx, req_rx) = channel::<Request>();
+        let writer = thread::spawn(move || {
+            let mut ws = wstream;
+            for req in req_rx.iter() {
+                if ws.write_all(&encode(&Frame::Request(req))).is_err() {
+                    return; // server gone mid-stream (crash tests)
+                }
+            }
+            let _ = ws.write_all(&encode(&Frame::Eos));
+            let _ = ws.flush();
+        });
+        let reader = thread::spawn(move || {
+            let mut responses = Vec::new();
+            let mut report = None;
+            let mut buf = [0u8; 16 * 1024];
+            let mut rs = &stream;
+            'conn: loop {
+                loop {
+                    match fb.next() {
+                        Ok(Some(Frame::Response(r))) => responses.push(r),
+                        Ok(Some(Frame::Shed { id, truth, handled_by })) => {
+                            responses.push(Response {
+                                id,
+                                pred: 0,
+                                handled_by,
+                                latency: Duration::ZERO,
+                                truth,
+                                shed: true,
+                            })
+                        }
+                        Ok(Some(Frame::Report(v))) => report = Some(v),
+                        Ok(Some(_)) => {}
+                        Ok(None) => break,
+                        Err(_) => break 'conn,
+                    }
+                }
+                match rs.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => fb.push(&buf[..n]),
+                }
+            }
+            (responses, report)
+        });
+        Ok(Client { cursor, req_tx, writer, reader })
+    }
+
+    /// The server's resume cursor from the handshake: submit request
+    /// ids at or above this.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// A request sender wired to the socket — hand it to
+    /// [`super::load::drive_from`] to run the open-loop harness over
+    /// TCP. The connection sends [`Frame::Eos`] when every clone (and
+    /// the client itself via [`Client::finish`]) has dropped.
+    pub fn request_sender(&self) -> Sender<Request> {
+        self.req_tx.clone()
+    }
+
+    /// Close the request stream, wait for the server to hang up, and
+    /// return everything received: responses (shed ones flagged) and
+    /// the final report, if the server lived to send one (a SIGKILLed
+    /// server never does — the crash tests rely on that distinction).
+    pub fn finish(self) -> Result<(Vec<Response>, Option<Json>)> {
+        drop(self.req_tx);
+        self.writer
+            .join()
+            .map_err(|_| Error::Worker("client writer panicked".into()))?;
+        self.reader
+            .join()
+            .map_err(|_| Error::Worker("client reader panicked".into()))
+    }
+}
+
+// --- server accept loop ----------------------------------------------------
+
+/// One accepted client connection's handles.
+struct Conn {
+    wtx: WireTx,
+    writer: JoinHandle<()>,
+    reader: JoinHandle<()>,
+    stream: TcpStream,
+}
+
+/// Serve a [`ShardFront`] over TCP: accept clients, forward their
+/// requests into the front, route responses back by request id, and
+/// broadcast the final [`Frame::Report`] to every client before
+/// closing. Returns when every connected client has sent
+/// [`Frame::Eos`] (or hung up) and the front has drained.
+///
+/// Request ids must be unique across concurrently connected clients —
+/// they are the response-routing key.
+pub fn serve(front: ShardFront, listener: TcpListener) -> Result<ShardReport> {
+    let cursor = front.resume_cursor();
+    let (req_tx, req_rx) = channel::<Request>();
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let front_handle = thread::spawn(move || front.serve(req_rx, resp_tx));
+
+    // id → the owning connection's write queue, filled at request
+    // forwarding time (before the front can possibly answer), drained
+    // by the dispatcher.
+    let registry: Arc<Mutex<HashMap<u64, WireTx>>> = Arc::new(Mutex::new(HashMap::new()));
+    let reg = registry.clone();
+    let dispatcher = thread::spawn(move || {
+        for resp in resp_rx.iter() {
+            let target = reg.lock().expect("registry").remove(&resp.id);
+            if let Some(w) = target {
+                let frame = if resp.shed {
+                    Frame::Shed {
+                        id: resp.id,
+                        truth: resp.truth,
+                        handled_by: resp.handled_by,
+                    }
+                } else {
+                    Frame::Response(resp)
+                };
+                let _ = w.send(encode(&frame));
+            }
+        }
+    });
+
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::io("tcp listener", e))?;
+    let finished = Arc::new(AtomicUsize::new(0));
+    let mut conns: Vec<Conn> = Vec::new();
+    let accept_err = loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                let Ok(wstream) = stream.try_clone() else { continue };
+                let Ok(rstream) = stream.try_clone() else { continue };
+                let (wtx, writer) = spawn_writer(wstream);
+                let _ = wtx.send(encode(&Frame::Hello { cursor }));
+                let reader = spawn_conn_reader(
+                    rstream,
+                    wtx.clone(),
+                    req_tx.clone(),
+                    registry.clone(),
+                    finished.clone(),
+                );
+                conns.push(Conn { wtx, writer, reader, stream });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if !conns.is_empty() && finished.load(Ordering::SeqCst) >= conns.len()
+                {
+                    break None; // every client is done submitting
+                }
+                if front_handle.is_finished() {
+                    break None; // front error: surface it at the join
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => break Some(Error::io("tcp accept", e)),
+        }
+    };
+
+    // Close the request stream; the front drains, writes its shutdown
+    // checkpoint, and reports. The dispatcher ends when the front's
+    // response senders drop.
+    drop(req_tx);
+    let result = front_handle
+        .join()
+        .map_err(|_| Error::Worker("front thread panicked".into()))?;
+    dispatcher
+        .join()
+        .map_err(|_| Error::Worker("response dispatcher panicked".into()))?;
+    registry.lock().expect("registry").clear();
+    match (accept_err, result) {
+        (None, Ok(report)) => {
+            let bytes = encode(&Frame::Report(report.to_json()));
+            for Conn { wtx, writer, reader, stream } in conns {
+                let _ = wtx.send(bytes.clone());
+                drop(wtx);
+                let _ = writer.join(); // all frames flushed to the socket
+                let _ = stream.shutdown(Shutdown::Both);
+                let _ = reader.join();
+            }
+            Ok(report)
+        }
+        (accept_err, result) => {
+            for Conn { wtx, writer, reader, stream } in conns {
+                drop(wtx);
+                let _ = stream.shutdown(Shutdown::Both);
+                let _ = writer.join();
+                let _ = reader.join();
+            }
+            Err(accept_err
+                .or(result.err())
+                .unwrap_or_else(|| Error::Worker("serve loop state".into())))
+        }
+    }
+}
+
+/// Read half of one accepted client: forwards requests into the front
+/// (registering the response route first), counts the connection
+/// finished at [`Frame::Eos`] or disconnect, and hangs up on protocol
+/// violations.
+fn spawn_conn_reader(
+    stream: TcpStream,
+    wtx: WireTx,
+    req_tx: Sender<Request>,
+    registry: Arc<Mutex<HashMap<u64, WireTx>>>,
+    finished: Arc<AtomicUsize>,
+) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let mut fb = FrameBuf::new();
+        let mut buf = [0u8; 16 * 1024];
+        // Dropped at Eos: the write queue then holds only registered
+        // response routes, so the writer can exit once those drain.
+        let mut live = Some((req_tx, wtx));
+        loop {
+            loop {
+                match fb.next() {
+                    Ok(Some(Frame::Request(req))) => {
+                        if let Some((tx, w)) = &live {
+                            registry
+                                .lock()
+                                .expect("registry")
+                                .insert(req.id, w.clone());
+                            let _ = tx.send(req);
+                        }
+                    }
+                    Ok(Some(Frame::Eos)) => {
+                        if live.take().is_some() {
+                            finished.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    Ok(Some(_)) => {} // ignore unexpected-but-valid frames
+                    Ok(None) => break,
+                    Err(_) => {
+                        // Protocol violation: the connection is the
+                        // failure unit — drop this peer, keep serving.
+                        let _ = stream.shutdown(Shutdown::Both);
+                        if live.take().is_some() {
+                            finished.fetch_add(1, Ordering::SeqCst);
+                        }
+                        return;
+                    }
+                }
+            }
+            let mut rs = &stream;
+            match rs.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => fb.push(&buf[..n]),
+            }
+        }
+        if live.take().is_some() {
+            // Disconnect without Eos (client died): stop waiting on it.
+            finished.fetch_add(1, Ordering::SeqCst);
+        }
+    })
+}
+
+// --- multi-process shards --------------------------------------------------
+
+/// One shard process's position in an `of`-shard deployment
+/// (`ocl serve --shard-id <id>` with `of` taken from the config).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSlot {
+    /// This process's shard index (`0..of`).
+    pub id: usize,
+    /// Total shard processes in the deployment.
+    pub of: usize,
+}
+
+/// Build the [`Server`] for one shard *process*: the per-process half
+/// of what [`ShardFront::with_ckpt`] does in-process — fold the shard
+/// index into the seed (bit-identical to the in-process shard), restore
+/// from the shared checkpoint directory when asked, and attach the
+/// shared [`CkptSink`]. Returns the server and the deployment-wide
+/// resume cursor (minimum over all shards' checkpointed cursors — the
+/// front must resubmit from the most conservative position).
+pub fn build_shard_server(
+    cfg: CascadeConfig,
+    classes: usize,
+    expert: Expert,
+    serve_cfg: ServeConfig,
+    artifacts_dir: &str,
+    slot: ShardSlot,
+    ckpt: Option<CkptOptions>,
+) -> Result<(Server, u64)> {
+    if slot.of == 0 || slot.id >= slot.of {
+        return Err(Error::Config(format!(
+            "shard slot {} out of range for {} shards",
+            slot.id, slot.of
+        )));
+    }
+    let mut shard_cfg = cfg.clone();
+    shard_cfg.seed = cfg.seed ^ ((slot.id as u64) * 0x51A2_D007);
+    let mut cursor = 0u64;
+    let mut my_state: Option<ShardState> = None;
+    let sink = match &ckpt {
+        Some(opts) => {
+            if let Some(mode) = opts.resume {
+                if let Some(loaded) = ckpt::load_latest(&opts.dir, mode, slot.of)? {
+                    // Same shape-drift policy as the in-process front:
+                    // strict errors, best-effort falls back to fresh.
+                    let shape =
+                        loaded.iter().try_for_each(|s| s.check_config(&cfg, classes));
+                    match (shape, mode) {
+                        (Err(e), ckpt::ResumeMode::Strict) => return Err(e),
+                        (Err(_), ckpt::ResumeMode::BestEffort) => {}
+                        (Ok(()), _) => {
+                            cursor = loaded.iter().map(|s| s.cursor).min().unwrap_or(0);
+                            my_state = loaded.into_iter().find(|s| s.shard == slot.id);
+                        }
+                    }
+                }
+            }
+            Some(CkptSink::create(&opts.dir, slot.of)?)
+        }
+        None => None,
+    };
+    let mut srv = match my_state {
+        Some(s) => Server::resume(shard_cfg, classes, expert, serve_cfg, artifacts_dir, s)?,
+        None => Server::new(shard_cfg, classes, expert, serve_cfg, artifacts_dir)?,
+    };
+    if let Some(sink) = sink {
+        srv.attach_ckpt(sink, slot.id);
+    }
+    Ok((srv, cursor))
+}
+
+/// Run one shard process: accept exactly one connection (the front),
+/// answer its requests, forward locally-staged annotation syncs up as
+/// [`Frame::Sync`] frames, absorb peer syncs the front relays down,
+/// and finish with a [`Frame::Report`]. `cursor` is the resume cursor
+/// from [`build_shard_server`], announced in the [`Frame::Hello`].
+pub fn serve_shard(
+    server: Server,
+    cursor: u64,
+    shard_id: usize,
+    listener: TcpListener,
+) -> Result<ServeReport> {
+    let mut server = server;
+    let (stream, _) = listener.accept().map_err(|e| Error::io("tcp accept", e))?;
+    let _ = stream.set_nodelay(true);
+    let wstream = stream
+        .try_clone()
+        .map_err(|e| Error::Wire(format!("clone stream: {e}")))?;
+    let (wtx, writer) = spawn_writer(wstream);
+    let _ = wtx.send(encode(&Frame::Hello { cursor }));
+
+    let (req_tx, req_rx) = channel::<Request>();
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let (sync_out_tx, sync_out_rx) = channel::<SyncBatch>();
+    let (sync_in_tx, sync_in_rx) = channel::<SyncBatch>();
+    // Always wired, even for a 1-shard deployment: the server then
+    // waits for the front's SyncEnd before exiting, which keeps the
+    // shutdown sequence uniform across topologies.
+    server.wire_sync(vec![sync_out_tx], sync_in_rx);
+    let server_handle = thread::spawn(move || server.serve(req_rx, resp_tx));
+
+    let resp_wtx = wtx.clone();
+    let resp_fwd = thread::spawn(move || {
+        for resp in resp_rx.iter() {
+            let frame = if resp.shed {
+                Frame::Shed { id: resp.id, truth: resp.truth, handled_by: resp.handled_by }
+            } else {
+                Frame::Response(resp)
+            };
+            let _ = resp_wtx.send(encode(&frame));
+        }
+    });
+    let sync_wtx = wtx.clone();
+    let sync_fwd = thread::spawn(move || {
+        for SyncBatch(items) in sync_out_rx.iter() {
+            let owned: Vec<(Featurized, usize)> =
+                items.iter().map(|(f, y)| ((**f).clone(), *y)).collect();
+            let _ = sync_wtx
+                .send(encode(&Frame::Sync { shard: shard_id, items: owned }));
+        }
+        // The server flushed its sync stage and dropped the sender:
+        // our outgoing annotation stream is complete.
+        let _ = sync_wtx.send(encode(&Frame::SyncEnd { shard: shard_id }));
+    });
+
+    let rstream = stream
+        .try_clone()
+        .map_err(|e| Error::Wire(format!("clone stream: {e}")))?;
+    let reader = thread::spawn(move || {
+        let mut fb = FrameBuf::new();
+        let mut buf = [0u8; 16 * 1024];
+        let mut req_tx = Some(req_tx);
+        let mut sync_in_tx = Some(sync_in_tx);
+        loop {
+            loop {
+                match fb.next() {
+                    Ok(Some(Frame::Request(req))) => {
+                        if let Some(tx) = &req_tx {
+                            let _ = tx.send(req);
+                        }
+                    }
+                    Ok(Some(Frame::Eos)) => {
+                        req_tx = None;
+                    }
+                    Ok(Some(Frame::Sync { items, .. })) => {
+                        if let Some(tx) = &sync_in_tx {
+                            let _ = tx.send(SyncBatch(
+                                items.into_iter().map(|(f, y)| (Arc::new(f), y)).collect(),
+                            ));
+                        }
+                    }
+                    Ok(Some(Frame::SyncEnd { .. })) => {
+                        // Peers all flushed: the server's inbox
+                        // disconnects and its serve loop can exit.
+                        sync_in_tx = None;
+                    }
+                    Ok(Some(_)) => {}
+                    Ok(None) => break,
+                    Err(_) => return, // protocol violation: hang up
+                }
+            }
+            let mut rs = &rstream;
+            match rs.read(&mut buf) {
+                Ok(0) | Err(_) => return,
+                Ok(n) => fb.push(&buf[..n]),
+            }
+        }
+    });
+
+    let result = server_handle
+        .join()
+        .map_err(|_| Error::Worker("shard server thread panicked".into()))?;
+    let _ = sync_fwd.join();
+    let _ = resp_fwd.join();
+    match result {
+        Ok(report) => {
+            let _ = wtx.send(encode(&Frame::Report(report.to_json())));
+            drop(wtx);
+            let _ = writer.join();
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = reader.join();
+            Ok(report)
+        }
+        Err(e) => {
+            drop(wtx);
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = writer.join();
+            let _ = reader.join();
+            Err(e)
+        }
+    }
+}
+
+/// Run the thin front process over already-running shard processes:
+/// hash-dispatch client requests ([`shard_of`]), relay responses back
+/// to the owning client, rebroadcast each shard's [`Frame::Sync`] to
+/// its peers, and merge the shards' final reports into one JSON
+/// report, broadcast to every client and returned.
+///
+/// Admission is honest here: each shard process bounds its own
+/// population (`max_pending` per process), because a cross-process
+/// global gate would need shared state this zero-dependency build
+/// doesn't have. The in-process [`serve`] keeps the global bound.
+pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> {
+    let n = shard_addrs.len();
+    if n == 0 {
+        return Err(Error::Config("front needs at least one shard address".into()));
+    }
+    // Handshake every shard first: the deployment cursor is the
+    // minimum over shard cursors.
+    let mut shard_streams = Vec::with_capacity(n);
+    let mut cursor = u64::MAX;
+    for addr in shard_addrs {
+        let stream = connect_retry(addr, Duration::from_secs(30))?;
+        let _ = stream.set_nodelay(true);
+        let mut fb = FrameBuf::new();
+        match read_one(&stream, &mut fb)? {
+            Frame::Hello { cursor: c } => cursor = cursor.min(c),
+            other => {
+                return Err(Error::Wire(format!(
+                    "shard {addr}: expected hello, got tag {}",
+                    other.tag()
+                )))
+            }
+        }
+        shard_streams.push((stream, fb));
+    }
+    let cursor = if cursor == u64::MAX { 0 } else { cursor };
+
+    // Write halves up to the shards, shared by client readers (request
+    // dispatch) and shard readers (sync rebroadcast).
+    let mut shard_links = Vec::with_capacity(n);
+    let mut shard_wtxs = Vec::with_capacity(n);
+    for (stream, _) in &shard_streams {
+        let ws = stream
+            .try_clone()
+            .map_err(|e| Error::Wire(format!("clone shard stream: {e}")))?;
+        let (wtx, writer) = spawn_writer(ws);
+        shard_wtxs.push(wtx);
+        shard_links.push(writer);
+    }
+    let shard_wtxs = Arc::new(shard_wtxs);
+
+    let registry: Arc<Mutex<HashMap<u64, WireTx>>> = Arc::new(Mutex::new(HashMap::new()));
+    let sync_ends = Arc::new(AtomicUsize::new(0));
+    let reports: Arc<Mutex<Vec<Option<Json>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+    // Shard readers: responses route to clients, syncs rebroadcast to
+    // peers, sync-ends count toward the all-flushed broadcast, reports
+    // land in the merge slots.
+    let mut shard_readers = Vec::with_capacity(n);
+    for (i, (stream, fb)) in shard_streams.iter().enumerate() {
+        let rstream = stream
+            .try_clone()
+            .map_err(|e| Error::Wire(format!("clone shard stream: {e}")))?;
+        let mut fb = FrameBuf { buf: fb.clone_buf() };
+        let registry = registry.clone();
+        let wtxs = shard_wtxs.clone();
+        let sync_ends = sync_ends.clone();
+        let reports = reports.clone();
+        shard_readers.push(thread::spawn(move || {
+            let mut buf = [0u8; 16 * 1024];
+            loop {
+                loop {
+                    match fb.next() {
+                        Ok(Some(frame @ Frame::Response(_)))
+                        | Ok(Some(frame @ Frame::Shed { .. })) => {
+                            let id = match &frame {
+                                Frame::Response(r) => r.id,
+                                Frame::Shed { id, .. } => *id,
+                                _ => unreachable!(),
+                            };
+                            let target = registry.lock().expect("registry").remove(&id);
+                            if let Some(w) = target {
+                                let _ = w.send(encode(&frame));
+                            }
+                        }
+                        Ok(Some(Frame::Sync { shard, items })) => {
+                            let bytes = encode(&Frame::Sync { shard, items });
+                            for (j, w) in wtxs.iter().enumerate() {
+                                if j != shard {
+                                    let _ = w.send(bytes.clone());
+                                }
+                            }
+                        }
+                        Ok(Some(Frame::SyncEnd { .. })) => {
+                            // Once every shard flushed, tell them all:
+                            // no more incoming syncs, wind down. The
+                            // per-shard socket FIFO plus this SeqCst
+                            // counter guarantees no shard sees its
+                            // SyncEnd before every rebroadcast sync.
+                            if sync_ends.fetch_add(1, Ordering::SeqCst) + 1 == wtxs.len()
+                            {
+                                for (j, w) in wtxs.iter().enumerate() {
+                                    let _ = w.send(encode(&Frame::SyncEnd { shard: j }));
+                                }
+                            }
+                        }
+                        Ok(Some(Frame::Report(v))) => {
+                            reports.lock().expect("reports")[i] = Some(v);
+                        }
+                        Ok(Some(_)) => {}
+                        Ok(None) => break,
+                        Err(_) => return,
+                    }
+                }
+                let mut rs = &rstream;
+                match rs.read(&mut buf) {
+                    Ok(0) | Err(_) => return,
+                    Ok(n) => fb.push(&buf[..n]),
+                }
+            }
+        }));
+    }
+
+    // Client accept loop — same lifecycle as [`serve`]'s.
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::io("tcp listener", e))?;
+    let finished = Arc::new(AtomicUsize::new(0));
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                let Ok(ws) = stream.try_clone() else { continue };
+                let Ok(rstream) = stream.try_clone() else { continue };
+                let (wtx, writer) = spawn_writer(ws);
+                let _ = wtx.send(encode(&Frame::Hello { cursor }));
+                let reader = spawn_front_client_reader(
+                    rstream,
+                    wtx.clone(),
+                    shard_wtxs.clone(),
+                    registry.clone(),
+                    finished.clone(),
+                );
+                conns.push(Conn { wtx, writer, reader, stream });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if !conns.is_empty() && finished.load(Ordering::SeqCst) >= conns.len()
+                {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(Error::io("tcp accept", e)),
+        }
+    }
+
+    // Every client finished → close the shards' request streams; they
+    // drain, flush syncs, checkpoint, report, and hang up.
+    for w in shard_wtxs.iter() {
+        let _ = w.send(encode(&Frame::Eos));
+    }
+    for h in shard_readers {
+        let _ = h.join();
+    }
+    let collected: Vec<Option<Json>> =
+        std::mem::take(&mut *reports.lock().expect("reports"));
+    let mut per_shard = Vec::with_capacity(n);
+    for (i, r) in collected.into_iter().enumerate() {
+        per_shard.push(r.ok_or_else(|| {
+            Error::Worker(format!("shard {i} hung up without a final report"))
+        })?);
+    }
+    let sum = |key: &str| -> f64 {
+        per_shard
+            .iter()
+            .map(|r| r.get(key).and_then(Json::as_f64).unwrap_or(0.0))
+            .sum()
+    };
+    let merged = Json::obj(vec![
+        ("shards", Json::Num(n as f64)),
+        ("served", Json::Num(sum("served"))),
+        ("shed", Json::Num(sum("shed"))),
+        ("llm_calls", Json::Num(sum("llm_calls"))),
+        ("ckpts", Json::Num(sum("ckpts"))),
+        (
+            "resumed",
+            Json::Bool(per_shard.iter().any(|r| {
+                r.get("resumed").and_then(Json::as_bool).unwrap_or(false)
+            })),
+        ),
+        ("per_shard", Json::Arr(per_shard)),
+    ]);
+
+    registry.lock().expect("registry").clear();
+    let bytes = encode(&Frame::Report(merged.clone()));
+    for Conn { wtx, writer, reader, stream } in conns {
+        let _ = wtx.send(bytes.clone());
+        drop(wtx);
+        let _ = writer.join();
+        let _ = stream.shutdown(Shutdown::Both);
+        let _ = reader.join();
+    }
+    drop(shard_wtxs); // last senders: shard writer threads exit
+    for h in shard_links {
+        let _ = h.join();
+    }
+    Ok(merged)
+}
+
+/// Read half of one client connection at the front: requests are
+/// registered for response routing, then hash-dispatched to their
+/// shard process.
+fn spawn_front_client_reader(
+    stream: TcpStream,
+    wtx: WireTx,
+    shard_wtxs: Arc<Vec<WireTx>>,
+    registry: Arc<Mutex<HashMap<u64, WireTx>>>,
+    finished: Arc<AtomicUsize>,
+) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let n = shard_wtxs.len();
+        let mut fb = FrameBuf::new();
+        let mut buf = [0u8; 16 * 1024];
+        let mut live = Some(wtx);
+        loop {
+            loop {
+                match fb.next() {
+                    Ok(Some(Frame::Request(req))) => {
+                        if let Some(w) = &live {
+                            registry
+                                .lock()
+                                .expect("registry")
+                                .insert(req.id, w.clone());
+                            let s = shard_of(req.id, n);
+                            let _ = shard_wtxs[s].send(encode(&Frame::Request(req)));
+                        }
+                    }
+                    Ok(Some(Frame::Eos)) => {
+                        if live.take().is_some() {
+                            finished.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    Ok(Some(_)) => {}
+                    Ok(None) => break,
+                    Err(_) => {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        if live.take().is_some() {
+                            finished.fetch_add(1, Ordering::SeqCst);
+                        }
+                        return;
+                    }
+                }
+            }
+            let mut rs = &stream;
+            match rs.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => fb.push(&buf[..n]),
+            }
+        }
+        if live.take().is_some() {
+            finished.fetch_add(1, Ordering::SeqCst);
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_through_the_codec() {
+        let frames = vec![
+            Frame::Hello { cursor: u64::MAX - 7 },
+            Frame::Shed { id: 1 << 60, truth: 1, handled_by: 3 },
+            Frame::Eos,
+            Frame::SyncEnd { shard: 2 },
+            Frame::Report(Json::obj(vec![("served", Json::Num(12.0))])),
+        ];
+        let mut fb = FrameBuf::new();
+        for f in &frames {
+            fb.push(&encode(f));
+        }
+        for f in &frames {
+            assert_eq!(fb.next().unwrap().as_ref(), Some(f));
+        }
+        assert_eq!(fb.next().unwrap(), None);
+    }
+
+    #[test]
+    fn header_validation_rejects_before_buffering() {
+        // Bad version: rejected on the first 6 bytes.
+        let mut fb = FrameBuf::new();
+        fb.push(&[99, 1, 0, 0, 0, 0]);
+        assert!(matches!(fb.next(), Err(Error::Wire(_))));
+        // Unknown tag.
+        let mut fb = FrameBuf::new();
+        fb.push(&[WIRE_VERSION, 42, 0, 0, 0, 0]);
+        assert!(matches!(fb.next(), Err(Error::Wire(_))));
+        // Oversized length: rejected from the header alone — no
+        // payload bytes were ever supplied.
+        let mut fb = FrameBuf::new();
+        let mut hdr = vec![WIRE_VERSION, 6];
+        hdr.extend_from_slice(&((MAX_FRAME as u32) + 1).to_be_bytes());
+        fb.push(&hdr);
+        let err = fb.next().unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn incomplete_frames_wait_for_more_bytes() {
+        let bytes = encode(&Frame::Hello { cursor: 5 });
+        let mut fb = FrameBuf::new();
+        for &b in &bytes[..bytes.len() - 1] {
+            fb.push(&[b]);
+            assert!(fb.next().unwrap().is_none(), "partial frame must not decode");
+        }
+        fb.push(&bytes[bytes.len() - 1..]);
+        assert_eq!(fb.next().unwrap(), Some(Frame::Hello { cursor: 5 }));
+    }
+}

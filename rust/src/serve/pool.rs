@@ -19,7 +19,7 @@
 //! re-teach those on the next training trigger).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -315,10 +315,19 @@ impl LevelPool {
     }
 
     /// Synchronously export the authority's live (model, calibrator)
-    /// parameters for checkpointing. Blocks until the authority drains
-    /// everything queued ahead of the request, so the export reflects
-    /// every training trigger sent before this call.
-    pub fn export(&self) -> Result<(Snapshot, Snapshot)> {
+    /// parameters for checkpointing. Blocks (up to `timeout`) until the
+    /// authority drains everything queued ahead of the request, so the
+    /// export reflects every training trigger sent before this call.
+    ///
+    /// `Ok(None)` means the authority is *alive but slow* — it did not
+    /// answer within `timeout` but its thread is still running. The
+    /// caller must treat that as "abort this checkpoint attempt", not
+    /// as a death: conflating the two (the pre-fix behavior) let a
+    /// slow authority wedge the checkpoint barrier — the supervisor
+    /// saw `Error::Worker`, left the barrier armed, and admission
+    /// stayed paused forever while the never-respawned worker kept
+    /// running.
+    pub fn export(&self, timeout: Duration) -> Result<Option<(Snapshot, Snapshot)>> {
         let (tx, rx) = channel();
         self.workers[0]
             .tx
@@ -329,16 +338,26 @@ impl LevelPool {
                     self.spec.level
                 ))
             })?;
-        match rx.recv_timeout(Duration::from_secs(60)) {
-            Ok((Some(model), Some(calib))) => Ok((model, calib)),
+        match rx.recv_timeout(timeout) {
+            Ok((Some(model), Some(calib))) => Ok(Some((model, calib))),
             Ok(_) => Err(Error::Ckpt(format!(
                 "level {} backend cannot snapshot its state",
                 self.spec.level
             ))),
-            Err(_) => Err(Error::Worker(format!(
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Worker(format!(
                 "level {} authority died during checkpoint export",
                 self.spec.level
             ))),
+            Err(RecvTimeoutError::Timeout) => {
+                if self.workers[0].handle.is_finished() {
+                    Err(Error::Worker(format!(
+                        "level {} authority died during checkpoint export",
+                        self.spec.level
+                    )))
+                } else {
+                    Ok(None)
+                }
+            }
         }
     }
 
@@ -569,7 +588,10 @@ mod tests {
         let mut pool = LevelPool::new(spec(), 1, 0, reply_tx, None);
         let p = Pipeline::default();
         pool.send_train(train_batch(&p), 0.5);
-        let (model, calib) = pool.export().expect("export after train");
+        let (model, calib) = pool
+            .export(Duration::from_secs(60))
+            .expect("export after train")
+            .expect("authority answered within the bound");
         let chunks = pool.stats.train_chunks.load(Ordering::Relaxed);
         assert_eq!(chunks, 1, "one 8-sample chunk trained before export");
         pool.shutdown();
@@ -607,6 +629,28 @@ mod tests {
             "restored authority must serve the exported weights"
         );
         pool2.shutdown();
+    }
+
+    #[test]
+    fn export_timeout_on_a_live_authority_aborts_not_kills() {
+        // The liveness-bug regression at the pool layer: an export that
+        // times out while the authority thread is still running must
+        // come back `Ok(None)` (abort the attempt), not the
+        // authority-died `Error::Worker` that wedged the checkpoint
+        // barrier. Queued training makes the zero bound deterministic —
+        // the export cannot possibly be answered before it expires.
+        let (reply_tx, _reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 1, 0, reply_tx, None);
+        let p = Pipeline::default();
+        for _ in 0..3 {
+            pool.send_train(train_batch(&p), 0.5);
+        }
+        let got = pool.export(Duration::ZERO).expect("live authority must not error");
+        assert!(got.is_none(), "timeout on a live authority aborts the attempt");
+        // The pool is untouched by the abort: a patient export succeeds.
+        let got = pool.export(Duration::from_secs(60)).expect("patient export");
+        assert!(got.is_some(), "the same authority answers a patient export");
+        pool.shutdown();
     }
 
     #[test]

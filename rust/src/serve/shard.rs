@@ -392,6 +392,7 @@ mod tests {
                 peak_pending: 1,
                 resumed: false,
                 ckpts: 0,
+                ckpt_aborts: 0,
                 final_betas: vec![0.5],
                 train_batches: vec![1],
                 calib_batches: vec![1],

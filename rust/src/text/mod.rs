@@ -38,6 +38,27 @@ pub enum Stratum {
     Hard,
 }
 
+impl Stratum {
+    /// Stable wire/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stratum::Easy => "easy",
+            Stratum::Medium => "medium",
+            Stratum::Hard => "hard",
+        }
+    }
+
+    /// Inverse of [`Stratum::name`].
+    pub fn from_name(s: &str) -> Option<Stratum> {
+        match s {
+            "easy" => Some(Stratum::Easy),
+            "medium" => Some(Stratum::Medium),
+            "hard" => Some(Stratum::Hard),
+            _ => None,
+        }
+    }
+}
+
 /// One generated document with ground truth + generation metadata.
 #[derive(Clone, Debug)]
 pub struct Doc {

@@ -11,6 +11,7 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::channel;
+use std::time::Duration;
 
 use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
 use ocl::data::Benchmark;
@@ -264,6 +265,71 @@ fn resume_config_drift_errors_strict_and_falls_back_best_effort() {
     )
     .unwrap();
     assert_eq!(front.resume_cursor(), 0, "best-effort drift → fresh start");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slow_export_authority_never_stalls_admission() {
+    // The checkpoint-barrier liveness regression: an authority that is
+    // alive but too slow to export within `export_timeout` must ABORT
+    // the cadence attempt (admission resumes, the next cadence re-arms)
+    // — before the fix it was misread as "authority died", the barrier
+    // stayed armed waiting for a respawn that never came, and the
+    // stream wedged forever. `export_timeout = 0` makes "too slow"
+    // deterministic: every cadence export expires before the perfectly
+    // healthy authority can answer.
+    let n = 300;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 47, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 47;
+        c
+    };
+    let serve_cfg = ServeConfig {
+        ckpt_every: 16,
+        export_timeout: Duration::ZERO,
+        ..unbounded()
+    };
+    let dir = tmpdir("slow-export");
+    let sink = CkptSink::create(&dir, 1).unwrap();
+    let mut srv =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 47), serve_cfg, "artifacts")
+            .unwrap();
+    srv.attach_ckpt(sink, 0);
+    // Paced arrivals so cadence barriers trip while the stream is open
+    // (same pacing rationale as the cadence-checkpoint test above).
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let submit = load::drive(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 1500.0 },
+        13,
+        req_tx,
+    );
+    let report = srv
+        .serve(req_rx, resp_tx)
+        .expect("a live-but-slow authority must not kill the run");
+    assert_eq!(submit.join().unwrap(), n, "pre-fix this run never finished");
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_eq!(responses.len(), n, "every request answered despite aborted ckpts");
+    assert_eq!(report.served, n);
+    assert!(
+        report.ckpt_aborts >= 1,
+        "a zero export budget must abort cadence attempts (got {})",
+        report.ckpt_aborts
+    );
+    assert_eq!(
+        report.ckpts, 1,
+        "only the patient graceful-shutdown checkpoint lands"
+    );
+    assert_eq!(report.restarts, vec![0, 0], "no worker was wrongly declared dead");
+
+    // The shutdown checkpoint is still a fully valid resume point.
+    let mut states =
+        ckpt::load_latest(&dir, ResumeMode::Strict, 1).unwrap().expect("shutdown ckpt");
+    let state = states.remove(0);
+    assert_eq!(state.cursor, n as u64);
+    assert_eq!(state.served, n);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,537 @@
+//! Wire-front tests: the `serve::net` protocol and the TCP serving
+//! paths, asserted against *actual sockets and actual processes*.
+//!
+//! Three layers:
+//! - property tests of the frame codec (round-trip, malformed-input
+//!   rejection, reassembly across pathological read boundaries), with
+//!   the `prop` reproducer-seed contract exercised on wire inputs;
+//! - in-process servers behind real loopback TCP: the open-loop load
+//!   harness and SLO assertions over sockets, and admission shedding
+//!   with exactly-once accounting across the wire;
+//! - a true crash test: a child `ocl serve --listen` process
+//!   (`CARGO_BIN_EXE_ocl`) SIGKILLed mid-stream and resumed with
+//!   `--resume strict`, asserting the resumed trajectory is
+//!   bit-identical to an uninterrupted reference run.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use ocl::codec::Json;
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig, ShardConfig};
+use ocl::data::{Benchmark, Sample};
+use ocl::models::Pipeline;
+use ocl::prng::Rng;
+use ocl::prop;
+use ocl::serve::net::{self, encode, Client, Frame, FrameBuf, MAX_FRAME, WIRE_VERSION};
+use ocl::serve::shard::ShardFront;
+use ocl::serve::{load, Request, Response};
+use ocl::sim::{Expert, ExpertProfile};
+use ocl::util::Percentiles;
+
+fn expert_for(b: &Benchmark, seed: u64) -> Expert {
+    let mean_len =
+        b.samples.iter().map(|s| s.len as f64).sum::<f64>() / b.samples.len() as f64;
+    Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+        b.strata_fractions(),
+        mean_len,
+        seed,
+    )
+}
+
+/// Never sheds, no cadence checkpoints.
+fn unbounded() -> ServeConfig {
+    ServeConfig { max_pending: 1 << 16, ckpt_every: 0, ..ServeConfig::default() }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ocl-net-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A loopback address that was free a moment ago (bind :0, read, drop).
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("bind :0");
+    let a = l.local_addr().expect("local addr");
+    drop(l);
+    a.to_string()
+}
+
+// --- frame-codec property tests --------------------------------------------
+
+/// Random frame over realistic content: samples from a generated
+/// benchmark, featurized vectors from the real pipeline.
+fn gen_frame(rng: &mut Rng, b: &Benchmark, pipe: &Pipeline) -> Frame {
+    let sample = |rng: &mut Rng| b.samples[rng.below(b.samples.len())].clone();
+    match rng.below(8) {
+        0 => Frame::Hello { cursor: rng.next_u64() },
+        1 => {
+            let s = sample(rng);
+            Frame::Request(Request {
+                id: rng.next_u64(),
+                text: s.text.clone(),
+                truth: rng.below(4),
+                sample: s,
+            })
+        }
+        2 => Frame::Response(Response {
+            id: rng.next_u64(),
+            pred: rng.below(4),
+            handled_by: rng.below(5),
+            latency: Duration::from_nanos(rng.next_u64()),
+            truth: rng.below(4),
+            shed: false,
+        }),
+        3 => Frame::Shed {
+            id: rng.next_u64(),
+            truth: rng.below(4),
+            handled_by: rng.below(5),
+        },
+        4 => {
+            let k = rng.below(3);
+            Frame::Sync {
+                shard: rng.below(4),
+                items: (0..k)
+                    .map(|_| (pipe.featurize(&sample(rng).text), rng.below(4)))
+                    .collect(),
+            }
+        }
+        5 => Frame::Eos,
+        6 => Frame::SyncEnd { shard: rng.below(8) },
+        _ => Frame::Report(Json::obj(vec![
+            ("served", Json::Num(rng.below(100_000) as f64)),
+            ("accuracy", Json::Num(rng.f64())),
+            ("resumed", Json::Bool(rng.coin(0.5))),
+        ])),
+    }
+}
+
+#[test]
+fn frames_roundtrip_bit_exactly() {
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 17, 64);
+    let pipe = Pipeline::default();
+    prop::check(
+        "frame-roundtrip",
+        128,
+        |rng| gen_frame(rng, &b, &pipe),
+        |frame| {
+            let bytes = encode(frame);
+            let mut fb = FrameBuf::new();
+            fb.push(&bytes);
+            let decoded = match fb.next() {
+                Ok(Some(f)) => f,
+                _ => return false,
+            };
+            // Buffer fully drained, value identical (f64s bit-exact
+            // via the codec's shortest-round-trip printing), and the
+            // re-encoding is byte-identical — the wire form is
+            // canonical, not merely equivalent.
+            matches!(fb.next(), Ok(None))
+                && decoded == *frame
+                && encode(&decoded) == bytes
+        },
+    );
+}
+
+#[test]
+fn reassembly_is_boundary_oblivious() {
+    // The same frames decode identically whether the bytes arrive in
+    // one read or one *byte* at a time — the pathological lower bound
+    // for TCP segmentation.
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 19, 64);
+    let pipe = Pipeline::default();
+    prop::check(
+        "frame-reassembly",
+        32,
+        |rng| (0..3).map(|_| gen_frame(rng, &b, &pipe)).collect::<Vec<_>>(),
+        |frames| {
+            let stream: Vec<u8> = frames.iter().flat_map(encode).collect();
+            let mut whole = FrameBuf::new();
+            whole.push(&stream);
+            let mut trickle = FrameBuf::new();
+            let mut got = Vec::new();
+            for &byte in &stream {
+                trickle.push(&[byte]);
+                while let Ok(Some(f)) = trickle.next() {
+                    got.push(f);
+                }
+            }
+            let mut want = Vec::new();
+            while let Ok(Some(f)) = whole.next() {
+                want.push(f);
+            }
+            got == want && got == *frames
+        },
+    );
+}
+
+#[test]
+fn corrupted_version_byte_is_always_rejected_and_seed_replays() {
+    // Every generated frame with its version byte corrupted must be
+    // rejected — and the prop harness's reproducer contract must hold
+    // on wire inputs: the panic carries a seed that regenerates the
+    // identical frame deterministically.
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 23, 64);
+    let pipe = Pipeline::default();
+    let gen_f = |rng: &mut Rng| gen_frame(rng, &b, &pipe);
+    // Deliberately inverted property: "a corrupted frame decodes fine"
+    // is falsified on the very first case.
+    let bad_version_decodes = |frame: &Frame| {
+        let mut bytes = encode(frame);
+        bytes[0] = WIRE_VERSION.wrapping_add(1);
+        let mut fb = FrameBuf::new();
+        fb.push(&bytes);
+        fb.next().is_ok()
+    };
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        prop::check("bad-version-decodes", 64, gen_f, bad_version_decodes)
+    }))
+    .expect_err("corrupted version must be rejected for every frame");
+    let msg = match err.downcast::<String>() {
+        Ok(s) => *s,
+        Err(_) => panic!("panic payload should be the prop message"),
+    };
+    let seed = prop::parse_reproducer_seed(&msg).expect("message carries a seed");
+    let (a, held_a) = prop::recheck(seed, gen_f, bad_version_decodes);
+    assert!(!held_a, "reproducer seed must re-fail");
+    let (b2, held_b) = prop::recheck(seed, gen_f, bad_version_decodes);
+    assert!(!held_b);
+    assert_eq!(a, b2, "replay must regenerate the identical frame");
+}
+
+#[test]
+fn malformed_frames_are_clean_wire_errors() {
+    // Unknown tag.
+    let mut fb = FrameBuf::new();
+    fb.push(&[WIRE_VERSION, 0, 0, 0, 0, 0]);
+    assert!(fb.next().is_err(), "tag 0 must be rejected");
+    let mut fb = FrameBuf::new();
+    fb.push(&[WIRE_VERSION, 9, 0, 0, 0, 0]);
+    assert!(fb.next().is_err(), "tag 9 must be rejected");
+
+    // Oversized length is rejected from the header alone — the
+    // receiver never buffers a byte of the claimed payload.
+    let mut fb = FrameBuf::new();
+    let mut hdr = vec![WIRE_VERSION, 6];
+    hdr.extend_from_slice(&((MAX_FRAME as u32) + 1).to_be_bytes());
+    fb.push(&hdr);
+    let err = fb.next().expect_err("oversized frame must be rejected");
+    assert!(err.to_string().contains("cap"), "{err}");
+
+    // Truncation is not an error — just "need more bytes".
+    let bytes = encode(&Frame::Hello { cursor: 42 });
+    let mut fb = FrameBuf::new();
+    fb.push(&bytes[..bytes.len() - 1]);
+    assert!(matches!(fb.next(), Ok(None)));
+
+    // A well-formed header over a non-JSON payload is an error.
+    let body = b"not json at all";
+    let mut fb = FrameBuf::new();
+    let mut raw = vec![WIRE_VERSION, 6];
+    raw.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    raw.extend_from_slice(body);
+    assert!(fb.next().is_ok(), "empty buffer first");
+    fb.push(&raw);
+    assert!(fb.next().is_err(), "non-JSON payload must be rejected");
+
+    // Valid JSON that isn't the tag's schema is an error too.
+    let body = b"{\"wrong\":1}";
+    let mut fb = FrameBuf::new();
+    let mut raw = vec![WIRE_VERSION, 1];
+    raw.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    raw.extend_from_slice(body);
+    fb.push(&raw);
+    assert!(fb.next().is_err(), "hello without a cursor must be rejected");
+}
+
+// --- loopback serving ------------------------------------------------------
+
+#[test]
+fn loopback_load_harness_meets_slo_with_exactly_once_ids() {
+    let n = 300;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 91, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 91;
+        c
+    };
+    let front =
+        ShardFront::new(cfg, b.classes, expert_for(&b, 91), unbounded(), "artifacts")
+            .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || net::serve(front, listener));
+
+    let client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    assert_eq!(client.cursor(), 0, "fresh server announces cursor 0");
+    // The open-loop harness drives the socket exactly as it drives an
+    // in-process channel — same Sender<Request> surface.
+    let submit = load::drive_from(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 2000.0 },
+        7,
+        client.request_sender(),
+        0,
+    );
+    assert_eq!(submit.join().unwrap(), n);
+    let (responses, wire_report) = client.finish().unwrap();
+    let report = server.join().unwrap().unwrap();
+
+    // Exactly-once: every id answered exactly once, none invented.
+    assert_eq!(responses.len(), n);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate response ids over the wire");
+    assert_eq!(ids.first(), Some(&0));
+    assert_eq!(ids.last(), Some(&((n - 1) as u64)));
+    assert!(responses.iter().all(|r| !r.shed), "unbounded gate must not shed");
+    assert_eq!(report.served() + report.shed(), n);
+
+    // SLO asserted where it matters: client-observed, far side of the
+    // socket. Bounds are generous — this is a correctness smoke, CI's
+    // net-smoke owns the tight ones.
+    let mut lat = Percentiles::new();
+    for r in &responses {
+        lat.push(r.latency.as_secs_f64() * 1000.0);
+    }
+    load::Slo { p50_ms: 5_000.0, p99_ms: 20_000.0 }.check(&lat).unwrap();
+
+    // The report frame is the server's own report, bit-exactly.
+    let wire_report = wire_report.expect("final report frame");
+    assert_eq!(
+        wire_report.to_string_compact(),
+        report.to_json().to_string_compact(),
+        "wire report must round-trip the server report exactly"
+    );
+}
+
+#[test]
+fn socket_backpressure_sheds_immediately_and_respects_the_global_gate() {
+    let n = 600;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 77, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 77;
+        c
+    };
+    let levels = cfg.levels.len();
+    // Two shards behind ONE 16-deep global admission gate: the bound
+    // is deployment-wide, not per-shard.
+    let serve_cfg = ServeConfig {
+        max_pending: 16,
+        ckpt_every: 0,
+        shard: ShardConfig { shards: 2, replicas_per_level: 1, sync_interval: 0 },
+        ..ServeConfig::default()
+    };
+    let front =
+        ShardFront::new(cfg, b.classes, expert_for(&b, 77), serve_cfg, "artifacts")
+            .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || net::serve(front, listener));
+
+    let client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    // Unpaced blast straight into the socket: saturates far past
+    // max_pending, so the gate must refuse.
+    let tx = client.request_sender();
+    for (i, s) in b.samples.iter().enumerate() {
+        tx.send(Request {
+            id: i as u64,
+            text: s.text.clone(),
+            truth: s.label,
+            sample: s.clone(),
+        })
+        .expect("socket writer alive");
+    }
+    drop(tx);
+    let (responses, _) = client.finish().unwrap();
+    let report = server.join().unwrap().unwrap();
+
+    // Exactly-once accounting across served + shed, over the wire.
+    assert_eq!(responses.len(), n, "every request answered exactly once");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+    let shed = responses.iter().filter(|r| r.shed).count();
+    assert!(shed > 0, "a 16-deep gate under a {n}-request blast must shed");
+    assert!(shed < n, "the gate must still serve what it admits");
+    assert_eq!(report.shed(), shed, "wire shed frames match the server's count");
+    assert_eq!(report.served() + report.shed(), n);
+    assert!(
+        report.peak_pending <= 16,
+        "global admission gate violated: peak_pending {}",
+        report.peak_pending
+    );
+    for r in responses.iter().filter(|r| r.shed) {
+        assert_eq!(r.latency, Duration::ZERO, "shed refusals are immediate");
+        assert_eq!(r.handled_by, levels + 1, "shed attribution slot");
+    }
+}
+
+// --- multi-process crash test ----------------------------------------------
+
+fn spawn_serve(addr: &str, ckpt: Option<(&std::path::Path, &str)>) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_ocl"));
+    cmd.args([
+        "serve",
+        "--listen",
+        addr,
+        "--benchmark",
+        "imdb",
+        "--expert",
+        "gpt35",
+        "--seed",
+        "35",
+        "--scale",
+        "0.02",
+        "--shards",
+        "1",
+    ]);
+    if let Some((dir, resume)) = ckpt {
+        let dir = dir.to_string_lossy().to_string();
+        cmd.args(["--ckpt-dir", &dir, "--ckpt-every", "8", "--resume", resume]);
+    }
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    cmd.spawn().expect("spawn ocl serve")
+}
+
+fn betas_bits(report: &Json) -> Vec<u64> {
+    report
+        .get("per_shard")
+        .and_then(Json::as_arr)
+        .expect("per_shard")[0]
+        .get("final_betas")
+        .and_then(Json::as_arr)
+        .expect("final_betas")
+        .iter()
+        .map(|v| v.as_f64().expect("beta").to_bits())
+        .collect()
+}
+
+#[test]
+fn sigkilled_tcp_server_resumes_bit_identically() {
+    // The deployed-surface version of the PR 4 parity contract: the
+    // "kill" is a real SIGKILL of a real `ocl serve --listen` process
+    // mid-stream — no staged drop, no graceful drain — and the resumed
+    // deployment must land on served_total == n with final β values
+    // bit-identical to an uninterrupted reference process.
+    let n = 200;
+    // Same generator seed as the servers' `--seed 35 --scale 0.02`
+    // stream: build_sized is prefix-consistent, so these are exactly
+    // the first n samples the servers' own harnesses would build.
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 35, n);
+
+    // Uninterrupted reference: its report arrives over the wire.
+    let addr = free_addr();
+    let mut child = spawn_serve(&addr, None);
+    let client = Client::connect_retry(&addr, Duration::from_secs(60)).unwrap();
+    assert_eq!(client.cursor(), 0);
+    let submit = load::drive_from(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 2000.0 },
+        7,
+        client.request_sender(),
+        0,
+    );
+    assert_eq!(submit.join().unwrap(), n);
+    let (ref_responses, ref_report) = client.finish().unwrap();
+    assert!(child.wait().unwrap().success(), "reference server exits cleanly");
+    assert_eq!(ref_responses.len(), n);
+    let ref_report = ref_report.expect("reference report frame");
+    assert_eq!(ref_report.get("served").and_then(Json::as_usize), Some(n));
+
+    // Interrupted run: durable checkpoints on, paced arrivals so the
+    // kill lands mid-submission, SIGKILL as soon as a manifest commits.
+    let dir = tmpdir("crash");
+    let addr2 = free_addr();
+    let mut child2 = spawn_serve(&addr2, Some((&dir, "off")));
+    let client2 = Client::connect_retry(&addr2, Duration::from_secs(60)).unwrap();
+    assert_eq!(client2.cursor(), 0, "no checkpoint yet: fresh cursor");
+    let submit2 = load::drive_from(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 150.0 },
+        7,
+        client2.request_sender(),
+        0,
+    );
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let manifest = loop {
+        let found = std::fs::read_dir(&dir).ok().and_then(|rd| {
+            rd.flatten().find(|e| {
+                e.file_name().to_string_lossy().starts_with("manifest-")
+            })
+        });
+        if let Some(f) = found {
+            break f;
+        }
+        assert!(Instant::now() < deadline, "no manifest within 60s");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    drop(manifest);
+    child2.kill().expect("SIGKILL the serving process");
+    child2.wait().expect("reap");
+    let _ = submit2.join(); // drive stops once the socket writer dies
+    let (_partial, dead_report) = client2.finish().unwrap();
+    assert!(
+        dead_report.is_none(),
+        "a SIGKILLed server cannot have sent a final report"
+    );
+
+    // Resume strictly from the shared checkpoint directory; the Hello
+    // cursor tells the client where to resubmit from (at-least-once:
+    // everything past the last manifest is resubmitted).
+    let addr3 = free_addr();
+    let mut child3 = spawn_serve(&addr3, Some((&dir, "strict")));
+    let client3 = Client::connect_retry(&addr3, Duration::from_secs(60)).unwrap();
+    let cursor = client3.cursor() as usize;
+    assert!(cursor > 0, "strict resume must announce checkpointed progress");
+    assert!(cursor <= n);
+    let tail: Vec<Sample> = b.samples[cursor..].to_vec();
+    let submit3 = load::drive_from(
+        tail,
+        load::Arrival::Poisson { rate: 2000.0 },
+        9,
+        client3.request_sender(),
+        cursor as u64,
+    );
+    assert_eq!(submit3.join().unwrap(), n - cursor);
+    let (tail_responses, resumed_report) = client3.finish().unwrap();
+    assert!(child3.wait().unwrap().success(), "resumed server exits cleanly");
+
+    // The tail is answered exactly once, with the original stream ids.
+    assert_eq!(tail_responses.len(), n - cursor);
+    let mut ids: Vec<u64> = tail_responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n - cursor);
+    if let (Some(first), Some(last)) = (ids.first(), ids.last()) {
+        assert_eq!(*first, cursor as u64);
+        assert_eq!(*last, (n - 1) as u64);
+    }
+
+    let resumed_report = resumed_report.expect("resumed report frame");
+    assert_eq!(
+        resumed_report.get("resumed").and_then(Json::as_bool),
+        Some(true),
+        "resumed run must say so"
+    );
+    assert_eq!(
+        resumed_report.get("served").and_then(Json::as_usize),
+        Some(n),
+        "cumulative served_total continues the killed run"
+    );
+    let want = betas_bits(&ref_report);
+    let got = betas_bits(&resumed_report);
+    assert!(!want.is_empty());
+    assert_eq!(
+        got, want,
+        "final β values must be bit-identical to the uninterrupted reference"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
