@@ -8,7 +8,7 @@
 CARGO ?= cargo
 BIN   := target/release/ocl
 
-.PHONY: all build test reproduce reproduce-quick reports-check docs bench-serve clean
+.PHONY: all build test lint loom reproduce reproduce-quick reports-check docs bench-serve clean
 
 all: build
 
@@ -39,6 +39,16 @@ reports-check: build
 # Rustdoc with warnings denied (the CI docs job).
 docs:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+# Concurrency-invariant source pass (DESIGN.md §11): sync funnel,
+# serve-path unwrap discipline, replay determinism, bounded frames.
+lint:
+	$(CARGO) run --bin ocl_lint -- --json ocl-lint-report.json
+
+# Exhaustive interleaving exploration of the serve protocol cores
+# (bounded profile runs inside plain `make test` already).
+loom:
+	RUSTFLAGS="--cfg loom" $(CARGO) test --release --test test_loom
 
 # Serve-layer throughput numbers quoted in DESIGN.md §10 (machine-
 # dependent — not part of the byte-identical record).

@@ -11,6 +11,7 @@
 //! `cargo bench --bench bench_serve`
 
 use std::cell::RefCell;
+use std::net::TcpListener;
 use std::sync::mpsc::channel;
 use std::time::Duration;
 
@@ -18,6 +19,7 @@ use ocl::bench_support::{self, Bench};
 use ocl::codec::Json;
 use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig, ShardConfig};
 use ocl::data::Benchmark;
+use ocl::serve::net;
 use ocl::serve::shard::{ShardFront, ShardReport};
 use ocl::serve::{load, ServeReport, Server};
 use ocl::sim::{Expert, ExpertProfile};
@@ -78,6 +80,69 @@ fn run_sharded(
     report
 }
 
+/// Socket-backpressure probe: drive the wire front (`net::serve` on a
+/// loopback listener, real `Client` + open-loop arrivals over TCP)
+/// at a fixed offered rate against a deliberately small admission
+/// budget, and report what the gate did — shed rate and the peak
+/// population the budget ever held. The interesting output is the
+/// *curve* across offered rates: shed_rate ≈ 0 and peak_pending well
+/// under the cap while the server keeps up, then peak_pending pinning
+/// at `max_pending` and shed_rate climbing once it can't.
+fn run_tcp_backpressure(
+    n: usize,
+    seed: u64,
+    offered_rps: f64,
+    max_pending: usize,
+) -> Json {
+    let (b, expert, cfg) = setup(n, seed);
+    let serve_cfg = ServeConfig { max_pending, ..ServeConfig::default() };
+    let mut front =
+        ShardFront::new(cfg, b.classes, expert, serve_cfg, "artifacts").expect("front");
+    front.set_threshold_scale(0.7);
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("listener addr").to_string();
+    let server = std::thread::spawn(move || net::serve(front, listener));
+
+    let client =
+        net::Client::connect_retry(&addr, Duration::from_secs(10)).expect("connect");
+    let submit = load::drive(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: offered_rps },
+        seed ^ 0xB,
+        client.request_sender(),
+    );
+    let (responses, _server_report_frame) = client.finish().expect("client finish");
+    assert_eq!(submit.join().expect("submit"), n);
+    let report = server.join().expect("server thread").expect("serve over tcp");
+    assert_eq!(responses.len(), n, "every request answered or shed over the socket");
+    assert_eq!(report.served() + report.shed(), n);
+    assert!(report.peak_pending <= max_pending, "admission budget exceeded");
+
+    let shed = report.shed();
+    let lat = report.latency_ms();
+    println!(
+        "tcp-backpressure {offered_rps:>6.0}rps cap {max_pending}: served {} shed {} \
+         (rate {:.3}) peak_pending {} p99 {:.2}ms",
+        report.served(),
+        shed,
+        shed as f64 / n as f64,
+        report.peak_pending,
+        lat.pct(99.0)
+    );
+    Json::obj(vec![
+        ("offered_rps", Json::Num(offered_rps)),
+        ("requests", Json::Num(n as f64)),
+        ("max_pending", Json::Num(max_pending as f64)),
+        ("served", Json::Num(report.served() as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("shed_rate", Json::Num(shed as f64 / n as f64)),
+        ("peak_pending", Json::Num(report.peak_pending as f64)),
+        ("p50_ms", Json::Num(lat.pct(50.0))),
+        ("p99_ms", Json::Num(lat.pct(99.0))),
+    ])
+}
+
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
@@ -130,6 +195,18 @@ fn main() {
         });
     }
     bench.print();
+
+    // Socket-backpressure curve (single-router CI pass only, so the
+    // sharded invocation never duplicates it): offered load sweeps
+    // from under to well over what the small admission budget absorbs.
+    let mut tcp_rows: Vec<Json> = Vec::new();
+    if single_router {
+        let n_bp = env_usize("BENCH_SERVE_BP_REQUESTS", (n / 3).clamp(150, 400));
+        let cap = env_usize("BENCH_SERVE_BP_CAP", 64);
+        for (i, rps) in [600.0, 2_400.0, 6_000.0].into_iter().enumerate() {
+            tcp_rows.push(run_tcp_backpressure(n_bp, 71 + i as u64, rps, cap));
+        }
+    }
 
     let reports = reports.into_inner();
     for ((name, _), r) in scenarios.iter().zip(&reports) {
@@ -193,6 +270,7 @@ fn main() {
     let json = Json::obj(vec![
         ("harness", bench.to_json()),
         ("serve", Json::Arr(serve_entries)),
+        ("tcp_backpressure", Json::Arr(tcp_rows)),
     ]);
     // Default next to the workspace target dir (cargo runs benches with
     // cwd = the package root, so a bare relative path would land in

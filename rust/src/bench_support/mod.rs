@@ -292,7 +292,7 @@ mod tests {
             }
         });
         b.case_throughput("items", 100.0, || {
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            crate::sync::thread::sleep(std::time::Duration::from_micros(200));
         });
         assert_eq!(b.results().len(), 2);
         assert_eq!(b.results()[0].iters_ms.len(), 3);
@@ -323,7 +323,7 @@ mod tests {
     fn baseline_gate_fails_only_on_regression() {
         let mut b = Bench::new("gate", 0, 3);
         b.case("work", || {
-            std::thread::sleep(std::time::Duration::from_micros(300));
+            crate::sync::thread::sleep(std::time::Duration::from_micros(300));
         });
         let now = b.results()[0].mom_ms();
         // Baseline much slower than now → pass; much faster → fail.

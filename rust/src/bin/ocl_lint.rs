@@ -1,0 +1,512 @@
+//! `ocl-lint` — the repo's concurrency-invariant source pass
+//! (DESIGN.md §11), run by the CI `lint` job and `make lint`.
+//!
+//! Zero-dependency by construction (plain `std::fs` + a small
+//! string-aware scanner; no `syn`, no proc-macro machinery), because
+//! the crate's contract is a fully-offline build. Four rules over
+//! `rust/src`, non-test code only:
+//!
+//! * **`sync-funnel`** — no direct `std::sync` / `std::thread` paths
+//!   outside `crate::sync` (`rust/src/sync.rs`). The funnel is what
+//!   keeps every lock, atomic, channel, and spawn on the serve path
+//!   swappable for a model-checked implementation in one file.
+//! * **`unwrap`** — no `.unwrap()` / `.expect(` under `rust/src/serve/`.
+//!   A panic on the serve path kills a router or worker thread in
+//!   production; every intentional panic site must carry a justified
+//!   marker (see below).
+//! * **`determinism`** — no wall-clock (`Instant::now`,
+//!   `SystemTime::now`) or entropy-seeded RNG construction in the
+//!   deterministic replay/checkpoint paths (`serve/ckpt.rs`,
+//!   `codec/`). Checkpoint parity (DESIGN.md §10) depends on those
+//!   paths being pure functions of their inputs.
+//! * **`raw-write`** — in `serve/net.rs`, every `.write_all(` must be
+//!   fed by `encode(`, the single site that enforces the `MAX_FRAME`
+//!   wire bound; raw socket writes bypass it.
+//!
+//! Suppression: a site is allowed by a marker comment on the same
+//! line, or in the comment block directly above its statement:
+//!
+//! ```text
+//! // lint: allow(unwrap) — <why this site cannot fail / is supervised>
+//! ```
+//!
+//! A marker **without** a justification after the rule name is itself
+//! a violation (`marker`), so allows stay auditable. `--json <path>`
+//! writes a machine-readable report (uploaded as a CI artifact);
+//! exit status is nonzero iff any violation was found.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use ocl::codec::json::Json;
+
+/// Rule names a marker may reference.
+const RULES: [&str; 4] = ["sync-funnel", "unwrap", "determinism", "raw-write"];
+
+/// How far above a violating line the marker scan walks (comment
+/// block + continuation lines of the same statement).
+const MARKER_SCAN_LINES: usize = 12;
+
+#[derive(Debug, Clone)]
+struct Violation {
+    file: String,
+    line: usize, // 1-based
+    rule: &'static str,
+    text: String,
+}
+
+#[derive(Debug, Clone)]
+struct Marker {
+    file: String,
+    line: usize, // 1-based
+    rule: String,
+    justification: String,
+}
+
+fn main() {
+    let mut json_out: Option<PathBuf> = None;
+    let mut root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => die("--json requires a path"),
+            },
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => die("--root requires a directory"),
+            },
+            other => die(&format!("unknown argument '{other}' (usage: ocl_lint [--root <src-dir>] [--json <report-path>])")),
+        }
+    }
+
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+    if files.is_empty() {
+        die(&format!("no .rs files under {}", root.display()));
+    }
+
+    let mut violations = Vec::new();
+    let mut markers = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root.parent().unwrap_or(&root))
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => die(&format!("read {}: {e}", path.display())),
+        };
+        scan_file(&rel, &src, &mut violations, &mut markers);
+    }
+
+    for v in &violations {
+        println!("{}:{} [{}] {}", v.file, v.line, v.rule, v.text);
+    }
+    println!(
+        "ocl-lint: {} files scanned, {} markers, {} violations",
+        files.len(),
+        markers.len(),
+        violations.len()
+    );
+
+    if let Some(out) = json_out {
+        let report = report_json(files.len(), &violations, &markers);
+        if let Err(e) = fs::write(&out, report.to_string_pretty()) {
+            die(&format!("write {}: {e}", out.display()));
+        }
+        println!("ocl-lint: report written to {}", out.display());
+    }
+
+    if !violations.is_empty() {
+        std::process::exit(1);
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("ocl-lint: {msg}");
+    std::process::exit(2);
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => die(&format!("read dir {}: {e}", dir.display())),
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Files the rules never apply to: the funnel itself, and this linter
+/// (whose pattern literals and marker examples would self-flag).
+fn exempt(rel: &str) -> bool {
+    rel.ends_with("src/sync.rs") || rel.ends_with("src/bin/ocl_lint.rs")
+}
+
+fn scan_file(rel: &str, src: &str, violations: &mut Vec<Violation>, markers: &mut Vec<Marker>) {
+    let orig: Vec<&str> = src.lines().collect();
+    let stripped = strip_source(&orig);
+    let in_test = test_regions(&stripped);
+
+    // Marker inventory + well-formedness (S5: a justification-less
+    // marker fails the lint even if nothing relies on it).
+    if !exempt(rel) {
+        for (i, line) in orig.iter().enumerate() {
+            if let Some((rule, justification)) = parse_marker(line) {
+                if !RULES.contains(&rule.as_str()) {
+                    violations.push(Violation {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "marker",
+                        text: format!("unknown rule '{rule}' in lint marker"),
+                    });
+                } else if justification.is_empty() {
+                    violations.push(Violation {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "marker",
+                        text: format!(
+                            "marker 'lint: allow({rule})' has no justification — \
+                             say why this site is safe"
+                        ),
+                    });
+                } else {
+                    markers.push(Marker {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule,
+                        justification,
+                    });
+                }
+            }
+        }
+    }
+
+    if exempt(rel) {
+        return;
+    }
+    let serve = rel.contains("src/serve/");
+    let deterministic = rel.ends_with("src/serve/ckpt.rs") || rel.contains("src/codec/");
+    let net = rel.ends_with("src/serve/net.rs");
+
+    // Patterns assembled at runtime so the source of *other* tools
+    // grepping this file stays quiet; strings in scanned files are
+    // stripped anyway.
+    let p_sync = ["std", "::sync"].concat();
+    let p_thread = ["std", "::thread"].concat();
+    let p_unwrap = [".unwrap", "()"].concat();
+    let p_expect = [".expect", "("].concat();
+    let det_patterns =
+        ["Instant::now", "SystemTime::now", "from_entropy", "thread_rng", "from_os_rng"];
+
+    for (i, s) in stripped.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let mut flag = |rule: &'static str, text: String| {
+            if !suppressed(&orig, i, rule) {
+                violations.push(Violation { file: rel.to_string(), line: i + 1, rule, text });
+            }
+        };
+        if s.contains(&p_sync) || s.contains(&p_thread) {
+            flag(
+                "sync-funnel",
+                "direct std sync/thread path — import through crate::sync instead".to_string(),
+            );
+        }
+        if serve && (s.contains(&p_unwrap) || s.contains(&p_expect)) {
+            flag(
+                "unwrap",
+                "panic site on the serve path — handle the error or justify with a marker"
+                    .to_string(),
+            );
+        }
+        if deterministic {
+            for p in det_patterns {
+                if s.contains(p) {
+                    flag(
+                        "determinism",
+                        format!("{p} in a deterministic replay/checkpoint path"),
+                    );
+                }
+            }
+        }
+        if net && s.contains(".write_all(") && !s.contains("encode(") {
+            flag(
+                "raw-write",
+                "socket write not fed by encode() — bypasses the MAX_FRAME bound".to_string(),
+            );
+        }
+    }
+}
+
+/// Is the violation at `idx` allowed by a marker on the same line or
+/// in the comment block directly above its statement? The upward walk
+/// crosses comment lines and unterminated continuation lines of the
+/// same statement, and stops at the previous terminated statement.
+fn suppressed(orig: &[&str], idx: usize, rule: &str) -> bool {
+    let marker = format!("lint: allow({rule})");
+    if orig[idx].contains(&marker) {
+        return true;
+    }
+    let mut i = idx;
+    for _ in 0..MARKER_SCAN_LINES {
+        if i == 0 {
+            return false;
+        }
+        i -= 1;
+        let t = orig[i].trim();
+        if t.starts_with("//") {
+            if t.contains(&marker) {
+                return true;
+            }
+            continue;
+        }
+        if t.is_empty() || t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+            return false;
+        }
+        // otherwise: a continuation line of the same statement — keep
+        // walking up toward its leading comment block.
+    }
+    false
+}
+
+/// Parse `lint: allow(<rule>)<justification>` out of a line, if present.
+fn parse_marker(line: &str) -> Option<(String, String)> {
+    let tag = ["lint: ", "allow("].concat();
+    let start = line.find(&tag)?;
+    let rest = &line[start + tag.len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let justification = rest[close + 1..]
+        .trim_start_matches(|c: char| !c.is_alphanumeric())
+        .trim()
+        .to_string();
+    Some((rule, justification))
+}
+
+/// Per-line map of `#[cfg(test)]` item bodies (brace-tracked on
+/// string-stripped text), so test code is out of scope for the rules.
+fn test_regions(stripped: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; stripped.len()];
+    let mut i = 0;
+    while i < stripped.len() {
+        if stripped[i].contains("#[cfg(test)]") {
+            // Walk to the opening brace of the gated item, then track
+            // depth until it closes; everything inside is test code.
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < stripped.len() {
+                in_test[j] = true;
+                for c in stripped[j].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    in_test
+}
+
+/// Replace string/char-literal and comment contents with spaces so
+/// pattern matching only sees code. Handles line comments, nested
+/// block comments, raw strings, and lifetime-vs-char-literal
+/// disambiguation — line-by-line, with block/raw state carried across
+/// lines.
+fn strip_source(orig: &[&str]) -> Vec<String> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let mut st = St::Code;
+    let mut out = Vec::with_capacity(orig.len());
+    for line in orig {
+        let b: Vec<char> = line.chars().collect();
+        let mut s = String::with_capacity(b.len());
+        let mut k = 0;
+        while k < b.len() {
+            match st {
+                St::Code => {
+                    let c = b[k];
+                    if c == '/' && b.get(k + 1) == Some(&'/') {
+                        break; // line comment: drop the rest
+                    } else if c == '/' && b.get(k + 1) == Some(&'*') {
+                        st = St::Block(1);
+                        s.push(' ');
+                        s.push(' ');
+                        k += 2;
+                    } else if c == '"' {
+                        st = St::Str;
+                        s.push(' ');
+                        k += 1;
+                    } else if c == 'r'
+                        && matches!(b.get(k + 1), Some(&'"') | Some(&'#'))
+                        && !b
+                            .get(k.wrapping_sub(1))
+                            .is_some_and(|p| p.is_alphanumeric() || *p == '_')
+                    {
+                        let mut hashes = 0u32;
+                        let mut j = k + 1;
+                        while b.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if b.get(j) == Some(&'"') {
+                            st = St::RawStr(hashes);
+                            for _ in k..=j {
+                                s.push(' ');
+                            }
+                            k = j + 1;
+                        } else {
+                            s.push(c);
+                            k += 1;
+                        }
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: a literal closes
+                        // with ' after one (possibly escaped) char.
+                        if b.get(k + 1) == Some(&'\\') {
+                            let mut j = k + 2;
+                            while j < b.len() && b[j] != '\'' {
+                                j += 1;
+                            }
+                            for _ in k..=j.min(b.len() - 1) {
+                                s.push(' ');
+                            }
+                            k = j + 1;
+                        } else if b.get(k + 2) == Some(&'\'') {
+                            s.push(' ');
+                            s.push(' ');
+                            s.push(' ');
+                            k += 3;
+                        } else {
+                            s.push(c); // lifetime tick
+                            k += 1;
+                        }
+                    } else {
+                        s.push(c);
+                        k += 1;
+                    }
+                }
+                St::Block(depth) => {
+                    if b[k] == '*' && b.get(k + 1) == Some(&'/') {
+                        st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                        s.push(' ');
+                        s.push(' ');
+                        k += 2;
+                    } else if b[k] == '/' && b.get(k + 1) == Some(&'*') {
+                        st = St::Block(depth + 1);
+                        s.push(' ');
+                        s.push(' ');
+                        k += 2;
+                    } else {
+                        s.push(' ');
+                        k += 1;
+                    }
+                }
+                St::Str => {
+                    if b[k] == '\\' {
+                        s.push(' ');
+                        if k + 1 < b.len() {
+                            s.push(' ');
+                        }
+                        k += 2;
+                    } else if b[k] == '"' {
+                        st = St::Code;
+                        s.push(' ');
+                        k += 1;
+                    } else {
+                        s.push(' ');
+                        k += 1;
+                    }
+                }
+                St::RawStr(hashes) => {
+                    if b[k] == '"' {
+                        let mut ok = true;
+                        for h in 0..hashes {
+                            if b.get(k + 1 + h as usize) != Some(&'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            st = St::Code;
+                            for _ in 0..=hashes {
+                                s.push(' ');
+                            }
+                            k += 1 + hashes as usize;
+                        } else {
+                            s.push(' ');
+                            k += 1;
+                        }
+                    } else {
+                        s.push(' ');
+                        k += 1;
+                    }
+                }
+            }
+        }
+        // An unterminated line comment state resets at the newline; a
+        // string that legally spans lines keeps its state.
+        out.push(s);
+    }
+    out
+}
+
+fn report_json(files: usize, violations: &[Violation], markers: &[Marker]) -> Json {
+    let vio: Vec<Json> = violations
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("file", Json::Str(v.file.clone())),
+                ("line", Json::Num(v.line as f64)),
+                ("rule", Json::Str(v.rule.to_string())),
+                ("text", Json::Str(v.text.clone())),
+            ])
+        })
+        .collect();
+    let mks: Vec<Json> = markers
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("file", Json::Str(m.file.clone())),
+                ("line", Json::Num(m.line as f64)),
+                ("rule", Json::Str(m.rule.clone())),
+                ("justification", Json::Str(m.justification.clone())),
+            ])
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("tool".to_string(), Json::Str("ocl-lint".to_string()));
+    top.insert("files_scanned".to_string(), Json::Num(files as f64));
+    top.insert("clean".to_string(), Json::Bool(violations.is_empty()));
+    top.insert("violations".to_string(), Json::Arr(vio));
+    top.insert("markers".to_string(), Json::Arr(mks));
+    Json::Obj(top)
+}

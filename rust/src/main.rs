@@ -410,8 +410,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
             // by the interrupted run — resubmit only the stream tail,
             // with its original ids (shard hashing + cursor continuity).
             let cursor = (front.resume_cursor() as usize).min(n);
-            let (req_tx, req_rx) = std::sync::mpsc::channel();
-            let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+            let (req_tx, req_rx) = ocl::sync::mpsc::channel();
+            let (resp_tx, resp_rx) = ocl::sync::mpsc::channel();
             let samples: Vec<_> =
                 b.samples.iter().take(n).skip(cursor).cloned().collect();
             let arrival = load::Arrival::Poisson {
@@ -419,7 +419,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
             };
             let submit =
                 load::drive_from(samples, arrival, seed ^ 0xA, req_tx, cursor as u64);
-            let drain = std::thread::spawn(move || resp_rx.iter().count());
+            let drain = ocl::sync::thread::spawn(move || resp_rx.iter().count());
             let report = front.serve(req_rx, resp_tx)?;
             submit.join().ok();
             let drained = drain.join().unwrap_or(0);

@@ -1,0 +1,595 @@
+//! Model-checkable specs of the serve layer's three concurrency
+//! protocol cores, explored by [`crate::mc::Explorer`] in
+//! `tests/test_loom.rs`.
+//!
+//! Each spec mirrors its production counterpart *step-for-step at
+//! atomic granularity* so the explored interleavings are the ones real
+//! threads can produce (under sequential consistency — see the
+//! [`crate::mc`] module docs for the weak-memory caveat):
+//!
+//! * [`GateSpec`] — the [`crate::serve::AdmissionGate`] CAS loop
+//!   (acquire / release / shed). Checks exactly-once admission
+//!   accounting and no lost or duplicated permits.
+//! * [`SlotSpec`] — the snapshot slot's publish/install ordering
+//!   (`crate::serve::pool`'s `SnapshotSlot`): payload and chunk count
+//!   are stored *before* the sequence number is released. Checks that
+//!   a reader observing sequence `s` always installs a payload at
+//!   least that fresh.
+//! * [`BarrierSpec`] — the checkpoint barrier's
+//!   pause → drain → export → resume machine. Drives the *production*
+//!   [`CkptBarrier`] type inside the model state — not a
+//!   re-implementation — against arrival, router, arming, export, and
+//!   respawn actors, including the slow-authority timeout arm and the
+//!   dead-authority respawn-and-retry arm.
+//!
+//! [`GateSpec`] and [`SlotSpec`] also carry a deliberately-broken
+//! mode (a blind store instead of a CAS; sequence released before the
+//! payload). These exist so the test suite can prove the checker
+//! *finds* the classic bugs — a model checker that has never caught a
+//! planted bug is just a slow `Ok(())`.
+
+use crate::mc::Spec;
+use crate::serve::barrier::{CkptBarrier, ExportOutcome};
+
+// ---------------------------------------------------------------------------
+// Admission gate
+// ---------------------------------------------------------------------------
+
+/// Per-client program counter in [`GateSpec`]. Each variant boundary
+/// is one atomic instruction in `AdmissionGate::try_admit` /
+/// `release`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GatePc {
+    /// About to load the current in-flight count.
+    Load,
+    /// Loaded `observed`; about to compare it against the cap.
+    Check {
+        /// The in-flight count this client last observed.
+        observed: i64,
+    },
+    /// Passed the cap check; about to CAS `observed → observed + 1`.
+    Cas {
+        /// The expected value for the compare-and-swap.
+        observed: i64,
+    },
+    /// CAS succeeded; about to `fetch_max` the peak gauge.
+    Peak {
+        /// The in-flight count this client just installed minus one.
+        observed: i64,
+    },
+    /// Admitted and holding a permit (the request is in flight).
+    Work,
+    /// About to decrement the in-flight count.
+    Release,
+    /// Finished: was admitted and released its permit.
+    Admitted,
+    /// Finished: shed at the cap check.
+    Shed,
+}
+
+/// Shared + per-client state of the admission-gate model.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GateState {
+    /// The `cur` atomic: permits currently held (i64 so the checker
+    /// reports underflow instead of wrapping).
+    pub cur: i64,
+    /// The `peak` gauge (`fetch_max` mirror).
+    pub peak: i64,
+    /// One program counter per client.
+    pub pcs: Vec<GatePc>,
+}
+
+impl GateState {
+    fn in_system(&self) -> i64 {
+        self.pcs
+            .iter()
+            .filter(|pc| matches!(pc, GatePc::Peak { .. } | GatePc::Work | GatePc::Release))
+            .count() as i64
+    }
+    fn admitted(&self) -> usize {
+        self.pcs.iter().filter(|pc| matches!(pc, GatePc::Admitted)).count()
+    }
+    fn shed(&self) -> usize {
+        self.pcs.iter().filter(|pc| matches!(pc, GatePc::Shed)).count()
+    }
+}
+
+/// Model of [`crate::serve::AdmissionGate`]: `clients` concurrent
+/// callers racing `try_admit` (CAS loop) and `release` against a
+/// `cap`-sized gate.
+///
+/// Invariants checked after every atomic step: the permit count
+/// exactly equals the number of clients between CAS success and
+/// release (no lost, duplicated, or phantom permits), never exceeds
+/// the cap, and never goes negative. Final-state checks: all permits
+/// returned, admitted + shed covers every client, nobody sheds when
+/// `clients <= cap`, and at least one client is admitted.
+#[derive(Debug, Clone, Copy)]
+pub struct GateSpec {
+    /// Number of concurrent clients.
+    pub clients: usize,
+    /// Gate capacity (`ServeConfig::max_pending` in production).
+    pub cap: i64,
+    /// Replace the CAS with a blind `store(observed + 1)` — the bug
+    /// the CAS exists to prevent. The checker must catch this
+    /// (meta-test in `tests/test_loom.rs`).
+    pub blind_store: bool,
+}
+
+impl Spec for GateSpec {
+    type State = GateState;
+
+    fn init(&self) -> GateState {
+        GateState { cur: 0, peak: 0, pcs: vec![GatePc::Load; self.clients] }
+    }
+
+    fn actors(&self) -> usize {
+        self.clients
+    }
+
+    fn enabled(&self, s: &GateState, a: usize) -> bool {
+        !matches!(s.pcs[a], GatePc::Admitted | GatePc::Shed)
+    }
+
+    fn done(&self, s: &GateState, a: usize) -> bool {
+        matches!(s.pcs[a], GatePc::Admitted | GatePc::Shed)
+    }
+
+    fn step(&self, s: &mut GateState, a: usize) {
+        s.pcs[a] = match s.pcs[a] {
+            GatePc::Load => GatePc::Check { observed: s.cur },
+            GatePc::Check { observed } => {
+                if observed >= self.cap {
+                    GatePc::Shed
+                } else {
+                    GatePc::Cas { observed }
+                }
+            }
+            GatePc::Cas { observed } => {
+                if self.blind_store {
+                    s.cur = observed + 1;
+                    GatePc::Peak { observed }
+                } else if s.cur == observed {
+                    s.cur = observed + 1;
+                    GatePc::Peak { observed }
+                } else {
+                    // CAS failure hands back the actual value — retry
+                    // from the cap check, exactly like the real loop.
+                    GatePc::Check { observed: s.cur }
+                }
+            }
+            GatePc::Peak { observed } => {
+                s.peak = s.peak.max(observed + 1);
+                GatePc::Work
+            }
+            GatePc::Work => GatePc::Release,
+            GatePc::Release => {
+                s.cur -= 1;
+                GatePc::Admitted
+            }
+            GatePc::Admitted | GatePc::Shed => unreachable!("stepped a finished client"),
+        };
+    }
+
+    fn check(&self, s: &GateState) -> std::result::Result<(), String> {
+        if s.cur < 0 {
+            return Err(format!("permit underflow: cur = {}", s.cur));
+        }
+        if s.cur > self.cap {
+            return Err(format!("over-admission: cur = {} > cap = {}", s.cur, self.cap));
+        }
+        let in_system = s.in_system();
+        if s.cur != in_system {
+            return Err(format!(
+                "permit accounting broken: cur = {} but {} clients hold permits",
+                s.cur, in_system
+            ));
+        }
+        if s.peak > self.cap {
+            return Err(format!("peak gauge {} exceeds cap {}", s.peak, self.cap));
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &GateState) -> std::result::Result<(), String> {
+        if s.cur != 0 {
+            return Err(format!("permits leaked: cur = {} at quiescence", s.cur));
+        }
+        let (admitted, shed) = (s.admitted(), s.shed());
+        if admitted + shed != self.clients {
+            return Err(format!(
+                "lost client: {admitted} admitted + {shed} shed != {} clients",
+                self.clients
+            ));
+        }
+        if self.clients as i64 <= self.cap && shed > 0 {
+            return Err(format!(
+                "spurious shed: {shed} shed with only {} clients against cap {}",
+                self.clients, self.cap
+            ));
+        }
+        if self.clients > 0 && self.cap > 0 && admitted == 0 {
+            return Err("livelock-shed: nobody was admitted".to_string());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot slot
+// ---------------------------------------------------------------------------
+
+/// Authority-side program counter in [`SlotSpec`] — the three stores
+/// of one publication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AuthPc {
+    /// About to write the snapshot payload under the slot mutex.
+    WritePayload,
+    /// About to store the published chunk count.
+    StoreChunks,
+    /// About to store (release) the sequence number.
+    StoreSeq,
+    /// All publications issued.
+    Idle,
+}
+
+/// Reader-side program counter in [`SlotSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReaderPc {
+    /// About to (acquire-)load the sequence number.
+    LoadSeq,
+    /// Observed a nonzero sequence; about to lock and read the payload.
+    Install {
+        /// The sequence number this reader observed.
+        observed: u64,
+    },
+    /// Finished; carries what was observed vs what was installed so
+    /// the invariant can audit the pair.
+    Done {
+        /// The sequence number this reader observed (0 = none yet).
+        observed: u64,
+        /// The payload publication number it then installed.
+        installed: u64,
+    },
+}
+
+/// Shared + per-actor state of the snapshot-slot model.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SlotState {
+    /// Payload slot (publication number stored under the mutex; 0 = none).
+    pub payload: u64,
+    /// Published chunk-count mirror.
+    pub chunks: u64,
+    /// The atomic sequence number (stored last on the good path).
+    pub seq: u64,
+    /// Which publication the authority is currently issuing (1-based).
+    pub auth_k: u64,
+    /// Authority program counter.
+    pub auth_pc: AuthPc,
+    /// One program counter per reader.
+    pub readers: Vec<ReaderPc>,
+}
+
+/// Model of the snapshot slot (`crate::serve::pool::SnapshotSlot`):
+/// one authority issuing `pubs` publications — payload, chunk count,
+/// then sequence number, in that order — racing `readers` concurrent
+/// warm-respawn installers that load the sequence and then read the
+/// payload.
+///
+/// Invariant: a reader that observed sequence `s` must install a
+/// payload from publication `>= s`. With `seq_first: true` the store
+/// order is inverted (sequence released before the payload lands) and
+/// the checker must find the stale-install interleaving.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotSpec {
+    /// Number of publications the authority issues.
+    pub pubs: u64,
+    /// Number of concurrent readers.
+    pub readers: usize,
+    /// Invert the store order (the planted bug): sequence number first,
+    /// payload after.
+    pub seq_first: bool,
+}
+
+impl Spec for SlotSpec {
+    type State = SlotState;
+
+    fn init(&self) -> SlotState {
+        SlotState {
+            payload: 0,
+            chunks: 0,
+            seq: 0,
+            auth_k: 1,
+            auth_pc: if self.pubs == 0 {
+                AuthPc::Idle
+            } else if self.seq_first {
+                AuthPc::StoreSeq
+            } else {
+                AuthPc::WritePayload
+            },
+            readers: vec![ReaderPc::LoadSeq; self.readers],
+        }
+    }
+
+    fn actors(&self) -> usize {
+        1 + self.readers
+    }
+
+    fn enabled(&self, s: &SlotState, a: usize) -> bool {
+        if a == 0 {
+            s.auth_pc != AuthPc::Idle
+        } else {
+            !matches!(s.readers[a - 1], ReaderPc::Done { .. })
+        }
+    }
+
+    fn done(&self, s: &SlotState, a: usize) -> bool {
+        !self.enabled(s, a)
+    }
+
+    fn step(&self, s: &mut SlotState, a: usize) {
+        if a == 0 {
+            // One publication is three stores; on the good path the
+            // sequence number is last, on the broken path it is first.
+            let next_pub = |s: &mut SlotState| {
+                if s.auth_k < self.pubs {
+                    s.auth_k += 1;
+                    if self.seq_first { AuthPc::StoreSeq } else { AuthPc::WritePayload }
+                } else {
+                    AuthPc::Idle
+                }
+            };
+            s.auth_pc = match s.auth_pc {
+                AuthPc::WritePayload => {
+                    s.payload = s.auth_k;
+                    AuthPc::StoreChunks
+                }
+                AuthPc::StoreChunks => {
+                    s.chunks = s.auth_k;
+                    if self.seq_first { next_pub(s) } else { AuthPc::StoreSeq }
+                }
+                AuthPc::StoreSeq => {
+                    s.seq = s.auth_k;
+                    if self.seq_first { AuthPc::WritePayload } else { next_pub(s) }
+                }
+                AuthPc::Idle => unreachable!("stepped an idle authority"),
+            };
+        } else {
+            let r = a - 1;
+            s.readers[r] = match s.readers[r] {
+                ReaderPc::LoadSeq => {
+                    let observed = s.seq;
+                    if observed == 0 {
+                        // Nothing published yet — the real reader keeps
+                        // its cold state.
+                        ReaderPc::Done { observed: 0, installed: 0 }
+                    } else {
+                        ReaderPc::Install { observed }
+                    }
+                }
+                ReaderPc::Install { observed } => {
+                    // Locked critical section: read the payload.
+                    ReaderPc::Done { observed, installed: s.payload }
+                }
+                ReaderPc::Done { .. } => unreachable!("stepped a finished reader"),
+            };
+        }
+    }
+
+    fn check(&self, s: &SlotState) -> std::result::Result<(), String> {
+        for (i, r) in s.readers.iter().enumerate() {
+            if let ReaderPc::Done { observed, installed } = r {
+                if *observed > 0 && installed < observed {
+                    return Err(format!(
+                        "stale install: reader {i} observed seq {observed} \
+                         but installed publication {installed}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &SlotState) -> std::result::Result<(), String> {
+        if s.payload != self.pubs || s.seq != self.pubs || s.chunks != self.pubs {
+            return Err(format!(
+                "incomplete publication: payload {} chunks {} seq {} after {} pubs",
+                s.payload, s.chunks, s.seq, self.pubs
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint barrier
+// ---------------------------------------------------------------------------
+
+/// Actor indices of [`BarrierSpec`] (fixed cast of five).
+pub mod barrier_actors {
+    /// Admits one request when the barrier is open.
+    pub const ARRIVE: usize = 0;
+    /// Completes one in-flight request and counts its annotation.
+    pub const ROUTE: usize = 1;
+    /// The serve loop's `maybe_arm` poll.
+    pub const ARM: usize = 2;
+    /// Attempts the export at quiescence and records the outcome.
+    pub const EXPORT: usize = 3;
+    /// The supervision sweep respawning a dead authority.
+    pub const RESPAWN: usize = 4;
+}
+
+/// Model state of [`BarrierSpec`]; embeds the **production**
+/// [`CkptBarrier`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BarrierState {
+    /// The real barrier under test.
+    pub barrier: CkptBarrier,
+    /// Requests admitted so far.
+    pub arrived: usize,
+    /// Requests in flight (admitted, not yet completed).
+    pub pending: usize,
+    /// Export outcomes consumed from the script.
+    pub exported: usize,
+    /// A level authority is dead and awaits respawn.
+    pub dead: bool,
+}
+
+/// Model of the quiescent checkpoint barrier: five actors (arrival,
+/// router, arm poll, export, respawn) drive the production
+/// [`CkptBarrier`] with a scripted sequence of per-attempt
+/// [`ExportOutcome`]s.
+///
+/// By construction of the enabled-conditions, exports happen only at
+/// quiescence (`pending == 0`) and only while armed — mirroring the
+/// serve loop. The checked invariants are the ones the barrier itself
+/// must uphold across every interleaving: its write/abort counters
+/// match the consumed script exactly (at most one write per arm), and
+/// a dead authority never disarms it (respawn-and-retry happens under
+/// the same arm). Final checks: all requests completed, admission is
+/// re-opened, and at least one export resolved whenever the cadence
+/// was reachable. A script that strands an armed barrier with no
+/// resolving outcome is reported as wedged admission — `test_loom`'s
+/// meta-test relies on that.
+#[derive(Debug, Clone)]
+pub struct BarrierSpec {
+    /// Total requests the arrival actor admits.
+    pub requests: usize,
+    /// Cadence (annotations per checkpoint), `ServeConfig::ckpt_every`.
+    pub every: usize,
+    /// Outcome of each successive export attempt. Every
+    /// [`ExportOutcome::AuthorityDead`] must eventually be followed by
+    /// a resolving outcome, or the model (correctly) wedges.
+    pub outcomes: Vec<ExportOutcome>,
+}
+
+impl BarrierSpec {
+    fn scripted(&self, upto: usize, which: ExportOutcome) -> u64 {
+        self.outcomes[..upto].iter().filter(|o| **o == which).count() as u64
+    }
+}
+
+impl Spec for BarrierSpec {
+    type State = BarrierState;
+
+    fn init(&self) -> BarrierState {
+        BarrierState {
+            barrier: CkptBarrier::new(self.every),
+            arrived: 0,
+            pending: 0,
+            exported: 0,
+            dead: false,
+        }
+    }
+
+    fn actors(&self) -> usize {
+        5
+    }
+
+    fn enabled(&self, s: &BarrierState, a: usize) -> bool {
+        match a {
+            barrier_actors::ARRIVE => s.arrived < self.requests && !s.barrier.paused(),
+            barrier_actors::ROUTE => s.pending > 0,
+            barrier_actors::ARM => {
+                !s.barrier.paused()
+                    && self.every > 0
+                    && s.barrier.anns_since() >= self.every
+                    && s.exported < self.outcomes.len()
+            }
+            barrier_actors::EXPORT => {
+                s.barrier.paused()
+                    && s.pending == 0
+                    && !s.dead
+                    && s.exported < self.outcomes.len()
+            }
+            barrier_actors::RESPAWN => s.dead,
+            _ => false,
+        }
+    }
+
+    fn done(&self, s: &BarrierState, a: usize) -> bool {
+        match a {
+            barrier_actors::ARRIVE => s.arrived == self.requests,
+            barrier_actors::ROUTE => s.pending == 0,
+            // The daemon actors are done whenever they have nothing to
+            // do; a wedged ARRIVE/ROUTE is what flags a stuck barrier.
+            _ => !self.enabled(s, a),
+        }
+    }
+
+    fn step(&self, s: &mut BarrierState, a: usize) {
+        match a {
+            barrier_actors::ARRIVE => {
+                s.arrived += 1;
+                s.pending += 1;
+            }
+            barrier_actors::ROUTE => {
+                s.pending -= 1;
+                s.barrier.note_annotation();
+            }
+            barrier_actors::ARM => {
+                s.barrier.maybe_arm();
+            }
+            barrier_actors::EXPORT => {
+                let outcome = self.outcomes[s.exported];
+                s.exported += 1;
+                s.barrier.record(outcome);
+                if outcome == ExportOutcome::AuthorityDead {
+                    s.dead = true;
+                }
+            }
+            barrier_actors::RESPAWN => {
+                s.dead = false;
+            }
+            _ => unreachable!("unknown actor {a}"),
+        }
+    }
+
+    fn check(&self, s: &BarrierState) -> std::result::Result<(), String> {
+        let want_writes = self.scripted(s.exported, ExportOutcome::Written);
+        let want_aborts = self.scripted(s.exported, ExportOutcome::TimedOut);
+        if s.barrier.writes() != want_writes {
+            return Err(format!(
+                "write counter diverged: barrier says {} but the script resolved {}",
+                s.barrier.writes(),
+                want_writes
+            ));
+        }
+        if s.barrier.aborts() != want_aborts {
+            return Err(format!(
+                "abort counter diverged: barrier says {} but the script timed out {}",
+                s.barrier.aborts(),
+                want_aborts
+            ));
+        }
+        if s.dead && !s.barrier.paused() {
+            return Err("dead authority disarmed the barrier: a respawn-and-retry \
+                        would export a non-quiescent state"
+                .to_string());
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &BarrierState) -> std::result::Result<(), String> {
+        if s.arrived != self.requests || s.pending != 0 {
+            return Err(format!(
+                "stream incomplete: {}/{} arrived, {} pending",
+                s.arrived, self.requests, s.pending
+            ));
+        }
+        if s.dead {
+            return Err("authority left dead at shutdown".to_string());
+        }
+        if s.barrier.paused() {
+            return Err("admission wedged: barrier still armed at quiescence \
+                        with no resolving export outcome"
+                .to_string());
+        }
+        let reachable =
+            self.every > 0 && self.requests >= self.every && !self.outcomes.is_empty();
+        if reachable && s.exported == 0 {
+            return Err("cadence was reachable but no export was ever attempted".to_string());
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,178 @@
+//! The checkpoint-barrier state machine, extracted from the serve
+//! loop so it is a *model-checkable unit*: pure state, no clocks, no
+//! channels, no I/O.
+//!
+//! Protocol (DESIGN.md §11): every [`crate::config::ServeConfig::ckpt_every`]
+//! expert annotations the barrier **arms**. While armed, the router
+//! pauses admission and cross-shard sync absorption so in-flight work
+//! drains to a quiescent point; at quiescence it attempts a state
+//! export and reports the outcome back here:
+//!
+//! - [`ExportOutcome::Written`] — the checkpoint is durable: disarm,
+//!   reset the cadence, count a write.
+//! - [`ExportOutcome::TimedOut`] — a level authority was *alive but
+//!   slow* (the PR 6 liveness fix): abort the attempt, disarm, reset
+//!   the cadence, count an abort. Liveness beats checkpoint freshness:
+//!   admission must not stay paused behind a wedged export.
+//! - [`ExportOutcome::AuthorityDead`] — a level authority's thread
+//!   died: **stay armed**. The supervision sweep respawns the worker
+//!   and the still-armed barrier retries; admission stays paused so
+//!   the quiescent point is preserved across the respawn.
+//!
+//! The invariants (exhaustively checked over interleavings by
+//! `tests/test_loom.rs` via [`crate::mc::models::BarrierSpec`], which
+//! drives *this* type, not a re-implementation):
+//! exports are only attempted at quiescence; at most one write per
+//! arm; `Written`/`TimedOut` always re-open admission; a dead
+//! authority never disarms; a `TimedOut` abort re-arms only after a
+//! full fresh cadence. Barrier correctness is what makes a resumed
+//! learner trajectory bit-identical to an uninterrupted one — the
+//! serve-side precondition for the paper's Theorem 3.2 regret bound
+//! (see DESIGN.md §11).
+
+/// Outcome of one checkpoint export attempt, reported into
+/// [`CkptBarrier::record`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExportOutcome {
+    /// The quiescent state was captured and durably written.
+    Written,
+    /// A level authority was alive but did not export within the
+    /// configured bound — the attempt is aborted, nothing was written.
+    TimedOut,
+    /// A level authority's thread was dead — respawn and retry while
+    /// still armed.
+    AuthorityDead,
+}
+
+/// Cadence + pause state of the quiescent checkpoint barrier (see the
+/// module docs for the protocol).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CkptBarrier {
+    /// Annotations between cadence checkpoints (0 disables arming;
+    /// the graceful-shutdown checkpoint still records through here).
+    every: usize,
+    anns_since: usize,
+    armed: bool,
+    writes: u64,
+    aborts: u64,
+}
+
+impl CkptBarrier {
+    /// A disarmed barrier with an `every`-annotation cadence.
+    pub fn new(every: usize) -> Self {
+        CkptBarrier { every, anns_since: 0, armed: false, writes: 0, aborts: 0 }
+    }
+
+    /// Count one expert annotation toward the cadence.
+    pub fn note_annotation(&mut self) {
+        self.anns_since += 1;
+    }
+
+    /// Arm when the cadence is due. Returns whether the barrier is
+    /// armed after the call (idempotent while armed).
+    pub fn maybe_arm(&mut self) -> bool {
+        if self.every > 0 && self.anns_since >= self.every {
+            self.armed = true;
+        }
+        self.armed
+    }
+
+    /// While `true`, the router must pause admission and sync
+    /// absorption and drain to quiescence.
+    pub fn paused(&self) -> bool {
+        self.armed
+    }
+
+    /// Record the outcome of an export attempt (see [`ExportOutcome`]
+    /// for the disarm/retry policy each variant implies).
+    pub fn record(&mut self, outcome: ExportOutcome) {
+        match outcome {
+            ExportOutcome::Written => {
+                self.armed = false;
+                self.anns_since = 0;
+                self.writes += 1;
+            }
+            ExportOutcome::TimedOut => {
+                self.armed = false;
+                self.anns_since = 0;
+                self.aborts += 1;
+            }
+            ExportOutcome::AuthorityDead => {}
+        }
+    }
+
+    /// Durable checkpoints recorded (cadence + graceful shutdown).
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Export attempts aborted on a live-but-slow authority.
+    pub fn aborts(&self) -> u64 {
+        self.aborts
+    }
+
+    /// Annotations since the last disarm (model/test introspection).
+    pub fn anns_since(&self) -> usize {
+        self.anns_since
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arms_on_cadence_and_resets_on_write() {
+        let mut b = CkptBarrier::new(3);
+        assert!(!b.maybe_arm());
+        for _ in 0..3 {
+            b.note_annotation();
+        }
+        assert!(b.maybe_arm());
+        assert!(b.paused());
+        b.record(ExportOutcome::Written);
+        assert!(!b.paused());
+        assert_eq!(b.writes(), 1);
+        assert_eq!(b.anns_since(), 0);
+        assert!(!b.maybe_arm(), "a write resets the cadence");
+    }
+
+    #[test]
+    fn timeout_aborts_disarm_and_reset_cadence() {
+        let mut b = CkptBarrier::new(2);
+        b.note_annotation();
+        b.note_annotation();
+        assert!(b.maybe_arm());
+        b.record(ExportOutcome::TimedOut);
+        assert!(!b.paused(), "an abort must re-open admission");
+        assert_eq!(b.aborts(), 1);
+        assert_eq!(b.writes(), 0);
+        assert!(!b.maybe_arm(), "an abort re-arms only after a fresh cadence");
+        b.note_annotation();
+        b.note_annotation();
+        assert!(b.maybe_arm());
+    }
+
+    #[test]
+    fn dead_authority_keeps_the_barrier_armed() {
+        let mut b = CkptBarrier::new(1);
+        b.note_annotation();
+        assert!(b.maybe_arm());
+        b.record(ExportOutcome::AuthorityDead);
+        assert!(b.paused(), "respawn-and-retry happens under the same arm");
+        b.record(ExportOutcome::Written);
+        assert!(!b.paused());
+        assert_eq!(b.writes(), 1);
+    }
+
+    #[test]
+    fn zero_cadence_never_arms_but_still_records_shutdown_writes() {
+        let mut b = CkptBarrier::new(0);
+        for _ in 0..100 {
+            b.note_annotation();
+        }
+        assert!(!b.maybe_arm());
+        b.record(ExportOutcome::Written); // graceful-shutdown checkpoint
+        assert_eq!(b.writes(), 1);
+    }
+}

@@ -53,7 +53,7 @@
 use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock_unpoisoned, Arc, Mutex};
 
 use crate::codec::{self, Json};
 use crate::config::CascadeConfig;
@@ -567,16 +567,19 @@ impl CkptSink {
     /// valid shard set and `write_atomic`'s rename makes the last one
     /// win, so the newest manifest on disk is always loadable.
     pub fn deposit(&self, shard: usize, state: &ShardState) -> Result<bool> {
-        let mut inner = self.inner.lock().expect("ckpt sink poisoned");
+        // A poisoned sink lock is recovered, not propagated: the disk
+        // is the source of truth and `refresh_from_disk` re-adopts it
+        // at the top of every deposit, so whatever in-memory state a
+        // panicking depositor left behind is re-derived before use.
+        let mut inner = lock_unpoisoned(&self.inner);
         self.refresh_from_disk(&mut inner, shard);
         inner.seq += 1;
         let seq = inner.seq;
         let fname = format!("shard{shard}-{seq:08}.json");
         write_atomic(&self.dir.join(&fname), &state.to_json().to_string_compact())?;
         let old = inner.latest[shard].replace(fname);
-        let committed = if inner.latest.iter().all(Option::is_some) {
-            let files: Vec<String> =
-                inner.latest.iter().map(|f| f.clone().expect("all some")).collect();
+        let files: Vec<String> = inner.latest.iter().flatten().cloned().collect();
+        let committed = if files.len() == inner.latest.len() {
             let manifest = Json::obj(vec![
                 ("version", Json::Num(CKPT_VERSION as f64)),
                 ("seq", Json::Num(seq as f64)),
@@ -768,7 +771,17 @@ fn load_manifest(dir: &Path, mname: &str, expected_shards: usize) -> Result<Vec<
         }
         states[idx] = Some(state);
     }
-    Ok(states.into_iter().map(|s| s.expect("all shards placed")).collect())
+    // Infallible by counting (`files.len() == shards`, no duplicates,
+    // every index in range), but surfaced as a typed error anyway.
+    states
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.ok_or_else(|| {
+                Error::Ckpt(format!("manifest '{mname}': shard {i} never placed"))
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -12,8 +12,8 @@
 //! Arrival processes are driven by [`crate::prng::Rng`], so a load run
 //! is replayable bit-for-bit from its seed.
 
-use std::sync::mpsc::Sender;
-use std::thread::JoinHandle;
+use crate::sync::mpsc::Sender;
+use crate::sync::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::data::Sample;
@@ -110,14 +110,14 @@ pub fn drive_from(
     tx: Sender<Request>,
     first_id: u64,
 ) -> JoinHandle<usize> {
-    std::thread::spawn(move || {
+    crate::sync::thread::spawn(move || {
         let mut rng = Rng::new(seed);
         let schedule = arrival.schedule(samples.len(), &mut rng);
         let t0 = Instant::now();
         let mut sent = 0usize;
         for (i, (s, due)) in samples.iter().zip(&schedule).enumerate() {
             if let Some(wait) = due.checked_sub(t0.elapsed()) {
-                std::thread::sleep(wait);
+                crate::sync::thread::sleep(wait);
             }
             let ok = tx
                 .send(Request {

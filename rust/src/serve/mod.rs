@@ -65,6 +65,7 @@
 //! admission resumes — which is what makes a resumed β/chunk-count
 //! trajectory bit-identical to an uninterrupted run.
 
+pub mod barrier;
 pub mod ckpt;
 pub mod load;
 pub mod net;
@@ -72,10 +73,11 @@ pub mod pool;
 pub mod shard;
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use crate::sync::Arc;
 
 use crate::cascade::{replay_picks, CALIB_CACHE, CALIB_REPLAY, MLP_LR_SCALE, REPLAY_FACTOR};
 use crate::config::CascadeConfig;
@@ -87,6 +89,7 @@ use crate::prng::Rng;
 use crate::sim::Expert;
 use crate::util::{argmax, Percentiles, Ring};
 
+use barrier::{CkptBarrier, ExportOutcome};
 use ckpt::{CkptSink, LevelState, ShardState};
 use pool::{LevelPool, PoolInit, WorkerReply, WorkerSpec};
 
@@ -229,20 +232,30 @@ impl ServeReport {
 /// admission is bounded *globally* — previously each shard owned its
 /// own `max_pending`, letting an N-shard deployment hold N× the
 /// configured population.
-pub(crate) struct AdmissionGate {
+///
+/// **Verification.** The acquire/release/shed protocol is one of the
+/// three model-checked cores: [`crate::mc::models::GateSpec`] mirrors
+/// this CAS loop step-for-step and `tests/test_loom.rs` exhaustively
+/// explores its interleavings (no-lost-permit, `cur ≤ cap` always,
+/// `peak ≤ cap`, every client either admits or sheds exactly once) —
+/// plus a real-thread stress pass over *this* type that the nightly
+/// ThreadSanitizer job also runs. Keep the two in lockstep: any change
+/// here must be reflected in the model.
+pub struct AdmissionGate {
     cap: usize,
     cur: AtomicUsize,
     peak: AtomicUsize,
 }
 
 impl AdmissionGate {
-    pub(crate) fn new(cap: usize) -> Self {
+    /// A gate with `cap` in-system slots.
+    pub fn new(cap: usize) -> Self {
         AdmissionGate { cap, cur: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
     }
 
     /// Reserve one in-system slot; `false` when the budget is full
     /// (the caller sheds). Lock-free: shards race through CAS.
-    pub(crate) fn try_admit(&self) -> bool {
+    pub fn try_admit(&self) -> bool {
         let mut cur = self.cur.load(Ordering::Relaxed);
         loop {
             if cur >= self.cap {
@@ -264,13 +277,18 @@ impl AdmissionGate {
     }
 
     /// Release one slot (request answered).
-    pub(crate) fn release(&self) {
+    pub fn release(&self) {
         self.cur.fetch_sub(1, Ordering::AcqRel);
     }
 
     /// Largest population the gate ever admitted.
-    pub(crate) fn peak(&self) -> usize {
+    pub fn peak(&self) -> usize {
         self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Current in-system population (tests/diagnostics).
+    pub fn current(&self) -> usize {
+        self.cur.load(Ordering::Relaxed)
     }
 }
 
@@ -484,9 +502,7 @@ pub struct Server {
     ckpt_sink: Option<Arc<CkptSink>>,
     shard_idx: usize,
     resumed: bool,
-    anns_since_ckpt: usize,
-    ckpts_written: u64,
-    ckpt_aborts: u64,
+    barrier: CkptBarrier,
     base: RunBase,
 }
 
@@ -638,9 +654,7 @@ impl Server {
             ckpt_sink: None,
             shard_idx,
             resumed,
-            anns_since_ckpt: 0,
-            ckpts_written: 0,
-            ckpt_aborts: 0,
+            barrier: CkptBarrier::new(serve_cfg.ckpt_every),
             base,
             serve_cfg,
             cfg,
@@ -702,9 +716,6 @@ impl Server {
         let mut st =
             RunState::new(n_levels, self.serve_cfg.shard.replicas_per_level, &self.base);
         let mut inputs_open = true;
-        // Checkpoint barrier: while set, admission pauses so in-flight
-        // work drains to a quiescent point the checkpoint can capture.
-        let mut ckpt_due = false;
         // One-shot end-of-stream broadcast of below-interval staged
         // annotations (the drain-on-exit flush).
         let mut sync_flushed = false;
@@ -719,23 +730,21 @@ impl Server {
                 }
             }
 
-            // 0b. arm the checkpoint barrier when the cadence is due.
-            if inputs_open
-                && self.ckpt_sink.is_some()
-                && self.serve_cfg.ckpt_every > 0
-                && self.anns_since_ckpt >= self.serve_cfg.ckpt_every
-            {
-                ckpt_due = true;
+            // 0b. arm the checkpoint barrier when the cadence is due
+            //     (the pause→drain→export→resume state machine lives
+            //     in [`CkptBarrier`] — model-checked by test_loom).
+            if inputs_open && self.ckpt_sink.is_some() {
+                self.barrier.maybe_arm();
             }
 
             // 1. admit new requests (non-blocking drain + admission
             //    control); paused while a checkpoint barrier drains —
             //    arrivals wait in the channel, not in router state.
-            while inputs_open && !ckpt_due {
+            while inputs_open && !self.barrier.paused() {
                 match rx.try_recv() {
                     Ok(req) => self.admit(req, &mut st, &tx),
-                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
                         inputs_open = false;
                     }
                 }
@@ -743,7 +752,7 @@ impl Server {
 
             // 1b. absorb peer-shard annotations (cross-shard sync);
             //     also paused during a barrier so the drain converges.
-            if !ckpt_due {
+            if !self.barrier.paused() {
                 self.drain_sync(&mut st);
             }
 
@@ -759,7 +768,7 @@ impl Server {
                     if !st.queues[i].due(
                         self.serve_cfg.batch_max,
                         self.serve_cfg.deadline,
-                        !inputs_open || ckpt_due,
+                        !inputs_open || self.barrier.paused(),
                     ) {
                         break;
                     }
@@ -778,8 +787,8 @@ impl Server {
             //    loop keeps admitting/flushing/supervising).
             match self.reply_rx.recv_timeout(Duration::from_micros(200)) {
                 Ok(reply) => self.on_reply(reply, &mut st, &tx),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(crate::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(crate::sync::mpsc::RecvTimeoutError::Disconnected) => {
                     // Unreachable: every pool holds a reply_tx clone
                     // precisely so respawns can re-wire workers.
                     return Err(Error::Worker("reply channel closed".into()));
@@ -796,14 +805,14 @@ impl Server {
             //    barrier either (the pre-fix stall): the attempt is
             //    aborted, admission resumes, and the barrier re-arms
             //    only after another `ckpt_every` annotations.
-            if ckpt_due && st.idle() {
+            if self.barrier.paused() && st.idle() {
+                // `write_ckpt` records the outcome into the barrier:
+                // Written and TimedOut both disarm (TimedOut resets
+                // the cadence and counts an abort); AuthorityDead
+                // leaves the barrier armed so the next iteration's
+                // supervision respawns the worker and retries.
                 match self.write_ckpt(&st, self.serve_cfg.export_timeout) {
-                    Ok(true) => ckpt_due = false,
-                    Ok(false) => {
-                        ckpt_due = false;
-                        self.anns_since_ckpt = 0;
-                        self.ckpt_aborts += 1;
-                    }
+                    Ok(_) => {}
                     Err(Error::Worker(_)) => {}
                     Err(e) => return Err(e),
                 }
@@ -890,8 +899,8 @@ impl Server {
             replica_jobs: self.pools.iter().map(|p| p.replica_jobs.clone()).collect(),
             peak_pending: st.peak_pending,
             resumed: self.resumed,
-            ckpts: self.ckpts_written,
-            ckpt_aborts: self.ckpt_aborts,
+            ckpts: self.barrier.writes(),
+            ckpt_aborts: self.barrier.aborts(),
             final_betas: self.betas.clone(),
             train_batches: self
                 .pools
@@ -1004,6 +1013,8 @@ impl Server {
             if !defer {
                 // exit here
                 let pred = argmax(&probs);
+                // lint: allow(unwrap) — key existence was just proven
+                // by the `get_mut` above; a miss is a bug.
                 let state = st.pending.remove(&req_id).expect("state");
                 self.admission.release();
                 st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
@@ -1099,19 +1110,31 @@ impl Server {
     /// Capture the full learner state at a quiescent point and persist
     /// it through the sink (atomic write + manifest commit). `Ok(false)`
     /// means the attempt was aborted because a live authority did not
-    /// export within `timeout` — nothing was written and the caller
-    /// decides whether to retry or re-arm the next cadence.
+    /// export within `timeout` — nothing was written. Every outcome is
+    /// recorded into the [`CkptBarrier`], which owns the disarm/retry
+    /// decision: `Written` and `TimedOut` disarm, a dead authority
+    /// (`Err(Error::Worker)`) leaves the barrier armed for a
+    /// respawn-and-retry.
     fn write_ckpt(&mut self, st: &RunState, timeout: Duration) -> Result<bool> {
         let Some(sink) = self.ckpt_sink.clone() else {
             return Ok(true);
         };
         debug_assert!(st.idle(), "checkpoints must capture a quiescent router");
-        let Some(state) = self.export_state(st, timeout)? else {
-            return Ok(false);
+        let state = match self.export_state(st, timeout) {
+            Ok(Some(state)) => state,
+            Ok(None) => {
+                self.barrier.record(ExportOutcome::TimedOut);
+                return Ok(false);
+            }
+            Err(e) => {
+                if matches!(e, Error::Worker(_)) {
+                    self.barrier.record(ExportOutcome::AuthorityDead);
+                }
+                return Err(e);
+            }
         };
         sink.deposit(self.shard_idx, &state)?;
-        self.anns_since_ckpt = 0;
-        self.ckpts_written += 1;
+        self.barrier.record(ExportOutcome::Written);
         Ok(true)
     }
 
@@ -1166,8 +1189,8 @@ impl Server {
             loop {
                 match rx.try_recv() {
                     Ok(SyncBatch(items)) => remote.extend(items),
-                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
                         disconnected = true;
                         break;
                     }
@@ -1237,11 +1260,13 @@ impl Server {
             self.expert_outage_fallback(req_id, st, tx);
             return;
         };
+        // lint: allow(unwrap) — key existence was just proven by the
+        // `get` above and nothing ran in between; a miss is a bug.
         let state = st.pending.remove(&req_id).expect("pending state");
         self.admission.release();
         let n_levels = self.cfg.levels.len();
         st.llm_calls += 1;
-        self.anns_since_ckpt += 1;
+        self.barrier.note_annotation();
         // Cross-shard sync: stage the annotation for broadcast.
         if !self.sync_out.is_empty() && self.serve_cfg.shard.sync_interval > 0 {
             self.sync_staged.push((state.f.clone(), y_star));
@@ -1313,6 +1338,8 @@ impl Server {
             st.queues[0].push(Job { req_id, probe: false, f, enq: Instant::now() });
             return;
         }
+        // lint: allow(unwrap) — key existence was just proven by the
+        // `get` above; a miss is a bug.
         let state = st.pending.remove(&req_id).expect("pending state");
         self.admission.release();
         let mut mix = vec![0.0f32; self.classes];
@@ -1366,7 +1393,7 @@ mod tests {
             Server::new(cfg, 2, expert, ServeConfig::default(), "artifacts").unwrap();
         let (req_tx, req_rx) = channel();
         let (resp_tx, resp_rx) = channel();
-        let submit = std::thread::spawn(move || {
+        let submit = crate::sync::thread::spawn(move || {
             for (i, s) in b.samples.iter().enumerate() {
                 req_tx
                     .send(Request {

@@ -62,10 +62,10 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::{self, JoinHandle};
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::{lock_unpoisoned, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::codec::{self, Json};
@@ -356,6 +356,9 @@ fn spawn_writer(mut stream: TcpStream) -> (WireTx, JoinHandle<()>) {
     let (tx, rx) = channel::<Vec<u8>>();
     let handle = thread::spawn(move || {
         for bytes in rx.iter() {
+            // lint: allow(raw-write) — drains frames that were already
+            // encoded at the send site; `encode()` is the single place
+            // the MAX_FRAME bound is enforced.
             if stream.write_all(&bytes).is_err() {
                 break; // peer gone; senders' failures are ignored
             }
@@ -552,7 +555,7 @@ pub fn serve(front: ShardFront, listener: TcpListener) -> Result<ShardReport> {
     let reg = registry.clone();
     let dispatcher = thread::spawn(move || {
         for resp in resp_rx.iter() {
-            let target = reg.lock().expect("registry").remove(&resp.id);
+            let target = lock_unpoisoned(&reg).remove(&resp.id);
             if let Some(w) = target {
                 let frame = if resp.shed {
                     Frame::Shed {
@@ -614,7 +617,7 @@ pub fn serve(front: ShardFront, listener: TcpListener) -> Result<ShardReport> {
     dispatcher
         .join()
         .map_err(|_| Error::Worker("response dispatcher panicked".into()))?;
-    registry.lock().expect("registry").clear();
+    lock_unpoisoned(&registry).clear();
     match (accept_err, result) {
         (None, Ok(report)) => {
             let bytes = encode(&Frame::Report(report.to_json()));
@@ -663,9 +666,7 @@ fn spawn_conn_reader(
                 match fb.next() {
                     Ok(Some(Frame::Request(req))) => {
                         if let Some((tx, w)) = &live {
-                            registry
-                                .lock()
-                                .expect("registry")
+                            lock_unpoisoned(&registry)
                                 .insert(req.id, w.clone());
                             let _ = tx.send(req);
                         }
@@ -973,7 +974,7 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
                                 Frame::Shed { id, .. } => *id,
                                 _ => unreachable!(),
                             };
-                            let target = registry.lock().expect("registry").remove(&id);
+                            let target = lock_unpoisoned(&registry).remove(&id);
                             if let Some(w) = target {
                                 let _ = w.send(encode(&frame));
                             }
@@ -1000,7 +1001,7 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
                             }
                         }
                         Ok(Some(Frame::Report(v))) => {
-                            reports.lock().expect("reports")[i] = Some(v);
+                            lock_unpoisoned(&reports)[i] = Some(v);
                         }
                         Ok(Some(_)) => {}
                         Ok(None) => break,
@@ -1059,7 +1060,7 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
         let _ = h.join();
     }
     let collected: Vec<Option<Json>> =
-        std::mem::take(&mut *reports.lock().expect("reports"));
+        std::mem::take(&mut *lock_unpoisoned(&reports));
     let mut per_shard = Vec::with_capacity(n);
     for (i, r) in collected.into_iter().enumerate() {
         per_shard.push(r.ok_or_else(|| {
@@ -1087,7 +1088,7 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
         ("per_shard", Json::Arr(per_shard)),
     ]);
 
-    registry.lock().expect("registry").clear();
+    lock_unpoisoned(&registry).clear();
     let bytes = encode(&Frame::Report(merged.clone()));
     for Conn { wtx, writer, reader, stream } in conns {
         let _ = wtx.send(bytes.clone());
@@ -1123,9 +1124,7 @@ fn spawn_front_client_reader(
                 match fb.next() {
                     Ok(Some(Frame::Request(req))) => {
                         if let Some(w) = &live {
-                            registry
-                                .lock()
-                                .expect("registry")
+                            lock_unpoisoned(&registry)
                                 .insert(req.id, w.clone());
                             let s = shard_of(req.id, n);
                             let _ = shard_wtxs[s].send(encode(&Frame::Request(req)));

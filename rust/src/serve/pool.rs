@@ -18,11 +18,12 @@
 //! the last publication are lost (and the router's replay caches
 //! re-teach those on the next training trigger).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{lock_unpoisoned, Arc, Mutex};
 
 use crate::config::{Engine, ModelKind};
 use crate::error::{Error, Result};
@@ -43,6 +44,15 @@ pub struct LevelSnapshot {
 
 /// Shared slot the authority publishes into and replicas/respawns read.
 /// Lives in an `Arc` owned by the pool so it survives worker respawns.
+///
+/// **Verification.** The publish/install ordering (snapshot under the
+/// mutex first, `published_chunks` next, `seq` bumped *last* with
+/// Release so a reader that observes the new seq is guaranteed to
+/// find a snapshot at least that fresh) is one of the three
+/// model-checked cores: [`crate::mc::models::SlotSpec`] mirrors it
+/// step-for-step and `tests/test_loom.rs` explores every interleaving
+/// — including a deliberately broken store order the checker must
+/// catch. Keep changes here in lockstep with the model.
 pub(crate) struct SnapshotSlot {
     seq: AtomicU64,
     /// Authority `train_chunks` at the last publication (staleness
@@ -66,14 +76,22 @@ impl SnapshotSlot {
     }
 
     /// The latest published snapshot, if any.
+    ///
+    /// A poisoned lock is *recovered*, not propagated: a worker that
+    /// panicked while holding the slot must not cascade-kill the
+    /// supervisor (or the replacement workers it spawns). Recovery is
+    /// sound because the slot's value is replaced whole under the lock
+    /// — it is either the old `Arc` or the new one, never torn — and
+    /// the panic itself is already accounted as a restart by the
+    /// respawn path ([`LevelPool::respawn`]).
     pub fn latest(&self) -> Option<Arc<LevelSnapshot>> {
-        self.latest.lock().expect("snapshot slot poisoned").clone()
+        lock_unpoisoned(&self.latest).clone()
     }
 
     fn publish(&self, model: Snapshot, calib: Snapshot, chunks: u64) {
         let seq = self.seq.load(Ordering::Acquire) + 1;
         let snap = Arc::new(LevelSnapshot { seq, model, calib });
-        *self.latest.lock().expect("snapshot slot poisoned") = Some(snap);
+        *lock_unpoisoned(&self.latest) = Some(snap);
         self.published_chunks.store(chunks, Ordering::Release);
         // seq is bumped last: a reader that observes the new seq is
         // guaranteed to find the new snapshot in the slot.
@@ -165,7 +183,7 @@ fn spawn_worker(
 ) -> Worker {
     let (tx, rx): (Sender<WorkerMsg>, Receiver<WorkerMsg>) = channel();
     let spec = spec.clone();
-    let handle = std::thread::spawn(move || {
+    let handle = crate::sync::thread::spawn(move || {
         // The engine is constructed on this thread (PjRtClient is !Send).
         let is_pjrt = spec.engine.is_pjrt();
         let pjrt = if is_pjrt {
@@ -173,15 +191,22 @@ fn spawn_worker(
         } else {
             None
         };
+        // lint: allow(unwrap) — a worker-thread panic IS the supervised
+        // crash path: the router detects the dead thread and respawns
+        // (warm, from the latest snapshot); nothing above this thread
+        // unwinds. Same for the restore expects below.
         let mut model = build_level(pjrt.as_ref(), spec.kind, spec.classes, spec.seed)
             .expect("worker model");
+        // lint: allow(unwrap) — supervised worker thread (see above).
         let mut calib = build_calibrator(pjrt.as_ref(), spec.classes, spec.seed)
             .expect("worker calibrator");
         // Warm start: every spawn (first or respawn, authority or
         // replica) resumes from the latest published weights.
         let mut installed = 0u64;
         if let Some(s) = slot.latest() {
+            // lint: allow(unwrap) — supervised worker thread (see above).
             model.restore(&s.model).expect("warm-start model restore");
+            // lint: allow(unwrap) — supervised worker thread (see above).
             calib.restore(&s.calib).expect("warm-start calibrator restore");
             installed = s.seq;
         }
@@ -192,7 +217,12 @@ fn spawn_worker(
                     // weights are always at least as fresh as it.
                     if replica > 0 && slot.seq() > installed {
                         if let Some(s) = slot.latest() {
+                            // lint: allow(unwrap) — supervised worker
+                            // thread; a failed install is a crash the
+                            // router respawns from (see spawn header).
                             model.restore(&s.model).expect("replica model install");
+                            // lint: allow(unwrap) — supervised worker
+                            // thread (see above).
                             calib.restore(&s.calib).expect("replica calib install");
                             installed = s.seq;
                         }
@@ -495,7 +525,7 @@ mod tests {
         let t0 = Instant::now();
         while !f() {
             assert!(t0.elapsed() < Duration::from_secs(10), "timeout waiting for {what}");
-            std::thread::sleep(Duration::from_millis(2));
+            crate::sync::thread::sleep(Duration::from_millis(2));
         }
     }
 
@@ -545,6 +575,57 @@ mod tests {
             crate::models::Calibrator::score(&mut expect_calib, probs),
             "calibrator state must warm-restore too"
         );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn poisoned_snapshot_slot_recovers_instead_of_cascading() {
+        // ISSUE 7 satellite: a worker panicking while it holds the
+        // SnapshotSlot mutex used to poison it for everyone — the
+        // supervisor's next `latest()` (or a respawned worker's warm
+        // start) would then panic too, cascading one worker death into
+        // a router death. The slot now recovers the lock (its value is
+        // replaced whole, so recovery cannot observe torn state) and
+        // the original death is still counted as a restart.
+        let (reply_tx, reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 1, 1, reply_tx, None);
+        let p = Pipeline::default();
+        pool.send_train(train_batch(&p), 0.5); // publish_every = 1 → publishes
+        wait_for("publication", || pool.published() >= 1);
+
+        // Poison the slot exactly as a mid-publish panic would.
+        let slot = pool.slot.clone();
+        let dying = crate::sync::thread::spawn(move || {
+            let _guard = slot.latest.lock().expect("fresh lock");
+            panic!("worker dies while holding the snapshot slot");
+        });
+        assert!(dying.join().is_err(), "the poisoning thread must panic");
+
+        // Supervisor-side reads recover rather than propagate…
+        assert!(pool.latest_snapshot().is_some());
+        assert_eq!(pool.published(), 1);
+
+        // …and the supervised lifecycle continues: the dead worker is
+        // respawned (counted in restarts) and the replacement installs
+        // from the recovered slot and serves.
+        pool.crash(0);
+        wait_for("crash", || pool.workers[0].handle.is_finished());
+        pool.respawn(0, 16).expect("respawn past a poisoned slot");
+        assert_eq!(pool.restarts, 1, "the death around the poisoning is counted");
+        assert_eq!(pool.warm_respawns, 1, "recovered slot still warm-starts");
+        let probe = Arc::new(p.featurize("kw0x001"));
+        assert!(pool.send_infer(0, vec![Job {
+            req_id: 7,
+            probe: false,
+            f: probe,
+            enq: Instant::now(),
+        }]));
+        let reply = reply_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.epoch, 1);
+
+        // A post-poisoning publication also goes through.
+        pool.send_train(train_batch(&p), 0.5);
+        wait_for("re-publication", || pool.published() >= 2);
         pool.shutdown();
     }
 

@@ -21,8 +21,8 @@
 //! single-learner parity this topology accepts; `shards = 1` remains
 //! bit-for-bit the single router.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::Arc;
 
 use crate::config::CascadeConfig;
 use crate::error::{Error, Result};
@@ -310,7 +310,7 @@ impl ShardFront {
             let (shard_tx, shard_rx) = channel::<Request>();
             let resp_tx = tx.clone();
             shard_txs.push(shard_tx);
-            handles.push(std::thread::spawn(move || srv.serve(shard_rx, resp_tx)));
+            handles.push(crate::sync::thread::spawn(move || srv.serve(shard_rx, resp_tx)));
         }
         drop(tx);
         // Dispatch on this thread: the front is pure routing (hash +

@@ -1,0 +1,45 @@
+//! Single import funnel for every concurrency primitive the crate
+//! uses — `Arc`, `Mutex`, atomics, `mpsc` channels, and threads all
+//! come through here instead of `std::sync`/`std::thread` directly.
+//!
+//! Two reasons to centralize:
+//!
+//! 1. **Model-checking seam.** The protocol cores extracted into
+//!    [`crate::mc`] (admission gate, snapshot slot, checkpoint
+//!    barrier) are exhaustively explored over interleavings by
+//!    `tests/test_loom.rs`. Swapping the whole crate onto an
+//!    instrumented runtime (the `loom` crate, when a vendored copy is
+//!    available) is a one-file change: re-export `loom::sync`/
+//!    `loom::thread` here under `cfg(loom)` and nothing else moves.
+//!    Today the default and `--cfg loom` builds both re-export `std`;
+//!    `--cfg loom` instead raises the in-tree checker from its
+//!    bounded quick profile to exhaustive exploration (see
+//!    `tests/test_loom.rs`).
+//! 2. **Lint surface.** `ocl-lint` (rule `sync-funnel`) fails the
+//!    build on any direct `std::sync`/`std::thread` import outside
+//!    this file, so new concurrency can't silently bypass the seam.
+//!
+//! The re-exports are deliberately the *narrow* subset the crate
+//! actually uses — adding a primitive here is a conscious act that
+//! should come with a model or at least a lint story.
+
+pub use std::sync::mpsc;
+pub use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+pub use std::thread;
+
+/// The atomic types and orderings the serve layer uses.
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Lock a mutex, recovering from poisoning instead of propagating the
+/// panic of whichever thread died while holding it.
+///
+/// Sound only where the protected data is *replaced whole* under the
+/// lock (snapshot slots, response registries, report maps) so a
+/// mid-update panic cannot leave it torn. Callers for whom poisoning
+/// would mean torn state must keep the explicit `lock().expect(..)`
+/// with a `// lint: allow(unwrap)` justification instead.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

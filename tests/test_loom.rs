@@ -1,0 +1,224 @@
+//! Model-checked exploration of the serve layer's concurrency
+//! protocol cores (DESIGN.md §11), plus meta-tests proving the
+//! checker catches planted bugs, plus real-thread stress over the
+//! production `AdmissionGate`.
+//!
+//! Two profiles:
+//!
+//! * plain `cargo test` — bounded exploration (a generous step budget
+//!   that still covers the full space for the default model sizes);
+//! * `RUSTFLAGS="--cfg loom" cargo test --test test_loom --release` —
+//!   exhaustive: larger model sizes, unbudgeted search, and every run
+//!   must report `complete == true` (no truncation). This is the CI
+//!   `loom` job.
+
+use ocl::mc::models::{BarrierSpec, GateSpec, SlotSpec};
+use ocl::mc::{Explorer, Violation};
+use ocl::serve::barrier::ExportOutcome::{AuthorityDead, TimedOut, Written};
+use ocl::serve::AdmissionGate;
+
+/// Exhaustive under `--cfg loom`; generously bounded otherwise.
+fn explorer() -> Explorer {
+    if cfg!(loom) {
+        Explorer::exhaustive()
+    } else {
+        Explorer::bounded(2_000_000)
+    }
+}
+
+/// Under the exhaustive profile a run must cover the whole space;
+/// under the bounded profile truncation is tolerated (but with the
+/// default sizes the budget covers everything anyway).
+fn assert_covered(name: &str, result: Result<ocl::mc::Exploration, Violation>) {
+    let x = result.unwrap_or_else(|v| panic!("{name}: {v}"));
+    if cfg!(loom) {
+        assert!(x.complete, "{name}: exhaustive profile truncated at {} steps", x.steps);
+    }
+    assert!(x.states > 0, "{name}: explored nothing");
+}
+
+// ---------------------------------------------------------------------------
+// Admission gate: exactly-once permits, no lost permit, shed accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gate_oversubscribed_holds_permit_accounting() {
+    let clients = if cfg!(loom) { 4 } else { 3 };
+    let spec = GateSpec { clients, cap: 2, blind_store: false };
+    assert_covered("gate 4c/2cap", explorer().explore(&spec));
+}
+
+#[test]
+fn gate_undersubscribed_never_sheds() {
+    let spec = GateSpec { clients: 2, cap: 3, blind_store: false };
+    assert_covered("gate 2c/3cap", explorer().explore(&spec));
+}
+
+#[test]
+fn gate_cap_one_serializes() {
+    let clients = if cfg!(loom) { 4 } else { 3 };
+    let spec = GateSpec { clients, cap: 1, blind_store: false };
+    assert_covered("gate Nc/1cap", explorer().explore(&spec));
+}
+
+/// Meta-test: replacing the CAS with a blind store must be caught —
+/// either as broken permit accounting mid-run or as leak/underflow at
+/// the end. A checker that passes this gate variant checks nothing.
+#[test]
+fn gate_meta_blind_store_is_caught() {
+    let spec = GateSpec { clients: 3, cap: 2, blind_store: true };
+    let v = Explorer::exhaustive()
+        .explore(&spec)
+        .expect_err("the blind-store gate must violate permit accounting");
+    match v {
+        Violation::Invariant { msg, trace } => {
+            assert!(
+                msg.contains("permit") || msg.contains("over-admission"),
+                "unexpected failure: {msg}"
+            );
+            assert!(!trace.is_empty(), "a reproducing schedule must be reported");
+        }
+        Violation::Final { msg, .. } => {
+            assert!(msg.contains("permit") || msg.contains("leaked"), "{msg}");
+        }
+        Violation::Deadlock { trace } => panic!("expected accounting failure, got deadlock {trace:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot slot: publish/install ordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slot_readers_never_install_stale_snapshots() {
+    let (pubs, readers) = if cfg!(loom) { (3, 2) } else { (2, 2) };
+    let spec = SlotSpec { pubs, readers, seq_first: false };
+    assert_covered("slot publish/install", explorer().explore(&spec));
+}
+
+#[test]
+fn slot_single_reader_single_pub() {
+    let spec = SlotSpec { pubs: 1, readers: 1, seq_first: false };
+    assert_covered("slot 1p/1r", explorer().explore(&spec));
+}
+
+/// Meta-test: releasing the sequence number before the payload lands
+/// (the store-order bug the real `SnapshotSlot::publish` is written
+/// to avoid) must produce a stale install the checker reports.
+#[test]
+fn slot_meta_seq_first_ordering_is_caught() {
+    let spec = SlotSpec { pubs: 1, readers: 1, seq_first: true };
+    let v = Explorer::exhaustive()
+        .explore(&spec)
+        .expect_err("seq-before-payload must let a reader install stale state");
+    match v {
+        Violation::Invariant { msg, trace } => {
+            assert!(msg.contains("stale install"), "unexpected failure: {msg}");
+            assert!(!trace.is_empty());
+        }
+        other => panic!("expected a stale-install invariant violation, got {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint barrier: pause → drain → export → resume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_clean_write_reopens_admission() {
+    let requests = if cfg!(loom) { 5 } else { 4 };
+    let spec = BarrierSpec { requests, every: 2, outcomes: vec![Written, Written] };
+    assert_covered("barrier written", explorer().explore(&spec));
+}
+
+#[test]
+fn barrier_slow_authority_timeout_reopens_admission() {
+    // The PR 6 liveness arm: an alive-but-wedged authority aborts the
+    // attempt; admission must re-open and the cadence reset.
+    let spec = BarrierSpec { requests: 4, every: 2, outcomes: vec![TimedOut, Written] };
+    assert_covered("barrier timeout", explorer().explore(&spec));
+}
+
+#[test]
+fn barrier_dead_authority_retries_under_the_same_arm() {
+    let spec =
+        BarrierSpec { requests: 4, every: 2, outcomes: vec![AuthorityDead, Written, Written] };
+    assert_covered("barrier respawn-retry", explorer().explore(&spec));
+}
+
+#[test]
+fn barrier_double_death_then_write() {
+    let spec = BarrierSpec {
+        requests: 3,
+        every: 3,
+        outcomes: vec![AuthorityDead, AuthorityDead, Written],
+    };
+    assert_covered("barrier double respawn", explorer().explore(&spec));
+}
+
+/// Meta-test: a script whose dead authority is never resolved strands
+/// the barrier armed — the checker must flag the wedged admission
+/// (this is exactly the failure mode the PR 6 export timeout exists
+/// to prevent in production).
+#[test]
+fn barrier_meta_unresolved_death_wedges_admission() {
+    let spec = BarrierSpec { requests: 2, every: 1, outcomes: vec![AuthorityDead] };
+    let v = Explorer::exhaustive()
+        .explore(&spec)
+        .expect_err("an unresolved dead authority must wedge the stream");
+    match v {
+        Violation::Deadlock { trace } => assert!(!trace.is_empty()),
+        Violation::Final { msg, .. } => assert!(msg.contains("wedged"), "{msg}"),
+        Violation::Invariant { msg, .. } => panic!("unexpected invariant failure: {msg}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real threads against the production gate (sanity beyond the model;
+// also the surface the ThreadSanitizer CI job hammers)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_admission_gate_under_thread_stress() {
+    use ocl::sync::atomic::{AtomicUsize, Ordering};
+    use ocl::sync::Arc;
+
+    let cap = 8usize;
+    let threads = 16usize;
+    let per_thread = if cfg!(loom) { 500 } else { 200 };
+
+    let gate = Arc::new(AdmissionGate::new(cap));
+    let admitted = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicUsize::new(0));
+
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let gate = Arc::clone(&gate);
+            let admitted = Arc::clone(&admitted);
+            let shed = Arc::clone(&shed);
+            ocl::sync::thread::spawn(move || {
+                for _ in 0..per_thread {
+                    if gate.try_admit() {
+                        admitted.fetch_add(1, Ordering::Relaxed);
+                        let seen = gate.current();
+                        assert!(seen >= 1 && seen <= cap, "in-system {seen} out of range");
+                        std::hint::spin_loop();
+                        gate.release();
+                    } else {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress thread panicked");
+    }
+
+    let admitted = admitted.load(Ordering::Relaxed);
+    let shed = shed.load(Ordering::Relaxed);
+    assert_eq!(admitted + shed, threads * per_thread, "every attempt resolved");
+    assert_eq!(gate.current(), 0, "all permits returned");
+    assert!(gate.peak() <= cap, "peak {} exceeded cap {cap}", gate.peak());
+    assert!(admitted >= threads, "gate admitted implausibly little");
+}

@@ -374,6 +374,99 @@ fn socket_backpressure_sheds_immediately_and_respects_the_global_gate() {
     }
 }
 
+/// The multi-process `--front` topology has no cross-process global
+/// admission gate (a known ROADMAP follow-up): each shard *process*
+/// brings its own budget. Pin that semantics down — under an unpaced
+/// blast through a real front (`run_front`) over real sockets, every
+/// shard process sheds through its own gate and no process's
+/// `peak_pending` ever exceeds its local `max_pending`.
+#[test]
+fn front_topology_admission_gates_are_per_process() {
+    let n = 320;
+    let seed = 83u64;
+    let cap = 4usize;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, seed, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = seed;
+        c
+    };
+    let serve_cfg =
+        ServeConfig { max_pending: cap, ckpt_every: 0, ..ServeConfig::default() };
+
+    // Two shard "processes" (thread-hosted, but over real TCP — the
+    // exact code path `ocl serve --listen --shard-id k` runs).
+    let mut shard_addrs = Vec::new();
+    let mut shard_handles = Vec::new();
+    for k in 0..2usize {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        shard_addrs.push(listener.local_addr().unwrap().to_string());
+        let (srv, cursor) = net::build_shard_server(
+            cfg.clone(),
+            b.classes,
+            expert_for(&b, seed),
+            serve_cfg.clone(),
+            "artifacts",
+            net::ShardSlot { id: k, of: 2 },
+            None,
+        )
+        .unwrap();
+        shard_handles
+            .push(std::thread::spawn(move || net::serve_shard(srv, cursor, k, listener)));
+    }
+    let front_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let front_addr = front_listener.local_addr().unwrap().to_string();
+    let peers = shard_addrs.clone();
+    let front = std::thread::spawn(move || net::run_front(&peers, front_listener));
+
+    let client = Client::connect_retry(&front_addr, Duration::from_secs(10)).unwrap();
+    let tx = client.request_sender();
+    for (i, s) in b.samples.iter().enumerate() {
+        tx.send(Request {
+            id: i as u64,
+            text: s.text.clone(),
+            truth: s.label,
+            sample: s.clone(),
+        })
+        .expect("front writer alive");
+    }
+    drop(tx);
+    let (responses, _) = client.finish().unwrap();
+    let merged = front.join().unwrap().unwrap();
+    let reports: Vec<_> =
+        shard_handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+
+    assert_eq!(responses.len(), n, "exactly-once across the two-hop wire");
+    let total: usize = reports.iter().map(|r| r.served + r.shed).sum();
+    assert_eq!(total, n, "hash dispatch covered every request");
+    for (k, r) in reports.iter().enumerate() {
+        assert!(r.served > 0, "shard {k} served nothing — dispatch broken");
+        assert!(
+            r.shed > 0,
+            "shard {k} never shed: a {cap}-deep per-process gate under an \
+             unpaced blast must refuse"
+        );
+        assert!(
+            r.peak_pending <= cap,
+            "shard {k} admission gate violated: peak_pending {} > {cap}",
+            r.peak_pending
+        );
+    }
+    // The client-visible shed set is exactly the union of the
+    // per-process gates' refusals, and the front's merged report
+    // agrees with the shard-side counters.
+    let shed_wire = responses.iter().filter(|r| r.shed).count();
+    assert_eq!(shed_wire, reports.iter().map(|r| r.shed).sum::<usize>());
+    assert_eq!(
+        merged.get("served").and_then(Json::as_usize).unwrap(),
+        reports.iter().map(|r| r.served).sum::<usize>()
+    );
+    assert_eq!(
+        merged.get("shed").and_then(Json::as_usize).unwrap(),
+        shed_wire
+    );
+}
+
 // --- multi-process crash test ----------------------------------------------
 
 fn spawn_serve(addr: &str, ckpt: Option<(&std::path::Path, &str)>) -> Child {
