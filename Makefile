@@ -8,7 +8,7 @@
 CARGO ?= cargo
 BIN   := target/release/ocl
 
-.PHONY: all build test lint loom reproduce reproduce-quick reports-check docs bench-serve clean
+.PHONY: all build test lint loom reproduce reproduce-quick reports-check docs bench-serve bench-kernels bench-commit bench-check clean
 
 all: build
 
@@ -54,6 +54,27 @@ loom:
 # dependent — not part of the byte-identical record).
 bench-serve:
 	$(CARGO) bench --bench bench_serve
+
+# Host-model kernel microbenches (matmul sparse/dense, batched vs
+# per-sample forward at b=1/8/32) with the tentpole ≥2× speedup gate.
+bench-kernels:
+	BENCH_KERNELS_GATE=1 $(CARGO) bench --bench bench_kernels
+
+# Refresh the committed perf trajectory (DESIGN.md §12): rerun both
+# bench binaries with their JSON baselines pointed at the repo root,
+# then commit the updated BENCH_*.json alongside the PR.
+# (absolute paths: cargo runs bench binaries with cwd = rust/)
+bench-commit:
+	BENCH_KERNELS_JSON=$(CURDIR)/BENCH_KERNELS.json $(CARGO) bench --bench bench_kernels
+	BENCH_SERVE_JSON=$(CURDIR)/BENCH_SERVE.json $(CARGO) bench --bench bench_serve
+
+# Gate the current tree against the committed baselines (what CI runs;
+# tolerance is generous — the gate is for order-of-magnitude drift).
+bench-check:
+	BENCH_KERNELS_GATE=1 $(CARGO) bench --bench bench_kernels -- \
+		--baseline $(CURDIR)/BENCH_KERNELS.json --baseline-tol 100
+	$(CARGO) bench --bench bench_serve -- \
+		--baseline $(CURDIR)/BENCH_SERVE.json --baseline-tol 100
 
 clean:
 	$(CARGO) clean

@@ -1,0 +1,274 @@
+//! Bench: host-model kernel microbenchmarks — the committed perf
+//! trajectory for the pure-rust inference path.
+//!
+//! Three groups:
+//! 1. `matmul` sparse vs dense at the exact shapes `TfmArch::dims`
+//!    produces (attention/FFN projections for both presets);
+//! 2. per-model forward (HostTfm / HostLr / HostMlp) at batch 1/8/32,
+//!    per-sample loop vs the batched `predict_batch_into` kernels;
+//! 3. a ns/query + speedup-vs-per-sample table derived from (2).
+//!
+//! Emits the JSON baseline (`target/bench_kernels.json`, override with
+//! `BENCH_KERNELS_JSON`); the committed copy at the repo root
+//! (`BENCH_KERNELS.json`, refreshed by `make bench-commit`) is what CI
+//! gates against via `--baseline`. With `BENCH_KERNELS_GATE=1` the run
+//! additionally asserts the tentpole speedup: batched HostTfm at b=8
+//! must be ≥2× the per-sample path per query.
+//! `cargo bench --bench bench_kernels`
+
+use ocl::bench_support::{self, black_box, Bench};
+use ocl::codec::Json;
+use ocl::hostmodel::tensor as t;
+use ocl::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch, TfmScratch};
+use ocl::prng::Rng;
+
+/// Random dense matrix in [-1, 1).
+fn mat(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn mom(bench: &Bench, name: &str) -> f64 {
+    bench
+        .results()
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.mom_ms())
+        .unwrap_or(0.0)
+}
+
+fn bench_matmul(bench: &mut Bench, rng: &mut Rng) {
+    // The shapes every transformer layer actually runs: [L,d]·[d,d]
+    // (Q/K/V/O), [L,d]·[d,f] (FFN up), [L,f]·[f,d] (FFN down).
+    for (tag, arch) in [("base", TfmArch::Base), ("large", TfmArch::Large)] {
+        let (_v, l, d, _h, _lay, f) = arch.dims();
+        for (m, k, n) in [(l, d, d), (l, d, f), (l, f, d)] {
+            let a = mat(rng, m * k);
+            let b = mat(rng, k * n);
+            let mut c = vec![0.0f32; m * n];
+            let reps = 8;
+            let name_s = format!("matmul-sparse-{tag}-{m}x{k}x{n}");
+            bench.case_throughput(&name_s, reps as f64, || {
+                for _ in 0..reps {
+                    t::matmul(&a, &b, &mut c, m, k, n);
+                }
+                black_box(&c);
+            });
+            let name_d = format!("matmul-dense-{tag}-{m}x{k}x{n}");
+            bench.case_throughput(&name_d, reps as f64, || {
+                for _ in 0..reps {
+                    t::matmul_dense(&a, &b, &mut c, m, k, n);
+                }
+                black_box(&c);
+            });
+        }
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE9C);
+    let mut bench = Bench::new("host kernels", 2, 7);
+
+    bench_matmul(&mut bench, &mut rng);
+
+    // --- HostTfm forward: per-sample reference vs fused batch -------
+    let classes = 4;
+    let tfm = HostTfm::new(TfmArch::Base, classes, 7);
+    let (vocab, l, _d, _h, _lay, _f) = TfmArch::Base.dims();
+    let max_b = 32;
+    let ids: Vec<Vec<i32>> = (0..max_b)
+        .map(|_| (0..l).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let masks: Vec<Vec<f32>> = (0..max_b)
+        .map(|_| {
+            let live = l / 2 + rng.below(l / 2);
+            (0..l).map(|i| if i < live { 1.0 } else { 0.0 }).collect()
+        })
+        .collect();
+    let idr: Vec<&[i32]> = ids.iter().map(|v| v.as_slice()).collect();
+    let mr: Vec<&[f32]> = masks.iter().map(|v| v.as_slice()).collect();
+    let mut scratch = TfmScratch::new();
+    let mut out = vec![0.0f32; max_b * classes];
+    for b in [1usize, 8, 32] {
+        bench.case_throughput(&format!("tfm-base-persample-b{b}"), b as f64, || {
+            for i in 0..b {
+                black_box(tfm.predict(&ids[i], &masks[i]));
+            }
+        });
+        bench.case_throughput(&format!("tfm-base-batched-b{b}"), b as f64, || {
+            tfm.predict_batch_into(
+                &idr[..b],
+                &mr[..b],
+                &mut scratch,
+                &mut out[..b * classes],
+            );
+            black_box(&out);
+        });
+    }
+
+    // --- HostLr forward (hashed bag-of-words style sparse rows) -----
+    let dim = 4096;
+    let lr = {
+        let mut m = HostLr::new(dim, classes);
+        let xs: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                let mut x = vec![0.0f32; dim];
+                for _ in 0..64 {
+                    x[rng.below(dim)] = rng.f32();
+                }
+                x
+            })
+            .collect();
+        let ys: Vec<usize> = (0..8).map(|_| rng.below(classes)).collect();
+        let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        m.train_batch(&xr, &ys, 0.3);
+        m
+    };
+    let lr_xs: Vec<Vec<f32>> = (0..max_b)
+        .map(|_| {
+            let mut x = vec![0.0f32; dim];
+            for _ in 0..64 {
+                x[rng.below(dim)] = rng.f32();
+            }
+            x
+        })
+        .collect();
+    let lr_xr: Vec<&[f32]> = lr_xs.iter().map(|v| v.as_slice()).collect();
+    let mut lr_out = vec![0.0f32; max_b * classes];
+    let lr_reps = 64;
+    for b in [1usize, 8, 32] {
+        bench.case_throughput(
+            &format!("lr-persample-b{b}"),
+            (lr_reps * b) as f64,
+            || {
+                for _ in 0..lr_reps {
+                    for x in &lr_xr[..b] {
+                        black_box(lr.predict(x));
+                    }
+                }
+            },
+        );
+        bench.case_throughput(
+            &format!("lr-batched-b{b}"),
+            (lr_reps * b) as f64,
+            || {
+                for _ in 0..lr_reps {
+                    lr.predict_batch_into(&lr_xr[..b], &mut lr_out[..b * classes]);
+                }
+                black_box(&lr_out);
+            },
+        );
+    }
+
+    // --- HostMlp calibrator score -----------------------------------
+    let mlp = HostMlp::new(classes, 11);
+    let mlp_ps: Vec<Vec<f32>> = (0..max_b)
+        .map(|_| {
+            let raw: Vec<f32> = (0..classes).map(|_| rng.f32() + 1e-3).collect();
+            let s: f32 = raw.iter().sum();
+            raw.iter().map(|v| v / s).collect()
+        })
+        .collect();
+    let mlp_pr: Vec<&[f32]> = mlp_ps.iter().map(|v| v.as_slice()).collect();
+    let mut feat = Vec::new();
+    let mut mlp_out = vec![0.0f32; max_b];
+    let mlp_reps = 256;
+    for b in [1usize, 8, 32] {
+        bench.case_throughput(
+            &format!("mlp-persample-b{b}"),
+            (mlp_reps * b) as f64,
+            || {
+                for _ in 0..mlp_reps {
+                    for p in &mlp_pr[..b] {
+                        black_box(mlp.predict(p));
+                    }
+                }
+            },
+        );
+        bench.case_throughput(
+            &format!("mlp-batched-b{b}"),
+            (mlp_reps * b) as f64,
+            || {
+                for _ in 0..mlp_reps {
+                    mlp.predict_batch_into(&mlp_pr[..b], &mut feat, &mut mlp_out[..b]);
+                }
+                black_box(&mlp_out);
+            },
+        );
+    }
+
+    bench.print();
+
+    // --- ns/query + speedup table -----------------------------------
+    // queries per iteration for each forward case (mirrors the
+    // case_throughput registrations above).
+    let qpi = |model: &str, b: usize| -> f64 {
+        match model {
+            "tfm-base" => b as f64,
+            "lr" => (lr_reps * b) as f64,
+            _ => (mlp_reps * b) as f64,
+        }
+    };
+    println!("\n== kernels: ns/query (median-of-medians) ==");
+    println!(
+        "{:<12} {:>4} {:>16} {:>14} {:>12}",
+        "model", "b", "per-sample ns", "batched ns", "speedup"
+    );
+    let mut speedup_rows: Vec<Json> = Vec::new();
+    let mut tfm_b8_speedup = 0.0;
+    for model in ["tfm-base", "lr", "mlp"] {
+        for b in [1usize, 8, 32] {
+            let per = mom(&bench, &format!("{model}-persample-b{b}"));
+            let bat = mom(&bench, &format!("{model}-batched-b{b}"));
+            let per_ns = per * 1e6 / qpi(model, b);
+            let bat_ns = bat * 1e6 / qpi(model, b);
+            let speedup = if bat_ns > 0.0 { per_ns / bat_ns } else { 0.0 };
+            if model == "tfm-base" && b == 8 {
+                tfm_b8_speedup = speedup;
+            }
+            println!(
+                "{model:<12} {b:>4} {per_ns:>16.0} {bat_ns:>14.0} {speedup:>11.2}x"
+            );
+            speedup_rows.push(Json::obj(vec![
+                ("model", Json::Str(model.to_string())),
+                ("batch", Json::Num(b as f64)),
+                ("per_sample_ns", Json::Num(per_ns)),
+                ("batched_ns", Json::Num(bat_ns)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+    println!("kernels: tfm b8 batched speedup {tfm_b8_speedup:.2}x (gate >= 2x)");
+
+    // Tentpole gate (CI sets BENCH_KERNELS_GATE=1; local runs on
+    // loaded machines stay informational).
+    if std::env::var("BENCH_KERNELS_GATE").as_deref() == Ok("1") {
+        assert!(
+            tfm_b8_speedup >= 2.0,
+            "batched HostTfm b=8 speedup {tfm_b8_speedup:.2}x below the 2x gate"
+        );
+        println!("speedup gate passed");
+    }
+
+    // JSON baseline: harness timings + the derived speedup table (the
+    // committed BENCH_KERNELS.json at the repo root is this file).
+    let json = Json::obj(vec![
+        ("harness", bench.to_json()),
+        ("speedups", Json::Arr(speedup_rows)),
+    ]);
+    let path = std::env::var("BENCH_KERNELS_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../target/bench_kernels.json").to_string()
+    });
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(&path, json.to_string_pretty()).expect("write json baseline");
+    println!("json baseline written to {path}");
+
+    // Regression gate (opt-in): compare this run's median-of-medians
+    // against a stored baseline file (CI passes the committed one).
+    if let Some((baseline, tol)) = bench_support::baseline_from_env() {
+        bench_support::check_baseline_file(&bench, &baseline, tol)
+            .expect("baseline regression gate");
+        println!("baseline gate passed vs {baseline} (tolerance {tol}%)");
+    }
+}

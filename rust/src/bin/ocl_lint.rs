@@ -3,7 +3,7 @@
 //!
 //! Zero-dependency by construction (plain `std::fs` + a small
 //! string-aware scanner; no `syn`, no proc-macro machinery), because
-//! the crate's contract is a fully-offline build. Four rules over
+//! the crate's contract is a fully-offline build. Five rules over
 //! `rust/src`, non-test code only:
 //!
 //! * **`sync-funnel`** — no direct `std::sync` / `std::thread` paths
@@ -22,6 +22,14 @@
 //! * **`raw-write`** — in `serve/net.rs`, every `.write_all(` must be
 //!   fed by `encode(`, the single site that enforces the `MAX_FRAME`
 //!   wire bound; raw socket writes bypass it.
+//! * **`hot-alloc`** — no heap allocation (`Vec::new`, `with_capacity`,
+//!   `.to_vec()`, `.clone()`, `vec!`) on the host-kernel hot paths:
+//!   all of `hostmodel/tensor.rs`, and the `predict*` / `score*` /
+//!   `features*` / `forward_batch*` bodies in
+//!   `hostmodel/{tfm,lr,mlp}.rs`. Steady-state batched inference is
+//!   zero-alloc by contract (`tests/test_alloc.rs` proves it with a
+//!   counting allocator); per-sample compat wrappers carry justified
+//!   markers.
 //!
 //! Suppression: a site is allowed by a marker comment on the same
 //! line, or in the comment block directly above its statement:
@@ -42,7 +50,7 @@ use std::path::{Path, PathBuf};
 use ocl::codec::json::Json;
 
 /// Rule names a marker may reference.
-const RULES: [&str; 4] = ["sync-funnel", "unwrap", "determinism", "raw-write"];
+const RULES: [&str; 5] = ["sync-funnel", "unwrap", "determinism", "raw-write", "hot-alloc"];
 
 /// How far above a violating line the marker scan walks (comment
 /// block + continuation lines of the same statement).
@@ -198,6 +206,14 @@ fn scan_file(rel: &str, src: &str, violations: &mut Vec<Violation>, markers: &mu
     let serve = rel.contains("src/serve/");
     let deterministic = rel.ends_with("src/serve/ckpt.rs") || rel.contains("src/codec/");
     let net = rel.ends_with("src/serve/net.rs");
+    // hot-alloc scope: the kernel file is hot wall-to-wall; the model
+    // files are hot only inside their inference-path function bodies
+    // (constructors, training, and (de)serialization may allocate).
+    let hot_file = rel.ends_with("src/hostmodel/tensor.rs");
+    let hot_model = rel.ends_with("src/hostmodel/tfm.rs")
+        || rel.ends_with("src/hostmodel/lr.rs")
+        || rel.ends_with("src/hostmodel/mlp.rs");
+    let in_hot = if hot_model { hot_fn_regions(&stripped) } else { Vec::new() };
 
     // Patterns assembled at runtime so the source of *other* tools
     // grepping this file stays quiet; strings in scanned files are
@@ -208,6 +224,13 @@ fn scan_file(rel: &str, src: &str, violations: &mut Vec<Violation>, markers: &mu
     let p_expect = [".expect", "("].concat();
     let det_patterns =
         ["Instant::now", "SystemTime::now", "from_entropy", "thread_rng", "from_os_rng"];
+    let alloc_patterns = [
+        ["Vec:", ":new("].concat(),
+        ["with_", "capacity("].concat(),
+        [".to_", "vec()"].concat(),
+        [".clone", "()"].concat(),
+        ["vec", "!"].concat(),
+    ];
 
     for (i, s) in stripped.iter().enumerate() {
         if in_test[i] {
@@ -247,7 +270,70 @@ fn scan_file(rel: &str, src: &str, violations: &mut Vec<Violation>, markers: &mu
                 "socket write not fed by encode() — bypasses the MAX_FRAME bound".to_string(),
             );
         }
+        if hot_file || (hot_model && in_hot[i]) {
+            for p in &alloc_patterns {
+                if s.contains(p.as_str()) {
+                    flag(
+                        "hot-alloc",
+                        format!(
+                            "heap allocation ('{p}') on a host-kernel hot path — \
+                             reuse a Scratch buffer or justify with a marker"
+                        ),
+                    );
+                }
+            }
+        }
     }
+}
+
+/// Per-line map of hot inference-path function bodies in the hostmodel
+/// files: `fn predict*`, `fn score*`, `fn features*`,
+/// `fn forward_batch*`, brace-tracked on string-stripped text. The
+/// hot-alloc rule applies only inside them, so constructors, training
+/// steps, and flat-weight (de)serialization may still allocate.
+fn hot_fn_regions(stripped: &[String]) -> Vec<bool> {
+    const HOT_PREFIXES: [&str; 4] = ["predict", "score", "features", "forward_batch"];
+    let mut hot = vec![false; stripped.len()];
+    let mut i = 0;
+    while i < stripped.len() {
+        let line = &stripped[i];
+        let is_hot_fn = line.find("fn ").is_some_and(|p| {
+            let boundary =
+                p == 0 || !line[..p].ends_with(|c: char| c.is_alphanumeric() || c == '_');
+            boundary && {
+                let name = &line[p + 3..];
+                HOT_PREFIXES.iter().any(|pre| name.starts_with(pre))
+            }
+        });
+        if is_hot_fn {
+            // Walk to the opening brace of the fn body, then track
+            // depth until it closes; everything inside is hot.
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < stripped.len() {
+                hot[j] = true;
+                for c in stripped[j].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    hot
 }
 
 /// Is the violation at `idx` allowed by a marker on the same line or

@@ -282,7 +282,13 @@ impl Cascade {
         let f = self.pipeline.featurize(&sample.text);
         let mut out = Vec::with_capacity(self.levels.len());
         for l in &mut self.levels {
-            let probs = l.model.predict(&f);
+            // Batched entry point (b=1): bit-identical to `predict`,
+            // exercises the serve hot path's kernels.
+            let probs = l
+                .model
+                .predict_batch(&[&f])
+                .pop()
+                .expect("predict_batch returned no rows");
             let score = l.calib.score(&probs);
             out.push((probs, score));
         }
@@ -459,7 +465,11 @@ impl Cascade {
         let mut mix = vec![0.0f32; self.classes];
         for i in 0..self.levels.len() {
             if seen[i].is_none() {
-                let probs = self.levels[i].model.predict(f);
+                let probs = self.levels[i]
+                    .model
+                    .predict_batch(&[f.as_ref()])
+                    .pop()
+                    .expect("predict_batch returned no rows");
                 extra += CostModel::infer_flops(self.levels[i].cfg.model);
                 seen[i] = Some(probs);
             }
@@ -493,7 +503,14 @@ impl Cascade {
             let probs = match &seen[i] {
                 Some(p) => p.clone(),
                 None => {
-                    let p = self.levels[i].model.predict(f);
+                    // Calibration fill-in rides the batched inference
+                    // entry point (bit-identical to per-sample predict;
+                    // host models reuse their scratch buffers there).
+                    let p = self.levels[i]
+                        .model
+                        .predict_batch(&[f.as_ref()])
+                        .pop()
+                        .expect("predict_batch returned no rows");
                     flops += CostModel::infer_flops(self.levels[i].cfg.model);
                     p
                 }
@@ -574,7 +591,13 @@ impl Cascade {
         for i in 0..self.levels.len() {
             let pred = match &seen[i] {
                 Some(p) => argmax(p),
-                None => argmax(&self.levels[i].model.predict(f)),
+                None => argmax(
+                    &self.levels[i]
+                        .model
+                        .predict_batch(&[f.as_ref()])
+                        .pop()
+                        .expect("predict_batch returned no rows"),
+                ),
             };
             fixed.push(zero_one_loss(pred, sample.label));
         }

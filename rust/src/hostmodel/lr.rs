@@ -60,8 +60,13 @@ impl HostLr {
     }
 
     /// probs = softmax(x·W + b); sparse-aware over x.
+    ///
+    /// Per-call compat API (allocates the result); the serve/cascade
+    /// hot paths use [`HostLr::predict_batch_into`] with a reused
+    /// output buffer.
     pub fn predict(&self, x: &[f32]) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.dim);
+        // lint: allow(hot-alloc) — compat wrapper; batched hot path is alloc-free
         let mut logits = self.b.clone();
         for (d, &xv) in x.iter().enumerate() {
             if xv == 0.0 {
@@ -73,6 +78,40 @@ impl HostLr {
             }
         }
         softmax(&logits)
+    }
+
+    /// Batched probs, written into `out` (`[b, classes]` row-major)
+    /// with zero steady-state allocation. Rows keep the per-sample
+    /// sparse accumulation and an in-place softmax that mirrors
+    /// [`softmax`] operation-for-operation, so the output is
+    /// bit-for-bit identical to per-row [`HostLr::predict`].
+    pub fn predict_batch_into(&self, xs: &[&[f32]], out: &mut [f32]) {
+        let c = self.classes;
+        assert_eq!(out.len(), xs.len() * c);
+        for (bi, &x) in xs.iter().enumerate() {
+            debug_assert_eq!(x.len(), self.dim);
+            let row_out = &mut out[bi * c..(bi + 1) * c];
+            row_out.copy_from_slice(&self.b);
+            for (d, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &self.w[d * c..(d + 1) * c];
+                for (l, &wv) in row_out.iter_mut().zip(row) {
+                    *l += xv * wv;
+                }
+            }
+            // in-place softmax: same max / exp / index-order sum /
+            // divide-by-sum sequence as `util::softmax`
+            let m = row_out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            for v in row_out.iter_mut() {
+                *v = (*v - m).exp();
+            }
+            let sum: f32 = row_out.iter().sum();
+            for v in row_out.iter_mut() {
+                *v /= sum;
+            }
+        }
     }
 
     /// One OGD minibatch step; returns the mean cross-entropy loss.
@@ -171,6 +210,34 @@ mod tests {
             l = m.train_batch(&xr, &ys, 0.3);
         }
         assert!(l < l0, "{l} !< {l0}");
+    }
+
+    #[test]
+    fn batched_matches_per_sample_bitwise() {
+        let mut rng = Rng::new(9);
+        let dim = 48;
+        let mut m = HostLr::new(dim, 3);
+        // train a little so weights are nonzero
+        let xs: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                (0..dim)
+                    .map(|_| if rng.below(3) == 0 { rng.f32() } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let ys: Vec<usize> = (0..8).map(|_| rng.below(3)).collect();
+        let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        m.train_batch(&xr, &ys, 0.4);
+        for b in [1usize, 3, 8] {
+            let mut out = vec![0.0f32; b * 3];
+            m.predict_batch_into(&xr[..b], &mut out);
+            for (bi, &x) in xr[..b].iter().enumerate() {
+                let want = m.predict(x);
+                for (c, w) in want.iter().enumerate() {
+                    assert_eq!(out[bi * 3 + c].to_bits(), w.to_bits(), "b={b} row={bi}");
+                }
+            }
+        }
     }
 
     #[test]

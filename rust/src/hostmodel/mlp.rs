@@ -92,10 +92,22 @@ impl HostMlp {
     }
 
     /// Deferral score in (0,1) for one probability vector.
+    ///
+    /// Per-call compat API (allocates the feature buffer); the
+    /// calibrator hot path uses [`HostMlp::predict_scratch`] with a
+    /// reused buffer — bit-identical, it runs the same code.
     pub fn predict(&self, probs: &[f32]) -> f32 {
-        debug_assert_eq!(probs.len(), self.classes);
+        // lint: allow(hot-alloc) — compat wrapper; hot callers reuse a Scratch buffer
         let mut feat = Vec::with_capacity(self.in_dim);
-        self.features(probs, &mut feat);
+        self.predict_scratch(probs, &mut feat)
+    }
+
+    /// Deferral score with a caller-owned feature buffer: zero heap
+    /// allocation once `feat`'s capacity reaches `classes + 2` (it is
+    /// cleared and refilled, never reallocated in steady state).
+    pub fn predict_scratch(&self, probs: &[f32], feat: &mut Vec<f32>) -> f32 {
+        debug_assert_eq!(probs.len(), self.classes);
+        self.features(probs, feat);
         let mut logit = self.b2;
         for h in 0..HIDDEN {
             let mut a = self.b1[h];
@@ -105,6 +117,21 @@ impl HostMlp {
             logit += a.tanh() * self.w2[h];
         }
         1.0 / (1.0 + (-logit).exp())
+    }
+
+    /// Batched deferral scores into `out` (`len == probs.len()`), one
+    /// shared feature buffer across rows — bit-identical to per-row
+    /// [`HostMlp::predict`] and allocation-free in steady state.
+    pub fn predict_batch_into(
+        &self,
+        probs: &[&[f32]],
+        feat: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), probs.len());
+        for (&p, o) in probs.iter().zip(out.iter_mut()) {
+            *o = self.predict_scratch(p, feat);
+        }
     }
 
     /// One OGD minibatch step on MSE(score, z); returns the loss.
@@ -210,6 +237,23 @@ mod tests {
             l = m.train_batch(&prefs, &zs, 0.1);
         }
         assert!(l < l0 * 0.8, "{l} vs {l0}");
+    }
+
+    #[test]
+    fn batched_matches_per_sample_bitwise() {
+        let m = HostMlp::new(3, 6);
+        let ps = [
+            vec![0.8f32, 0.1, 0.1],
+            vec![0.4, 0.3, 0.3],
+            vec![1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0],
+        ];
+        let prefs: Vec<&[f32]> = ps.iter().map(|v| v.as_slice()).collect();
+        let mut feat = Vec::new();
+        let mut out = vec![0.0f32; 3];
+        m.predict_batch_into(&prefs, &mut feat, &mut out);
+        for (p, got) in prefs.iter().zip(&out) {
+            assert_eq!(got.to_bits(), m.predict(p).to_bits());
+        }
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod tfm;
 
 pub use lr::HostLr;
 pub use mlp::HostMlp;
-pub use tfm::{HostTfm, TfmArch};
+pub use tfm::{HostTfm, Scratch as TfmScratch, TfmArch};

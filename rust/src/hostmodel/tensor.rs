@@ -7,6 +7,13 @@
 //! (d ≤ 96) keep everything L1/L2-resident.
 
 /// c[m,n] = a[m,k] @ b[k,n] (accumulating into zeroed output).
+///
+/// Sparse variant: rows of `a` that are exactly 0.0 are skipped, which
+/// pays off for hashed bag-of-words inputs and post-softmax attention
+/// probabilities with masked (exactly-zero) columns. For dense
+/// activations the per-`(i,k)` branch costs more than it saves — use
+/// [`matmul_dense`] there; the two are bit-for-bit identical (see
+/// `matmul_dense`'s docs for the argument).
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -23,6 +30,61 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize)
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += av * bv;
             }
+        }
+    }
+}
+
+/// Register-tile width of [`matmul_dense`]'s inner loop: 16 f32 lanes
+/// stay resident in vector registers across the whole k reduction.
+const DENSE_TILE: usize = 16;
+
+/// c[m,n] = a[m,k] @ b[k,n] — dense variant of [`matmul`].
+///
+/// Two differences from the sparse kernel, neither observable in the
+/// output bits:
+///
+/// 1. **No `av == 0.0` skip.** The extra terms are `±0.0 * bv = ±0.0`,
+///    and inserting `±0.0` additions into a `+0.0`-seeded running sum
+///    never changes its bits under round-to-nearest: the accumulator
+///    can never become `-0.0` (that would need two `-0.0` addends or a
+///    directed rounding mode), `x + ±0.0 == x` bitwise for every other
+///    value, and the nonzero terms are the same terms either way.
+/// 2. **Output tiling.** Each output row is produced in
+///    [`DENSE_TILE`]-wide column blocks whose accumulators live in
+///    registers for the whole k loop (the sparse kernel re-loads and
+///    re-stores the full output row once per k). Every individual
+///    `c[i,j]` still accumulates its k terms in ascending-k order, so
+///    per-element results are bit-identical — only the interleaving
+///    *across* independent elements changes.
+///
+/// The equivalence is pinned by `dense_matches_sparse_bitwise` below
+/// and by the cross-model property test in `tests/test_kernels.rs`.
+pub fn matmul_dense(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 + DENSE_TILE <= n {
+            let mut acc = [0.0f32; DENSE_TILE];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n + j0..kk * n + j0 + DENSE_TILE];
+                for (cv, &bv) in acc.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+            crow[j0..j0 + DENSE_TILE].copy_from_slice(&acc);
+            j0 += DENSE_TILE;
+        }
+        // remainder columns (n not a multiple of the tile width)
+        for (jj, cv) in crow.iter_mut().enumerate().skip(j0) {
+            let mut acc = 0.0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                acc += av * b[kk * n + jj];
+            }
+            *cv = acc;
         }
     }
 }
@@ -66,9 +128,28 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: u
     }
 }
 
-/// y[m,n] = x[m,k] @ w[k,n] + b[n].
+/// y[m,n] = x[m,k] @ w[k,n] + b[n] (sparse-matmul variant).
 pub fn linear(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], m: usize, k: usize, n: usize) {
     matmul(x, w, y, m, k, n);
+    for i in 0..m {
+        for (yv, &bv) in y[i * n..(i + 1) * n].iter_mut().zip(b) {
+            *yv += bv;
+        }
+    }
+}
+
+/// y[m,n] = x[m,k] @ w[k,n] + b[n] via [`matmul_dense`] — bit-identical
+/// to [`linear`] (same post-matmul bias pass, in the same order).
+pub fn linear_dense(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_dense(x, w, y, m, k, n);
     for i in 0..m {
         for (yv, &bv) in y[i * n..(i + 1) * n].iter_mut().zip(b) {
             *yv += bv;
@@ -197,6 +278,48 @@ mod tests {
         let b1 = [1.0, 1.0, 1.0, 1.0];
         matmul(&a, &b1, &mut c, 2, 2, 2);
         assert_eq!(c, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn dense_matches_sparse_bitwise() {
+        // Shapes straddling the DENSE_TILE boundary, inputs salted with
+        // exact +0.0 / -0.0 entries so the sparse skip actually fires
+        // and the ±0.0-insertion argument is exercised, not just argued.
+        let mut rng = crate::prng::Rng::new(42);
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 7), (4, 16, 16), (8, 64, 17), (2, 64, 256), (5, 7, 33)]
+        {
+            let gen = |rng: &mut crate::prng::Rng, len: usize| -> Vec<f32> {
+                (0..len)
+                    .map(|_| match rng.below(8) {
+                        0 => 0.0,
+                        1 => -0.0,
+                        _ => (rng.f32() - 0.5) * 4.0,
+                    })
+                    .collect()
+            };
+            let a = gen(&mut rng, m * k);
+            let b = gen(&mut rng, k * n);
+            let mut cs = vec![1.0f32; m * n]; // nonzero garbage: both must overwrite
+            let mut cd = vec![2.0f32; m * n];
+            matmul(&a, &b, &mut cs, m, k, n);
+            matmul_dense(&a, &b, &mut cd, m, k, n);
+            for (i, (s, d)) in cs.iter().zip(&cd).enumerate() {
+                assert_eq!(
+                    s.to_bits(),
+                    d.to_bits(),
+                    "({m},{k},{n}) elem {i}: sparse {s} dense {d}"
+                );
+            }
+            let bias = gen(&mut rng, n);
+            let mut ys = vec![0.0f32; m * n];
+            let mut yd = vec![0.0f32; m * n];
+            linear(&a, &b, &bias, &mut ys, m, k, n);
+            linear_dense(&a, &b, &bias, &mut yd, m, k, n);
+            for (s, d) in ys.iter().zip(&yd) {
+                assert_eq!(s.to_bits(), d.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -119,6 +119,83 @@ struct Cache {
     mask_sum: f32,
 }
 
+/// Reusable forward workspace for [`HostTfm::predict_batch_into`].
+///
+/// Owns every activation buffer the batched forward needs, grown once
+/// to the high-water batch size and then reused: steady-state batched
+/// inference does **zero** heap allocation (pinned by
+/// `tests/test_alloc.rs` with a counting global allocator). One
+/// `Scratch` serves any `(arch, classes, batch)` — buffers are resized
+/// on demand and sliced to the live extent each call.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    /// Residual stream, `[B·L, d]`.
+    x: Vec<f32>,
+    /// LayerNorm output (LN1 and LN2 reuse it), `[B·L, d]`.
+    hx: Vec<f32>,
+    /// LayerNorm `(mu, inv)` stats, `[2·B·L]`.
+    stats: Vec<f32>,
+    /// Fused Q projection, `[B·L, d]`.
+    q: Vec<f32>,
+    /// Fused K projection, `[B·L, d]`.
+    k: Vec<f32>,
+    /// Fused V projection, `[B·L, d]`.
+    v: Vec<f32>,
+    /// Attention output pre-Wo, `[B·L, d]`.
+    o: Vec<f32>,
+    /// Wo / FFN-out projection (sequential uses), `[B·L, d]`.
+    proj: Vec<f32>,
+    /// FFN pre-activation, `[B·L, ffn]`.
+    pre: Vec<f32>,
+    /// FFN gelu activation, `[B·L, ffn]`.
+    act: Vec<f32>,
+    /// Per-head Q panel, `[L, dh]`.
+    qh: Vec<f32>,
+    /// Per-head K panel, `[L, dh]`.
+    kh: Vec<f32>,
+    /// Per-head V panel, `[L, dh]`.
+    vh: Vec<f32>,
+    /// Per-head context panel, `[L, dh]`.
+    oh: Vec<f32>,
+    /// Attention scores/probs, `[L, L]`.
+    s: Vec<f32>,
+    /// Masked-mean pooled rows, `[B, d]`.
+    pooled: Vec<f32>,
+}
+
+impl Scratch {
+    /// Empty workspace; buffers grow lazily on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow (never shrink) every buffer to hold a `b`-sequence batch.
+    fn ensure(&mut self, b: usize, l: usize, d: usize, dh: usize, f: usize) {
+        let bl = b * l;
+        let grow = |v: &mut Vec<f32>, n: usize| {
+            if v.len() < n {
+                v.resize(n, 0.0);
+            }
+        };
+        grow(&mut self.x, bl * d);
+        grow(&mut self.hx, bl * d);
+        grow(&mut self.stats, 2 * bl);
+        grow(&mut self.q, bl * d);
+        grow(&mut self.k, bl * d);
+        grow(&mut self.v, bl * d);
+        grow(&mut self.o, bl * d);
+        grow(&mut self.proj, bl * d);
+        grow(&mut self.pre, bl * f);
+        grow(&mut self.act, bl * f);
+        grow(&mut self.qh, l * dh);
+        grow(&mut self.kh, l * dh);
+        grow(&mut self.vh, l * dh);
+        grow(&mut self.oh, l * dh);
+        grow(&mut self.s, l * l);
+        grow(&mut self.pooled, b * d);
+    }
+}
+
 /// Host transformer encoder + classifier.
 #[derive(Clone, Debug)]
 pub struct HostTfm {
@@ -300,8 +377,148 @@ impl HostTfm {
     }
 
     /// Class probabilities for one sequence.
+    ///
+    /// Reference per-sample path: runs the cache-building [`forward`]
+    /// (per-call allocation, sparse matmuls). The serve/cascade hot
+    /// paths go through [`HostTfm::predict_batch_into`] instead; this
+    /// stays as the parity anchor the property tests and the
+    /// `bench_kernels` speedup gate compare against.
+    ///
+    /// [`forward`]: HostTfm::forward
     pub fn predict(&self, ids: &[i32], mask: &[f32]) -> Vec<f32> {
         self.forward(ids, mask).probs
+    }
+
+    /// Batched class probabilities: all `B` sequences fused into one
+    /// `[B·L, d]` activation stream so each layer's LayerNorm, Q/K/V/O
+    /// and FFN projections are a single dense matmul instead of `B`
+    /// small ones (attention stays per-sequence, per-head). Writes
+    /// `[B, classes]` row-major probabilities into `out`.
+    ///
+    /// Bit-for-bit identical to calling [`HostTfm::predict`] per
+    /// sequence: rows of every fused matmul are independent and keep
+    /// the per-row ascending-k accumulation order, and the dense
+    /// kernels match the sparse ones bitwise (see
+    /// [`tensor::matmul_dense`](t::matmul_dense)). Steady-state calls
+    /// at a stable batch size do zero heap allocation.
+    pub fn predict_batch_into(
+        &self,
+        ids: &[&[i32]],
+        masks: &[&[f32]],
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) {
+        let (_vocab, l, d, heads, _nlayers, f) = self.arch.dims();
+        let b = ids.len();
+        assert_eq!(masks.len(), b);
+        assert_eq!(out.len(), b * self.classes);
+        if b == 0 {
+            return;
+        }
+        let dh = d / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let p = &self.params;
+        scratch.ensure(b, l, d, dh, f);
+        let bl = b * l;
+        let x = &mut scratch.x[..bl * d];
+        let hx = &mut scratch.hx[..bl * d];
+        let stats = &mut scratch.stats[..2 * bl];
+        let q = &mut scratch.q[..bl * d];
+        let k = &mut scratch.k[..bl * d];
+        let v = &mut scratch.v[..bl * d];
+        let o = &mut scratch.o[..bl * d];
+        let proj = &mut scratch.proj[..bl * d];
+        let pre = &mut scratch.pre[..bl * f];
+        let act = &mut scratch.act[..bl * f];
+        let qh = &mut scratch.qh[..l * dh];
+        let kh = &mut scratch.kh[..l * dh];
+        let vh = &mut scratch.vh[..l * dh];
+        let oh = &mut scratch.oh[..l * dh];
+        let s = &mut scratch.s[..l * l];
+        let pooled = &mut scratch.pooled[..b * d];
+
+        // token + position embeddings, per sequence
+        for (si, seq) in ids.iter().enumerate() {
+            debug_assert_eq!(seq.len(), l);
+            let base = si * l * d;
+            for i in 0..l {
+                let row = (seq[i] as usize) * d;
+                for j in 0..d {
+                    x[base + i * d + j] = p.embed[row + j] + p.pos[i * d + j];
+                }
+            }
+        }
+
+        for lay in &p.layers {
+            // --- attention block (pre-LN), projections fused over B·L ---
+            t::layernorm(x, &lay.ln1_g, &lay.ln1_b, hx, Some(stats), bl, d, 1e-5);
+            t::linear_dense(hx, &lay.wq, &lay.bq, q, bl, d, d);
+            t::linear_dense(hx, &lay.wk, &lay.bk, k, bl, d, d);
+            t::linear_dense(hx, &lay.wv, &lay.bv, v, bl, d, d);
+            for si in 0..b {
+                let base = si * l * d;
+                let mask = masks[si];
+                debug_assert_eq!(mask.len(), l);
+                for h in 0..heads {
+                    let c0 = h * dh;
+                    for i in 0..l {
+                        qh[i * dh..(i + 1) * dh]
+                            .copy_from_slice(&q[base + i * d + c0..base + i * d + c0 + dh]);
+                        kh[i * dh..(i + 1) * dh]
+                            .copy_from_slice(&k[base + i * d + c0..base + i * d + c0 + dh]);
+                        vh[i * dh..(i + 1) * dh]
+                            .copy_from_slice(&v[base + i * d + c0..base + i * d + c0 + dh]);
+                    }
+                    // scores = q @ k^T * scale + mask bias
+                    t::matmul_a_bt(qh, kh, s, l, dh, l);
+                    for i in 0..l {
+                        for j in 0..l {
+                            s[i * l + j] = s[i * l + j] * scale + (1.0 - mask[j]) * -1e9;
+                        }
+                    }
+                    t::softmax_rows(s, l, l);
+                    // context keeps the sparse kernel: masked columns of
+                    // the prob matrix are exactly 0.0 and skip whole rows
+                    t::matmul(s, vh, oh, l, l, dh);
+                    for i in 0..l {
+                        o[base + i * d + c0..base + i * d + c0 + dh]
+                            .copy_from_slice(&oh[i * dh..(i + 1) * dh]);
+                    }
+                }
+            }
+            // x = x + o @ wo + bo, fused over B·L
+            t::linear_dense(o, &lay.wo, &lay.bo, proj, bl, d, d);
+            for (xv, pv) in x.iter_mut().zip(proj.iter()) {
+                *xv += pv;
+            }
+            // --- FFN block (pre-LN), fused over B·L ---
+            t::layernorm(x, &lay.ln2_g, &lay.ln2_b, hx, Some(stats), bl, d, 1e-5);
+            t::linear_dense(hx, &lay.w1, &lay.b1, pre, bl, d, f);
+            for (av, &pv) in act.iter_mut().zip(pre.iter()) {
+                *av = t::gelu(pv);
+            }
+            t::linear_dense(act, &lay.w2, &lay.b2, proj, bl, f, d);
+            for (xv, ov) in x.iter_mut().zip(proj.iter()) {
+                *xv += ov;
+            }
+        }
+        t::layernorm(x, &p.lnf_g, &p.lnf_b, hx, Some(stats), bl, d, 1e-5);
+        // masked mean pooling, per sequence (same j-outer/i-inner
+        // accumulation order as the per-sample path)
+        for (si, mask) in masks.iter().enumerate() {
+            let base = si * l * d;
+            let mask_sum = mask.iter().sum::<f32>().max(1.0);
+            for j in 0..d {
+                let mut acc = 0.0;
+                for i in 0..l {
+                    acc += hx[base + i * d + j] * mask[i];
+                }
+                pooled[si * d + j] = acc / mask_sum;
+            }
+        }
+        // head over the pooled [B, d] block in one matmul
+        t::linear_dense(pooled, &p.head_w, &p.head_b, out, b, d, self.classes);
+        t::softmax_rows(out, b, self.classes);
     }
 
     fn forward(&self, ids: &[i32], mask: &[f32]) -> Cache {
@@ -775,6 +992,33 @@ mod tests {
         let p2 = m.predict(&ids, &mask);
         for (a, b) in p1.iter().zip(&p2) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batched_forward_matches_per_sample_bitwise() {
+        let m = HostTfm::new(TfmArch::Base, 3, 11);
+        let mut rng = Rng::new(12);
+        let docs: Vec<(Vec<i32>, Vec<f32>)> = (0..5).map(|_| doc(&mut rng, 64)).collect();
+        let ids: Vec<&[i32]> = docs.iter().map(|d| d.0.as_slice()).collect();
+        let masks: Vec<&[f32]> = docs.iter().map(|d| d.1.as_slice()).collect();
+        let mut scratch = Scratch::new();
+        // odd batch size (remainder vs any internal tiling), then reuse
+        // the same scratch at a different size
+        for b in [5usize, 2, 1] {
+            let mut out = vec![0.0f32; b * 3];
+            m.predict_batch_into(&ids[..b], &masks[..b], &mut scratch, &mut out);
+            for (si, (i, ma)) in ids[..b].iter().zip(&masks[..b]).enumerate() {
+                let want = m.predict(i, ma);
+                for (c, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        out[si * 3 + c].to_bits(),
+                        w.to_bits(),
+                        "b={b} seq={si} class={c}: batched {} per-sample {w}",
+                        out[si * 3 + c]
+                    );
+                }
+            }
         }
     }
 

@@ -479,7 +479,7 @@ fn print_shard_line(i: usize, r: &ocl::serve::ServeReport) {
     println!(
         "shard {i}: served={} handled={:?} restarts={:?} (cap {}) \
          warm_respawns={:?} snapshots={:?} snapshot_lag={:?} \
-         replica_jobs={:?} final_betas={:?}",
+         replica_jobs={:?} final_betas={:?} infer_ns={:?}",
         r.served,
         r.handled,
         r.restarts,
@@ -488,7 +488,8 @@ fn print_shard_line(i: usize, r: &ocl::serve::ServeReport) {
         r.snapshots,
         r.snapshot_lag,
         r.replica_jobs,
-        r.final_betas
+        r.final_betas,
+        r.infer_ns
     );
 }
 

@@ -19,7 +19,7 @@ use crate::config::dims::{HASH_DIM, SEQ_LEN, VOCAB};
 use crate::config::ModelKind;
 use crate::error::{Error, Result};
 use crate::features::{HashingVectorizer, VocabIndexer};
-use crate::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch};
+use crate::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch, TfmScratch};
 #[cfg(feature = "pjrt")]
 use crate::runtime::engine::{literal_f32, literal_i32, load_group_literals};
 use crate::runtime::PjrtEngine;
@@ -235,12 +235,14 @@ pub trait Calibrator {
 /// Host LR level.
 pub struct HostLrLevel {
     inner: HostLr,
+    /// Reused `[b, classes]` output buffer for the batched path.
+    out: Vec<f32>,
 }
 
 impl HostLrLevel {
     /// Zero-initialized LR level.
     pub fn new(classes: usize) -> Self {
-        HostLrLevel { inner: HostLr::new(HASH_DIM, classes) }
+        HostLrLevel { inner: HostLr::new(HASH_DIM, classes), out: Vec::new() }
     }
 }
 
@@ -253,6 +255,13 @@ impl LevelModel for HostLrLevel {
     }
     fn predict(&mut self, f: &Featurized) -> Vec<f32> {
         self.inner.predict(&f.x)
+    }
+    fn predict_batch(&mut self, fs: &[&Featurized]) -> Vec<Vec<f32>> {
+        let c = self.inner.classes();
+        let xs: Vec<&[f32]> = fs.iter().map(|f| f.x.as_slice()).collect();
+        self.out.resize(fs.len() * c, 0.0);
+        self.inner.predict_batch_into(&xs, &mut self.out[..fs.len() * c]);
+        self.out[..fs.len() * c].chunks(c).map(|r| r.to_vec()).collect()
     }
     fn train(&mut self, batch: &[(&Featurized, usize)], lr: f32) -> f32 {
         let xs: Vec<&[f32]> = batch.iter().map(|(f, _)| f.x.as_slice()).collect();
@@ -282,6 +291,10 @@ impl LevelModel for HostLrLevel {
 pub struct HostTfmLevel {
     inner: HostTfm,
     kind: ModelKind,
+    /// Reused forward workspace (batched and single-query inference).
+    scratch: TfmScratch,
+    /// Reused `[b, classes]` output buffer for the batched path.
+    out: Vec<f32>,
 }
 
 impl HostTfmLevel {
@@ -292,7 +305,12 @@ impl HostTfmLevel {
             ModelKind::TfmLarge => TfmArch::Large,
             ModelKind::Lr => panic!("use HostLrLevel for LR"),
         };
-        HostTfmLevel { inner: HostTfm::new(arch, classes, seed), kind }
+        HostTfmLevel {
+            inner: HostTfm::new(arch, classes, seed),
+            kind,
+            scratch: TfmScratch::new(),
+            out: Vec::new(),
+        }
     }
 
     /// Load from an artifacts init blob (parity with PJRT).
@@ -302,7 +320,12 @@ impl HostTfmLevel {
             ModelKind::TfmLarge => TfmArch::Large,
             ModelKind::Lr => panic!("use HostLrLevel for LR"),
         };
-        HostTfmLevel { inner: HostTfm::from_flat(arch, classes, flat), kind }
+        HostTfmLevel {
+            inner: HostTfm::from_flat(arch, classes, flat),
+            kind,
+            scratch: TfmScratch::new(),
+            out: Vec::new(),
+        }
     }
 }
 
@@ -314,7 +337,31 @@ impl LevelModel for HostTfmLevel {
         self.inner.classes()
     }
     fn predict(&mut self, f: &Featurized) -> Vec<f32> {
-        self.inner.predict(&f.ids, &f.mask)
+        // Single-query inference rides the batched kernels at b=1
+        // (bit-identical to the reference per-sample forward, without
+        // its per-call activation allocations).
+        let c = self.inner.classes();
+        let mut out = vec![0.0f32; c];
+        self.inner.predict_batch_into(
+            &[f.ids.as_slice()],
+            &[f.mask.as_slice()],
+            &mut self.scratch,
+            &mut out,
+        );
+        out
+    }
+    fn predict_batch(&mut self, fs: &[&Featurized]) -> Vec<Vec<f32>> {
+        let c = self.inner.classes();
+        let ids: Vec<&[i32]> = fs.iter().map(|f| f.ids.as_slice()).collect();
+        let masks: Vec<&[f32]> = fs.iter().map(|f| f.mask.as_slice()).collect();
+        self.out.resize(fs.len() * c, 0.0);
+        self.inner.predict_batch_into(
+            &ids,
+            &masks,
+            &mut self.scratch,
+            &mut self.out[..fs.len() * c],
+        );
+        self.out[..fs.len() * c].chunks(c).map(|r| r.to_vec()).collect()
     }
     fn train(&mut self, batch: &[(&Featurized, usize)], lr: f32) -> f32 {
         let ids: Vec<&[i32]> = batch.iter().map(|(f, _)| f.ids.as_slice()).collect();
@@ -344,12 +391,15 @@ impl LevelModel for HostTfmLevel {
 /// Host calibrator.
 pub struct HostCalibrator {
     inner: HostMlp,
+    /// Reused feature buffer — the calibrator runs on every gate
+    /// consult, so per-call feature allocation is hot-path churn.
+    feat: Vec<f32>,
 }
 
 impl HostCalibrator {
     /// Fresh calibrator.
     pub fn new(classes: usize, seed: u64) -> Self {
-        HostCalibrator { inner: HostMlp::new(classes, seed) }
+        HostCalibrator { inner: HostMlp::new(classes, seed), feat: Vec::new() }
     }
 }
 
@@ -362,7 +412,7 @@ impl HostCalibrator {
 
 impl Calibrator for HostCalibrator {
     fn score(&mut self, probs: &[f32]) -> f32 {
-        self.inner.predict(probs)
+        self.inner.predict_scratch(probs, &mut self.feat)
     }
     fn train(&mut self, batch: &[(&[f32], f32)], lr: f32) -> f32 {
         let ps: Vec<&[f32]> = batch.iter().map(|&(p, _)| p).collect();
@@ -756,5 +806,30 @@ mod tests {
         let batched = lr.predict_batch(&[&f1, &f2]);
         assert_eq!(batched[0], lr.predict(&f1));
         assert_eq!(batched[1], lr.predict(&f2));
+    }
+
+    #[test]
+    fn host_overrides_match_per_sample_exactly() {
+        // The batched overrides (HostLrLevel/HostTfmLevel) and the
+        // b=1-through-batched predict must agree bit-for-bit with the
+        // reference per-sample forward of the underlying host models.
+        let p = Pipeline::default();
+        let fs: Vec<Featurized> = ["kw0x001 kw0x004 neg00", "kw1x002", "kw1x002 kw0x001"]
+            .iter()
+            .map(|t| p.featurize(t))
+            .collect();
+        let refs: Vec<&Featurized> = fs.iter().collect();
+        let mut tfm = HostTfmLevel::new(ModelKind::TfmBase, 2, 3);
+        let batched = tfm.predict_batch(&refs);
+        for (f, got) in refs.iter().zip(&batched) {
+            let reference = tfm.inner.predict(&f.ids, &f.mask);
+            assert_eq!(got, &reference, "batched vs reference forward");
+            assert_eq!(&tfm.predict(f), &reference, "b=1 trait predict vs reference");
+        }
+        let mut lr = HostLrLevel::new(2);
+        let batched = lr.predict_batch(&refs);
+        for (f, got) in refs.iter().zip(&batched) {
+            assert_eq!(got, &lr.inner.predict(&f.x));
+        }
     }
 }

@@ -182,6 +182,10 @@ pub struct ServeReport {
     pub train_batches: Vec<u64>,
     /// 8-sample calibrator-training chunks executed per level worker.
     pub calib_batches: Vec<u64>,
+    /// Cumulative wall-clock nanoseconds spent in batched inference
+    /// (predict + calibrator scoring) per level, summed across the
+    /// level's pool members. Report-only: not checkpointed.
+    pub infer_ns: Vec<u64>,
 }
 
 impl ServeReport {
@@ -223,6 +227,7 @@ impl ServeReport {
                 "final_betas",
                 Json::Arr(self.final_betas.iter().map(|&b| Json::Num(b)).collect()),
             ),
+            ("infer_ns", nums64(&self.infer_ns)),
         ])
     }
 }
@@ -911,6 +916,11 @@ impl Server {
                 .pools
                 .iter()
                 .map(|p| p.stats.calib_chunks.load(Ordering::Relaxed))
+                .collect(),
+            infer_ns: self
+                .pools
+                .iter()
+                .map(|p| p.stats.infer_ns.load(Ordering::Relaxed))
                 .collect(),
         })
     }

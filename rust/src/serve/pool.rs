@@ -135,6 +135,10 @@ pub(crate) struct WorkerReply {
 pub(crate) struct WorkerStats {
     pub train_chunks: AtomicU64,
     pub calib_chunks: AtomicU64,
+    /// Cumulative wall-clock nanoseconds spent in batched inference
+    /// (predict + calibrator scoring) across all of this pool's
+    /// workers. Report-only: never checkpointed, never replayed.
+    pub infer_ns: AtomicU64,
 }
 
 /// Authority state restored from a durable checkpoint. Seeds the
@@ -229,6 +233,7 @@ fn spawn_worker(
                     }
                     let fs: Vec<&Featurized> =
                         jobs.iter().map(|j| j.f.as_ref()).collect();
+                    let t0 = std::time::Instant::now();
                     let probs = model.predict_batch(&fs);
                     let results = jobs
                         .iter()
@@ -238,6 +243,9 @@ fn spawn_worker(
                             (j.req_id, j.probe, p, s)
                         })
                         .collect();
+                    stats
+                        .infer_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let reply =
                         WorkerReply { level: spec.level, replica, epoch, results };
                     if reply_tx.send(reply).is_err() {

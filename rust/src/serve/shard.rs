@@ -115,6 +115,15 @@ impl ShardReport {
         self.shards.iter().map(|r| r.ckpts).sum()
     }
 
+    /// Total wall-clock nanoseconds spent in batched inference across
+    /// all shards and levels (worker-side predict + calibrator score).
+    pub fn infer_ns(&self) -> u64 {
+        self.shards
+            .iter()
+            .flat_map(|r| r.infer_ns.iter().copied())
+            .sum()
+    }
+
     /// JSON encoding (bench baselines, report files).
     pub fn to_json(&self) -> crate::codec::Json {
         use crate::codec::Json;
@@ -134,6 +143,7 @@ impl ShardReport {
             ("peak_pending", Json::Num(self.peak_pending as f64)),
             ("resumed", Json::Bool(self.resumed())),
             ("ckpts", Json::Num(self.ckpts() as f64)),
+            ("infer_ns", Json::Num(self.infer_ns() as f64)),
             (
                 "per_shard",
                 Json::Arr(self.shards.iter().map(|r| r.to_json()).collect()),
@@ -396,6 +406,7 @@ mod tests {
                 final_betas: vec![0.5],
                 train_batches: vec![1],
                 calib_batches: vec![1],
+                infer_ns: vec![served as u64 * 10],
             }
         }
         let r = ShardReport {
@@ -411,6 +422,7 @@ mod tests {
         assert_eq!(r.max_snapshot_lag(), 300);
         assert!(!r.resumed());
         assert_eq!(r.ckpts(), 0);
+        assert_eq!(r.infer_ns(), 4000);
         let v = crate::codec::parse(&r.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("served").unwrap().as_usize(), Some(400));
         assert_eq!(v.get("peak_pending").unwrap().as_usize(), Some(7));

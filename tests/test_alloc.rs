@@ -1,0 +1,127 @@
+//! Steady-state zero-allocation proof for the batched host kernels.
+//!
+//! A counting `#[global_allocator]` wraps `System` and tallies every
+//! `alloc`/`realloc`/`alloc_zeroed`; after a warm-up call grows the
+//! scratch buffers to their high-water size, repeated batched forwards
+//! must perform **zero** heap allocations. This file is its own
+//! integration-test binary (a global allocator is program-wide) and
+//! keeps everything in one `#[test]` so no concurrent test thread can
+//! pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+use ocl::hostmodel::{HostLr, HostMlp, HostTfm, TfmArch, TfmScratch};
+use ocl::prng::Rng;
+
+#[test]
+fn batched_hot_paths_do_not_allocate_in_steady_state() {
+    let mut rng = Rng::new(0xA110C);
+    let classes = 3;
+    let steps = 10;
+
+    // --- HostTfm::predict_batch_into --------------------------------
+    let tfm = HostTfm::new(TfmArch::Base, classes, 5);
+    let (vocab, l, _d, _h, _lay, _f) = TfmArch::Base.dims();
+    let b = 8;
+    let ids: Vec<Vec<i32>> = (0..b)
+        .map(|_| (0..l).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let masks: Vec<Vec<f32>> = (0..b)
+        .map(|_| (0..l).map(|i| if i < l / 2 { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let idr: Vec<&[i32]> = ids.iter().map(|v| v.as_slice()).collect();
+    let mr: Vec<&[f32]> = masks.iter().map(|v| v.as_slice()).collect();
+    let mut scratch = TfmScratch::new();
+    let mut out = vec![0.0f32; b * classes];
+    // warm-up: first call grows every scratch buffer to high-water
+    tfm.predict_batch_into(&idr, &mr, &mut scratch, &mut out);
+    let before = allocs();
+    for _ in 0..steps {
+        tfm.predict_batch_into(&idr, &mr, &mut scratch, &mut out);
+    }
+    let tfm_allocs = allocs() - before;
+    assert_eq!(
+        tfm_allocs, 0,
+        "HostTfm::predict_batch_into allocated {tfm_allocs} times over {steps} steady-state calls"
+    );
+
+    // --- HostLr::predict_batch_into ---------------------------------
+    let dim = 256;
+    let lr = HostLr::new(dim, classes);
+    let xs: Vec<Vec<f32>> = (0..b)
+        .map(|_| {
+            (0..dim)
+                .map(|_| if rng.below(4) == 0 { rng.f32() } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let mut lr_out = vec![0.0f32; b * classes];
+    lr.predict_batch_into(&xr, &mut lr_out);
+    let before = allocs();
+    for _ in 0..steps {
+        lr.predict_batch_into(&xr, &mut lr_out);
+    }
+    let lr_allocs = allocs() - before;
+    assert_eq!(
+        lr_allocs, 0,
+        "HostLr::predict_batch_into allocated {lr_allocs} times over {steps} steady-state calls"
+    );
+
+    // --- HostMlp::predict_scratch / predict_batch_into --------------
+    let mlp = HostMlp::new(classes, 9);
+    let probs: Vec<Vec<f32>> = (0..b)
+        .map(|_| {
+            let raw: Vec<f32> = (0..classes).map(|_| rng.f32() + 1e-3).collect();
+            let s: f32 = raw.iter().sum();
+            raw.iter().map(|v| v / s).collect()
+        })
+        .collect();
+    let pr: Vec<&[f32]> = probs.iter().map(|v| v.as_slice()).collect();
+    let mut feat = Vec::new();
+    let mut mlp_out = vec![0.0f32; b];
+    // warm-up: first call grows the shared feature buffer
+    mlp.predict_batch_into(&pr, &mut feat, &mut mlp_out);
+    let before = allocs();
+    for _ in 0..steps {
+        mlp.predict_batch_into(&pr, &mut feat, &mut mlp_out);
+        for p in &pr {
+            mlp.predict_scratch(p, &mut feat);
+        }
+    }
+    let mlp_allocs = allocs() - before;
+    assert_eq!(
+        mlp_allocs, 0,
+        "HostMlp scratch paths allocated {mlp_allocs} times over {steps} steady-state calls"
+    );
+}
