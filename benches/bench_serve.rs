@@ -64,7 +64,12 @@ fn run_sharded(
     shard: ShardConfig,
 ) -> ShardReport {
     let (b, expert, cfg) = setup(n, seed);
-    let serve_cfg = ServeConfig { shard, ..ServeConfig::default() };
+    let serve_cfg = ServeConfig::builder()
+        .shards(shard.shards)
+        .replicas_per_level(shard.replicas_per_level)
+        .sync_interval(shard.sync_interval)
+        .build()
+        .expect("serve cfg");
     let mut front =
         ShardFront::new(cfg, b.classes, expert, serve_cfg, "artifacts").expect("front");
     front.set_threshold_scale(0.7);
@@ -95,7 +100,8 @@ fn run_tcp_backpressure(
     max_pending: usize,
 ) -> Json {
     let (b, expert, cfg) = setup(n, seed);
-    let serve_cfg = ServeConfig { max_pending, ..ServeConfig::default() };
+    let serve_cfg =
+        ServeConfig::builder().max_pending(max_pending).build().expect("serve cfg");
     let mut front =
         ShardFront::new(cfg, b.classes, expert, serve_cfg, "artifacts").expect("front");
     front.set_threshold_scale(0.7);
@@ -143,6 +149,60 @@ fn run_tcp_backpressure(
     ])
 }
 
+/// Deferred-vs-direct latency split for one execution mode (the
+/// tentpole acceptance rows): same open-loop stream, same cascade,
+/// only the scheduling knobs differ. Uses the 4-level cascade —
+/// speculation targets level k+2, so the 2-level topology would never
+/// speculate — and reports p99 for requests answered at level 0
+/// (direct) vs answered deeper or by the expert (deferred).
+fn run_latency_split(mode: &str, serve_cfg: ServeConfig, n: usize, seed: u64) -> ServeReport {
+    let (b, expert, _) = setup(n, seed);
+    let mut cfg = CascadeConfig::large(BenchmarkId::Imdb, ExpertId::Gpt35);
+    cfg.seed = seed;
+    let mut server =
+        Server::new(cfg, b.classes, expert, serve_cfg, "artifacts").expect("server");
+    server.set_threshold_scale(0.7);
+
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let drain = std::thread::spawn(move || resp_rx.iter().count());
+    let submit = load::drive(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 1200.0 },
+        seed ^ 0xA,
+        req_tx,
+    );
+    let report = server.serve(req_rx, resp_tx).expect("serve");
+    assert_eq!(submit.join().expect("submit"), n);
+    assert_eq!(drain.join().expect("drain"), n, "every request answered");
+    let d99 = report.latency_direct_ms.pct(99.0);
+    let f99 = report.latency_deferred_ms.pct(99.0);
+    println!(
+        "latency-split {mode}: p99 direct {:.2}ms deferred {:.2}ms (ratio {:.2}) \
+         spec hits {} wasted {} queue_depth {:?}",
+        d99,
+        f99,
+        if d99 > 0.0 { f99 / d99 } else { 0.0 },
+        report.spec_hits,
+        report.spec_wasted,
+        report.queue_depth
+    );
+    report
+}
+
+fn split_row(mode: &str, n: usize, r: &ServeReport) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(format!("latency-split-{mode}"))),
+        ("requests", Json::Num(n as f64)),
+        ("p99_direct_ms", Json::Num(r.latency_direct_ms.pct(99.0))),
+        ("p99_deferred_ms", Json::Num(r.latency_deferred_ms.pct(99.0))),
+        ("p50_direct_ms", Json::Num(r.latency_direct_ms.pct(50.0))),
+        ("p50_deferred_ms", Json::Num(r.latency_deferred_ms.pct(50.0))),
+        ("spec_hits", Json::Num(r.spec_hits as f64)),
+        ("spec_wasted", Json::Num(r.spec_wasted as f64)),
+    ])
+}
+
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
@@ -177,6 +237,35 @@ fn main() {
         for (i, (name, arrival)) in scenarios.iter().enumerate() {
             bench.case_throughput(name, n as f64, || {
                 reports.borrow_mut().push(run_scenario(*arrival, n, 51 + i as u64));
+            });
+        }
+    }
+    // Deferred-vs-direct latency split across execution modes
+    // (sequential round-trips vs stage-queue pipelining vs pipelining
+    // with speculative dispatch) — the tentpole acceptance rows.
+    let split_modes: [(&str, ServeConfig); 3] = [
+        ("sequential", ServeConfig::default()),
+        (
+            "pipelined",
+            ServeConfig::builder().pipeline(true).build().expect("serve cfg"),
+        ),
+        (
+            "pipelined-spec",
+            ServeConfig::builder()
+                .pipeline(true)
+                .spec_threshold(0.3) // aggressive: most deferrals speculate
+                .build()
+                .expect("serve cfg"),
+        ),
+    ];
+    let split_reports: RefCell<Vec<ServeReport>> = RefCell::new(Vec::new());
+    if single_router {
+        for (i, (mode, split_cfg)) in split_modes.iter().enumerate() {
+            let name = format!("latency-split-{mode}");
+            bench.case_throughput(&name, n as f64, || {
+                split_reports
+                    .borrow_mut()
+                    .push(run_latency_split(mode, *split_cfg, n, 81 + i as u64));
             });
         }
     }
@@ -242,6 +331,25 @@ fn main() {
     if let Some(r) = &sharded {
         slo.check_sharded(r).expect("sharded steady-state SLO");
     }
+    // Tentpole acceptance gate: with pipelining + speculation on, the
+    // deferred path must approach the direct one — within 2× at p99,
+    // with the same absolute-floor generosity the other gates give
+    // shared CI runners (a sub-ms direct p99 must not turn scheduler
+    // noise into a failure).
+    let split_reports = split_reports.into_inner();
+    if let Some(r) = split_reports.last() {
+        assert!(
+            r.spec_hits + r.spec_wasted > 0,
+            "the speculative mode must actually speculate"
+        );
+        let d99 = r.latency_direct_ms.pct(99.0);
+        let f99 = r.latency_deferred_ms.pct(99.0);
+        assert!(
+            f99 <= (2.0 * d99).max(2_000.0),
+            "pipelined+speculative deferred p99 {f99:.2}ms exceeds 2x the \
+             direct p99 {d99:.2}ms (floor 2s)"
+        );
+    }
 
     // JSON baseline: harness timings + per-scenario serve reports (the
     // sharded run reports its aggregate, staleness included).
@@ -267,9 +375,15 @@ fn main() {
             ("report", r.to_json()),
         ]));
     }
+    let split_rows: Vec<Json> = split_modes
+        .iter()
+        .zip(&split_reports)
+        .map(|((mode, _), r)| split_row(mode, n, r))
+        .collect();
     let json = Json::obj(vec![
         ("harness", bench.to_json()),
         ("serve", Json::Arr(serve_entries)),
+        ("latency_split", Json::Arr(split_rows)),
         ("tcp_backpressure", Json::Arr(tcp_rows)),
     ]);
     // Default next to the workspace target dir (cargo runs benches with

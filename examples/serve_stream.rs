@@ -16,7 +16,7 @@ use std::sync::mpsc::channel;
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::data::Benchmark;
 use ocl::serve::shard::ShardFront;
-use ocl::serve::{load, net, ServeConfig, ShardConfig};
+use ocl::serve::{load, net};
 use ocl::sim::{Expert, ExpertProfile};
 
 /// Prefer PJRT when the build and the artifacts allow it.
@@ -38,60 +38,29 @@ fn auto_engine() -> Engine {
 }
 
 fn main() -> ocl::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
+    // One shared flag table (`cli::ServeArgs`) for this example, `ocl
+    // serve`, and the wire client — flags and defaults cannot drift.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help") {
+        print!("{}", ocl::cli::ServeArgs::command().help());
+        return Ok(());
+    }
+    let sa = ocl::cli::ServeArgs::parse(&argv)?;
     // An explicit `--engine <name>` is honored strictly (erroring in
     // builds that cannot provide it); only the unspecified case
     // auto-selects.
-    let engine = match args
-        .iter()
-        .position(|a| a == "--engine")
-        .and_then(|i| args.get(i + 1))
-    {
+    let engine = match sa.engine.as_deref() {
         Some(name) => Engine::from_name(name)?,
         None => auto_engine(),
     };
-    let n: usize = args
-        .iter()
-        .position(|a| a == "--requests")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1500);
+    let n = sa.requests;
     // Open-loop offered load (req/s); 0 = submit as fast as possible.
-    let rate: f64 = args
-        .iter()
-        .position(|a| a == "--rate")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0.0);
-    let flag_usize = |name: &str, default: usize| -> usize {
-        args.iter()
-            .position(|a| a == name)
-            .and_then(|i| args.get(i + 1))
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
-    };
-    let flag_str = |name: &str| -> Option<String> {
-        args.iter()
-            .position(|a| a == name)
-            .and_then(|i| args.get(i + 1))
-            .cloned()
-    };
+    let rate = sa.rate;
     // Scale-out topology: router shards and per-level worker replicas.
-    let shards = flag_usize("--shards", 1);
-    let replicas = flag_usize("--replicas", 1);
-    let sync = flag_usize("--sync", 16);
+    let (shards, replicas) = (sa.shards, sa.replicas);
     // Durability: `--ckpt-dir <dir>` persists the learner state;
     // `--resume strict|best-effort` restores it first.
-    let ckpt = match flag_str("--ckpt-dir") {
-        Some(dir) => Some(ocl::serve::ckpt::CkptOptions {
-            dir,
-            resume: match flag_str("--resume") {
-                Some(m) => Some(ocl::serve::ckpt::ResumeMode::from_name(&m)?),
-                None => None,
-            },
-        }),
-        None => None,
-    };
+    let ckpt = sa.ckpt_options()?;
 
     let bench = BenchmarkId::Imdb;
     let b = Benchmark::build_sized(bench, 7, n);
@@ -108,11 +77,10 @@ fn main() -> ocl::Result<()> {
         "engine: {engine:?}, requests: {n}, shards: {shards}, replicas: {replicas}"
     );
 
-    // The broadcast only activates when shards > 1 (ShardFront wires it).
-    let serve_cfg = ServeConfig {
-        shard: ShardConfig { shards, replicas_per_level: replicas, sync_interval: sync },
-        ..ServeConfig::default()
-    };
+    // Validated construction through the builder; the broadcast only
+    // activates when shards > 1 (ShardFront wires it). `--pipeline` /
+    // `--spec-threshold` / `--stage-depth` flow through here too.
+    let serve_cfg = sa.serve_config()?;
     let mut front = ShardFront::with_ckpt(
         cfg,
         b.classes,
@@ -131,7 +99,7 @@ fn main() -> ocl::Result<()> {
     // `--listen <addr>` puts the whole front behind the wire protocol
     // (`serve::net`) and drives the identical stream through a real
     // loopback socket; the default stays on in-process channels.
-    let (report, client_correct, client_total) = match flag_str("--listen") {
+    let (report, client_correct, client_total) = match sa.listen.clone() {
         Some(addr) => {
             let listener = std::net::TcpListener::bind(&addr)
                 .map_err(|e| ocl::Error::io(&addr, e))?;
@@ -207,6 +175,17 @@ fn main() -> ocl::Result<()> {
         lat.pct(50.0),
         lat.pct(95.0),
         lat.pct(99.0)
+    );
+    println!(
+        "p99 direct/deferred {:.2} / {:.2} ms",
+        report.latency_direct_ms().pct(99.0),
+        report.latency_deferred_ms().pct(99.0)
+    );
+    println!(
+        "speculation         hits={} wasted={} queue_depth={:?}",
+        report.spec_hits(),
+        report.spec_wasted(),
+        report.queue_depth()
     );
     println!("accuracy            {:.2}%", report.accuracy() * 100.0);
     println!(

@@ -17,8 +17,9 @@
 //! * **`determinism`** — no wall-clock (`Instant::now`,
 //!   `SystemTime::now`) or entropy-seeded RNG construction in the
 //!   deterministic replay/checkpoint paths (`serve/ckpt.rs`,
-//!   `codec/`). Checkpoint parity (DESIGN.md §10) depends on those
-//!   paths being pure functions of their inputs.
+//!   `serve/stage.rs`, `codec/`). Checkpoint parity (DESIGN.md §10)
+//!   and the pipelined stage queues (§13) depend on those paths being
+//!   pure functions of their inputs.
 //! * **`raw-write`** — in `serve/net.rs`, every `.write_all(` must be
 //!   fed by `encode(`, the single site that enforces the `MAX_FRAME`
 //!   wire bound; raw socket writes bypass it.
@@ -204,7 +205,9 @@ fn scan_file(rel: &str, src: &str, violations: &mut Vec<Violation>, markers: &mu
         return;
     }
     let serve = rel.contains("src/serve/");
-    let deterministic = rel.ends_with("src/serve/ckpt.rs") || rel.contains("src/codec/");
+    let deterministic = rel.ends_with("src/serve/ckpt.rs")
+        || rel.ends_with("src/serve/stage.rs")
+        || rel.contains("src/codec/");
     let net = rel.ends_with("src/serve/net.rs");
     // hot-alloc scope: the kernel file is hot wall-to-wall; the model
     // files are hot only inside their inference-path function bodies

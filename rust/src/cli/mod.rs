@@ -144,6 +144,185 @@ impl Command {
     }
 }
 
+/// Typed view of the serve flag table — the single source of truth for
+/// `ocl serve`, its `--connect` wire-client mode, and
+/// `examples/serve_stream.rs`. All three surfaces parse through
+/// [`ServeArgs::command`], so flags, defaults, and help lines can no
+/// longer drift apart. The pipeline/speculation knobs (`--pipeline`,
+/// `--spec-threshold`, `--stage-depth`) exist only here and on
+/// [`crate::config::ServeConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct ServeArgs {
+    /// Benchmark stream to serve.
+    pub benchmark: String,
+    /// Expert model identity.
+    pub expert: String,
+    /// Number of requests to submit.
+    pub requests: usize,
+    /// Open-loop arrival rate in req/s (0 = unpaced).
+    pub rate: f64,
+    /// Stream scale vs the paper's dataset size.
+    pub scale: f64,
+    /// Engine name; `None` = surface-specific default (`ocl serve`
+    /// pins host, the serve_stream example auto-detects PJRT).
+    pub engine: Option<String>,
+    /// RNG seed.
+    pub seed: u64,
+    /// Artifacts directory (PJRT engine).
+    pub artifacts: String,
+    /// Router shards behind the front dispatcher.
+    pub shards: usize,
+    /// Worker-pool capacity per cascade level.
+    pub replicas: usize,
+    /// Cross-shard annotation broadcast interval (0 = off).
+    pub sync: usize,
+    /// Checkpoint directory (`None` = durability off).
+    pub ckpt_dir: Option<String>,
+    /// Expert annotations between checkpoints (0 = shutdown only).
+    pub ckpt_every: usize,
+    /// Resume mode name: off|strict|best-effort.
+    pub resume: String,
+    /// Pipelined level execution (bounded stage queues).
+    pub pipeline: bool,
+    /// Speculative-dispatch threshold in (0, 1]; 1 disables.
+    pub spec_threshold: f64,
+    /// Per-level stage-queue capacity for the pipelined path.
+    pub stage_depth: usize,
+    /// TCP bind address (serving over the wire).
+    pub listen: Option<String>,
+    /// With `listen`: run as one shard process of `shards`.
+    pub shard_id: Option<usize>,
+    /// Thin-front mode: comma-separated shard addresses.
+    pub front: Option<String>,
+    /// Wire-client mode: address of a `--listen`/`--front` process.
+    pub connect: Option<String>,
+    /// Client-side p50 latency SLO in ms (0 = off).
+    pub slo_p50: f64,
+    /// Client-side p99 latency SLO in ms (0 = off).
+    pub slo_p99: f64,
+}
+
+impl ServeArgs {
+    /// The declarative flag table (parses and renders `--help`).
+    pub fn command() -> Command {
+        Command::new("serve", "run the streaming serving mode (router+batcher)")
+            .opt("benchmark", "imdb", "benchmark")
+            .opt("expert", "gpt35", "gpt35|llama70b")
+            .opt("requests", "2000", "number of requests")
+            .opt("rate", "0", "open-loop arrival rate, req/s (0 = unpaced)")
+            .opt("scale", "1", "stream scale vs the paper's dataset size")
+            .opt("engine", "", "host|pjrt (empty: host, or auto-detect in serve_stream)")
+            .opt("seed", "0", "rng seed")
+            .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)")
+            .opt("shards", "1", "router shards behind the front dispatcher")
+            .opt("replicas", "1", "worker-pool capacity per cascade level")
+            .opt("sync", "16", "cross-shard annotation broadcast interval (0 = off)")
+            .opt("ckpt-dir", "", "checkpoint directory (empty = durability off)")
+            .opt(
+                "ckpt-every",
+                "64",
+                "expert annotations between checkpoints (0 = shutdown only)",
+            )
+            .opt("resume", "off", "off|strict|best-effort: restore from --ckpt-dir")
+            .switch("pipeline", "pipelined level execution (bounded stage queues)")
+            .opt(
+                "spec-threshold",
+                "1",
+                "speculate past the gate above this calibrated score, (0,1]; 1 = off",
+            )
+            .opt("stage-depth", "64", "per-level stage-queue capacity (pipelined path)")
+            .opt("listen", "", "serve over TCP: bind address (e.g. 127.0.0.1:4100)")
+            .opt("shard-id", "", "with --listen: run as one shard process (0..--shards)")
+            .opt("front", "", "run the thin front over comma-separated shard addresses")
+            .opt("connect", "", "run as a load client against a --listen/--front address")
+            .opt("slo-p50", "0", "client: fail if p50 latency exceeds this many ms (0 = off)")
+            .opt("slo-p99", "0", "client: fail if p99 latency exceeds this many ms (0 = off)")
+    }
+
+    /// Typed extraction from already-parsed [`Args`] (the `ocl`
+    /// launcher parses once for subcommand dispatch, then calls this).
+    pub fn from_args(a: &Args) -> Result<ServeArgs> {
+        Ok(ServeArgs {
+            benchmark: a.get("benchmark").to_string(),
+            expert: a.get("expert").to_string(),
+            requests: a.parse("requests")?,
+            rate: a.parse("rate")?,
+            scale: a.parse("scale")?,
+            engine: a.get_opt("engine").map(str::to_string),
+            seed: a.parse("seed")?,
+            artifacts: a.get("artifacts").to_string(),
+            shards: a.parse("shards")?,
+            replicas: a.parse("replicas")?,
+            sync: a.parse("sync")?,
+            ckpt_dir: a.get_opt("ckpt-dir").map(str::to_string),
+            ckpt_every: a.parse("ckpt-every")?,
+            resume: a.get("resume").to_string(),
+            pipeline: a.switch("pipeline"),
+            spec_threshold: a.parse("spec-threshold")?,
+            stage_depth: a.parse("stage-depth")?,
+            listen: a.get_opt("listen").map(str::to_string),
+            shard_id: match a.get_opt("shard-id") {
+                Some(s) => Some(s.parse().map_err(|_| {
+                    Error::Usage(format!("--shard-id: cannot parse '{s}'"))
+                })?),
+                None => None,
+            },
+            front: a.get_opt("front").map(str::to_string),
+            connect: a.get_opt("connect").map(str::to_string),
+            slo_p50: a.parse("slo-p50")?,
+            slo_p99: a.parse("slo-p99")?,
+        })
+    }
+
+    /// Parse raw argv straight into typed serve flags (the example's
+    /// entry — no subcommand dispatch in front of it).
+    pub fn parse(argv: &[String]) -> Result<ServeArgs> {
+        Self::from_args(&Self::command().parse(argv)?)
+    }
+
+    /// Build the validated [`crate::config::ServeConfig`] these flags
+    /// describe; suspicious-but-legal combinations are printed to
+    /// stderr as warnings rather than silently accepted.
+    pub fn serve_config(&self) -> Result<crate::config::ServeConfig> {
+        let (cfg, warnings) = crate::config::ServeConfig::builder()
+            .ckpt_every(self.ckpt_every)
+            .shards(self.shards)
+            .replicas_per_level(self.replicas)
+            .sync_interval(self.sync)
+            .pipeline(self.pipeline)
+            .spec_threshold(self.spec_threshold)
+            .stage_queue_depth(self.stage_depth)
+            .build_with_warnings()?;
+        for w in &warnings {
+            eprintln!("warning: {w}");
+        }
+        Ok(cfg)
+    }
+
+    /// Durability options implied by `--ckpt-dir`/`--resume`
+    /// (`--resume` without a directory is a usage error).
+    pub fn ckpt_options(&self) -> Result<Option<crate::serve::ckpt::CkptOptions>> {
+        match &self.ckpt_dir {
+            None => {
+                if self.resume != "off" {
+                    return Err(Error::Usage("--resume requires --ckpt-dir".into()));
+                }
+                Ok(None)
+            }
+            Some(dir) => {
+                let resume = match self.resume.as_str() {
+                    "off" => None,
+                    m => Some(crate::serve::ckpt::ResumeMode::from_name(m)?),
+                };
+                Ok(Some(crate::serve::ckpt::CkptOptions {
+                    dir: dir.clone(),
+                    resume,
+                }))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +395,72 @@ mod tests {
         let h = cmd().help();
         assert!(h.contains("--benchmark"));
         assert!(h.contains("default: 100"));
+    }
+
+    #[test]
+    fn serve_args_defaults_match_serve_config_defaults() {
+        let sa = ServeArgs::parse(&v(&[])).unwrap();
+        assert_eq!(sa.requests, 2000);
+        assert_eq!(sa.engine, None, "empty engine means surface default");
+        assert!(!sa.pipeline);
+        assert_eq!(sa.spec_threshold, 1.0);
+        assert_eq!(sa.stage_depth, 64);
+        let cfg = sa.serve_config().unwrap();
+        assert_eq!(cfg, crate::config::ServeConfig::default());
+        assert!(sa.ckpt_options().unwrap().is_none());
+    }
+
+    #[test]
+    fn serve_args_pipeline_knobs_flow_into_config() {
+        let sa = ServeArgs::parse(&v(&[
+            "--pipeline",
+            "--spec-threshold",
+            "0.6",
+            "--stage-depth=16",
+            "--shards",
+            "2",
+        ]))
+        .unwrap();
+        let cfg = sa.serve_config().unwrap();
+        assert!(cfg.pipeline);
+        assert_eq!(cfg.spec_threshold, 0.6);
+        assert_eq!(cfg.stage_queue_depth, 16);
+        assert_eq!(cfg.shard.shards, 2);
+        // The builder's validation runs on the CLI path too.
+        let bad = ServeArgs::parse(&v(&["--spec-threshold", "1.5"])).unwrap();
+        assert!(bad.serve_config().is_err());
+    }
+
+    #[test]
+    fn serve_args_usage_errors() {
+        assert!(ServeArgs::parse(&v(&["--shard-id", "zero"])).is_err());
+        let sa = ServeArgs::parse(&v(&["--resume", "strict"])).unwrap();
+        assert!(sa.ckpt_options().is_err(), "--resume requires --ckpt-dir");
+        let sa = ServeArgs::parse(&v(&[
+            "--ckpt-dir",
+            "/tmp/ck",
+            "--resume",
+            "strict",
+        ]))
+        .unwrap();
+        let opts = sa.ckpt_options().unwrap().unwrap();
+        assert_eq!(opts.dir, "/tmp/ck");
+        assert!(opts.resume.is_some());
+    }
+
+    #[test]
+    fn serve_args_help_lists_every_surface_flag() {
+        let h = ServeArgs::command().help();
+        for flag in [
+            "--benchmark",
+            "--connect",
+            "--front",
+            "--pipeline",
+            "--spec-threshold",
+            "--stage-depth",
+            "--slo-p99",
+        ] {
+            assert!(h.contains(flag), "help is missing {flag}:\n{h}");
+        }
     }
 }

@@ -431,6 +431,26 @@ pub struct ServeConfig {
     pub export_timeout: std::time::Duration,
     /// Scale-out topology (shards × replicas × sync cadence).
     pub shard: ShardConfig,
+    /// Pipelined level execution: deferred (and speculative) jobs are
+    /// dispatched through bounded per-level *stage queues* the moment a
+    /// replica frees up, instead of waiting for the next batch-deadline
+    /// sweep — L0 inference for batch N overlaps with L1 inference for
+    /// batch N−1. Inference scheduling only; the learner trajectory is
+    /// bit-identical either way (DESIGN.md §13).
+    pub pipeline: bool,
+    /// Speculative dispatch threshold: when a level's calibrated score
+    /// exceeds this *and* the gate defers, the request is already on its
+    /// way to level k+1 speculatively the moment the level-k result
+    /// lands — the gate's own decision then either consumes or discards
+    /// the speculative result. Valid range (0, 1]; `1.0` disables
+    /// speculation (a calibrated score never strictly exceeds it).
+    /// Speculation is inference-only: gates alone decide what trains.
+    pub spec_threshold: f64,
+    /// Capacity of each per-level stage queue when `pipeline` is on.
+    /// Overflowing *deferred* jobs fall back to the regular batcher
+    /// (backpressure without loss); overflowing *speculative* jobs are
+    /// dropped (they were optional work).
+    pub stage_queue_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -444,11 +464,22 @@ impl Default for ServeConfig {
             ckpt_every: 64,
             export_timeout: std::time::Duration::from_secs(60),
             shard: ShardConfig::default(),
+            pipeline: false,
+            spec_threshold: 1.0,
+            stage_queue_depth: 64,
         }
     }
 }
 
 impl ServeConfig {
+    /// Start a validated builder — the only construction path that
+    /// checks knob combinations up front (`build` returns
+    /// [`Error::Config`] on nonsense) and the home of the
+    /// pipeline/speculation knobs.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+
     /// JSON encoding (serve reports / replayable load specs).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -460,7 +491,161 @@ impl ServeConfig {
             ("ckpt_every", Json::Num(self.ckpt_every as f64)),
             ("export_timeout_us", Json::Num(self.export_timeout.as_micros() as f64)),
             ("shard", self.shard.to_json()),
+            ("pipeline", Json::Bool(self.pipeline)),
+            ("spec_threshold", Json::Num(self.spec_threshold)),
+            ("stage_queue_depth", Json::Num(self.stage_queue_depth as f64)),
         ])
+    }
+}
+
+/// Builder for [`ServeConfig`] with up-front validation.
+///
+/// Every setter mirrors a `ServeConfig` field (shard topology fields
+/// get their own setters so callers never hand-build a
+/// [`ShardConfig`]); `build()` rejects degenerate combinations with
+/// [`Error::Config`] instead of letting them surface as a wedged
+/// router at runtime, and `build_with_warnings()` additionally surfaces
+/// suspicious-but-legal combinations as human-readable strings.
+#[derive(Clone, Debug)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Max jobs per inference batch.
+    pub fn batch_max(mut self, v: usize) -> Self {
+        self.cfg.batch_max = v;
+        self
+    }
+
+    /// Batch-flush deadline for the oldest enqueued job.
+    pub fn deadline(mut self, v: std::time::Duration) -> Self {
+        self.cfg.deadline = v;
+        self
+    }
+
+    /// Admission bound before shedding.
+    pub fn max_pending(mut self, v: usize) -> Self {
+        self.cfg.max_pending = v;
+        self
+    }
+
+    /// Per-level supervision respawn budget.
+    pub fn max_restarts(mut self, v: usize) -> Self {
+        self.cfg.max_restarts = v;
+        self
+    }
+
+    /// Training triggers between snapshot publications.
+    pub fn publish_every(mut self, v: usize) -> Self {
+        self.cfg.publish_every = v;
+        self
+    }
+
+    /// Expert annotations between cadence checkpoints (0 disables).
+    pub fn ckpt_every(mut self, v: usize) -> Self {
+        self.cfg.ckpt_every = v;
+        self
+    }
+
+    /// Barrier export-timeout bound.
+    pub fn export_timeout(mut self, v: std::time::Duration) -> Self {
+        self.cfg.export_timeout = v;
+        self
+    }
+
+    /// Number of router shards.
+    pub fn shards(mut self, v: usize) -> Self {
+        self.cfg.shard.shards = v;
+        self
+    }
+
+    /// Worker replicas per cascade level per shard.
+    pub fn replicas_per_level(mut self, v: usize) -> Self {
+        self.cfg.shard.replicas_per_level = v;
+        self
+    }
+
+    /// Cross-shard annotation broadcast cadence (0 disables).
+    pub fn sync_interval(mut self, v: usize) -> Self {
+        self.cfg.shard.sync_interval = v;
+        self
+    }
+
+    /// Pipelined level execution on/off.
+    pub fn pipeline(mut self, v: bool) -> Self {
+        self.cfg.pipeline = v;
+        self
+    }
+
+    /// Speculative-dispatch threshold in (0, 1]; `1.0` disables.
+    pub fn spec_threshold(mut self, v: f64) -> Self {
+        self.cfg.spec_threshold = v;
+        self
+    }
+
+    /// Per-level stage-queue capacity for the pipelined path.
+    pub fn stage_queue_depth(mut self, v: usize) -> Self {
+        self.cfg.stage_queue_depth = v;
+        self
+    }
+
+    /// Validate and produce the config (warnings discarded).
+    pub fn build(self) -> Result<ServeConfig> {
+        self.build_with_warnings().map(|(cfg, _)| cfg)
+    }
+
+    /// Validate and produce the config plus non-fatal warnings
+    /// (suspicious-but-legal combinations, e.g. a checkpoint cadence
+    /// tighter than the cross-shard sync interval).
+    pub fn build_with_warnings(self) -> Result<(ServeConfig, Vec<String>)> {
+        let cfg = self.cfg;
+        if cfg.batch_max == 0 {
+            return Err(Error::Config("serve: batch_max must be positive".into()));
+        }
+        if cfg.max_pending == 0 {
+            return Err(Error::Config("serve: max_pending must be positive".into()));
+        }
+        if cfg.stage_queue_depth == 0 {
+            return Err(Error::Config(
+                "serve: stage_queue_depth must be positive".into(),
+            ));
+        }
+        if !(cfg.spec_threshold > 0.0 && cfg.spec_threshold <= 1.0) {
+            return Err(Error::Config(format!(
+                "serve: spec_threshold must be in (0, 1], got {}",
+                cfg.spec_threshold
+            )));
+        }
+        if cfg.shard.shards == 0 {
+            return Err(Error::Config("serve: shards must be positive".into()));
+        }
+        if cfg.shard.replicas_per_level == 0 {
+            return Err(Error::Config(
+                "serve: replicas_per_level must be positive".into(),
+            ));
+        }
+        let mut warnings = Vec::new();
+        if cfg.ckpt_every != 0
+            && cfg.shard.sync_interval != 0
+            && cfg.ckpt_every < cfg.shard.sync_interval
+        {
+            warnings.push(format!(
+                "serve: ckpt_every ({}) < sync_interval ({}) — cadence \
+                 checkpoints will fire faster than cross-shard annotation \
+                 sync, so restored shards may lag their peers' annotations",
+                cfg.ckpt_every, cfg.shard.sync_interval
+            ));
+        }
+        if cfg.spec_threshold < 1.0 && !cfg.pipeline {
+            warnings.push(format!(
+                "serve: spec_threshold ({}) enables speculation but \
+                 pipeline is off — speculative jobs will ride the regular \
+                 batcher and gain little latency",
+                cfg.spec_threshold
+            ));
+        }
+        Ok((cfg, warnings))
     }
 }
 
@@ -573,6 +758,9 @@ mod tests {
         assert_eq!(s.ckpt_every, 64);
         assert_eq!(s.export_timeout, std::time::Duration::from_secs(60));
         assert_eq!(s.shard, ShardConfig::default());
+        assert!(!s.pipeline);
+        assert_eq!(s.spec_threshold, 1.0);
+        assert_eq!(s.stage_queue_depth, 64);
         let v = crate::codec::parse(&s.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("batch_max").unwrap().as_usize(), Some(8));
         assert_eq!(v.get("deadline_us").unwrap().as_f64(), Some(2000.0));
@@ -580,10 +768,94 @@ mod tests {
         assert_eq!(v.get("max_restarts").unwrap().as_usize(), Some(16));
         assert_eq!(v.get("ckpt_every").unwrap().as_usize(), Some(64));
         assert_eq!(v.get("export_timeout_us").unwrap().as_f64(), Some(60_000_000.0));
+        assert_eq!(v.get("pipeline").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("spec_threshold").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("stage_queue_depth").unwrap().as_usize(), Some(64));
         let sh = v.get("shard").unwrap();
         assert_eq!(sh.get("shards").unwrap().as_usize(), Some(1));
         assert_eq!(sh.get("replicas_per_level").unwrap().as_usize(), Some(1));
         assert_eq!(sh.get("sync_interval").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn serve_builder_happy_path_matches_default() {
+        // An untouched builder must reproduce Default exactly, and the
+        // setter surface must cover every knob.
+        let built = ServeConfig::builder().build().unwrap();
+        assert_eq!(built, ServeConfig::default());
+        let cfg = ServeConfig::builder()
+            .batch_max(4)
+            .deadline(std::time::Duration::from_millis(1))
+            .max_pending(2048)
+            .max_restarts(3)
+            .publish_every(2)
+            .ckpt_every(32)
+            .export_timeout(std::time::Duration::from_secs(5))
+            .shards(2)
+            .replicas_per_level(3)
+            .sync_interval(16)
+            .pipeline(true)
+            .spec_threshold(0.5)
+            .stage_queue_depth(8)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.batch_max, 4);
+        assert_eq!(cfg.max_pending, 2048);
+        assert_eq!(cfg.shard.shards, 2);
+        assert_eq!(cfg.shard.replicas_per_level, 3);
+        assert_eq!(cfg.shard.sync_interval, 16);
+        assert!(cfg.pipeline);
+        assert_eq!(cfg.spec_threshold, 0.5);
+        assert_eq!(cfg.stage_queue_depth, 8);
+    }
+
+    #[test]
+    fn serve_builder_rejects_nonsense_combos() {
+        for (b, what) in [
+            (ServeConfig::builder().batch_max(0), "batch_max"),
+            (ServeConfig::builder().max_pending(0), "max_pending"),
+            (ServeConfig::builder().stage_queue_depth(0), "stage_queue_depth"),
+            (ServeConfig::builder().spec_threshold(0.0), "spec_threshold"),
+            (ServeConfig::builder().spec_threshold(-0.2), "spec_threshold"),
+            (ServeConfig::builder().spec_threshold(1.5), "spec_threshold"),
+            (ServeConfig::builder().spec_threshold(f64::NAN), "spec_threshold"),
+            (ServeConfig::builder().shards(0), "shards"),
+            (ServeConfig::builder().replicas_per_level(0), "replicas_per_level"),
+        ] {
+            let err = b.build().unwrap_err().to_string();
+            assert!(err.contains(what), "expected '{what}' in: {err}");
+        }
+        // The boundary is inclusive at 1.0 (= disabled), exclusive at 0.
+        assert!(ServeConfig::builder().spec_threshold(1.0).build().is_ok());
+        assert!(ServeConfig::builder().spec_threshold(1e-9).build().is_ok());
+    }
+
+    #[test]
+    fn serve_builder_warns_without_failing() {
+        // ckpt cadence tighter than the sync interval: legal, flagged.
+        let (cfg, warnings) = ServeConfig::builder()
+            .shards(2)
+            .sync_interval(100)
+            .ckpt_every(10)
+            .build_with_warnings()
+            .unwrap();
+        assert_eq!(cfg.ckpt_every, 10);
+        assert!(
+            warnings.iter().any(|w| w.contains("ckpt_every")),
+            "{warnings:?}"
+        );
+        // Speculation without pipelining: legal, flagged.
+        let (_, warnings) = ServeConfig::builder()
+            .spec_threshold(0.3)
+            .build_with_warnings()
+            .unwrap();
+        assert!(
+            warnings.iter().any(|w| w.contains("spec_threshold")),
+            "{warnings:?}"
+        );
+        // The quiet path stays quiet.
+        let (_, warnings) = ServeConfig::builder().build_with_warnings().unwrap();
+        assert!(warnings.is_empty(), "{warnings:?}");
     }
 
     #[test]

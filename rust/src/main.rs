@@ -4,13 +4,13 @@
 //! §5) plus a serving mode and a self-test. `make reproduce` drives
 //! everything into `reports/`.
 
-use ocl::cli::Command;
+use ocl::cli::{Command, ServeArgs};
 use ocl::config::{BenchmarkId, CascadeConfig, Engine, ExpertId};
 use ocl::error::{Error, Result};
 use ocl::eval::{self, Harness};
 use ocl::report;
 use ocl::serve::shard::{ShardFront, ShardReport};
-use ocl::serve::{ckpt, load, net, ServeConfig, ShardConfig};
+use ocl::serve::{load, net};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -60,27 +60,10 @@ fn commands() -> Vec<Command> {
             .opt("seeds", "", "comma-separated seed list override, e.g. 1,2,3")
             .opt("out", "reports", "output directory")
             .switch("check", "schema-validate the existing report file instead of running"),
-        Command::new("serve", "run the streaming serving mode (router+batcher)")
-            .opt("benchmark", "imdb", "benchmark")
-            .opt("expert", "gpt35", "gpt35|llama70b")
-            .opt("requests", "2000", "number of requests")
-            .opt("rate", "0", "open-loop arrival rate, req/s (0 = unpaced)")
-            .opt("scale", "1", "stream scale vs the paper's dataset size")
-            .opt("engine", "host", "host|pjrt")
-            .opt("seed", "0", "rng seed")
-            .opt("artifacts", "artifacts", "artifacts dir (pjrt engine)")
-            .opt("shards", "1", "router shards behind the front dispatcher")
-            .opt("replicas", "1", "worker-pool capacity per cascade level")
-            .opt("sync", "16", "cross-shard annotation broadcast interval (0 = off)")
-            .opt("ckpt-dir", "", "checkpoint directory (empty = durability off)")
-            .opt("ckpt-every", "64", "expert annotations between checkpoints (0 = shutdown only)")
-            .opt("resume", "off", "off|strict|best-effort: restore from --ckpt-dir")
-            .opt("listen", "", "serve over TCP: bind address (e.g. 127.0.0.1:4100)")
-            .opt("shard-id", "", "with --listen: run as one shard process (0..--shards)")
-            .opt("front", "", "run the thin front over comma-separated shard addresses")
-            .opt("connect", "", "run as a load client against a --listen/--front address")
-            .opt("slo-p50", "0", "client: fail if p50 latency exceeds this many ms (0 = off)")
-            .opt("slo-p99", "0", "client: fail if p99 latency exceeds this many ms (0 = off)"),
+        // The serve flag table lives in `cli::ServeArgs` — shared with
+        // the wire client and `examples/serve_stream.rs` so the three
+        // surfaces cannot drift.
+        ServeArgs::command(),
         Command::new("selftest", "quick end-to-end smoke test"),
     ]
 }
@@ -282,25 +265,26 @@ fn dispatch(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            let bench = BenchmarkId::from_name(args.get("benchmark"))?;
-            let expert = ExpertId::from_name(args.get("expert"))?;
-            let n: usize = args.parse("requests")?;
-            let rate: f64 = args.parse("rate")?;
-            let seed: u64 = args.parse("seed")?;
-            let engine = Engine::from_name(args.get("engine"))?;
-            let shards: usize = args.parse("shards")?;
-            let replicas: usize = args.parse("replicas")?;
-            let sync: usize = args.parse("sync")?;
+            let sa = ServeArgs::from_args(&args)?;
+            let bench = BenchmarkId::from_name(&sa.benchmark)?;
+            let expert = ExpertId::from_name(&sa.expert)?;
+            let n = sa.requests;
+            let rate = sa.rate;
+            let seed = sa.seed;
+            // `ocl serve` pins the host engine unless told otherwise
+            // (the serve_stream example is the auto-detecting surface).
+            let engine = Engine::from_name(sa.engine.as_deref().unwrap_or("host"))?;
+            let shards = sa.shards;
 
             // Wire-client mode: no local cascade at all — connect to a
             // --listen / --front process and drive it over the socket.
-            if let Some(addr) = args.get_opt("connect") {
-                return serve_client(&args, bench, expert, n, rate, seed, addr);
+            if let Some(addr) = &sa.connect {
+                return serve_client(&sa, bench, expert, addr);
             }
             // Thin front process: also cascade-free; it hash-dispatches
             // to already-running shard processes.
-            if let Some(addrs) = args.get_opt("front") {
-                let listen = args.get_opt("listen").ok_or_else(|| {
+            if let Some(addrs) = &sa.front {
+                let listen = sa.listen.as_deref().ok_or_else(|| {
                     Error::Usage("--front requires --listen <bind addr>".into())
                 })?;
                 let listener = std::net::TcpListener::bind(listen)
@@ -315,50 +299,26 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 println!("front: {}", merged.to_string_compact());
                 return Ok(());
             }
-            if args.get_opt("shard-id").is_some() && args.get_opt("listen").is_none() {
+            if sa.shard_id.is_some() && sa.listen.is_none() {
                 return Err(Error::Usage("--shard-id requires --listen".into()));
             }
 
-            let h = Harness::new(args.parse("scale")?, seed);
+            let h = Harness::new(sa.scale, seed);
             let (b, e) = h.setup(bench, expert);
             let mut cfg = CascadeConfig::small(bench, expert);
             cfg.engine = engine;
             cfg.seed = seed;
-            // A single-shard front has no peers to sync with — the
-            // broadcast is only wired when shards > 1 (ShardFront).
-            let serve_cfg = ServeConfig {
-                ckpt_every: args.parse("ckpt-every")?,
-                shard: ShardConfig {
-                    shards,
-                    replicas_per_level: replicas,
-                    sync_interval: sync,
-                },
-                ..ServeConfig::default()
-            };
-            let ckpt_dir = args.get("ckpt-dir").to_string();
-            let resume = args.get("resume");
-            let ckpt = if ckpt_dir.is_empty() {
-                if resume != "off" {
-                    return Err(Error::Usage("--resume requires --ckpt-dir".into()));
-                }
-                None
-            } else {
-                let mode = match resume {
-                    "off" => None,
-                    m => Some(ckpt::ResumeMode::from_name(m)?),
-                };
-                Some(ckpt::CkptOptions { dir: ckpt_dir, resume: mode })
-            };
+            // Validated construction: nonsense knob combos fail here,
+            // before any worker thread spawns. (A single-shard front
+            // has no peers to sync with — the broadcast is only wired
+            // when shards > 1.)
+            let serve_cfg = sa.serve_config()?;
+            let ckpt = sa.ckpt_options()?;
 
             // One shard process of a multi-process deployment: a single
             // Server behind a socket, the shared checkpoint directory
             // as durable state, sync relayed by the front.
-            if let (Some(listen), Some(sid)) =
-                (args.get_opt("listen"), args.get_opt("shard-id"))
-            {
-                let k: usize = sid.parse().map_err(|_| {
-                    Error::Usage(format!("--shard-id: cannot parse '{sid}'"))
-                })?;
+            if let (Some(listen), Some(k)) = (sa.listen.as_deref(), sa.shard_id) {
                 let listener = std::net::TcpListener::bind(listen)
                     .map_err(|e| Error::io(listen, e))?;
                 let (mut srv, cursor) = net::build_shard_server(
@@ -366,7 +326,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                     b.classes,
                     e,
                     serve_cfg,
-                    args.get("artifacts"),
+                    &sa.artifacts,
                     net::ShardSlot { id: k, of: shards },
                     ckpt,
                 )?;
@@ -387,7 +347,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 b.classes,
                 e,
                 serve_cfg,
-                args.get("artifacts"),
+                &sa.artifacts,
                 ckpt,
             )?;
             front.set_threshold_scale(eval::BUDGETED_SCALE);
@@ -395,7 +355,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
             // Single-process TCP serving: the whole ShardFront (global
             // admission gate included) behind one accept loop; clients
             // bring their own stream.
-            if let Some(listen) = args.get_opt("listen") {
+            if let Some(listen) = sa.listen.as_deref() {
                 let cursor = front.resume_cursor() as usize;
                 let listener = std::net::TcpListener::bind(listen)
                     .map_err(|e| Error::io(listen, e))?;
@@ -453,7 +413,8 @@ fn print_serve_summary(report: &ShardReport, drained: usize, cursor: usize) {
     println!(
         "shards={} served_total={} shed={} drained={} acc={:.2}% thr={:.0} req/s \
          p50={:.2}ms p95={:.2}ms p99={:.2}ms llm_calls={} max_snapshot_lag={} \
-         resumed={} resume_cursor={cursor} ckpts={}",
+         resumed={} resume_cursor={cursor} ckpts={} \
+         p99_direct={:.2}ms p99_deferred={:.2}ms spec_hits={} spec_wasted={}",
         report.shards.len(),
         report.served(),
         report.shed(),
@@ -466,7 +427,11 @@ fn print_serve_summary(report: &ShardReport, drained: usize, cursor: usize) {
         report.llm_calls(),
         report.max_snapshot_lag(),
         report.resumed(),
-        report.ckpts()
+        report.ckpts(),
+        report.latency_direct_ms().pct(99.0),
+        report.latency_deferred_ms().pct(99.0),
+        report.spec_hits(),
+        report.spec_wasted()
     );
     for (i, r) in report.shards.iter().enumerate() {
         print_shard_line(i, r);
@@ -479,7 +444,7 @@ fn print_shard_line(i: usize, r: &ocl::serve::ServeReport) {
     println!(
         "shard {i}: served={} handled={:?} restarts={:?} (cap {}) \
          warm_respawns={:?} snapshots={:?} snapshot_lag={:?} \
-         replica_jobs={:?} final_betas={:?} infer_ns={:?}",
+         replica_jobs={:?} final_betas={:?} infer_ns={:?} queue_depth={:?}",
         r.served,
         r.handled,
         r.restarts,
@@ -489,7 +454,8 @@ fn print_shard_line(i: usize, r: &ocl::serve::ServeReport) {
         r.snapshot_lag,
         r.replica_jobs,
         r.final_betas,
-        r.infer_ns
+        r.infer_ns,
+        r.queue_depth
     );
 }
 
@@ -498,15 +464,13 @@ fn print_shard_line(i: usize, r: &ocl::serve::ServeReport) {
 /// cursor, and (optionally) asserts client-observed latency SLOs —
 /// measured where they matter, on the far side of the socket.
 fn serve_client(
-    args: &ocl::cli::Args,
+    sa: &ServeArgs,
     bench: BenchmarkId,
     expert: ExpertId,
-    n: usize,
-    rate: f64,
-    seed: u64,
     addr: &str,
 ) -> Result<()> {
-    let h = Harness::new(args.parse("scale")?, seed);
+    let (n, rate, seed) = (sa.requests, sa.rate, sa.seed);
+    let h = Harness::new(sa.scale, seed);
     let (b, _expert) = h.setup(bench, expert);
     let client = net::Client::connect_retry(addr, std::time::Duration::from_secs(30))?;
     let cursor = (client.cursor() as usize).min(n);
@@ -548,8 +512,7 @@ fn serve_client(
     if let Some(rep) = &report {
         println!("server report: {}", rep.to_string_compact());
     }
-    let p50: f64 = args.parse("slo-p50")?;
-    let p99: f64 = args.parse("slo-p99")?;
+    let (p50, p99) = (sa.slo_p50, sa.slo_p99);
     if p50 > 0.0 || p99 > 0.0 {
         let slo = load::Slo {
             p50_ms: if p50 > 0.0 { p50 } else { f64::INFINITY },

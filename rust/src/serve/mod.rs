@@ -63,7 +63,25 @@
 //! shutdown. Cadence checkpoints are quiescent barriers: admission
 //! pauses, in-flight work drains, the state is written atomically,
 //! admission resumes — which is what makes a resumed β/chunk-count
-//! trajectory bit-identical to an uninterrupted run.
+//! trajectory bit-identical to an uninterrupted run. Quiescence covers
+//! the pipelined path too: stage queues and in-flight speculative
+//! copies drain before the barrier fires.
+//!
+//! **Pipelining + speculation** (`ServeConfig::{pipeline,
+//! spec_threshold}`, DESIGN.md §13). With `pipeline` on, deferred jobs
+//! ride bounded per-level [`stage`] queues and dispatch the moment a
+//! replica frees instead of waiting out the batch deadline — level
+//! k+1 inference for one batch overlaps level k inference for the
+//! next. With `spec_threshold < 1`, a gate that defers on a score
+//! above the threshold also dispatches the request *speculatively* one
+//! level further ahead, before that level's gate result lands; the
+//! real gate's decision then consumes the speculative result (hit) or
+//! discards it (wasted). Both are inference-only scheduling changes:
+//! gates alone decide exits, expert hops, and what trains, every RNG
+//! draw happens at the same per-request points, and speculative
+//! results never enter `seen`/calibration unless the gate really
+//! deferred there — so the learner trajectory is bit-identical to the
+//! sequential router (pinned in `tests/test_serve_load.rs`).
 
 pub mod barrier;
 pub mod ckpt;
@@ -71,6 +89,7 @@ pub mod load;
 pub mod net;
 pub mod pool;
 pub mod shard;
+pub(crate) mod stage;
 
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -186,6 +205,22 @@ pub struct ServeReport {
     /// (predict + calibrator scoring) per level, summed across the
     /// level's pool members. Report-only: not checkpointed.
     pub infer_ns: Vec<u64>,
+    /// Speculative dispatches whose target level the real gate then
+    /// deferred into (the speculation paid off).
+    pub spec_hits: u64,
+    /// Speculative dispatches discarded because the real gate kept,
+    /// jumped to the expert, or exhausted the cascade.
+    pub spec_wasted: u64,
+    /// Per-level peak queued-work depth (stage queue + batcher backlog)
+    /// observed during the run — the pipelining backpressure signal.
+    pub queue_depth: Vec<usize>,
+    /// Latency percentiles (ms) for requests answered at level 0 — the
+    /// non-deferred population the pipelining success metric compares
+    /// against.
+    pub latency_direct_ms: Percentiles,
+    /// Latency percentiles (ms) for requests that deferred at least
+    /// once (answered at level ≥ 1 or by the expert).
+    pub latency_deferred_ms: Percentiles,
 }
 
 impl ServeReport {
@@ -228,6 +263,13 @@ impl ServeReport {
                 Json::Arr(self.final_betas.iter().map(|&b| Json::Num(b)).collect()),
             ),
             ("infer_ns", nums64(&self.infer_ns)),
+            ("spec_hits", Json::Num(self.spec_hits as f64)),
+            ("spec_wasted", Json::Num(self.spec_wasted as f64)),
+            ("queue_depth", nums(&self.queue_depth)),
+            ("p99_direct_ms", Json::Num(self.latency_direct_ms.pct(99.0))),
+            ("p99_deferred_ms", Json::Num(self.latency_deferred_ms.pct(99.0))),
+            ("p50_direct_ms", Json::Num(self.latency_direct_ms.pct(50.0))),
+            ("p50_deferred_ms", Json::Num(self.latency_deferred_ms.pct(50.0))),
         ])
     }
 }
@@ -323,6 +365,10 @@ pub(crate) struct Job {
     /// True for calibration-probe jobs (their replies feed
     /// `probe_truth`, never the pending map).
     pub(crate) probe: bool,
+    /// True for speculative copies (dispatched ahead of the gate
+    /// decision; the reply is consumed only if the real gate deferred
+    /// into this level, else dropped — see module docs).
+    pub(crate) spec: bool,
     pub(crate) f: Arc<Featurized>,
     /// Enqueue instant — the batch deadline is measured from here, so a
     /// partial drain never re-arms the clock for surviving jobs.
@@ -341,6 +387,17 @@ struct Pending {
     /// consults the pre-decay β of the sample's own step — a deferral
     /// processed after later admissions must not see further-decayed β.
     betas_at_admit: Vec<f64>,
+    /// Level currently holding a speculative copy (queued or in
+    /// flight), if any. Doubles as the staleness guard: an arriving
+    /// speculative reply is dropped unless it matches this level.
+    spec_level: Option<usize>,
+    /// Speculative result that landed before the real gate decided
+    /// whether to defer into its level.
+    spec_result: Option<(Vec<f32>, f32)>,
+    /// Set once the real gate deferred into `spec_level` while the
+    /// speculative copy was still in flight — its reply is then
+    /// consumed as the real level result the moment it arrives.
+    spec_keep: bool,
 }
 
 /// Calibration probe bookkeeping for an expert-annotated request whose
@@ -427,7 +484,14 @@ struct RunState {
     pending: HashMap<u64, Pending>,
     probe_truth: HashMap<u64, ProbeWait>,
     queues: Vec<LevelQueue>,
+    /// Per-level stage queues — the pipelined dispatch path (empty and
+    /// inert when `ServeConfig::pipeline` is off).
+    stages: Vec<stage::StageQueue>,
     lat: Percentiles,
+    /// Latency split by routing outcome: answered at level 0 vs
+    /// deferred at least once (the pipelining success metric).
+    lat_direct: Percentiles,
+    lat_deferred: Percentiles,
     handled: Vec<usize>,
     correct: usize,
     served: usize,
@@ -435,6 +499,11 @@ struct RunState {
     llm_calls: u64,
     admitted: usize,
     peak_pending: usize,
+    /// Speculation outcome counters (see `ServeReport`).
+    spec_hits: u64,
+    spec_wasted: u64,
+    /// Per-level peak queued-work depth (stage + batcher backlog).
+    queue_depth: Vec<usize>,
     /// Stream high-water mark: 1 + the largest request id seen. At a
     /// quiescent checkpoint (pending empty) this is exactly the resume
     /// cursor — every id below it has been fully absorbed. Assumes the
@@ -444,12 +513,15 @@ struct RunState {
 }
 
 impl RunState {
-    fn new(n_levels: usize, replicas: usize, base: &RunBase) -> Self {
+    fn new(n_levels: usize, replicas: usize, stage_depth: usize, base: &RunBase) -> Self {
         RunState {
             pending: HashMap::new(),
             probe_truth: HashMap::new(),
             queues: (0..n_levels).map(|_| LevelQueue::new(replicas)).collect(),
+            stages: (0..n_levels).map(|_| stage::StageQueue::new(stage_depth)).collect(),
             lat: Percentiles::new(),
+            lat_direct: Percentiles::new(),
+            lat_deferred: Percentiles::new(),
             handled: if base.handled.is_empty() {
                 vec![0; n_levels + 1]
             } else {
@@ -461,17 +533,35 @@ impl RunState {
             llm_calls: base.llm_calls,
             admitted: 0,
             peak_pending: 0,
+            spec_hits: 0,
+            spec_wasted: 0,
+            queue_depth: vec![0; n_levels],
             cursor: base.cursor,
         }
     }
 
-    /// Nothing left to do once inputs are closed?
+    /// Nothing left to do once inputs are closed? Quiescence for the
+    /// checkpoint barrier and shutdown: empty stage queues are part of
+    /// it, and in-flight speculative copies drain through the same
+    /// `in_flight` slots as everything else — a pending request whose
+    /// only outstanding work is a speculative reply keeps `pending`
+    /// non-empty until that reply lands and resolves it.
     fn idle(&self) -> bool {
         self.pending.is_empty()
             && self.probe_truth.is_empty()
+            && self.stages.iter().all(|s| s.is_empty())
             && self.queues.iter().all(|q| {
                 q.jobs.is_empty() && q.in_flight.iter().all(|f| f.is_none())
             })
+    }
+
+    /// Record the per-level queued-work high-water mark (report
+    /// diagnostics; called each dispatch sweep).
+    fn note_queue_depth(&mut self) {
+        for i in 0..self.queue_depth.len() {
+            let d = self.stages[i].len() + self.queues[i].jobs.len();
+            self.queue_depth[i] = self.queue_depth[i].max(d);
+        }
     }
 }
 
@@ -556,6 +646,17 @@ impl Server {
             return Err(Error::Config(
                 "serve shards and replicas_per_level must be positive".into(),
             ));
+        }
+        // Struct-literal construction can bypass `ServeConfig::builder`,
+        // so the pipeline/speculation knobs are re-checked here.
+        if serve_cfg.stage_queue_depth == 0 {
+            return Err(Error::Config("serve stage_queue_depth must be positive".into()));
+        }
+        if !(serve_cfg.spec_threshold > 0.0 && serve_cfg.spec_threshold <= 1.0) {
+            return Err(Error::Config(format!(
+                "serve spec_threshold must be in (0, 1], got {}",
+                serve_cfg.spec_threshold
+            )));
         }
         if let Some(s) = &state {
             s.check_config(&cfg, classes)?;
@@ -718,8 +819,12 @@ impl Server {
     ) -> Result<ServeReport> {
         let t_start = Instant::now();
         let n_levels = self.cfg.levels.len();
-        let mut st =
-            RunState::new(n_levels, self.serve_cfg.shard.replicas_per_level, &self.base);
+        let mut st = RunState::new(
+            n_levels,
+            self.serve_cfg.shard.replicas_per_level,
+            self.serve_cfg.stage_queue_depth,
+            &self.base,
+        );
         let mut inputs_open = true;
         // One-shot end-of-stream broadcast of below-interval staged
         // annotations (the drain-on-exit flush).
@@ -761,8 +866,11 @@ impl Server {
                 self.drain_sync(&mut st);
             }
 
-            // 2. flush batches that are full or past deadline to free
-            //    pool members (least-loaded first).
+            // 2. flush batches to free pool members (least-loaded
+            //    first). Stage-queue jobs (pipelined deferrals +
+            //    speculation) are due the moment a replica is free;
+            //    batcher jobs wait for fill, deadline, or drain.
+            st.note_queue_depth();
             for i in 0..n_levels {
                 loop {
                     let Some(r) =
@@ -770,14 +878,20 @@ impl Server {
                     else {
                         break;
                     };
-                    if !st.queues[i].due(
+                    let jobs = if !st.stages[i].is_empty() {
+                        st.stages[i].take(self.serve_cfg.batch_max)
+                    } else if st.queues[i].due(
                         self.serve_cfg.batch_max,
                         self.serve_cfg.deadline,
                         !inputs_open || self.barrier.paused(),
                     ) {
+                        st.queues[i].take(self.serve_cfg.batch_max)
+                    } else {
                         break;
-                    }
-                    let jobs = st.queues[i].take(self.serve_cfg.batch_max);
+                    };
+                    // Stage-dispatched batches park in the same
+                    // `in_flight` slots as batcher ones, so
+                    // supervision requeue and quiescence see them.
                     let ok = self.pools[i].send_infer(r, jobs.clone());
                     st.queues[i].in_flight[r] = Some(jobs);
                     if !ok {
@@ -884,6 +998,11 @@ impl Server {
         Ok(ServeReport {
             served: st.served,
             shed: st.shed,
+            spec_hits: st.spec_hits,
+            spec_wasted: st.spec_wasted,
+            queue_depth: st.queue_depth.clone(),
+            latency_direct_ms: st.lat_direct,
+            latency_deferred_ms: st.lat_deferred,
             // This run's own rate: exclude the restored base, else a
             // resumed tail reports the whole stream over its short wall.
             throughput: (st.served - self.base.served) as f64 / wall.max(1e-9),
@@ -959,6 +1078,9 @@ impl Server {
                 t0: Instant::now(),
                 seen: vec![None; self.cfg.levels.len()],
                 betas_at_admit: self.betas.clone(),
+                spec_level: None,
+                spec_result: None,
+                spec_keep: false,
             },
         );
         st.peak_pending = st.peak_pending.max(st.pending.len());
@@ -973,9 +1095,13 @@ impl Server {
         if jump {
             self.to_expert(req.id, st, tx);
         } else {
+            // Admission always rides the level-0 batcher: arrival
+            // batching is the point of the deadline there — the
+            // pipelined stage path exists for *deferrals*.
             st.queues[0].push(Job {
                 req_id: req.id,
                 probe: false,
+                spec: false,
                 f,
                 enq: Instant::now(),
             });
@@ -989,7 +1115,8 @@ impl Server {
     }
 
     /// Process one worker reply batch: exits, deferrals (with per-level
-    /// DAgger gates), and calibration-probe completions.
+    /// DAgger gates), speculative results, and calibration-probe
+    /// completions.
     fn on_reply(&mut self, reply: WorkerReply, st: &mut RunState, tx: &Sender<Response>) {
         let lvl = reply.level;
         if reply.epoch != self.pools[lvl].workers[reply.replica].epoch {
@@ -1000,8 +1127,7 @@ impl Server {
             return;
         }
         st.queues[lvl].in_flight[reply.replica] = None;
-        let n_levels = self.cfg.levels.len();
-        for (req_id, is_probe, probs, score) in reply.results {
+        for (req_id, is_probe, is_spec, probs, score) in reply.results {
             // Calibration probe for an already-answered (or remote)
             // annotation? Probe jobs are tagged explicitly — client
             // request ids and probe ids live in overlapping u64 spaces.
@@ -1016,54 +1142,204 @@ impl Server {
                 }
                 continue;
             }
-            let Some(state) = st.pending.get_mut(&req_id) else { continue };
-            state.seen[lvl] = Some((probs.clone(), score));
-            let tau = self.cfg.levels[lvl].calibration * self.threshold_scale;
-            let defer = (score as f64) > tau;
-            if !defer {
-                // exit here
-                let pred = argmax(&probs);
-                // lint: allow(unwrap) — key existence was just proven
-                // by the `get_mut` above; a miss is a bug.
-                let state = st.pending.remove(&req_id).expect("state");
-                self.admission.release();
-                st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
-                st.handled[lvl] += 1;
-                if pred == state.truth {
-                    st.correct += 1;
+            if is_spec {
+                // A speculative result. Consume it as the real level
+                // result only when the real gate already deferred here
+                // (`spec_keep`); park it when the gate is still out;
+                // drop it when the speculation was cancelled (the
+                // request exited, jumped, or a *new* request reuses
+                // the id — a fresh `Pending` starts with
+                // `spec_level: None`, so a stale copy can never leak
+                // into it).
+                let Some(state) = st.pending.get_mut(&req_id) else { continue };
+                if state.spec_level != Some(lvl) {
+                    continue;
                 }
-                st.served += 1;
-                let _ = tx.send(Response {
-                    id: req_id,
-                    pred,
-                    handled_by: lvl,
-                    latency: state.t0.elapsed(),
-                    truth: state.truth,
-                    shed: false,
-                });
-            } else if lvl + 1 < n_levels {
-                // Cascade parity: the next level's own β is consulted
-                // before its model runs — at the value snapshotted at
-                // this request's admission, so queueing delay never
-                // skews the jump probability relative to the cascade.
-                let next = lvl + 1;
-                let b_next = state.betas_at_admit[next];
-                let jump = b_next > 0.0 && self.rng.coin(b_next);
-                if jump {
-                    self.to_expert(req_id, st, tx);
+                if state.spec_keep {
+                    state.spec_level = None;
+                    state.spec_keep = false;
+                    self.gate_result(req_id, lvl, probs, score, st, tx);
                 } else {
-                    let f = state.f.clone();
-                    st.queues[next].push(Job {
-                        req_id,
-                        probe: false,
-                        f,
-                        enq: Instant::now(),
-                    });
+                    state.spec_result = Some((probs, score));
                 }
-            } else {
-                self.to_expert(req_id, st, tx);
+                continue;
+            }
+            if st.pending.contains_key(&req_id) {
+                self.gate_result(req_id, lvl, probs, score, st, tx);
             }
         }
+    }
+
+    /// Run the deferral gate on one level result for a pending request:
+    /// exit, defer (with the per-level DAgger gate), or expert hop —
+    /// plus the speculation bookkeeping around the decision. Recurses
+    /// at most once per remaining level when a parked speculative
+    /// result is consumed.
+    fn gate_result(
+        &mut self,
+        req_id: u64,
+        lvl: usize,
+        probs: Vec<f32>,
+        score: f32,
+        st: &mut RunState,
+        tx: &Sender<Response>,
+    ) {
+        let n_levels = self.cfg.levels.len();
+        {
+            let Some(state) = st.pending.get_mut(&req_id) else { return };
+            state.seen[lvl] = Some((probs.clone(), score));
+        }
+        let tau = self.cfg.levels[lvl].calibration * self.threshold_scale;
+        let defer = (score as f64) > tau;
+        if !defer {
+            // exit here — any outstanding speculation was wasted
+            self.cancel_spec(req_id, st);
+            let pred = argmax(&probs);
+            // lint: allow(unwrap) — key existence was just proven
+            // by the `get_mut` above; a miss is a bug.
+            let state = st.pending.remove(&req_id).expect("state");
+            self.admission.release();
+            let ms = state.t0.elapsed().as_secs_f64() * 1e3;
+            st.lat.push(ms);
+            if lvl == 0 {
+                st.lat_direct.push(ms);
+            } else {
+                st.lat_deferred.push(ms);
+            }
+            st.handled[lvl] += 1;
+            if pred == state.truth {
+                st.correct += 1;
+            }
+            st.served += 1;
+            let _ = tx.send(Response {
+                id: req_id,
+                pred,
+                handled_by: lvl,
+                latency: state.t0.elapsed(),
+                truth: state.truth,
+                shed: false,
+            });
+        } else if lvl + 1 < n_levels {
+            // Cascade parity: the next level's own β is consulted
+            // before its model runs — at the value snapshotted at
+            // this request's admission, so queueing delay never
+            // skews the jump probability relative to the cascade.
+            let next = lvl + 1;
+            let (b_next, spec_next) = {
+                // lint: allow(unwrap) — key existence was just proven
+                // by the `get_mut` above; a miss is a bug.
+                let state = st.pending.get(&req_id).expect("state");
+                (state.betas_at_admit[next], state.spec_level == Some(next))
+            };
+            let jump = b_next > 0.0 && self.rng.coin(b_next);
+            if jump {
+                self.to_expert(req_id, st, tx);
+            } else if spec_next {
+                // The speculation paid off: the gate really deferred
+                // into the speculated level. Consume a parked result
+                // right now (recursing into its gate), or mark the
+                // in-flight copy's reply as the real one.
+                st.spec_hits += 1;
+                let parked = {
+                    // lint: allow(unwrap) — existence proven above.
+                    let state = st.pending.get_mut(&req_id).expect("state");
+                    match state.spec_result.take() {
+                        Some(r) => {
+                            state.spec_level = None;
+                            Some(r)
+                        }
+                        None => {
+                            state.spec_keep = true;
+                            None
+                        }
+                    }
+                };
+                if let Some((p, s)) = parked {
+                    self.gate_result(req_id, next, p, s, st, tx);
+                }
+            } else {
+                // lint: allow(unwrap) — existence proven above.
+                let f = st.pending.get(&req_id).expect("state").f.clone();
+                self.dispatch_deferred(
+                    next,
+                    Job { req_id, probe: false, spec: false, f, enq: Instant::now() },
+                    st,
+                );
+                self.maybe_speculate(req_id, score, next, st);
+            }
+        } else {
+            self.to_expert(req_id, st, tx);
+        }
+    }
+
+    /// Route a deferred job: the stage queue when pipelining (dispatch
+    /// the moment a replica frees — no deadline wait), falling back to
+    /// the regular batcher when pipelining is off or the stage queue
+    /// is full (backpressure without loss).
+    fn dispatch_deferred(&mut self, lvl: usize, job: Job, st: &mut RunState) {
+        if self.serve_cfg.pipeline {
+            match st.stages[lvl].push(job) {
+                None => return,
+                Some(back) => st.queues[lvl].push(back),
+            }
+        } else {
+            st.queues[lvl].push(job);
+        }
+    }
+
+    /// Speculative dispatch (inference-only): the gate at `next - 1`
+    /// just deferred into `next` on a score above
+    /// [`ServeConfig::spec_threshold`] — a strong signal the *next*
+    /// gate will defer too — so level `next + 1` starts now instead of
+    /// after `next`'s round-trip. Never targets the expert (an expert
+    /// hop annotates and trains — gates alone may trigger that), draws
+    /// no RNG, and a full stage queue simply drops the idea: the
+    /// speculation was optional work.
+    fn maybe_speculate(&mut self, req_id: u64, score: f32, next: usize, st: &mut RunState) {
+        let target = next + 1;
+        if target >= self.cfg.levels.len()
+            || !((score as f64) > self.serve_cfg.spec_threshold)
+        {
+            return;
+        }
+        let Some(state) = st.pending.get_mut(&req_id) else { return };
+        debug_assert!(state.spec_level.is_none(), "one speculation per walk step");
+        let job = Job {
+            req_id,
+            probe: false,
+            spec: true,
+            f: state.f.clone(),
+            enq: Instant::now(),
+        };
+        let accepted = if self.serve_cfg.pipeline {
+            st.stages[target].push(job).is_none()
+        } else {
+            st.queues[target].push(job);
+            true
+        };
+        if accepted {
+            // lint: allow(unwrap) — `get_mut` above proved existence.
+            let state = st.pending.get_mut(&req_id).expect("state");
+            state.spec_level = Some(target);
+            state.spec_result = None;
+            state.spec_keep = false;
+        }
+    }
+
+    /// Discard an outstanding speculative copy of `req_id` (the real
+    /// gate kept, jumped to the expert, or exhausted the cascade): a
+    /// still-queued copy is removed so it never reaches a worker; an
+    /// in-flight copy finishes and its reply is dropped — by the
+    /// pending-map miss once the request exits, or by the
+    /// `spec_level` guard in [`Server::on_reply`].
+    fn cancel_spec(&mut self, req_id: u64, st: &mut RunState) {
+        let Some(state) = st.pending.get_mut(&req_id) else { return };
+        let Some(lvl) = state.spec_level.take() else { return };
+        state.spec_result = None;
+        state.spec_keep = false;
+        st.spec_wasted += 1;
+        st.stages[lvl].remove_spec(req_id);
+        st.queues[lvl].jobs.retain(|j| !(j.spec && j.req_id == req_id));
     }
 
     /// Push one calibration example and run the shared replay-training
@@ -1233,6 +1509,7 @@ impl Server {
             st.queues[i].push(Job {
                 req_id: probe_id,
                 probe: true,
+                spec: false,
                 f: f.clone(),
                 enq: Instant::now(),
             });
@@ -1262,6 +1539,10 @@ impl Server {
     /// outage routes to [`Server::expert_outage_fallback`] instead:
     /// no fabricated label, no training, no expert-call accounting.
     fn to_expert(&mut self, req_id: u64, st: &mut RunState, tx: &Sender<Response>) {
+        // An outstanding speculative copy is moot once the walk leaves
+        // the cascade — discard it (counts `spec_wasted`; no-op when
+        // nothing was speculated).
+        self.cancel_spec(req_id, st);
         let annotation = match st.pending.get(&req_id) {
             Some(state) => self.expert.annotate(&state.sample, self.classes),
             None => return,
@@ -1303,6 +1584,7 @@ impl Server {
                     st.queues[i].push(Job {
                         req_id: probe_id,
                         probe: true,
+                        spec: false,
                         f: state.f.clone(),
                         enq: Instant::now(),
                     });
@@ -1314,7 +1596,9 @@ impl Server {
         if probes > 0 {
             st.probe_truth.insert(probe_id, ProbeWait { y_star, left: probes });
         }
-        st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+        let ms = state.t0.elapsed().as_secs_f64() * 1e3;
+        st.lat.push(ms);
+        st.lat_deferred.push(ms);
         st.handled[n_levels] += 1;
         if y_star == state.truth {
             st.correct += 1;
@@ -1345,7 +1629,13 @@ impl Server {
         let Some(state) = st.pending.get(&req_id) else { return };
         if state.seen.iter().all(|s| s.is_none()) {
             let f = state.f.clone();
-            st.queues[0].push(Job { req_id, probe: false, f, enq: Instant::now() });
+            st.queues[0].push(Job {
+                req_id,
+                probe: false,
+                spec: false,
+                f,
+                enq: Instant::now(),
+            });
             return;
         }
         // lint: allow(unwrap) — key existence was just proven by the
@@ -1362,7 +1652,13 @@ impl Server {
         let pred = argmax(&mix);
         // The deepest level answers (cascade-parity attribution).
         let lvl = self.cfg.levels.len() - 1;
-        st.lat.push(state.t0.elapsed().as_secs_f64() * 1e3);
+        let ms = state.t0.elapsed().as_secs_f64() * 1e3;
+        st.lat.push(ms);
+        if lvl == 0 {
+            st.lat_direct.push(ms);
+        } else {
+            st.lat_deferred.push(ms);
+        }
         st.handled[lvl] += 1;
         if pred == state.truth {
             st.correct += 1;
@@ -1453,6 +1749,7 @@ mod tests {
         Job {
             req_id: id,
             probe: false,
+            spec: false,
             f: Arc::new(Pipeline::default().featurize("doc")),
             enq,
         }
@@ -1508,12 +1805,30 @@ mod tests {
             1,
         );
         let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
-        let bad = ServeConfig { max_pending: 0, ..ServeConfig::default() };
-        assert!(Server::new(cfg.clone(), 2, expert.clone(), bad, "artifacts").is_err());
-        let bad = ServeConfig {
-            shard: ShardConfig { replicas_per_level: 0, ..ShardConfig::default() },
-            ..ServeConfig::default()
-        };
-        assert!(Server::new(cfg, 2, expert, bad, "artifacts").is_err());
+        // `Server::build` re-validates struct-literal configs that
+        // bypassed `ServeConfig::builder` (whose own rejection matrix
+        // is covered in `config::tests`).
+        for bad in [
+            ServeConfig { max_pending: 0, ..ServeConfig::default() },
+            ServeConfig {
+                shard: ShardConfig { replicas_per_level: 0, ..ShardConfig::default() },
+                ..ServeConfig::default()
+            },
+            ServeConfig { stage_queue_depth: 0, ..ServeConfig::default() },
+            ServeConfig { spec_threshold: 0.0, ..ServeConfig::default() },
+            ServeConfig { spec_threshold: 2.0, ..ServeConfig::default() },
+        ] {
+            assert!(
+                Server::new(cfg.clone(), 2, expert.clone(), bad, "artifacts").is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        // The builder's happy path is accepted end-to-end.
+        let good = ServeConfig::builder()
+            .pipeline(true)
+            .spec_threshold(0.5)
+            .build()
+            .unwrap();
+        assert!(Server::new(cfg, 2, expert, good, "artifacts").is_ok());
     }
 }

@@ -123,10 +123,12 @@ pub(crate) struct WorkerReply {
     /// Worker generation — replies from a generation the supervisor
     /// already replaced are dropped (their jobs were requeued).
     pub epoch: u64,
-    /// (req_id, probe-job?, probs, score) — the probe flag is echoed
-    /// from [`Job::probe`] so the router never has to guess which id
-    /// space a reply belongs to.
-    pub results: Vec<(u64, bool, Vec<f32>, f32)>,
+    /// (req_id, probe-job?, speculative?, probs, score) — the probe
+    /// and speculation flags are echoed from [`Job::probe`] /
+    /// [`Job::spec`] so the router never has to guess which id space a
+    /// reply belongs to, nor whether a result may be consumed before
+    /// the real gate decides.
+    pub results: Vec<(u64, bool, bool, Vec<f32>, f32)>,
 }
 
 /// Training-work counters shared router ↔ authority (survive respawns:
@@ -240,7 +242,7 @@ fn spawn_worker(
                         .zip(probs)
                         .map(|(j, p)| {
                             let s = calib.score(&p);
-                            (j.req_id, j.probe, p, s)
+                            (j.req_id, j.probe, j.spec, p, s)
                         })
                         .collect();
                     stats
@@ -560,12 +562,13 @@ mod tests {
         assert!(pool.send_infer(0, vec![Job {
             req_id: 99,
             probe: false,
+            spec: false,
             f: probe.clone(),
             enq: Instant::now(),
         }]));
         let reply = reply_rx.recv_timeout(Duration::from_secs(10)).unwrap();
         assert_eq!(reply.epoch, 1);
-        let (_, _, probs, score) = &reply.results[0];
+        let (_, _, _, probs, score) = &reply.results[0];
 
         let mut expect_model = HostLrLevel::new(2);
         expect_model.restore(&snap.model).unwrap();
@@ -625,6 +628,7 @@ mod tests {
         assert!(pool.send_infer(0, vec![Job {
             req_id: 7,
             probe: false,
+            spec: false,
             f: probe,
             enq: Instant::now(),
         }]));
@@ -650,6 +654,7 @@ mod tests {
         assert!(pool.send_infer(1, vec![Job {
             req_id: 1,
             probe: false,
+            spec: false,
             f: probe.clone(),
             enq: Instant::now(),
         }]));
@@ -658,7 +663,7 @@ mod tests {
         let mut expect = HostLrLevel::new(2);
         expect.restore(&snap.model).unwrap();
         assert_eq!(
-            reply.results[0].2,
+            reply.results[0].3,
             expect.predict(&probe),
             "replica must serve the published (trained) weights, not init"
         );
@@ -706,6 +711,7 @@ mod tests {
         assert!(pool2.send_infer(0, vec![Job {
             req_id: 5,
             probe: false,
+            spec: false,
             f: probe.clone(),
             enq: Instant::now(),
         }]));
@@ -713,7 +719,7 @@ mod tests {
         let mut expect = HostLrLevel::new(2);
         expect.restore(&model).unwrap();
         assert_eq!(
-            reply.results[0].2,
+            reply.results[0].3,
             expect.predict(&probe),
             "restored authority must serve the exported weights"
         );

@@ -96,6 +96,49 @@ impl ShardReport {
         p
     }
 
+    /// Latency over requests answered at level 0, union of shards.
+    pub fn latency_direct_ms(&self) -> Percentiles {
+        let mut p = Percentiles::new();
+        for r in &self.shards {
+            p.merge(&r.latency_direct_ms);
+        }
+        p
+    }
+
+    /// Latency over deferred requests (level ≥ 1 or expert), union of
+    /// shards.
+    pub fn latency_deferred_ms(&self) -> Percentiles {
+        let mut p = Percentiles::new();
+        for r in &self.shards {
+            p.merge(&r.latency_deferred_ms);
+        }
+        p
+    }
+
+    /// Total speculative dispatches whose gate confirmed the deferral.
+    pub fn spec_hits(&self) -> u64 {
+        self.shards.iter().map(|r| r.spec_hits).sum()
+    }
+
+    /// Total speculative dispatches discarded on a keep/jump.
+    pub fn spec_wasted(&self) -> u64 {
+        self.shards.iter().map(|r| r.spec_wasted).sum()
+    }
+
+    /// Per-level peak stage+batch queue depth — element-wise max over
+    /// shards (each shard has its own queues, so a sum would overstate
+    /// any single router's backlog).
+    pub fn queue_depth(&self) -> Vec<usize> {
+        let n = self.shards.iter().map(|r| r.queue_depth.len()).max().unwrap_or(0);
+        let mut out = vec![0usize; n];
+        for r in &self.shards {
+            for (i, &d) in r.queue_depth.iter().enumerate() {
+                out[i] = out[i].max(d);
+            }
+        }
+        out
+    }
+
     /// Worst end-of-run snapshot staleness across shards and levels.
     pub fn max_snapshot_lag(&self) -> u64 {
         self.shards
@@ -128,6 +171,8 @@ impl ShardReport {
     pub fn to_json(&self) -> crate::codec::Json {
         use crate::codec::Json;
         let q = self.latency_ms().pcts(&[50.0, 95.0, 99.0]);
+        let qd = self.latency_direct_ms().pct(99.0);
+        let qf = self.latency_deferred_ms().pct(99.0);
         Json::obj(vec![
             ("shards", Json::Num(self.shards.len() as f64)),
             ("served", Json::Num(self.served() as f64)),
@@ -137,6 +182,16 @@ impl ShardReport {
             ("p50_ms", Json::Num(q[0])),
             ("p95_ms", Json::Num(q[1])),
             ("p99_ms", Json::Num(q[2])),
+            ("p99_direct_ms", Json::Num(qd)),
+            ("p99_deferred_ms", Json::Num(qf)),
+            ("spec_hits", Json::Num(self.spec_hits() as f64)),
+            ("spec_wasted", Json::Num(self.spec_wasted() as f64)),
+            (
+                "queue_depth",
+                Json::Arr(
+                    self.queue_depth().iter().map(|&d| Json::Num(d as f64)).collect(),
+                ),
+            ),
             ("accuracy", Json::Num(self.accuracy())),
             ("llm_calls", Json::Num(self.llm_calls() as f64)),
             ("max_snapshot_lag", Json::Num(self.max_snapshot_lag() as f64)),
@@ -384,10 +439,16 @@ mod tests {
             for &x in lat {
                 p.push(x);
             }
+            let mut direct = Percentiles::new();
+            direct.push(lat[0]);
+            let mut deferred = Percentiles::new();
+            deferred.push(lat[1]);
             ServeReport {
                 served,
                 shed: 1,
                 latency_ms: p,
+                latency_direct_ms: direct,
+                latency_deferred_ms: deferred,
                 wall_secs: 2.0,
                 throughput: served as f64 / 2.0,
                 handled: vec![served],
@@ -407,6 +468,9 @@ mod tests {
                 train_batches: vec![1],
                 calib_batches: vec![1],
                 infer_ns: vec![served as u64 * 10],
+                spec_hits: 2,
+                spec_wasted: 1,
+                queue_depth: vec![served / 100, 1],
             }
         }
         let r = ShardReport {
@@ -423,9 +487,17 @@ mod tests {
         assert!(!r.resumed());
         assert_eq!(r.ckpts(), 0);
         assert_eq!(r.infer_ns(), 4000);
+        assert_eq!(r.spec_hits(), 4);
+        assert_eq!(r.spec_wasted(), 2);
+        // Element-wise max across shards, not a sum.
+        assert_eq!(r.queue_depth(), vec![3, 1]);
+        assert_eq!(r.latency_direct_ms().len(), 2);
+        assert_eq!(r.latency_deferred_ms().len(), 2);
         let v = crate::codec::parse(&r.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("served").unwrap().as_usize(), Some(400));
         assert_eq!(v.get("peak_pending").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("spec_hits").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("queue_depth").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(v.get("resumed").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("per_shard").unwrap().as_arr().unwrap().len(), 2);
     }

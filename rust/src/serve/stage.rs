@@ -1,0 +1,146 @@
+//! Bounded per-level *stage queues* — the pipelined execution path
+//! (DESIGN.md §13).
+//!
+//! With `ServeConfig::pipeline` on, a request deferred from level k to
+//! level k+1 (and any speculative copy running one level further
+//! ahead) does not wait for the next batch-deadline sweep: it lands in
+//! the destination level's `StageQueue` and is dispatched the moment a
+//! pool replica frees up. That is what overlaps L0 inference for batch
+//! N with L1 inference for batch N−1 and closes the per-level
+//! round-trip gap for deferred requests.
+//!
+//! The queue is *bounded* ([`ServeConfig::stage_queue_depth`]) so a
+//! slow deep level cannot accumulate unbounded router state:
+//! [`StageQueue::push`] hands an overflowing job back to the caller,
+//! who routes a **deferred** job to the regular batcher (backpressure
+//! without loss) and drops a **speculative** one (it was optional
+//! work). Cancelled speculation is removed in place
+//! ([`StageQueue::remove_spec`]) so a kept request's discarded copy
+//! never reaches a worker.
+//!
+//! This module is deliberately clock-free — stage jobs are due the
+//! instant a replica is free, so there is no deadline to measure — and
+//! holds no synchronization of its own (the router owns it
+//! single-threaded). It is in scope for `ocl-lint`'s `determinism`
+//! rule (alongside `serve/ckpt.rs`) and, like every serve module, the
+//! `sync-funnel` rule.
+//!
+//! [`ServeConfig::pipeline`]: crate::config::ServeConfig::pipeline
+//! [`ServeConfig::stage_queue_depth`]: crate::config::ServeConfig::stage_queue_depth
+
+use std::collections::VecDeque;
+
+use super::Job;
+
+/// One level's bounded stage queue (see module docs).
+pub(crate) struct StageQueue {
+    jobs: VecDeque<Job>,
+    cap: usize,
+    peak: usize,
+}
+
+impl StageQueue {
+    /// A stage queue admitting at most `cap` queued jobs.
+    pub(crate) fn new(cap: usize) -> Self {
+        StageQueue { jobs: VecDeque::new(), cap, peak: 0 }
+    }
+
+    /// Enqueue for immediate dispatch. On overflow the job is handed
+    /// back (`Some`) — the caller decides between batcher fallback
+    /// (deferred work) and dropping (speculative work).
+    pub(crate) fn push(&mut self, job: Job) -> Option<Job> {
+        if self.jobs.len() >= self.cap {
+            return Some(job);
+        }
+        self.jobs.push_back(job);
+        self.peak = self.peak.max(self.jobs.len());
+        None
+    }
+
+    /// Drain up to `max` jobs in FIFO order for one dispatch.
+    pub(crate) fn take(&mut self, max: usize) -> Vec<Job> {
+        let take = self.jobs.len().min(max);
+        self.jobs.drain(..take).collect()
+    }
+
+    /// Remove a cancelled speculative copy of `req_id` before it
+    /// reaches a worker. Only speculative jobs are eligible — a real
+    /// deferred job with the same id must keep riding the queue.
+    pub(crate) fn remove_spec(&mut self, req_id: u64) {
+        self.jobs.retain(|j| !(j.spec && j.req_id == req_id));
+    }
+
+    /// Jobs currently queued.
+    pub(crate) fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// True when nothing is queued (barrier-quiescence check).
+    pub(crate) fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Largest queue depth ever observed (`ServeReport::queue_depth`).
+    pub(crate) fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Pipeline;
+    use crate::sync::Arc;
+
+    fn job(id: u64, spec: bool) -> Job {
+        Job {
+            req_id: id,
+            probe: false,
+            spec,
+            f: Arc::new(Pipeline::default().featurize("doc")),
+            enq: std::time::Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_bounded_overflow() {
+        let mut q = StageQueue::new(2);
+        assert!(q.push(job(1, false)).is_none());
+        assert!(q.push(job(2, false)).is_none());
+        // Overflow hands the job back instead of growing or dropping.
+        let back = q.push(job(3, false)).expect("overflow must return the job");
+        assert_eq!(back.req_id, 3);
+        assert_eq!(q.len(), 2);
+        let batch = q.take(8);
+        assert_eq!(batch.iter().map(|j| j.req_id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(q.is_empty());
+        // take() respects the batch bound.
+        assert!(q.push(job(4, false)).is_none());
+        assert!(q.push(job(5, false)).is_none());
+        assert_eq!(q.take(1).len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn remove_spec_only_touches_speculative_copies() {
+        let mut q = StageQueue::new(8);
+        q.push(job(7, true));
+        q.push(job(7, false)); // a real deferred job sharing the id
+        q.push(job(8, true));
+        q.remove_spec(7);
+        let left: Vec<(u64, bool)> =
+            q.take(8).iter().map(|j| (j.req_id, j.spec)).collect();
+        assert_eq!(left, vec![(7, false), (8, true)]);
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut q = StageQueue::new(4);
+        q.push(job(1, false));
+        q.push(job(2, false));
+        q.push(job(3, false));
+        q.take(8);
+        q.push(job(4, false));
+        assert_eq!(q.peak(), 3, "peak survives the drain");
+    }
+}

@@ -33,7 +33,7 @@ fn expert_for(b: &Benchmark, seed: u64) -> Expert {
 
 /// Never sheds, no cadence checkpoints (graceful-shutdown one only).
 fn unbounded() -> ServeConfig {
-    ServeConfig { max_pending: 1 << 16, ckpt_every: 0, ..ServeConfig::default() }
+    ServeConfig::builder().max_pending(1 << 16).ckpt_every(0).build().unwrap()
 }
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -285,11 +285,12 @@ fn slow_export_authority_never_stalls_admission() {
         c.seed = 47;
         c
     };
-    let serve_cfg = ServeConfig {
-        ckpt_every: 16,
-        export_timeout: Duration::ZERO,
-        ..unbounded()
-    };
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(1 << 16)
+        .ckpt_every(16)
+        .export_timeout(Duration::ZERO)
+        .build()
+        .unwrap();
     let dir = tmpdir("slow-export");
     let sink = CkptSink::create(&dir, 1).unwrap();
     let mut srv =
@@ -346,7 +347,8 @@ fn cadence_checkpoints_fire_and_capture_quiescent_cursors() {
         c.seed = 53;
         c
     };
-    let serve_cfg = ServeConfig { ckpt_every: 16, ..unbounded() };
+    let serve_cfg =
+        ServeConfig::builder().max_pending(1 << 16).ckpt_every(16).build().unwrap();
     let dir = tmpdir("cadence");
     let sink = CkptSink::create(&dir, 1).unwrap();
     let mut srv =
@@ -399,4 +401,111 @@ fn cadence_checkpoints_fire_and_capture_quiescent_cursors() {
     assert_eq!(report2.train_batches, report.train_batches);
     assert_eq!(report2.calib_batches, report.calib_batches);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn barrier_mid_speculation_drains_and_resumes_bit_identical() {
+    // Pipelining + speculation vs the checkpoint barrier: quiescence
+    // now also drains the stage queues and any in-flight speculative
+    // copies, so a barrier taken mid-speculation must neither wedge nor
+    // leak state into the snapshot. Forced-defer config (β = 0 after
+    // the first admission, every gate open) on the 4-level cascade
+    // keeps speculative copies in flight almost continuously, and with
+    // every request annotated, `ckpt_every = 8` trips a barrier every
+    // 8 requests — dozens of mid-speculation barriers per run.
+    let n = 280;
+    let k = 130;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 67, n);
+    let cfg = {
+        let mut c = CascadeConfig::large(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 67;
+        c.beta0 = 1.0;
+        for l in &mut c.levels {
+            l.beta_decay = 0.0; // β = 0 after the first admission: no jumps
+            l.calibration = 0.0; // untrained gates always defer
+        }
+        c
+    };
+    let spec_cfg = ServeConfig::builder()
+        .max_pending(1 << 16)
+        .ckpt_every(8)
+        .pipeline(true)
+        .spec_threshold(1e-6) // aggressive: any positive score speculates
+        .build()
+        .unwrap();
+
+    // Uninterrupted paced run: cadence barriers trip while speculative
+    // work is in flight, and every request is still answered once.
+    let dir = tmpdir("spec");
+    let sink = CkptSink::create(&dir, 1).unwrap();
+    let mut srv =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 67), spec_cfg, "artifacts")
+            .unwrap();
+    srv.attach_ckpt(sink, 0);
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let submit = load::drive(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 1500.0 },
+        13,
+        req_tx,
+    );
+    let report = srv.serve(req_rx, resp_tx).expect("serve");
+    assert_eq!(submit.join().unwrap(), n);
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_eq!(responses.len(), n, "barriers must not lose or duplicate answers");
+    assert_eq!(report.served, n);
+    assert!(
+        report.ckpts >= 2,
+        "cadence barriers must fire mid-stream (got {})",
+        report.ckpts
+    );
+    assert!(
+        report.spec_hits > 0,
+        "speculation must be live while barriers fire: hits={} wasted={}",
+        report.spec_hits,
+        report.spec_wasted
+    );
+
+    // Kill after K requests — the graceful-shutdown barrier drains the
+    // in-flight speculative work into a quiescent snapshot — then
+    // resume and finish: bit-identical to the uninterrupted run.
+    let dir2 = tmpdir("spec-resume");
+    let sink2 = CkptSink::create(&dir2, 1).unwrap();
+    let mut srv1 =
+        Server::new(cfg.clone(), b.classes, expert_for(&b, 67), spec_cfg, "artifacts")
+            .unwrap();
+    srv1.attach_ckpt(sink2, 0);
+    let (report1, _) = run_range(srv1, &b, 0, k);
+    assert!(report1.spec_hits > 0, "the interrupted prefix must have speculated");
+    let mut states =
+        ckpt::load_latest(&dir2, ResumeMode::Strict, 1).unwrap().expect("ckpt");
+    let state = states.remove(0);
+    assert_eq!(state.cursor, k as u64, "quiescent cursor covers the drained prefix");
+    let srv2 = Server::resume(
+        cfg.clone(),
+        b.classes,
+        expert_for(&b, 67),
+        spec_cfg,
+        "artifacts",
+        state,
+    )
+    .unwrap();
+    let (report2, responses2) = run_range(srv2, &b, k, n);
+    assert!(report2.resumed);
+    assert_eq!(responses2.len(), n - k, "only the tail is re-served");
+    assert_eq!(report2.served, n, "cumulative counters continue the first run");
+    let bits = |r: &ServeReport| {
+        r.final_betas.iter().map(|x| x.to_bits()).collect::<Vec<u64>>()
+    };
+    assert_eq!(
+        bits(&report2),
+        bits(&report),
+        "a barrier taken mid-speculation must resume bit-identical"
+    );
+    assert_eq!(report2.train_batches, report.train_batches);
+    assert_eq!(report2.calib_batches, report.calib_batches);
+    assert_eq!(report2.llm_calls, report.llm_calls);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
 }

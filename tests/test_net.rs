@@ -19,7 +19,7 @@ use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use ocl::codec::Json;
-use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig, ShardConfig};
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
 use ocl::data::{Benchmark, Sample};
 use ocl::models::Pipeline;
 use ocl::prng::Rng;
@@ -43,7 +43,7 @@ fn expert_for(b: &Benchmark, seed: u64) -> Expert {
 
 /// Never sheds, no cadence checkpoints.
 fn unbounded() -> ServeConfig {
-    ServeConfig { max_pending: 1 << 16, ckpt_every: 0, ..ServeConfig::default() }
+    ServeConfig::builder().max_pending(1 << 16).ckpt_every(0).build().unwrap()
 }
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -322,12 +322,14 @@ fn socket_backpressure_sheds_immediately_and_respects_the_global_gate() {
     let levels = cfg.levels.len();
     // Two shards behind ONE 16-deep global admission gate: the bound
     // is deployment-wide, not per-shard.
-    let serve_cfg = ServeConfig {
-        max_pending: 16,
-        ckpt_every: 0,
-        shard: ShardConfig { shards: 2, replicas_per_level: 1, sync_interval: 0 },
-        ..ServeConfig::default()
-    };
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(16)
+        .ckpt_every(0)
+        .shards(2)
+        .replicas_per_level(1)
+        .sync_interval(0)
+        .build()
+        .unwrap();
     let front =
         ShardFront::new(cfg, b.classes, expert_for(&b, 77), serve_cfg, "artifacts")
             .unwrap();
@@ -392,7 +394,7 @@ fn front_topology_admission_gates_are_per_process() {
         c
     };
     let serve_cfg =
-        ServeConfig { max_pending: cap, ckpt_every: 0, ..ServeConfig::default() };
+        ServeConfig::builder().max_pending(cap).ckpt_every(0).build().unwrap();
 
     // Two shard "processes" (thread-hosted, but over real TCP — the
     // exact code path `ocl serve --listen --shard-id k` runs).

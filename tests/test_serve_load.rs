@@ -9,7 +9,7 @@
 use std::sync::mpsc::channel;
 
 use ocl::cascade::Cascade;
-use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig, ShardConfig};
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
 use ocl::data::Benchmark;
 use ocl::serve::shard::{shard_of, ShardFront};
 use ocl::serve::{load, Chaos, Request, Response, Server};
@@ -28,7 +28,7 @@ fn expert_for(b: &Benchmark, seed: u64) -> Expert {
 
 /// A ServeConfig that never sheds (parity / recovery runs).
 fn unbounded() -> ServeConfig {
-    ServeConfig { max_pending: 1 << 16, ..ServeConfig::default() }
+    ServeConfig::builder().max_pending(1 << 16).build().unwrap()
 }
 
 /// Blast the whole benchmark into the request channel with no pacing.
@@ -112,7 +112,7 @@ fn overload_sheds_and_bounds_the_router() {
         c.seed = 33;
         c
     };
-    let serve_cfg = ServeConfig { max_pending: 16, ..ServeConfig::default() };
+    let serve_cfg = ServeConfig::builder().max_pending(16).build().unwrap();
     let server =
         Server::new(cfg, b.classes, expert_for(&b, 33), serve_cfg, "artifacts").unwrap();
 
@@ -160,7 +160,11 @@ fn worker_death_after_training_respawns_warm() {
         c.seed = 37;
         c
     };
-    let serve_cfg = ServeConfig { publish_every: 1, ..unbounded() };
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(1 << 16)
+        .publish_every(1)
+        .build()
+        .unwrap();
     let mut server =
         Server::new(cfg, b.classes, expert_for(&b, 37), serve_cfg, "artifacts").unwrap();
     server.inject_chaos(Chaos { kill_level: 0, kill_replica: 0, after_requests: 120 });
@@ -199,7 +203,11 @@ fn restart_cap_is_configurable_and_enforced() {
         c.seed = 39;
         c
     };
-    let serve_cfg = ServeConfig { max_restarts: 0, ..unbounded() };
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(1 << 16)
+        .max_restarts(0)
+        .build()
+        .unwrap();
     let mut server =
         Server::new(cfg, b.classes, expert_for(&b, 39), serve_cfg, "artifacts").unwrap();
     server.inject_chaos(Chaos { kill_level: 0, kill_replica: 0, after_requests: 20 });
@@ -223,11 +231,13 @@ fn two_shards_two_replicas_answer_exactly_once_and_sync_learning() {
         c.seed = 49;
         c
     };
-    let serve_cfg = ServeConfig {
-        max_pending: 1 << 16,
-        shard: ShardConfig { shards: 2, replicas_per_level: 2, sync_interval: 8 },
-        ..ServeConfig::default()
-    };
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(1 << 16)
+        .shards(2)
+        .replicas_per_level(2)
+        .sync_interval(8)
+        .build()
+        .unwrap();
     let front =
         ShardFront::new(cfg, b.classes, expert_for(&b, 49), serve_cfg, "artifacts")
             .unwrap();
@@ -289,11 +299,13 @@ fn admission_budget_is_global_across_shards() {
         c.seed = 57;
         c
     };
-    let serve_cfg = ServeConfig {
-        max_pending: 16,
-        shard: ShardConfig { shards: 2, replicas_per_level: 1, sync_interval: 0 },
-        ..ServeConfig::default()
-    };
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(16)
+        .shards(2)
+        .replicas_per_level(1)
+        .sync_interval(0)
+        .build()
+        .unwrap();
     let front =
         ShardFront::new(cfg, b.classes, expert_for(&b, 57), serve_cfg, "artifacts")
             .unwrap();
@@ -344,13 +356,15 @@ fn stream_end_annotations_reach_peers_with_zero_loss() {
         }
         c
     };
-    let serve_cfg = ServeConfig {
-        max_pending: 1 << 16,
+    let serve_cfg = ServeConfig::builder()
+        .max_pending(1 << 16)
+        .shards(2)
+        .replicas_per_level(1)
         // Larger than the stream: nothing reaches the interval
         // trigger, so peers only learn via the drain-on-exit flush.
-        shard: ShardConfig { shards: 2, replicas_per_level: 1, sync_interval: 100_000 },
-        ..ServeConfig::default()
-    };
+        .sync_interval(100_000)
+        .build()
+        .unwrap();
     let front =
         ShardFront::new(cfg.clone(), b.classes, expert_for(&b, 59), serve_cfg, "artifacts")
             .unwrap();
@@ -561,5 +575,118 @@ fn forced_expert_training_batch_counts_match_cascade() {
         report.calib_batches.iter().all(|&t| t > 0),
         "calibrator training must actually have run: {:?}",
         report.calib_batches
+    );
+}
+
+#[test]
+fn pipelined_speculative_run_keeps_learner_trajectory_bit_identical() {
+    // Tentpole parity pin: pipelining + speculation are inference-only
+    // scheduling changes — gates alone decide what trains, so β
+    // trajectories, per-level training cadences, per-level traffic
+    // splits, and expert-call counts must be bit-for-bit those of the
+    // sequential router *and* the offline cascade, no matter how reply
+    // timing shuffles under the stage queues.
+    //
+    // The config is chosen to be timing-robust *and* maximally
+    // adversarial for reordering: β pinned to 0 after the first
+    // admission (no jump coins left to misalign) and every gate forced
+    // open (calibration 0 → any positive score defers), so every
+    // request walks the full cascade and nearly every level-k deferral
+    // carries a speculative copy at level k+1. Speculation targets
+    // level k+1's *successor* (never the expert), so the 4-level large
+    // cascade gives it two levels of room.
+    let n = 260;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 61, n);
+    let cfg = {
+        let mut c = CascadeConfig::large(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 61;
+        c.beta0 = 1.0;
+        for l in &mut c.levels {
+            l.beta_decay = 0.0; // β = 0 after the first admission: no jumps
+            l.calibration = 0.0; // untrained gates always defer
+        }
+        c
+    };
+
+    let run = |serve_cfg: ServeConfig| {
+        let server = Server::new(
+            cfg.clone(),
+            b.classes,
+            expert_for(&b, 61),
+            serve_cfg,
+            "artifacts",
+        )
+        .unwrap();
+        let (req_rx, submit) = blast(&b);
+        let (resp_tx, resp_rx) = channel();
+        let report = server.serve(req_rx, resp_tx).unwrap();
+        submit.join().unwrap();
+        let responses: Vec<Response> = resp_rx.iter().collect();
+        assert_answered_exactly_once(&responses, n);
+        assert_eq!(report.shed, 0, "unbounded run must not shed");
+        report
+    };
+
+    let sequential = run(unbounded());
+    let pipelined = run(
+        ServeConfig::builder()
+            .max_pending(1 << 16)
+            .pipeline(true)
+            .spec_threshold(1e-6) // aggressive: any positive score speculates
+            .stage_queue_depth(4) // small: the overflow fallback runs too
+            .build()
+            .unwrap(),
+    );
+
+    // The speculative machinery must actually have been exercised (and
+    // must stay off in the default config).
+    assert_eq!(
+        sequential.spec_hits + sequential.spec_wasted,
+        0,
+        "speculation must be off by default"
+    );
+    assert!(
+        pipelined.spec_hits > 0,
+        "a forced-defer walk must confirm speculations: hits={} wasted={}",
+        pipelined.spec_hits,
+        pipelined.spec_wasted
+    );
+    assert!(
+        pipelined.queue_depth.iter().any(|&d| d > 0),
+        "stage queues must have been used: {:?}",
+        pipelined.queue_depth
+    );
+
+    // Bit-identical learner trajectory across schedulers.
+    let bits = |r: &ocl::serve::ServeReport| {
+        r.final_betas.iter().map(|x| x.to_bits()).collect::<Vec<u64>>()
+    };
+    assert_eq!(bits(&sequential), bits(&pipelined), "β must not depend on scheduling");
+    assert_eq!(sequential.train_batches, pipelined.train_batches);
+    assert_eq!(sequential.calib_batches, pipelined.calib_batches);
+    assert_eq!(sequential.handled, pipelined.handled, "same gate decisions everywhere");
+    assert_eq!(sequential.llm_calls, pipelined.llm_calls);
+
+    // And both match the single-learner cascade over the same stream.
+    let mut casc =
+        Cascade::new(cfg.clone(), b.classes, expert_for(&b, 61), None, n + 1).unwrap();
+    for s in &b.samples {
+        casc.process(s);
+    }
+    let counts = casc.train_counts();
+    assert_eq!(
+        pipelined.train_batches,
+        counts.iter().map(|c| c.0).collect::<Vec<u64>>(),
+        "per-level model training chunk counts must match the cascade"
+    );
+    assert_eq!(
+        pipelined.calib_batches,
+        counts.iter().map(|c| c.1).collect::<Vec<u64>>(),
+        "per-level calibrator chunk counts must match the cascade"
+    );
+    assert_eq!(
+        pipelined.final_betas,
+        casc.betas(),
+        "the served β trajectory must be bit-for-bit the cascade's"
     );
 }
