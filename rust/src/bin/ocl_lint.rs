@@ -17,9 +17,10 @@
 //! * **`determinism`** — no wall-clock (`Instant::now`,
 //!   `SystemTime::now`) or entropy-seeded RNG construction in the
 //!   deterministic replay/checkpoint paths (`serve/ckpt.rs`,
-//!   `serve/stage.rs`, `codec/`). Checkpoint parity (DESIGN.md §10)
-//!   and the pipelined stage queues (§13) depend on those paths being
-//!   pure functions of their inputs.
+//!   `serve/stage.rs`, `serve/reshard.rs`, `serve/scale.rs`,
+//!   `codec/`). Checkpoint parity (DESIGN.md §10), the pipelined stage
+//!   queues (§13), resharding, and the autoscale hysteresis (§14)
+//!   depend on those paths being pure functions of their inputs.
 //! * **`raw-write`** — in `serve/net.rs`, every `.write_all(` must be
 //!   fed by `encode(`, the single site that enforces the `MAX_FRAME`
 //!   wire bound; raw socket writes bypass it.
@@ -207,6 +208,8 @@ fn scan_file(rel: &str, src: &str, violations: &mut Vec<Violation>, markers: &mu
     let serve = rel.contains("src/serve/");
     let deterministic = rel.ends_with("src/serve/ckpt.rs")
         || rel.ends_with("src/serve/stage.rs")
+        || rel.ends_with("src/serve/reshard.rs")
+        || rel.ends_with("src/serve/scale.rs")
         || rel.contains("src/codec/");
     let net = rel.ends_with("src/serve/net.rs");
     // hot-alloc scope: the kernel file is hot wall-to-wall; the model

@@ -188,6 +188,12 @@ pub struct ServeArgs {
     pub spec_threshold: f64,
     /// Per-level stage-queue capacity for the pipelined path.
     pub stage_depth: usize,
+    /// Queue-driven autoscaling of the per-level replica pools.
+    pub autoscale: bool,
+    /// Autoscale floor on replicas per level.
+    pub replicas_min: usize,
+    /// Autoscale ceiling on replicas per level.
+    pub replicas_max: usize,
     /// TCP bind address (serving over the wire).
     pub listen: Option<String>,
     /// With `listen`: run as one shard process of `shards`.
@@ -231,6 +237,9 @@ impl ServeArgs {
                 "speculate past the gate above this calibrated score, (0,1]; 1 = off",
             )
             .opt("stage-depth", "64", "per-level stage-queue capacity (pipelined path)")
+            .switch("autoscale", "grow/shrink level replicas off live queue depth")
+            .opt("replicas-min", "1", "autoscale floor on replicas per level")
+            .opt("replicas-max", "1", "autoscale ceiling on replicas per level")
             .opt("listen", "", "serve over TCP: bind address (e.g. 127.0.0.1:4100)")
             .opt("shard-id", "", "with --listen: run as one shard process (0..--shards)")
             .opt("front", "", "run the thin front over comma-separated shard addresses")
@@ -260,6 +269,9 @@ impl ServeArgs {
             pipeline: a.switch("pipeline"),
             spec_threshold: a.parse("spec-threshold")?,
             stage_depth: a.parse("stage-depth")?,
+            autoscale: a.switch("autoscale"),
+            replicas_min: a.parse("replicas-min")?,
+            replicas_max: a.parse("replicas-max")?,
             listen: a.get_opt("listen").map(str::to_string),
             shard_id: match a.get_opt("shard-id") {
                 Some(s) => Some(s.parse().map_err(|_| {
@@ -292,6 +304,9 @@ impl ServeArgs {
             .pipeline(self.pipeline)
             .spec_threshold(self.spec_threshold)
             .stage_queue_depth(self.stage_depth)
+            .autoscale(self.autoscale)
+            .replicas_min(self.replicas_min)
+            .replicas_max(self.replicas_max)
             .build_with_warnings()?;
         for w in &warnings {
             eprintln!("warning: {w}");
@@ -405,6 +420,9 @@ mod tests {
         assert!(!sa.pipeline);
         assert_eq!(sa.spec_threshold, 1.0);
         assert_eq!(sa.stage_depth, 64);
+        assert!(!sa.autoscale);
+        assert_eq!(sa.replicas_min, 1);
+        assert_eq!(sa.replicas_max, 1);
         let cfg = sa.serve_config().unwrap();
         assert_eq!(cfg, crate::config::ServeConfig::default());
         assert!(sa.ckpt_options().unwrap().is_none());
@@ -428,6 +446,34 @@ mod tests {
         assert_eq!(cfg.shard.shards, 2);
         // The builder's validation runs on the CLI path too.
         let bad = ServeArgs::parse(&v(&["--spec-threshold", "1.5"])).unwrap();
+        assert!(bad.serve_config().is_err());
+    }
+
+    #[test]
+    fn serve_args_autoscale_knobs_flow_into_config() {
+        let sa = ServeArgs::parse(&v(&[
+            "--autoscale",
+            "--replicas-min",
+            "1",
+            "--replicas-max=4",
+            "--replicas",
+            "2",
+        ]))
+        .unwrap();
+        let cfg = sa.serve_config().unwrap();
+        assert!(cfg.autoscale);
+        assert_eq!(cfg.replicas_min, 1);
+        assert_eq!(cfg.replicas_max, 4);
+        assert_eq!(cfg.shard.replicas_per_level, 2);
+        // Inverted bounds are caught by the builder on the CLI path.
+        let bad = ServeArgs::parse(&v(&[
+            "--autoscale",
+            "--replicas-min",
+            "4",
+            "--replicas-max",
+            "2",
+        ]))
+        .unwrap();
         assert!(bad.serve_config().is_err());
     }
 
@@ -458,6 +504,9 @@ mod tests {
             "--pipeline",
             "--spec-threshold",
             "--stage-depth",
+            "--autoscale",
+            "--replicas-min",
+            "--replicas-max",
             "--slo-p99",
         ] {
             assert!(h.contains(flag), "help is missing {flag}:\n{h}");

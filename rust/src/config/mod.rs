@@ -451,6 +451,18 @@ pub struct ServeConfig {
     /// (backpressure without loss); overflowing *speculative* jobs are
     /// dropped (they were optional work).
     pub stage_queue_depth: usize,
+    /// Queue-driven autoscaling: let the router grow/shrink each
+    /// level's replica pool at runtime off live queue depth
+    /// (`serve::scale`). Off by default — the topology stays exactly
+    /// what `replicas_per_level` pins.
+    pub autoscale: bool,
+    /// Autoscale floor on replicas per level (≥ 1: the learner
+    /// authority itself is never scaled away). Ignored unless
+    /// `autoscale` is on.
+    pub replicas_min: usize,
+    /// Autoscale ceiling on replicas per level. Ignored unless
+    /// `autoscale` is on.
+    pub replicas_max: usize,
 }
 
 impl Default for ServeConfig {
@@ -467,6 +479,9 @@ impl Default for ServeConfig {
             pipeline: false,
             spec_threshold: 1.0,
             stage_queue_depth: 64,
+            autoscale: false,
+            replicas_min: 1,
+            replicas_max: 1,
         }
     }
 }
@@ -494,6 +509,9 @@ impl ServeConfig {
             ("pipeline", Json::Bool(self.pipeline)),
             ("spec_threshold", Json::Num(self.spec_threshold)),
             ("stage_queue_depth", Json::Num(self.stage_queue_depth as f64)),
+            ("autoscale", Json::Bool(self.autoscale)),
+            ("replicas_min", Json::Num(self.replicas_min as f64)),
+            ("replicas_max", Json::Num(self.replicas_max as f64)),
         ])
     }
 }
@@ -590,6 +608,24 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Queue-driven autoscaling on/off.
+    pub fn autoscale(mut self, v: bool) -> Self {
+        self.cfg.autoscale = v;
+        self
+    }
+
+    /// Autoscale floor on replicas per level (≥ 1).
+    pub fn replicas_min(mut self, v: usize) -> Self {
+        self.cfg.replicas_min = v;
+        self
+    }
+
+    /// Autoscale ceiling on replicas per level.
+    pub fn replicas_max(mut self, v: usize) -> Self {
+        self.cfg.replicas_max = v;
+        self
+    }
+
     /// Validate and produce the config (warnings discarded).
     pub fn build(self) -> Result<ServeConfig> {
         self.build_with_warnings().map(|(cfg, _)| cfg)
@@ -624,6 +660,27 @@ impl ServeConfigBuilder {
             return Err(Error::Config(
                 "serve: replicas_per_level must be positive".into(),
             ));
+        }
+        if cfg.autoscale {
+            if cfg.replicas_min == 0 {
+                return Err(Error::Config(
+                    "serve: replicas_min must be positive".into(),
+                ));
+            }
+            if cfg.replicas_min > cfg.replicas_max {
+                return Err(Error::Config(format!(
+                    "serve: replicas_min ({}) must not exceed replicas_max ({})",
+                    cfg.replicas_min, cfg.replicas_max
+                )));
+            }
+            let r = cfg.shard.replicas_per_level;
+            if r < cfg.replicas_min || r > cfg.replicas_max {
+                return Err(Error::Config(format!(
+                    "serve: replicas_per_level ({r}) must start inside the \
+                     autoscale bounds [{}, {}]",
+                    cfg.replicas_min, cfg.replicas_max
+                )));
+            }
         }
         let mut warnings = Vec::new();
         if cfg.ckpt_every != 0
@@ -761,6 +818,9 @@ mod tests {
         assert!(!s.pipeline);
         assert_eq!(s.spec_threshold, 1.0);
         assert_eq!(s.stage_queue_depth, 64);
+        assert!(!s.autoscale);
+        assert_eq!(s.replicas_min, 1);
+        assert_eq!(s.replicas_max, 1);
         let v = crate::codec::parse(&s.to_json().to_string_compact()).unwrap();
         assert_eq!(v.get("batch_max").unwrap().as_usize(), Some(8));
         assert_eq!(v.get("deadline_us").unwrap().as_f64(), Some(2000.0));
@@ -771,6 +831,9 @@ mod tests {
         assert_eq!(v.get("pipeline").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("spec_threshold").unwrap().as_f64(), Some(1.0));
         assert_eq!(v.get("stage_queue_depth").unwrap().as_usize(), Some(64));
+        assert_eq!(v.get("autoscale").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("replicas_min").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("replicas_max").unwrap().as_usize(), Some(1));
         let sh = v.get("shard").unwrap();
         assert_eq!(sh.get("shards").unwrap().as_usize(), Some(1));
         assert_eq!(sh.get("replicas_per_level").unwrap().as_usize(), Some(1));
@@ -797,6 +860,9 @@ mod tests {
             .pipeline(true)
             .spec_threshold(0.5)
             .stage_queue_depth(8)
+            .autoscale(true)
+            .replicas_min(2)
+            .replicas_max(5)
             .build()
             .unwrap();
         assert_eq!(cfg.batch_max, 4);
@@ -807,6 +873,9 @@ mod tests {
         assert!(cfg.pipeline);
         assert_eq!(cfg.spec_threshold, 0.5);
         assert_eq!(cfg.stage_queue_depth, 8);
+        assert!(cfg.autoscale);
+        assert_eq!(cfg.replicas_min, 2);
+        assert_eq!(cfg.replicas_max, 5);
     }
 
     #[test]
@@ -821,6 +890,16 @@ mod tests {
             (ServeConfig::builder().spec_threshold(f64::NAN), "spec_threshold"),
             (ServeConfig::builder().shards(0), "shards"),
             (ServeConfig::builder().replicas_per_level(0), "replicas_per_level"),
+            (ServeConfig::builder().autoscale(true).replicas_min(0), "replicas_min"),
+            (
+                ServeConfig::builder().autoscale(true).replicas_min(4).replicas_max(2),
+                "replicas_min",
+            ),
+            (
+                // replicas_per_level defaults to 1, below the floor.
+                ServeConfig::builder().autoscale(true).replicas_min(2).replicas_max(4),
+                "replicas_per_level",
+            ),
         ] {
             let err = b.build().unwrap_err().to_string();
             assert!(err.contains(what), "expected '{what}' in: {err}");
@@ -828,6 +907,16 @@ mod tests {
         // The boundary is inclusive at 1.0 (= disabled), exclusive at 0.
         assert!(ServeConfig::builder().spec_threshold(1.0).build().is_ok());
         assert!(ServeConfig::builder().spec_threshold(1e-9).build().is_ok());
+        // Autoscale bounds are only enforced when autoscale is on, and a
+        // replica count inside them is accepted.
+        assert!(ServeConfig::builder().replicas_min(0).build().is_ok());
+        assert!(ServeConfig::builder()
+            .autoscale(true)
+            .replicas_min(1)
+            .replicas_max(4)
+            .replicas_per_level(2)
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -64,6 +64,10 @@ fn commands() -> Vec<Command> {
         // the wire client and `examples/serve_stream.rs` so the three
         // surfaces cannot drift.
         ServeArgs::command(),
+        Command::new("reshard", "rewrite a checkpoint directory to a new shard count")
+            .opt("src", "ckpt", "source checkpoint directory (any shard count)")
+            .opt("dst", "ckpt-resharded", "destination directory (must hold no manifest)")
+            .opt("shards", "1", "target shard count"),
         Command::new("selftest", "quick end-to-end smoke test"),
     ]
 }
@@ -384,6 +388,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
             submit.join().ok();
             let drained = drain.join().unwrap_or(0);
             print_serve_summary(&report, drained, cursor);
+            Ok(())
+        }
+        "reshard" => {
+            let src = args.get("src");
+            let dst = args.get("dst");
+            let to: usize = args.parse("shards")?;
+            let summary = ocl::serve::reshard::reshard(src, dst, to)?;
+            println!("{}", summary.describe());
             Ok(())
         }
         "selftest" => {

@@ -21,15 +21,23 @@
 //!   re-implementation — against arrival, router, arming, export, and
 //!   respawn actors, including the slow-authority timeout arm and the
 //!   dead-authority respawn-and-retry arm.
+//! * [`ScaleSpec`] — the serve loop's elasticity step: the production
+//!   [`ScaleController`] hysteresis driving grow/shrink of a replica
+//!   vector while job actors claim and release replicas. Checks the
+//!   `[min, max]` bounds, replica-count accounting, that no busy
+//!   replica is ever removed, and that worker 0 (the learner
+//!   authority) is never scaled away.
 //!
-//! [`GateSpec`] and [`SlotSpec`] also carry a deliberately-broken
-//! mode (a blind store instead of a CAS; sequence released before the
-//! payload). These exist so the test suite can prove the checker
-//! *finds* the classic bugs — a model checker that has never caught a
-//! planted bug is just a slow `Ok(())`.
+//! [`GateSpec`], [`SlotSpec`], and [`ScaleSpec`] also carry a
+//! deliberately-broken mode (a blind store instead of a CAS; sequence
+//! released before the payload; a scale-down victim rule that can
+//! select the authority). These exist so the test suite can prove the
+//! checker *finds* the classic bugs — a model checker that has never
+//! caught a planted bug is just a slow `Ok(())`.
 
 use crate::mc::Spec;
 use crate::serve::barrier::{CkptBarrier, ExportOutcome};
+use crate::serve::scale::{ScaleController, ScaleDecision, ScalePolicy};
 
 // ---------------------------------------------------------------------------
 // Admission gate
@@ -589,6 +597,225 @@ impl Spec for BarrierSpec {
             self.every > 0 && self.requests >= self.every && !self.outcomes.is_empty();
         if reachable && s.exported == 0 {
             return Err("cadence was reachable but no export was ever attempted".to_string());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Autoscaler
+// ---------------------------------------------------------------------------
+
+/// One replica slot in [`ScaleSpec`]: its birth identity and the job
+/// it is currently running, if any.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Replica {
+    /// Birth order (0 = the learner authority, worker 0).
+    pub id: usize,
+    /// Index of the job this replica is running (`None` = idle).
+    pub job: Option<usize>,
+}
+
+/// Per-job program counter in [`ScaleSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScaleJobPc {
+    /// Waiting in the level queue.
+    Queued,
+    /// Dispatched to a replica.
+    Running {
+        /// Birth id of the replica running this job.
+        replica: usize,
+    },
+    /// Completed.
+    Done,
+}
+
+/// Shared + per-actor state of the autoscaler model; embeds the
+/// **production** [`ScaleController`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ScaleState {
+    /// The real hysteresis controller under test.
+    pub ctrl: ScaleController,
+    /// Live replicas in pool order (index 0 must stay the authority).
+    pub members: Vec<Replica>,
+    /// Birth id the next grown replica gets.
+    pub next_id: usize,
+    /// Dispatch sweeps the controller actor has run.
+    pub swept: usize,
+    /// Scale-up events applied.
+    pub ups: usize,
+    /// Scale-down events applied.
+    pub downs: usize,
+    /// One program counter per job.
+    pub jobs: Vec<ScaleJobPc>,
+}
+
+impl ScaleState {
+    fn queued(&self) -> usize {
+        self.jobs.iter().filter(|j| matches!(j, ScaleJobPc::Queued)).count()
+    }
+}
+
+/// Model of the serve loop's elasticity step: one controller actor
+/// running the **production** [`ScaleController`] against the live
+/// queue depth and applying its decisions to the replica vector,
+/// racing `jobs` job actors that claim idle replicas, run, and
+/// release them.
+///
+/// Invariants checked after every step: the replica count never
+/// leaves `[min_replicas, max_replicas]` and always equals
+/// `min + ups - downs`, index 0 is always the original authority
+/// (worker 0), and no busy replica is ever removed. With
+/// `remove_authority: true` the scale-down victim selection is broken
+/// — first idle replica, which can be worker 0, instead of the
+/// production highest-index-only rule — and the checker must catch
+/// the authority removal (meta-test in `tests/test_loom.rs`).
+#[derive(Debug, Clone)]
+pub struct ScaleSpec {
+    /// Number of job actors.
+    pub jobs: usize,
+    /// Dispatch sweeps the controller actor runs.
+    pub sweeps: usize,
+    /// Controller policy; the model starts at `min_replicas`.
+    pub policy: ScalePolicy,
+    /// Planted bug: pick the first idle replica as the scale-down
+    /// victim instead of the highest-index replica only.
+    pub remove_authority: bool,
+}
+
+impl Spec for ScaleSpec {
+    type State = ScaleState;
+
+    fn init(&self) -> ScaleState {
+        let start = self.policy.min_replicas;
+        ScaleState {
+            ctrl: ScaleController::new(self.policy),
+            members: (0..start).map(|id| Replica { id, job: None }).collect(),
+            next_id: start,
+            swept: 0,
+            ups: 0,
+            downs: 0,
+            jobs: vec![ScaleJobPc::Queued; self.jobs],
+        }
+    }
+
+    fn actors(&self) -> usize {
+        1 + self.jobs
+    }
+
+    fn enabled(&self, s: &ScaleState, a: usize) -> bool {
+        if a == 0 {
+            s.swept < self.sweeps
+        } else {
+            match s.jobs[a - 1] {
+                ScaleJobPc::Queued => s.members.iter().any(|m| m.job.is_none()),
+                ScaleJobPc::Running { .. } => true,
+                ScaleJobPc::Done => false,
+            }
+        }
+    }
+
+    fn done(&self, s: &ScaleState, a: usize) -> bool {
+        if a == 0 {
+            s.swept == self.sweeps
+        } else {
+            matches!(s.jobs[a - 1], ScaleJobPc::Done)
+        }
+    }
+
+    fn step(&self, s: &mut ScaleState, a: usize) {
+        if a == 0 {
+            // One dispatch sweep: observe, decide, apply under the
+            // production guards (or the planted-bug victim rule).
+            let depth = s.queued();
+            let replicas = s.members.len();
+            match s.ctrl.decide(depth, replicas) {
+                ScaleDecision::Up => {
+                    s.members.push(Replica { id: s.next_id, job: None });
+                    s.next_id += 1;
+                    s.ups += 1;
+                }
+                ScaleDecision::Down => {
+                    let victim = if self.remove_authority {
+                        s.members.iter().position(|m| m.job.is_none())
+                    } else {
+                        let last = s.members.len() - 1;
+                        (last > 0 && s.members[last].job.is_none()).then_some(last)
+                    };
+                    // A busy (or absent) victim skips the event — the
+                    // decision is consumed without a removal, exactly
+                    // like the serve loop.
+                    if let Some(v) = victim {
+                        s.members.remove(v);
+                        s.downs += 1;
+                    }
+                }
+                ScaleDecision::Hold => {}
+            }
+            s.swept += 1;
+        } else {
+            let j = a - 1;
+            s.jobs[j] = match s.jobs[j] {
+                ScaleJobPc::Queued => {
+                    // Claim the lowest-index idle replica, like the
+                    // dispatch loop's free_replica scan.
+                    let m = s
+                        .members
+                        .iter()
+                        .position(|m| m.job.is_none())
+                        .expect("enabled only with an idle replica");
+                    s.members[m].job = Some(j);
+                    ScaleJobPc::Running { replica: s.members[m].id }
+                }
+                ScaleJobPc::Running { replica } => {
+                    if let Some(m) = s.members.iter_mut().find(|m| m.id == replica) {
+                        m.job = None;
+                    }
+                    ScaleJobPc::Done
+                }
+                ScaleJobPc::Done => unreachable!("stepped a finished job"),
+            };
+        }
+    }
+
+    fn check(&self, s: &ScaleState) -> std::result::Result<(), String> {
+        let n = s.members.len();
+        if n < self.policy.min_replicas || n > self.policy.max_replicas {
+            return Err(format!(
+                "replica count {n} left the bounds [{}, {}]",
+                self.policy.min_replicas, self.policy.max_replicas
+            ));
+        }
+        match s.members.first() {
+            Some(m) if m.id == 0 => {}
+            _ => {
+                return Err("the learner authority (worker 0) was scaled away".to_string());
+            }
+        }
+        if n + s.downs != self.policy.min_replicas + s.ups {
+            return Err(format!(
+                "replica accounting broken: {n} members after {} ups / {} downs from {}",
+                s.ups, s.downs, self.policy.min_replicas
+            ));
+        }
+        for (j, pc) in s.jobs.iter().enumerate() {
+            if let ScaleJobPc::Running { replica } = pc {
+                if !s.members.iter().any(|m| m.id == *replica && m.job == Some(j)) {
+                    return Err(format!(
+                        "job {j} in flight on replica {replica}, which was removed"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &ScaleState) -> std::result::Result<(), String> {
+        if let Some(j) = s.jobs.iter().position(|p| !matches!(p, ScaleJobPc::Done)) {
+            return Err(format!("job {j} never completed"));
+        }
+        if let Some(m) = s.members.iter().find(|m| m.job.is_some()) {
+            return Err(format!("replica {} still holds a job at quiescence", m.id));
         }
         Ok(())
     }

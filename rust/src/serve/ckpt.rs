@@ -60,9 +60,17 @@ use crate::config::CascadeConfig;
 use crate::error::{Error, Result};
 use crate::models::{Featurized, Snapshot};
 
-/// Checkpoint format version (the manifest's `version` field); a
-/// mismatch is a hard [`Error::Ckpt`], never a silent reinterpret.
-pub const CKPT_VERSION: u64 = 1;
+/// Checkpoint format version (the manifest's `version` field). v2
+/// adds a per-shard `epochs` array (each shard file's own deposit
+/// sequence number) so rolling restarts are auditable: a manifest can
+/// legitimately mix shard files written at different instants, and the
+/// epochs say exactly which. v1 manifests (no `epochs`) are still
+/// read — the epochs are derived from the file names. Any *other*
+/// version is a hard [`Error::Ckpt`], never a silent reinterpret.
+pub const CKPT_VERSION: u64 = 2;
+
+/// Oldest manifest version this build still reads.
+pub const CKPT_VERSION_MIN: u64 = 1;
 
 /// How `--resume` treats the checkpoint directory.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -580,6 +588,14 @@ impl CkptSink {
         let old = inner.latest[shard].replace(fname);
         let files: Vec<String> = inner.latest.iter().flatten().cloned().collect();
         let committed = if files.len() == inner.latest.len() {
+            // v2: each shard's own deposit epoch rides along, parallel
+            // to `files`. Under rolling restarts the per-shard epochs
+            // legitimately differ — the array makes that explicit (and
+            // auditable) instead of implicit in the file names.
+            let epochs: Vec<Json> = files
+                .iter()
+                .map(|f| Json::Num(file_seq(f).unwrap_or(0) as f64))
+                .collect();
             let manifest = Json::obj(vec![
                 ("version", Json::Num(CKPT_VERSION as f64)),
                 ("seq", Json::Num(seq as f64)),
@@ -588,6 +604,7 @@ impl CkptSink {
                     "files",
                     Json::Arr(files.iter().map(|f| Json::Str(f.clone())).collect()),
                 ),
+                ("epochs", Json::Arr(epochs)),
             ]);
             let mname = manifest_name(seq);
             write_atomic(&self.dir.join(&mname), &manifest.to_string_pretty())?;
@@ -720,6 +737,22 @@ pub fn load_latest(
     Ok(None) // best-effort: nothing validated → fresh start
 }
 
+/// Shard count recorded in the newest manifest of `dir` — how
+/// `ocl reshard` discovers the source topology N without being told.
+pub fn latest_manifest_shards(dir: impl AsRef<Path>) -> Result<usize> {
+    let dir = dir.as_ref();
+    let manifests = list_manifests(dir)?;
+    let (_, mname) = manifests.first().ok_or_else(|| {
+        Error::Ckpt(format!("no checkpoint manifest in '{}'", dir.display()))
+    })?;
+    let path = dir.join(mname);
+    let text = fs::read_to_string(&path)
+        .map_err(|e| Error::Ckpt(format!("manifest '{}': {e}", path.display())))?;
+    let v = codec::parse(&text)
+        .map_err(|e| Error::Ckpt(format!("manifest '{}': {e}", path.display())))?;
+    num_usize(&v, "shards")
+}
+
 fn load_manifest(dir: &Path, mname: &str, expected_shards: usize) -> Result<Vec<ShardState>> {
     let path = dir.join(mname);
     let text = fs::read_to_string(&path)
@@ -728,9 +761,10 @@ fn load_manifest(dir: &Path, mname: &str, expected_shards: usize) -> Result<Vec<
         .map_err(|e| Error::Ckpt(format!("manifest '{}': {e}", path.display())))?;
     let version = num_u64(&v, "version")
         .map_err(|_| Error::Ckpt(format!("manifest '{mname}': missing version")))?;
-    if version != CKPT_VERSION {
+    if !(CKPT_VERSION_MIN..=CKPT_VERSION).contains(&version) {
         return Err(Error::Ckpt(format!(
-            "unsupported checkpoint version {version} (this build reads {CKPT_VERSION})"
+            "unsupported checkpoint version {version} (this build reads \
+             {CKPT_VERSION_MIN}..={CKPT_VERSION})"
         )));
     }
     let shards = num_usize(&v, "shards")?;
@@ -749,6 +783,46 @@ fn load_manifest(dir: &Path, mname: &str, expected_shards: usize) -> Result<Vec<
             "manifest '{mname}' lists {} shard files for {shards} shards",
             files.len()
         )));
+    }
+    // v2 integrity: the epochs array must cover every shard and agree
+    // with the file it annotates. A short array means the manifest was
+    // truncated mid-write (or hand-edited); a disagreeing entry means
+    // shard files from *different* checkpoints were spliced together —
+    // both are torn states a restore must refuse, not paper over.
+    // v1 manifests predate the array; their epochs are simply the file
+    // names' sequence numbers, with nothing extra to cross-check.
+    if version >= 2 {
+        let epochs = v
+            .require("epochs")
+            .map_err(|_| Error::Ckpt(format!("manifest '{mname}': missing epochs")))?
+            .as_arr()
+            .ok_or_else(|| {
+                Error::Ckpt(format!("manifest '{mname}': epochs must be an array"))
+            })?;
+        if epochs.len() != shards {
+            return Err(Error::Ckpt(format!(
+                "manifest '{mname}': truncated epochs array ({} entries for \
+                 {shards} shards)",
+                epochs.len()
+            )));
+        }
+        for (i, (e, f)) in epochs.iter().zip(files).enumerate() {
+            let epoch = e
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                .map(|x| x as u64);
+            let epoch = epoch.ok_or_else(|| {
+                Error::Ckpt(format!("manifest '{mname}': epoch {i} must be an integer"))
+            })?;
+            let from_name = f.as_str().and_then(file_seq);
+            if from_name != Some(epoch) {
+                return Err(Error::Ckpt(format!(
+                    "manifest '{mname}': mixed-epoch shard entry {i} (epoch {epoch} \
+                     vs file {:?})",
+                    f.as_str().unwrap_or("<non-string>")
+                )));
+            }
+        }
     }
     let mut states: Vec<Option<ShardState>> = (0..shards).map(|_| None).collect();
     for f in files {
@@ -936,7 +1010,7 @@ mod tests {
         assert!(load_latest(&dir, ResumeMode::Strict, 1).unwrap().is_some());
 
         // 2. bad version field → strict errors
-        fs::write(dir.join(mname), mtext.replace("\"version\": 1", "\"version\": 99"))
+        fs::write(dir.join(mname), mtext.replace("\"version\": 2", "\"version\": 99"))
             .unwrap();
         let err = load_latest(&dir, ResumeMode::Strict, 1).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
@@ -960,6 +1034,79 @@ mod tests {
         assert!(load_latest(&empty, ResumeMode::BestEffort, 1).unwrap().is_none());
         let _ = fs::remove_dir_all(&dir);
         let _ = fs::remove_dir_all(&empty);
+    }
+
+    #[test]
+    fn v1_manifests_without_epochs_still_restore() {
+        // Forward-compat: a checkpoint directory written by a v1 build
+        // (no `epochs` array) restores under strict resume. The
+        // committed fixture in tests/fixtures/ckpt_v1 pins the same
+        // contract against a byte-frozen v1 file set.
+        let dir = tmpdir("v1compat");
+        let sink = CkptSink::create(&dir, 2).unwrap();
+        sink.deposit(0, &demo_state(0, 10)).unwrap();
+        sink.deposit(1, &demo_state(1, 8)).unwrap();
+        let manifests = list_manifests(&dir).unwrap();
+        let (_, mname) = &manifests[0];
+        let mtext = fs::read_to_string(dir.join(mname)).unwrap();
+        // Rewrite the manifest as a v1 build would have written it:
+        // version 1, no epochs field.
+        let v = codec::parse(&mtext).unwrap();
+        let v1 = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("seq", v.get("seq").unwrap().clone()),
+            ("shards", v.get("shards").unwrap().clone()),
+            ("files", v.get("files").unwrap().clone()),
+        ]);
+        fs::write(dir.join(mname), v1.to_string_pretty()).unwrap();
+        let states = load_latest(&dir, ResumeMode::Strict, 2).unwrap().unwrap();
+        assert_eq!(states[0].cursor, 10, "v1 manifest must restore cleanly");
+        assert_eq!(states[1].cursor, 8);
+        assert_eq!(latest_manifest_shards(&dir).unwrap(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_and_mixed_epoch_manifests_are_rejected() {
+        let dir = tmpdir("epochs");
+        let sink = CkptSink::create(&dir, 2).unwrap();
+        sink.deposit(0, &demo_state(0, 10)).unwrap();
+        sink.deposit(1, &demo_state(1, 8)).unwrap();
+        // A second committed manifest, so best-effort has somewhere
+        // valid to walk back to once we corrupt the newest one.
+        sink.deposit(0, &demo_state(0, 12)).unwrap();
+        let manifests = list_manifests(&dir).unwrap();
+        let (_, mname) = &manifests[0];
+        let mtext = fs::read_to_string(dir.join(mname)).unwrap();
+        let v = codec::parse(&mtext).unwrap();
+        let rewrite = |epochs: Json| {
+            Json::obj(vec![
+                ("version", Json::Num(CKPT_VERSION as f64)),
+                ("seq", v.get("seq").unwrap().clone()),
+                ("shards", v.get("shards").unwrap().clone()),
+                ("files", v.get("files").unwrap().clone()),
+                ("epochs", epochs),
+            ])
+            .to_string_pretty()
+        };
+        let good: Vec<Json> = v.get("epochs").unwrap().as_arr().unwrap().to_vec();
+
+        // Truncated epochs array (one entry for two shards).
+        fs::write(dir.join(mname), rewrite(Json::Arr(good[..1].to_vec()))).unwrap();
+        let err = load_latest(&dir, ResumeMode::Strict, 2).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+
+        // Mixed-epoch entry: epoch disagrees with the file it annotates
+        // (shard files spliced together from different checkpoints).
+        let mut mixed = good.clone();
+        mixed[1] = Json::Num(9999.0);
+        fs::write(dir.join(mname), rewrite(Json::Arr(mixed))).unwrap();
+        let err = load_latest(&dir, ResumeMode::Strict, 2).unwrap_err();
+        assert!(err.to_string().contains("mixed-epoch"), "{err}");
+
+        // Best-effort walks back past both defects instead of dying.
+        assert!(load_latest(&dir, ResumeMode::BestEffort, 2).unwrap().is_some());
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

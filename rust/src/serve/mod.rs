@@ -88,6 +88,8 @@ pub mod ckpt;
 pub mod load;
 pub mod net;
 pub mod pool;
+pub mod reshard;
+pub mod scale;
 pub mod shard;
 pub(crate) mod stage;
 
@@ -221,6 +223,11 @@ pub struct ServeReport {
     /// Latency percentiles (ms) for requests that deferred at least
     /// once (answered at level ≥ 1 or by the expert).
     pub latency_deferred_ms: Percentiles,
+    /// Autoscale events that added a replica to some level pool
+    /// (0 unless [`ServeConfig::autoscale`] is on).
+    pub scale_ups: u64,
+    /// Autoscale events that removed a replica from some level pool.
+    pub scale_downs: u64,
 }
 
 impl ServeReport {
@@ -270,6 +277,8 @@ impl ServeReport {
             ("p99_deferred_ms", Json::Num(self.latency_deferred_ms.pct(99.0))),
             ("p50_direct_ms", Json::Num(self.latency_direct_ms.pct(50.0))),
             ("p50_deferred_ms", Json::Num(self.latency_deferred_ms.pct(50.0))),
+            ("scale_ups", Json::Num(self.scale_ups as f64)),
+            ("scale_downs", Json::Num(self.scale_downs as f64)),
         ])
     }
 }
@@ -658,6 +667,25 @@ impl Server {
                 serve_cfg.spec_threshold
             )));
         }
+        if serve_cfg.autoscale {
+            if serve_cfg.replicas_min == 0 {
+                return Err(Error::Config("serve replicas_min must be positive".into()));
+            }
+            if serve_cfg.replicas_min > serve_cfg.replicas_max {
+                return Err(Error::Config(format!(
+                    "serve replicas_min ({}) must not exceed replicas_max ({})",
+                    serve_cfg.replicas_min, serve_cfg.replicas_max
+                )));
+            }
+            let r = serve_cfg.shard.replicas_per_level;
+            if r < serve_cfg.replicas_min || r > serve_cfg.replicas_max {
+                return Err(Error::Config(format!(
+                    "serve replicas_per_level ({r}) must start inside the autoscale \
+                     bounds [{}, {}]",
+                    serve_cfg.replicas_min, serve_cfg.replicas_max
+                )));
+            }
+        }
         if let Some(s) = &state {
             s.check_config(&cfg, classes)?;
         }
@@ -829,6 +857,21 @@ impl Server {
         // One-shot end-of-stream broadcast of below-interval staged
         // annotations (the drain-on-exit flush).
         let mut sync_flushed = false;
+        // Elasticity: one autoscale controller per level, consulted
+        // once per dispatch sweep. `None` unless the config opts in —
+        // the default topology stays static and bit-identical to
+        // earlier releases.
+        let mut scalers: Option<Vec<scale::ScaleController>> =
+            self.serve_cfg.autoscale.then(|| {
+                let policy = scale::ScalePolicy::bounded(
+                    self.serve_cfg.replicas_min,
+                    self.serve_cfg.replicas_max,
+                    self.serve_cfg.batch_max,
+                );
+                (0..n_levels).map(|_| scale::ScaleController::new(policy)).collect()
+            });
+        let mut scale_ups = 0u64;
+        let mut scale_downs = 0u64;
 
         loop {
             // 0. supervision: respawn dead workers, requeue their batches.
@@ -871,6 +914,40 @@ impl Server {
             //    speculation) are due the moment a replica is free;
             //    batcher jobs wait for fill, deadline, or drain.
             st.note_queue_depth();
+
+            // 2a. elasticity: grow/shrink the level pools off live
+            //     queue depth. Scale-up appends a worker (a fresh
+            //     `in_flight` slot keeps the queue/pool widths in
+            //     lockstep); scale-down retires only the highest-index
+            //     member, and only while its slot is empty, so no batch
+            //     is ever orphaned and the learner authority (worker 0)
+            //     is structurally untouchable — `remove_replica` stops
+            //     at one member. A busy victim just skips the event;
+            //     the controller's cooldown retries later.
+            if let Some(scalers) = scalers.as_mut() {
+                for i in 0..n_levels {
+                    let depth = st.stages[i].len() + st.queues[i].jobs.len();
+                    match scalers[i].decide(depth, self.pools[i].replicas()) {
+                        scale::ScaleDecision::Up => {
+                            self.pools[i].add_replica();
+                            st.queues[i].in_flight.push(None);
+                            scale_ups += 1;
+                        }
+                        scale::ScaleDecision::Down => {
+                            let victim = self.pools[i].replicas() - 1;
+                            if victim > 0
+                                && st.queues[i].in_flight[victim].is_none()
+                                && self.pools[i].remove_replica()
+                            {
+                                st.queues[i].in_flight.pop();
+                                scale_downs += 1;
+                            }
+                        }
+                        scale::ScaleDecision::Hold => {}
+                    }
+                }
+            }
+
             for i in 0..n_levels {
                 loop {
                     let Some(r) =
@@ -1041,6 +1118,8 @@ impl Server {
                 .iter()
                 .map(|p| p.stats.infer_ns.load(Ordering::Relaxed))
                 .collect(),
+            scale_ups,
+            scale_downs,
         })
     }
 
@@ -1745,6 +1824,67 @@ mod tests {
         }
     }
 
+    #[test]
+    fn autoscaled_run_stays_inside_bounds_and_serves_exactly_once() {
+        let n = 300;
+        let b = Benchmark::build_sized(BenchmarkId::Imdb, 77, n);
+        let mean_len =
+            b.samples.iter().map(|s| s.len as f64).sum::<f64>() / n as f64;
+        let expert = Expert::new(
+            ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+            b.strata_fractions(),
+            mean_len,
+            77,
+        );
+        let cfg = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        let serve_cfg = ServeConfig::builder()
+            .autoscale(true)
+            .replicas_min(1)
+            .replicas_max(3)
+            .build()
+            .unwrap();
+        let server = Server::new(cfg, 2, expert, serve_cfg, "artifacts").unwrap();
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        let submit = crate::sync::thread::spawn(move || {
+            for (i, s) in b.samples.iter().enumerate() {
+                req_tx
+                    .send(Request {
+                        id: i as u64,
+                        text: s.text.clone(),
+                        truth: s.label,
+                        sample: s.clone(),
+                    })
+                    .unwrap();
+            }
+        });
+        let report = server.serve(req_rx, resp_tx).unwrap();
+        submit.join().unwrap();
+        let responses: Vec<Response> = resp_rx.iter().collect();
+        // Elasticity must never cost correctness: exactly-once service.
+        assert_eq!(report.served + report.shed, n);
+        assert_eq!(responses.len(), n);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        // The final topology sits inside the configured bounds, and the
+        // event counters are consistent with it (each level started at
+        // one member).
+        for lvl in &report.replica_jobs {
+            assert!(
+                (1..=3).contains(&lvl.len()),
+                "replicas left the [min, max] bounds: {lvl:?}"
+            );
+        }
+        let final_members: u64 =
+            report.replica_jobs.iter().map(|l| l.len() as u64).sum();
+        assert_eq!(
+            2 + report.scale_ups - report.scale_downs,
+            final_members,
+            "scale events must reconcile with the final replica counts"
+        );
+    }
+
     fn job(id: u64, enq: Instant) -> Job {
         Job {
             req_id: id,
@@ -1817,6 +1957,19 @@ mod tests {
             ServeConfig { stage_queue_depth: 0, ..ServeConfig::default() },
             ServeConfig { spec_threshold: 0.0, ..ServeConfig::default() },
             ServeConfig { spec_threshold: 2.0, ..ServeConfig::default() },
+            ServeConfig { autoscale: true, replicas_min: 0, ..ServeConfig::default() },
+            ServeConfig {
+                autoscale: true,
+                replicas_min: 4,
+                replicas_max: 2,
+                ..ServeConfig::default()
+            },
+            ServeConfig {
+                autoscale: true,
+                replicas_min: 2,
+                replicas_max: 4,
+                ..ServeConfig::default() // replicas_per_level 1 < min
+            },
         ] {
             assert!(
                 Server::new(cfg.clone(), 2, expert.clone(), bad, "artifacts").is_err(),

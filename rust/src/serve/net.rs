@@ -62,7 +62,7 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use crate::sync::mpsc::{channel, Receiver, Sender};
 use crate::sync::thread::{self, JoinHandle};
 use crate::sync::{lock_unpoisoned, Arc, Mutex};
@@ -894,11 +894,165 @@ pub fn serve_shard(
     }
 }
 
+/// How long the front waits for a crashed shard process to come back
+/// before declaring it gone for good. Rolling restarts are operator
+/// actions measured in seconds; a shard absent this long is not
+/// restarting, and the front then fails the run with a missing-report
+/// error rather than serving a silently degraded topology.
+const RECONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Supervised write half of one front→shard connection — the rolling-
+/// restart seam. All front traffic to a shard goes through its `Link`
+/// so the shard process can be SIGKILLed and resumed (`--resume
+/// strict`) without the front dropping work:
+///
+/// * **Requests replay exactly once per client.** Every dispatched
+///   request stays in `pending` (as its encoded frame) until a
+///   response or shed for its id comes back; on reconnect the whole
+///   set is re-sent in id order. Answered requests have left the set,
+///   so nothing is double-served on the happy path; in the narrow race
+///   where an answer and the crash cross, the duplicate answer is
+///   dropped at the front's response registry (the id routes at most
+///   once), so clients still see exactly-once.
+/// * **Sync rebroadcasts are buffered for the absent peer.** Frames
+///   bound for a down shard land in `down_buf` and replay, in order,
+///   before any replayed request — annotation replication stays
+///   at-least-once across the restart instead of silently dropping the
+///   absence window.
+/// * **`Eos` is sticky.** If the stream had already been closed when
+///   the shard died, the replayed connection re-closes it.
+struct Link {
+    /// Shard address (reconnect target).
+    addr: String,
+    /// Live write queue; `None` while the shard is down.
+    wtx: Mutex<Option<WireTx>>,
+    /// Current writer thread, joined at front shutdown (writers for
+    /// dead connections exit on their own when their queue drops).
+    writer: Mutex<Option<JoinHandle<()>>>,
+    /// Encoded `Request` frames dispatched but not yet answered — the
+    /// replay set.
+    pending: Mutex<HashMap<u64, Vec<u8>>>,
+    /// Sync/sync-end frames that arrived while the shard was down.
+    down_buf: Mutex<Vec<Vec<u8>>>,
+    /// The front has closed this shard's request stream.
+    eos_sent: AtomicBool,
+    /// Times this link was re-established after a shard went away.
+    reconnects: AtomicUsize,
+}
+
+impl Link {
+    fn new(addr: String, wtx: WireTx, writer: JoinHandle<()>) -> Self {
+        Link {
+            addr,
+            wtx: Mutex::new(Some(wtx)),
+            writer: Mutex::new(Some(writer)),
+            pending: Mutex::new(HashMap::new()),
+            down_buf: Mutex::new(Vec::new()),
+            eos_sent: AtomicBool::new(false),
+            reconnects: AtomicUsize::new(0),
+        }
+    }
+
+    /// Queue `bytes` on the live connection; hands them back when the
+    /// shard is down (or its writer just died).
+    fn try_send(&self, bytes: Vec<u8>) -> std::result::Result<(), Vec<u8>> {
+        let mut guard = lock_unpoisoned(&self.wtx);
+        match guard.as_ref() {
+            Some(w) => match w.send(bytes) {
+                Ok(()) => Ok(()),
+                Err(back) => {
+                    *guard = None; // writer gone: the link is down
+                    Err(back.0)
+                }
+            },
+            None => Err(bytes),
+        }
+    }
+
+    /// Dispatch one client request: registered in the replay set
+    /// *before* the send, so a crash at any point re-delivers it.
+    fn send_request(&self, id: u64, bytes: Vec<u8>) {
+        lock_unpoisoned(&self.pending).insert(id, bytes.clone());
+        let _ = self.try_send(bytes);
+    }
+
+    /// A response (or shed) for `id` arrived: it leaves the replay set.
+    fn settle(&self, id: u64) {
+        lock_unpoisoned(&self.pending).remove(&id);
+    }
+
+    /// Send a sync/sync-end rebroadcast, buffering it for replay while
+    /// the shard is down.
+    fn send_buffered(&self, bytes: Vec<u8>) {
+        if let Err(back) = self.try_send(bytes) {
+            lock_unpoisoned(&self.down_buf).push(back);
+        }
+    }
+
+    /// Close this shard's request stream (sticky across reconnects).
+    fn send_eos(&self) {
+        self.eos_sent.store(true, Ordering::SeqCst);
+        let _ = self.try_send(encode(&Frame::Eos));
+    }
+
+    /// Drop the write queue so dispatches buffer instead of racing a
+    /// dead socket.
+    fn mark_down(&self) {
+        *lock_unpoisoned(&self.wtx) = None;
+    }
+
+    /// Wire a fresh connection and replay everything the shard missed:
+    /// buffered rebroadcasts first, then unanswered requests in id
+    /// order (determinism), then the sticky `Eos`. The replay happens
+    /// on the new queue *before* it is published, under the `pending`
+    /// lock, so a concurrently dispatched request is either in the
+    /// replayed snapshot or sent once through the published queue —
+    /// never neither.
+    fn reattach(&self, stream: TcpStream) {
+        let (wtx, writer) = spawn_writer(stream);
+        let mut down = lock_unpoisoned(&self.down_buf);
+        let pend = lock_unpoisoned(&self.pending);
+        for bytes in down.drain(..) {
+            let _ = wtx.send(bytes);
+        }
+        let mut replay: Vec<(u64, Vec<u8>)> =
+            pend.iter().map(|(id, b)| (*id, b.clone())).collect();
+        replay.sort_unstable_by_key(|(id, _)| *id);
+        for (_, bytes) in replay {
+            let _ = wtx.send(bytes);
+        }
+        if self.eos_sent.load(Ordering::SeqCst) {
+            let _ = wtx.send(encode(&Frame::Eos));
+        }
+        *lock_unpoisoned(&self.wtx) = Some(wtx);
+        let _ = lock_unpoisoned(&self.writer).replace(writer);
+        self.reconnects.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Final teardown: drop the write queue and join the writer.
+    fn shutdown(&self) {
+        *lock_unpoisoned(&self.wtx) = None;
+        let handle = lock_unpoisoned(&self.writer).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Run the thin front process over already-running shard processes:
 /// hash-dispatch client requests ([`shard_of`]), relay responses back
 /// to the owning client, rebroadcast each shard's [`Frame::Sync`] to
 /// its peers, and merge the shards' final reports into one JSON
 /// report, broadcast to every client and returned.
+///
+/// **Rolling restarts.** A shard process that disconnects without a
+/// final report is treated as restarting, not gone: its [`Link`]
+/// buffers traffic, the front keeps serving through the remaining
+/// shards, and when the shard comes back (within
+/// [`RECONNECT_TIMEOUT`]) the link replays the buffered sync frames
+/// and every unanswered request. The merged report counts the
+/// `reconnects`. A shard that stays away past the timeout fails the
+/// run with a missing-report error.
 ///
 /// Admission is honest here: each shard process bounds its own
 /// population (`max_pending` per process), because a cross-process
@@ -930,41 +1084,42 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
     }
     let cursor = if cursor == u64::MAX { 0 } else { cursor };
 
-    // Write halves up to the shards, shared by client readers (request
-    // dispatch) and shard readers (sync rebroadcast).
-    let mut shard_links = Vec::with_capacity(n);
-    let mut shard_wtxs = Vec::with_capacity(n);
-    for (stream, _) in &shard_streams {
+    // Supervised write halves up to the shards, shared by client
+    // readers (request dispatch) and shard supervisors (sync
+    // rebroadcast + replay-on-reconnect).
+    let mut link_vec = Vec::with_capacity(n);
+    for (addr, (stream, _)) in shard_addrs.iter().zip(&shard_streams) {
         let ws = stream
             .try_clone()
             .map_err(|e| Error::Wire(format!("clone shard stream: {e}")))?;
         let (wtx, writer) = spawn_writer(ws);
-        shard_wtxs.push(wtx);
-        shard_links.push(writer);
+        link_vec.push(Link::new(addr.clone(), wtx, writer));
     }
-    let shard_wtxs = Arc::new(shard_wtxs);
+    let links = Arc::new(link_vec);
 
     let registry: Arc<Mutex<HashMap<u64, WireTx>>> = Arc::new(Mutex::new(HashMap::new()));
     let sync_ends = Arc::new(AtomicUsize::new(0));
     let reports: Arc<Mutex<Vec<Option<Json>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
 
-    // Shard readers: responses route to clients, syncs rebroadcast to
-    // peers, sync-ends count toward the all-flushed broadcast, reports
-    // land in the merge slots.
+    // Shard supervisors: responses route to clients (settling the
+    // replay set), syncs rebroadcast to peers, sync-ends count toward
+    // the all-flushed broadcast, reports land in the merge slots — and
+    // a connection lost *before* the report triggers the rolling-
+    // restart path: reconnect, replay, keep reading.
     let mut shard_readers = Vec::with_capacity(n);
-    for (i, (stream, fb)) in shard_streams.iter().enumerate() {
-        let rstream = stream
-            .try_clone()
-            .map_err(|e| Error::Wire(format!("clone shard stream: {e}")))?;
+    for (i, (stream, fb)) in shard_streams.into_iter().enumerate() {
         let mut fb = FrameBuf { buf: fb.clone_buf() };
         let registry = registry.clone();
-        let wtxs = shard_wtxs.clone();
+        let links = links.clone();
         let sync_ends = sync_ends.clone();
         let reports = reports.clone();
         shard_readers.push(thread::spawn(move || {
+            let mut stream = stream;
             let mut buf = [0u8; 16 * 1024];
             loop {
+                // Reads until the shard reports (returns) or the
+                // connection is lost (falls through to reconnect).
                 loop {
                     match fb.next() {
                         Ok(Some(frame @ Frame::Response(_)))
@@ -974,6 +1129,7 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
                                 Frame::Shed { id, .. } => *id,
                                 _ => unreachable!(),
                             };
+                            links[i].settle(id);
                             let target = lock_unpoisoned(&registry).remove(&id);
                             if let Some(w) = target {
                                 let _ = w.send(encode(&frame));
@@ -981,9 +1137,9 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
                         }
                         Ok(Some(Frame::Sync { shard, items })) => {
                             let bytes = encode(&Frame::Sync { shard, items });
-                            for (j, w) in wtxs.iter().enumerate() {
+                            for (j, l) in links.iter().enumerate() {
                                 if j != shard {
-                                    let _ = w.send(bytes.clone());
+                                    l.send_buffered(bytes.clone());
                                 }
                             }
                         }
@@ -993,26 +1149,52 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
                             // per-shard socket FIFO plus this SeqCst
                             // counter guarantees no shard sees its
                             // SyncEnd before every rebroadcast sync.
-                            if sync_ends.fetch_add(1, Ordering::SeqCst) + 1 == wtxs.len()
+                            if sync_ends.fetch_add(1, Ordering::SeqCst) + 1
+                                == links.len()
                             {
-                                for (j, w) in wtxs.iter().enumerate() {
-                                    let _ = w.send(encode(&Frame::SyncEnd { shard: j }));
+                                for (j, l) in links.iter().enumerate() {
+                                    l.send_buffered(encode(&Frame::SyncEnd {
+                                        shard: j,
+                                    }));
                                 }
                             }
                         }
                         Ok(Some(Frame::Report(v))) => {
                             lock_unpoisoned(&reports)[i] = Some(v);
+                            return; // clean end: the shard is done
                         }
                         Ok(Some(_)) => {}
-                        Ok(None) => break,
-                        Err(_) => return,
+                        Ok(None) => {
+                            let mut rs = &stream;
+                            match rs.read(&mut buf) {
+                                Ok(0) | Err(_) => break,
+                                Ok(got) => fb.push(&buf[..got]),
+                            }
+                        }
+                        // Garbled stream: same recovery as a crash —
+                        // the connection is the unit of failure.
+                        Err(_) => break,
                     }
                 }
-                let mut rs = &rstream;
-                match rs.read(&mut buf) {
-                    Ok(0) | Err(_) => return,
-                    Ok(n) => fb.push(&buf[..n]),
+                // The shard hung up without reporting: a rolling
+                // restart. Buffer its traffic, wait for it to come
+                // back, and replay. Its fresh Hello cursor is
+                // discarded — the front's stream position is
+                // authoritative; the link's replay set covers exactly
+                // the gap the restarted shard has not answered.
+                links[i].mark_down();
+                let Ok(ns) = connect_retry(&links[i].addr, RECONNECT_TIMEOUT) else {
+                    return; // stayed away: surfaced as a missing report
+                };
+                let _ = ns.set_nodelay(true);
+                let mut nfb = FrameBuf::new();
+                if !matches!(read_one(&ns, &mut nfb), Ok(Frame::Hello { .. })) {
+                    return;
                 }
+                let Ok(ws) = ns.try_clone() else { return };
+                links[i].reattach(ws);
+                stream = ns;
+                fb = nfb;
             }
         }));
     }
@@ -1034,7 +1216,7 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
                 let reader = spawn_front_client_reader(
                     rstream,
                     wtx.clone(),
-                    shard_wtxs.clone(),
+                    links.clone(),
                     registry.clone(),
                     finished.clone(),
                 );
@@ -1052,9 +1234,10 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
     }
 
     // Every client finished → close the shards' request streams; they
-    // drain, flush syncs, checkpoint, report, and hang up.
-    for w in shard_wtxs.iter() {
-        let _ = w.send(encode(&Frame::Eos));
+    // drain, flush syncs, checkpoint, report, and hang up. `Eos` is
+    // sticky per link, so a shard mid-restart still gets it on replay.
+    for l in links.iter() {
+        l.send_eos();
     }
     for h in shard_readers {
         let _ = h.join();
@@ -1073,12 +1256,17 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
             .map(|r| r.get(key).and_then(Json::as_f64).unwrap_or(0.0))
             .sum()
     };
+    let reconnects: usize = links
+        .iter()
+        .map(|l| l.reconnects.load(Ordering::SeqCst))
+        .sum();
     let merged = Json::obj(vec![
         ("shards", Json::Num(n as f64)),
         ("served", Json::Num(sum("served"))),
         ("shed", Json::Num(sum("shed"))),
         ("llm_calls", Json::Num(sum("llm_calls"))),
         ("ckpts", Json::Num(sum("ckpts"))),
+        ("reconnects", Json::Num(reconnects as f64)),
         (
             "resumed",
             Json::Bool(per_shard.iter().any(|r| {
@@ -1097,25 +1285,24 @@ pub fn run_front(shard_addrs: &[String], listener: TcpListener) -> Result<Json> 
         let _ = stream.shutdown(Shutdown::Both);
         let _ = reader.join();
     }
-    drop(shard_wtxs); // last senders: shard writer threads exit
-    for h in shard_links {
-        let _ = h.join();
+    for l in links.iter() {
+        l.shutdown(); // drop the write queue, join the writer thread
     }
     Ok(merged)
 }
 
 /// Read half of one client connection at the front: requests are
 /// registered for response routing, then hash-dispatched to their
-/// shard process.
+/// shard's [`Link`] (which keeps them replayable until answered).
 fn spawn_front_client_reader(
     stream: TcpStream,
     wtx: WireTx,
-    shard_wtxs: Arc<Vec<WireTx>>,
+    links: Arc<Vec<Link>>,
     registry: Arc<Mutex<HashMap<u64, WireTx>>>,
     finished: Arc<AtomicUsize>,
 ) -> JoinHandle<()> {
     thread::spawn(move || {
-        let n = shard_wtxs.len();
+        let n = links.len();
         let mut fb = FrameBuf::new();
         let mut buf = [0u8; 16 * 1024];
         let mut live = Some(wtx);
@@ -1127,7 +1314,8 @@ fn spawn_front_client_reader(
                             lock_unpoisoned(&registry)
                                 .insert(req.id, w.clone());
                             let s = shard_of(req.id, n);
-                            let _ = shard_wtxs[s].send(encode(&Frame::Request(req)));
+                            let id = req.id;
+                            links[s].send_request(id, encode(&Frame::Request(req)));
                         }
                     }
                     Ok(Some(Frame::Eos)) => {

@@ -310,6 +310,10 @@ pub(crate) struct LevelPool {
     pub warm_respawns: usize,
     /// Inference jobs dispatched per pool member.
     pub replica_jobs: Vec<u64>,
+    /// Jobs that were dispatched to replicas since removed by
+    /// scale-down — keeps the dispatched-job total conserved across
+    /// elastic resizing (`Σ replica_jobs + retired_jobs` is invariant).
+    pub retired_jobs: u64,
     /// Model-training triggers sent to the authority.
     train_sends: u64,
     /// Training triggers between snapshot publications (0 = never).
@@ -349,9 +353,52 @@ impl LevelPool {
             restarts: 0,
             warm_respawns: 0,
             replica_jobs: vec![0; replicas],
+            retired_jobs: 0,
             train_sends,
             publish_every,
         }
+    }
+
+    /// Grow the pool by one replica (autoscale-up). The newcomer is an
+    /// ordinary read-only replica at the next index: it warm-starts
+    /// from the latest published snapshot and installs newer ones
+    /// lazily, exactly like a warm respawn. Its epoch is strictly
+    /// above every live member's so a reply from any previously
+    /// removed worker at this index can never be mistaken for it.
+    pub fn add_replica(&mut self) {
+        let epoch = self.workers.iter().map(|w| w.epoch).max().unwrap_or(0) + 1;
+        let replica = self.workers.len();
+        let fresh = spawn_worker(
+            &self.spec,
+            replica,
+            epoch,
+            self.reply_tx.clone(),
+            self.stats.clone(),
+            self.slot.clone(),
+        );
+        self.workers.push(fresh);
+        self.replica_jobs.push(0);
+    }
+
+    /// Shrink the pool by one replica (autoscale-down): shut down and
+    /// join the highest-index member. Never removes worker 0 — the
+    /// learner authority owns the training trajectory and is not
+    /// elastic capacity. Returns `false` (and does nothing) when only
+    /// the authority remains. The caller must ensure the victim has no
+    /// batch in flight; its dispatched-job count is folded into
+    /// [`LevelPool::retired_jobs`] so totals stay conserved.
+    pub fn remove_replica(&mut self) -> bool {
+        if self.workers.len() <= 1 {
+            return false;
+        }
+        // lint: allow(unwrap) — guarded by the len() check above: both
+        // vectors always hold one entry per pool member.
+        let victim = self.workers.pop().expect("len checked above");
+        let _ = victim.tx.send(WorkerMsg::Shutdown);
+        drop(victim.tx);
+        let _ = victim.handle.join();
+        self.retired_jobs += self.replica_jobs.pop().unwrap_or(0);
+        true
     }
 
     /// Synchronously export the authority's live (model, calibrator)
@@ -745,6 +792,80 @@ mod tests {
         // The pool is untouched by the abort: a patient export succeeds.
         let got = pool.export(Duration::from_secs(60)).expect("patient export");
         assert!(got.is_some(), "the same authority answers a patient export");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn elastic_resize_joins_cleanly_and_conserves_counters() {
+        // Autoscale at the pool layer, under real threads: grow to 16
+        // members, drive inference through every member while growing
+        // and shrinking, and assert (a) every dispatched job is
+        // answered — no orphaned in-flight work from a scale-down —
+        // and (b) the dispatched-job total is conserved across
+        // removals (live replica_jobs + retired_jobs).
+        let (reply_tx, reply_rx) = channel();
+        let mut pool = LevelPool::new(spec(), 1, 1, reply_tx, None);
+        let p = Pipeline::default();
+        pool.send_train(train_batch(&p), 0.5); // publish so newcomers warm-start
+        wait_for("publication", || pool.published() >= 1);
+
+        let probe = Arc::new(p.featurize("kw0x001 kw1x002"));
+        let job = |id: u64| Job {
+            req_id: id,
+            probe: false,
+            spec: false,
+            f: probe.clone(),
+            enq: Instant::now(),
+        };
+
+        let mut dispatched = 0u64;
+        let mut answered = 0u64;
+        let mut next_id = 0u64;
+        // Grow 1 → 16, dispatching one batch to every member per step.
+        while pool.replicas() < 16 {
+            pool.add_replica();
+            for r in 0..pool.replicas() {
+                assert!(pool.send_infer(r, vec![job(next_id), job(next_id + 1)]));
+                next_id += 2;
+                dispatched += 2;
+            }
+        }
+        assert_eq!(pool.replicas(), 16);
+        // Drain everything in flight, then shrink 16 → 1. Draining
+        // first is the router's contract too: a victim is only removed
+        // once its in-flight slot is empty.
+        while answered < dispatched {
+            let reply = reply_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            answered += reply.results.len() as u64;
+        }
+        while pool.replicas() > 1 {
+            assert!(pool.remove_replica(), "non-authority members must be removable");
+            // Interleave more work on the survivors mid-shrink.
+            for r in 0..pool.replicas() {
+                assert!(pool.send_infer(r, vec![job(next_id)]));
+                next_id += 1;
+                dispatched += 1;
+            }
+            while answered < dispatched {
+                let reply = reply_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                answered += reply.results.len() as u64;
+            }
+        }
+        assert_eq!(answered, dispatched, "no job may be orphaned by a scale-down");
+        assert!(
+            !pool.remove_replica(),
+            "the learner authority must never be scaled away"
+        );
+        assert_eq!(pool.replicas(), 1);
+        let live: u64 = pool.replica_jobs.iter().sum();
+        assert_eq!(
+            live + pool.retired_jobs,
+            dispatched,
+            "dispatched-job accounting must be conserved across resizes"
+        );
+        // The authority (and its trained weights) survived the churn.
+        assert_eq!(pool.published(), 1);
+        assert!(pool.latest_snapshot().is_some());
         pool.shutdown();
     }
 

@@ -1,0 +1,321 @@
+//! N→M checkpoint resharding: migrate a durable manifest across shard
+//! counts offline, so a deployment can change topology at a restore
+//! boundary instead of being welded to the shard count it first ran at.
+//!
+//! `reshard(src, dst, M)` reads the newest manifest in `src` (written
+//! at some shard count N, discovered from the manifest itself),
+//! validates it strictly, and materializes an M-shard manifest in
+//! `dst`. The merge rules (DESIGN.md §14):
+//!
+//! * **Learner state is authority-seeded.** Every new shard's
+//!   per-level model/calibrator snapshots, DAgger β vector, RNG words,
+//!   and training-cadence counters are taken from the *lowest* old
+//!   shard id (shard 0) — the same worker-0-is-authority convention
+//!   the replica pools use. Shard 0's learned trajectory therefore
+//!   survives any reshard bit-for-bit, which is what keeps the
+//!   Theorem 3.2 no-regret argument intact: the surviving policy is an
+//!   actual prefix-trained policy, not an average of incomparable ones.
+//! * **Replay content is re-hashed.** Replay-cache, calibration-cache,
+//!   and staged-sync entries from *all* old shards are re-partitioned
+//!   across the M new shards with the same Fibonacci hash
+//!   ([`shard_of`]) the router uses for request ids, keyed on a stable
+//!   content hash — deterministic, so resharding the same manifest
+//!   twice yields byte-identical output.
+//! * **Counters are conserved.** Cumulative serve counters (served,
+//!   shed, correct, llm_calls, per-level handled) are summed onto new
+//!   shard 0 and zeroed elsewhere, so topology changes never inflate
+//!   or lose report totals.
+//! * **The cursor is the min over old shards.** Each old shard
+//!   checkpoints at its own quiescent instant; only the minimum is a
+//!   global high-water mark. Requests between min and max are
+//!   re-observed — the same at-least-once semantics a multi-shard
+//!   resume already has.
+//!
+//! The output directory must not already contain a manifest: resharding
+//! is a whole-topology rewrite, and depositing into a live checkpoint
+//! directory would interleave two incompatible shard counts.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::models::Featurized;
+use crate::sync::Arc;
+
+use super::ckpt::{self, CkptSink, ResumeMode, ShardState};
+use super::shard::shard_of;
+
+/// What a completed reshard did — printed by `ocl reshard` and
+/// asserted on by the elasticity tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReshardSummary {
+    /// Shard count of the source manifest (N).
+    pub from_shards: usize,
+    /// Shard count written to the destination (M).
+    pub to_shards: usize,
+    /// Global resume cursor of the new manifest (min over old shards).
+    pub cursor: u64,
+    /// Total served count carried across (conserved onto new shard 0).
+    pub served_total: usize,
+    /// Replay-cache entries re-partitioned (summed over levels).
+    pub replay_entries: usize,
+    /// Calibration-cache entries re-partitioned (summed over levels).
+    pub calib_entries: usize,
+    /// Staged cross-shard sync annotations re-partitioned.
+    pub sync_entries: usize,
+}
+
+impl ReshardSummary {
+    /// One-line human/CI-greppable form.
+    pub fn describe(&self) -> String {
+        format!(
+            "reshard {}→{}: cursor={} served_total={} replay={} calib={} sync={}",
+            self.from_shards,
+            self.to_shards,
+            self.cursor,
+            self.served_total,
+            self.replay_entries,
+            self.calib_entries,
+            self.sync_entries
+        )
+    }
+}
+
+/// FNV-1a fold of a byte slice into `h`.
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+}
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// Stable content key for an annotation `(query, label)` — hashes the
+/// token ids (the canonical identity of a featurized query) plus the
+/// label, so the same annotation lands on the same new shard no matter
+/// which old shard's cache it came from.
+fn annotation_key(f: &Featurized, y: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &id in &f.ids {
+        fnv(&mut h, &id.to_le_bytes());
+    }
+    fnv(&mut h, &(y as u64).to_le_bytes());
+    h
+}
+
+/// Stable content key for a calibration example `(probs, z)`.
+fn calib_key(probs: &[f32], z: f32) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &p in probs {
+        fnv(&mut h, &p.to_bits().to_le_bytes());
+    }
+    fnv(&mut h, &z.to_bits().to_le_bytes());
+    h
+}
+
+/// Reshard the newest manifest in `src` (validated strictly at its
+/// own recorded shard count N) into an M-shard manifest under `dst`.
+/// `dst` is created if missing and must not already hold a manifest.
+pub fn reshard(
+    src: impl AsRef<Path>,
+    dst: impl AsRef<Path>,
+    to_shards: usize,
+) -> Result<ReshardSummary> {
+    let (src, dst) = (src.as_ref(), dst.as_ref());
+    if to_shards == 0 {
+        return Err(Error::Usage("reshard: target shard count must be ≥ 1".into()));
+    }
+    let from_shards = ckpt::latest_manifest_shards(src)?;
+    if from_shards == 0 {
+        return Err(Error::Ckpt("reshard: source manifest covers 0 shards".into()));
+    }
+    let states = ckpt::load_latest(src, ResumeMode::Strict, from_shards)?
+        .ok_or_else(|| Error::Ckpt("reshard: no restorable checkpoint".into()))?;
+    if ckpt::latest_manifest_shards(dst).is_ok() {
+        return Err(Error::Ckpt(format!(
+            "reshard: destination '{}' already holds a checkpoint manifest",
+            dst.display()
+        )));
+    }
+
+    let new_states = reshard_states(&states, to_shards);
+    let summary = ReshardSummary {
+        from_shards,
+        to_shards,
+        cursor: new_states[0].cursor,
+        served_total: new_states.iter().map(|s| s.served).sum(),
+        replay_entries: new_states
+            .iter()
+            .flat_map(|s| s.levels.iter())
+            .map(|l| l.cache.len())
+            .sum(),
+        calib_entries: new_states
+            .iter()
+            .flat_map(|s| s.levels.iter())
+            .map(|l| l.calib_cache.len())
+            .sum(),
+        sync_entries: new_states.iter().map(|s| s.sync_staged.len()).sum(),
+    };
+
+    // Deposit in shard order: the last deposit (once every shard has a
+    // file) commits the manifest, so a crash mid-reshard leaves `dst`
+    // manifest-less — restartable, never torn.
+    let sink = CkptSink::create(dst, to_shards)?;
+    for s in &new_states {
+        sink.deposit(s.shard, s)?;
+    }
+    Ok(summary)
+}
+
+/// Pure in-memory core of [`reshard`]: merge N shard states into M.
+/// Exposed for the property tests — no filesystem, fully deterministic.
+pub fn reshard_states(states: &[ShardState], to_shards: usize) -> Vec<ShardState> {
+    let authority = &states[0];
+    let n_levels = authority.levels.len();
+    let cursor = states.iter().map(|s| s.cursor).min().unwrap_or(0);
+
+    let mut out: Vec<ShardState> = (0..to_shards)
+        .map(|k| {
+            let mut s = authority.clone();
+            s.shard = k;
+            s.cursor = cursor;
+            // Counters conserve onto new shard 0 (summed below).
+            s.served = 0;
+            s.shed = 0;
+            s.correct = 0;
+            s.llm_calls = 0;
+            s.handled = vec![0; authority.handled.len()];
+            s.sync_staged = Vec::new();
+            for l in &mut s.levels {
+                l.cache = Vec::new();
+                l.calib_cache = Vec::new();
+            }
+            s
+        })
+        .collect();
+
+    for s in states {
+        out[0].served += s.served;
+        out[0].shed += s.shed;
+        out[0].correct += s.correct;
+        out[0].llm_calls += s.llm_calls;
+        for (acc, h) in out[0].handled.iter_mut().zip(&s.handled) {
+            *acc += h;
+        }
+    }
+
+    // Re-partition replay content by stable content hash, walking old
+    // shards (then entries) in order — deterministic placement *and*
+    // deterministic order within each new shard's cache.
+    for s in states {
+        for (f, y) in &s.sync_staged {
+            let k = shard_of(annotation_key(f, *y), to_shards);
+            out[k].sync_staged.push((Arc::clone(f), *y));
+        }
+        for (i, l) in s.levels.iter().enumerate().take(n_levels) {
+            for (f, y) in &l.cache {
+                let k = shard_of(annotation_key(f, *y), to_shards);
+                out[k].levels[i].cache.push((Arc::clone(f), *y));
+            }
+            for (p, z) in &l.calib_cache {
+                let k = shard_of(calib_key(p, *z), to_shards);
+                out[k].levels[i].calib_cache.push((p.clone(), *z));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ckpt::LevelState;
+    use super::*;
+
+    fn state(shard: usize, cursor: u64, served: usize) -> ShardState {
+        use crate::models::{Pipeline, Snapshot};
+        let p = Pipeline::default();
+        let snap = |kind: &str, n: usize| Snapshot {
+            kind: kind.into(),
+            classes: 2,
+            data: (0..n).map(|i| i as f32 * 0.25).collect(),
+        };
+        let f = |t: &str| Arc::new(p.featurize(t));
+        ShardState {
+            shard,
+            cursor,
+            rng_s: [1 + shard as u64, 2, 3, 4],
+            rng_cached: None,
+            betas: vec![0.5 + shard as f64 * 0.1, 0.25],
+            threshold_scale: 1.0,
+            probe_seq: 3,
+            sync_staged: vec![(f(&format!("kw0x{shard:03}")), shard % 2)],
+            served,
+            shed: shard,
+            correct: served / 2,
+            llm_calls: 5 + shard as u64,
+            handled: vec![served / 2, served / 4, served / 4],
+            levels: (0..2)
+                .map(|i| LevelState {
+                    model: snap(if i == 0 { "lr" } else { "tfm_base" }, 8),
+                    calib: snap("mlp", 4),
+                    train_chunks: 10 + shard as u64,
+                    calib_chunks: 6,
+                    train_sends: 2,
+                    pending: 1,
+                    calib_pending: 0,
+                    cache: vec![
+                        (f(&format!("kw1x{:03}", shard * 2 + i)), 0),
+                        (f(&format!("kw2x{:03}", shard * 3 + i)), 1),
+                    ],
+                    calib_cache: vec![(vec![0.5 + shard as f32 * 0.1, 0.4], 1.0)],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn merge_conserves_counters_and_seeds_from_authority() {
+        let old = vec![state(0, 40, 100), state(1, 37, 90)];
+        for m in [1usize, 2, 3, 5] {
+            let new = reshard_states(&old, m);
+            assert_eq!(new.len(), m);
+            // Authority-seeded learner state on every new shard.
+            for (k, s) in new.iter().enumerate() {
+                assert_eq!(s.shard, k);
+                assert_eq!(s.cursor, 37, "cursor must be the min over old shards");
+                assert_eq!(s.betas, old[0].betas);
+                assert_eq!(s.rng_s, old[0].rng_s);
+                for (l, ol) in s.levels.iter().zip(&old[0].levels) {
+                    assert_eq!(l.model, ol.model);
+                    assert_eq!(l.train_chunks, ol.train_chunks);
+                }
+            }
+            // Conservation: totals survive any M.
+            assert_eq!(new.iter().map(|s| s.served).sum::<usize>(), 190);
+            assert_eq!(new.iter().map(|s| s.llm_calls).sum::<u64>(), 11);
+            let handled: Vec<usize> = (0..3)
+                .map(|i| new.iter().map(|s| s.handled[i]).sum())
+                .collect();
+            assert_eq!(handled, vec![95, 47, 47]);
+            let replay: usize = new
+                .iter()
+                .flat_map(|s| s.levels.iter())
+                .map(|l| l.cache.len())
+                .sum();
+            assert_eq!(replay, 8, "every replay entry must land exactly once");
+            let sync: usize = new.iter().map(|s| s.sync_staged.len()).sum();
+            assert_eq!(sync, 2);
+            // Determinism: same input, same output.
+            assert_eq!(reshard_states(&old, m), new);
+        }
+    }
+
+    #[test]
+    fn reshard_to_one_concatenates_everything_onto_shard_zero() {
+        let old = vec![state(0, 40, 100), state(1, 37, 90)];
+        let new = reshard_states(&old, 1);
+        assert_eq!(new[0].served, 190);
+        assert_eq!(new[0].levels[0].cache.len(), 4);
+        assert_eq!(new[0].levels[0].calib_cache.len(), 2);
+    }
+}

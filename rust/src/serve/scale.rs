@@ -1,0 +1,253 @@
+//! Queue-depth autoscaling for the per-level replica pools.
+//!
+//! The serve loop already tracks, per level, exactly the signals an
+//! autoscaler needs: live queue depth (stage queue + batch queue),
+//! snapshot lag, and per-worker `infer_ns`. This module turns the
+//! depth signal into grow/shrink decisions for `replicas_per_level` at
+//! runtime, under three hard rules:
+//!
+//! * **Bounds.** Replica count never leaves
+//!   `[replicas_min, replicas_max]` (`ServeConfig::builder()` knobs,
+//!   `--replicas-min/--replicas-max` on the CLI).
+//! * **The learner authority is never scaled away.** Worker 0 owns the
+//!   training trajectory; scale-down only ever removes the
+//!   highest-index replica, and only when it has no batch in flight.
+//!   (`mc::models::ScaleSpec` model-checks exactly this rule.)
+//! * **No wall clock.** Hysteresis is counted in *observations*
+//!   (dispatch sweeps), not seconds — the controller is a pure
+//!   deterministic function of its input sequence, so autoscaled runs
+//!   replay exactly and the module sits inside `ocl-lint`'s
+//!   determinism scope.
+//!
+//! Hysteresis shape: a level must look overloaded (queue depth ≥
+//! `up_depth` per replica) for `up_after` consecutive observations
+//! before growing, and idle (depth ≤ `down_depth` per replica) for
+//! `down_after` consecutive observations before shrinking; after any
+//! scale event the controller holds for `cooldown` observations so the
+//! pool's new capacity can drain the backlog before being re-judged.
+//! Scale events are counted in `ServeReport::{scale_ups, scale_downs}`.
+
+/// Hysteresis + bounds knobs for one level's [`ScaleController`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ScalePolicy {
+    /// Floor on replicas (≥ 1: the authority itself).
+    pub min_replicas: usize,
+    /// Ceiling on replicas.
+    pub max_replicas: usize,
+    /// Per-replica queue depth considered overloaded.
+    pub up_depth: usize,
+    /// Per-replica queue depth considered idle.
+    pub down_depth: usize,
+    /// Consecutive overloaded observations before growing.
+    pub up_after: u64,
+    /// Consecutive idle observations before shrinking.
+    pub down_after: u64,
+    /// Observations held after any scale event.
+    pub cooldown: u64,
+}
+
+/// Overloaded threshold default: one full dispatch batch queued per
+/// replica means the pool is a whole sweep behind.
+pub const DEFAULT_UP_DEPTH: usize = 8;
+/// Idle threshold default: an empty queue.
+pub const DEFAULT_DOWN_DEPTH: usize = 0;
+/// Grow after this many consecutive overloaded sweeps.
+pub const DEFAULT_UP_AFTER: u64 = 4;
+/// Shrink after this many consecutive idle sweeps — deliberately slow,
+/// so bursty streams don't thrash capacity.
+pub const DEFAULT_DOWN_AFTER: u64 = 64;
+/// Post-event hold, in sweeps.
+pub const DEFAULT_COOLDOWN: u64 = 16;
+
+impl ScalePolicy {
+    /// Policy with default hysteresis over `[min, max]` replicas.
+    /// `up_depth` is derived from the dispatch batch size so "one full
+    /// batch queued per replica" means overloaded regardless of config.
+    pub fn bounded(min_replicas: usize, max_replicas: usize, batch_max: usize) -> Self {
+        ScalePolicy {
+            min_replicas: min_replicas.max(1),
+            max_replicas: max_replicas.max(min_replicas.max(1)),
+            up_depth: batch_max.max(1),
+            down_depth: DEFAULT_DOWN_DEPTH,
+            up_after: DEFAULT_UP_AFTER,
+            down_after: DEFAULT_DOWN_AFTER,
+            cooldown: DEFAULT_COOLDOWN,
+        }
+    }
+}
+
+/// One observation's verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Add one replica.
+    Up,
+    /// Remove the highest-index idle replica (never the authority).
+    Down,
+    /// Do nothing this sweep.
+    Hold,
+}
+
+/// Per-level hysteresis state machine. Feed it one
+/// `(queue_depth, replicas)` observation per dispatch sweep; it emits
+/// at most one scale event per `cooldown` window and never a decision
+/// that would leave `[min_replicas, max_replicas]`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ScaleController {
+    policy: ScalePolicy,
+    high_streak: u64,
+    low_streak: u64,
+    cool: u64,
+}
+
+impl ScaleController {
+    /// Fresh controller (no streaks, no cooldown).
+    pub fn new(policy: ScalePolicy) -> Self {
+        ScaleController { policy, high_streak: 0, low_streak: 0, cool: 0 }
+    }
+
+    /// The policy this controller enforces.
+    pub fn policy(&self) -> &ScalePolicy {
+        &self.policy
+    }
+
+    /// Observe one sweep's queue depth at the current replica count.
+    pub fn decide(&mut self, queue_depth: usize, replicas: usize) -> ScaleDecision {
+        // Bounds enforcement dominates hysteresis: a pool outside its
+        // configured range (e.g. after a config-driven restart) walks
+        // back in immediately.
+        if replicas < self.policy.min_replicas {
+            return ScaleDecision::Up;
+        }
+        if replicas > self.policy.max_replicas {
+            return ScaleDecision::Down;
+        }
+        if self.cool > 0 {
+            self.cool -= 1;
+            return ScaleDecision::Hold;
+        }
+        let r = replicas.max(1);
+        if queue_depth >= self.policy.up_depth.saturating_mul(r) {
+            self.high_streak += 1;
+            self.low_streak = 0;
+        } else if queue_depth <= self.policy.down_depth.saturating_mul(r) {
+            self.low_streak += 1;
+            self.high_streak = 0;
+        } else {
+            self.high_streak = 0;
+            self.low_streak = 0;
+        }
+        if self.high_streak >= self.policy.up_after && replicas < self.policy.max_replicas
+        {
+            self.high_streak = 0;
+            self.low_streak = 0;
+            self.cool = self.policy.cooldown;
+            return ScaleDecision::Up;
+        }
+        if self.low_streak >= self.policy.down_after
+            && replicas > self.policy.min_replicas
+        {
+            self.high_streak = 0;
+            self.low_streak = 0;
+            self.cool = self.policy.cooldown;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(min: usize, max: usize) -> ScaleController {
+        ScaleController::new(ScalePolicy {
+            min_replicas: min,
+            max_replicas: max,
+            up_depth: 4,
+            down_depth: 0,
+            up_after: 2,
+            down_after: 3,
+            cooldown: 2,
+        })
+    }
+
+    #[test]
+    fn grows_under_sustained_load_within_bounds() {
+        let mut c = quick(1, 3);
+        let mut replicas = 1usize;
+        let mut ups = 0;
+        for _ in 0..100 {
+            match c.decide(100, replicas) {
+                ScaleDecision::Up => {
+                    replicas += 1;
+                    ups += 1;
+                }
+                ScaleDecision::Down => panic!("overloaded pool must never shrink"),
+                ScaleDecision::Hold => {}
+            }
+            assert!(replicas <= 3, "must never exceed max");
+        }
+        assert_eq!(replicas, 3, "sustained overload must reach max");
+        assert_eq!(ups, 2);
+    }
+
+    #[test]
+    fn shrinks_when_idle_but_never_below_min() {
+        let mut c = quick(2, 4);
+        let mut replicas = 4usize;
+        for _ in 0..200 {
+            match c.decide(0, replicas) {
+                ScaleDecision::Down => replicas -= 1,
+                ScaleDecision::Up => panic!("idle pool must never grow"),
+                ScaleDecision::Hold => {}
+            }
+            assert!(replicas >= 2, "must never drop below min");
+        }
+        assert_eq!(replicas, 2, "sustained idleness must reach min");
+    }
+
+    #[test]
+    fn single_replica_floor_protects_the_authority() {
+        // min defaults to ≥ 1 — an idle pool at one replica holds
+        // forever rather than scaling the learner authority away.
+        let mut c = quick(1, 2);
+        for _ in 0..500 {
+            assert_ne!(c.decide(0, 1), ScaleDecision::Down);
+        }
+    }
+
+    #[test]
+    fn hysteresis_needs_streaks_and_respects_cooldown() {
+        let mut c = quick(1, 8);
+        // Alternating load never builds the streak → never scales.
+        for i in 0..100 {
+            let depth = if i % 2 == 0 { 100 } else { 1 };
+            assert_eq!(c.decide(depth, 1), ScaleDecision::Hold);
+        }
+        // Sustained load scales once, then the cooldown holds even
+        // though the backlog is still high.
+        let mut c = quick(1, 8);
+        assert_eq!(c.decide(100, 1), ScaleDecision::Hold);
+        assert_eq!(c.decide(100, 1), ScaleDecision::Up);
+        assert_eq!(c.decide(100, 2), ScaleDecision::Hold);
+        assert_eq!(c.decide(100, 2), ScaleDecision::Hold);
+        // Cooldown over: streak rebuilds from zero.
+        assert_eq!(c.decide(100, 2), ScaleDecision::Hold);
+        assert_eq!(c.decide(100, 2), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn out_of_bounds_replica_counts_walk_back_in() {
+        let mut c = quick(2, 3);
+        assert_eq!(c.decide(0, 1), ScaleDecision::Up, "below min: grow now");
+        assert_eq!(c.decide(100, 5), ScaleDecision::Down, "above max: shrink now");
+    }
+
+    #[test]
+    fn bounded_policy_clamps_degenerate_inputs() {
+        let p = ScalePolicy::bounded(0, 0, 0);
+        assert_eq!(p.min_replicas, 1);
+        assert_eq!(p.max_replicas, 1);
+        assert_eq!(p.up_depth, 1);
+    }
+}

@@ -158,6 +158,16 @@ impl ShardReport {
         self.shards.iter().map(|r| r.ckpts).sum()
     }
 
+    /// Total autoscale grow events across shards.
+    pub fn scale_ups(&self) -> u64 {
+        self.shards.iter().map(|r| r.scale_ups).sum()
+    }
+
+    /// Total autoscale shrink events across shards.
+    pub fn scale_downs(&self) -> u64 {
+        self.shards.iter().map(|r| r.scale_downs).sum()
+    }
+
     /// Total wall-clock nanoseconds spent in batched inference across
     /// all shards and levels (worker-side predict + calibrator score).
     pub fn infer_ns(&self) -> u64 {
@@ -198,6 +208,8 @@ impl ShardReport {
             ("peak_pending", Json::Num(self.peak_pending as f64)),
             ("resumed", Json::Bool(self.resumed())),
             ("ckpts", Json::Num(self.ckpts() as f64)),
+            ("scale_ups", Json::Num(self.scale_ups() as f64)),
+            ("scale_downs", Json::Num(self.scale_downs() as f64)),
             ("infer_ns", Json::Num(self.infer_ns() as f64)),
             (
                 "per_shard",
@@ -464,6 +476,8 @@ mod tests {
                 resumed: false,
                 ckpts: 0,
                 ckpt_aborts: 0,
+                scale_ups: 2,
+                scale_downs: 1,
                 final_betas: vec![0.5],
                 train_batches: vec![1],
                 calib_batches: vec![1],
@@ -486,6 +500,8 @@ mod tests {
         assert_eq!(r.max_snapshot_lag(), 300);
         assert!(!r.resumed());
         assert_eq!(r.ckpts(), 0);
+        assert_eq!(r.scale_ups(), 4);
+        assert_eq!(r.scale_downs(), 2);
         assert_eq!(r.infer_ns(), 4000);
         assert_eq!(r.spec_hits(), 4);
         assert_eq!(r.spec_wasted(), 2);

@@ -1,0 +1,455 @@
+//! Elasticity test suite (DESIGN.md §14): N→M checkpoint resharding
+//! pinned against the uninterrupted oracle, property tests of the
+//! merge rules over random (N, M, seed) topologies, the committed v1
+//! manifest fixture, and the `ocl reshard` guard rails.
+//!
+//! The tentpole contract: a 2-shard run checkpointed at quiescence,
+//! resharded to 3 / to 1 / chained 3→2, then resumed with an empty
+//! stream tail must land on the *exact* state the uninterrupted run
+//! finished with — bit-identical β vectors and train/calib chunk
+//! counts on every shard (authority-seeded from old shard 0), and
+//! conserved serve totals. Rolling restarts over real sockets live in
+//! `test_net.rs`; the autoscaler model checks live in `test_loom.rs`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+
+use ocl::config::{BenchmarkId, CascadeConfig, ExpertId, ServeConfig};
+use ocl::data::Benchmark;
+use ocl::models::{Pipeline, Snapshot};
+use ocl::prng::Rng;
+use ocl::prop;
+use ocl::serve::ckpt::{self, CkptOptions, CkptSink, LevelState, ResumeMode, ShardState};
+use ocl::serve::reshard::{self, reshard_states};
+use ocl::serve::shard::{ShardFront, ShardReport};
+use ocl::serve::{Request, Response, ServeReport};
+use ocl::sim::{Expert, ExpertProfile};
+use ocl::sync::Arc;
+
+fn expert_for(b: &Benchmark, seed: u64) -> Expert {
+    let mean_len =
+        b.samples.iter().map(|s| s.len as f64).sum::<f64>() / b.samples.len() as f64;
+    Expert::new(
+        ExpertProfile::for_pair(ExpertId::Gpt35, BenchmarkId::Imdb),
+        b.strata_fractions(),
+        mean_len,
+        seed,
+    )
+}
+
+/// Never sheds, no cadence checkpoints, `m` shards, no sync broadcast
+/// (a pure-restore resume must not absorb staged annotations, or the
+/// oracle comparison would race the broadcast).
+fn sharded(m: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .max_pending(1 << 16)
+        .ckpt_every(0)
+        .shards(m)
+        .build()
+        .unwrap()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ocl-elastic-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Serve samples `lo..hi` (original stream ids) through `front`,
+/// returning the merged report and the responses.
+fn run_front(
+    front: ShardFront,
+    b: &Benchmark,
+    lo: usize,
+    hi: usize,
+) -> (ShardReport, Vec<Response>) {
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    let samples: Vec<_> = b.samples[lo..hi].to_vec();
+    let submit = std::thread::spawn(move || {
+        for (k, s) in samples.iter().enumerate() {
+            if req_tx
+                .send(Request {
+                    id: (lo + k) as u64,
+                    text: s.text.clone(),
+                    truth: s.label,
+                    sample: s.clone(),
+                })
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+    let report = front.serve(req_rx, resp_tx).expect("front serve");
+    submit.join().unwrap();
+    (report, resp_rx.iter().collect())
+}
+
+/// Element-wise handled totals across shards.
+fn handled_sum(r: &ShardReport) -> Vec<usize> {
+    let k = r.shards.iter().map(|s| s.handled.len()).max().unwrap_or(0);
+    (0..k)
+        .map(|i| r.shards.iter().map(|s| *s.handled.get(i).unwrap_or(&0)).sum())
+        .collect()
+}
+
+fn beta_bits(r: &ServeReport) -> Vec<u64> {
+    r.final_betas.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Strict-resume an M-shard front from `dir`, serve an already-empty
+/// stream tail (pure restore), and pin the result against the
+/// uninterrupted oracle run.
+fn resume_and_check(
+    cfg: &CascadeConfig,
+    b: &Benchmark,
+    seed: u64,
+    dir: &Path,
+    m: usize,
+    oracle: &ShardReport,
+) {
+    let n = oracle.served();
+    let front = ShardFront::with_ckpt(
+        cfg.clone(),
+        b.classes,
+        expert_for(b, seed),
+        sharded(m),
+        "artifacts",
+        Some(CkptOptions {
+            dir: dir.to_string_lossy().into_owned(),
+            resume: Some(ResumeMode::Strict),
+        }),
+    )
+    .expect("resharded manifest must restore under strict resume");
+    assert_eq!(front.shards(), m);
+    let (report, responses) = run_front(front, b, n, n);
+    assert!(report.resumed(), "{m}-shard resume must say so");
+    assert!(responses.is_empty(), "pure restore must serve nothing new");
+    assert_eq!(report.served(), n, "served_total conserved across reshard to {m}");
+    assert_eq!(report.shed(), oracle.shed(), "shed conserved across reshard to {m}");
+    assert_eq!(
+        report.llm_calls(),
+        oracle.llm_calls(),
+        "expert-call totals conserved across reshard to {m}"
+    );
+    assert_eq!(
+        handled_sum(&report),
+        handled_sum(oracle),
+        "handled mix conserved across reshard to {m}"
+    );
+    // Authority seeding: every new shard continues old shard 0's
+    // learner trajectory bit-for-bit.
+    for (k, s) in report.shards.iter().enumerate() {
+        assert_eq!(
+            beta_bits(s),
+            beta_bits(&oracle.shards[0]),
+            "reshard to {m}, shard {k}: β must be bit-identical to the oracle authority"
+        );
+        assert_eq!(
+            s.train_batches, oracle.shards[0].train_batches,
+            "reshard to {m}, shard {k}: train chunk counts must match the authority"
+        );
+        assert_eq!(
+            s.calib_batches, oracle.shards[0].calib_batches,
+            "reshard to {m}, shard {k}: calib chunk counts must match the authority"
+        );
+    }
+}
+
+#[test]
+fn reshard_and_resume_matches_the_uninterrupted_oracle() {
+    // The oracle: an uninterrupted 2-shard run over the whole stream,
+    // checkpointed at the graceful-shutdown quiescent point.
+    let n = 240;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 83, n);
+    let cfg = {
+        let mut c = CascadeConfig::small(BenchmarkId::Imdb, ExpertId::Gpt35);
+        c.seed = 83;
+        c
+    };
+    let dir_a = tmpdir("reshard-src");
+    let front = ShardFront::with_ckpt(
+        cfg.clone(),
+        b.classes,
+        expert_for(&b, 83),
+        sharded(2),
+        "artifacts",
+        Some(CkptOptions { dir: dir_a.to_string_lossy().into_owned(), resume: None }),
+    )
+    .unwrap();
+    let (oracle, responses) = run_front(front, &b, 0, n);
+    assert_eq!(oracle.served(), n);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "oracle serves exactly once");
+    assert!(oracle.ckpts() >= 1, "graceful shutdown must checkpoint");
+
+    let src_states = ckpt::load_latest(&dir_a, ResumeMode::Strict, 2).unwrap().unwrap();
+    let min_cursor = src_states.iter().map(|s| s.cursor).min().unwrap();
+
+    // 2→3 and 2→1, each resumed and pinned against the oracle.
+    for m in [3usize, 1] {
+        let dst = tmpdir(&format!("reshard-to{m}"));
+        let summary = reshard::reshard(&dir_a, &dst, m).unwrap();
+        assert_eq!((summary.from_shards, summary.to_shards), (2, m));
+        assert_eq!(summary.served_total, n, "summary conserves served_total");
+        assert_eq!(summary.cursor, min_cursor, "summary cursor is the min over shards");
+        resume_and_check(&cfg, &b, 83, &dst, m, &oracle);
+        let _ = fs::remove_dir_all(&dst);
+    }
+
+    // 3→2 chains through an intermediate topology: the authority
+    // trajectory survives two reshards.
+    let dst3 = tmpdir("reshard-chain3");
+    let dst2 = tmpdir("reshard-chain2");
+    reshard::reshard(&dir_a, &dst3, 3).unwrap();
+    let summary = reshard::reshard(&dst3, &dst2, 2).unwrap();
+    assert_eq!((summary.from_shards, summary.to_shards), (3, 2));
+    assert_eq!(summary.served_total, n);
+    resume_and_check(&cfg, &b, 83, &dst2, 2, &oracle);
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dst3);
+    let _ = fs::remove_dir_all(&dst2);
+}
+
+// --- property tests over random (N, M, seed) topologies --------------------
+
+/// Random but structurally valid shard state: 2 levels, random
+/// counters, random replay/calib/sync cache contents.
+fn rand_state(rng: &mut Rng, pl: &Pipeline, shard: usize, n_levels: usize) -> ShardState {
+    let feat = |rng: &mut Rng| {
+        Arc::new(pl.featurize(&format!(
+            "kw{}x{:03} kw0x{:03}",
+            rng.below(3),
+            rng.below(100),
+            rng.below(100)
+        )))
+    };
+    let snap = |kind: &str, base: usize| Snapshot {
+        kind: kind.into(),
+        classes: 2,
+        data: (0..4).map(|i| (base + i) as f32 * 0.25).collect(),
+    };
+    let served = 10 + rng.below(200);
+    let levels = (0..n_levels)
+        .map(|l| {
+            let cache = (0..rng.below(4))
+                .map(|_| {
+                    let y = rng.below(2);
+                    (feat(rng), y)
+                })
+                .collect();
+            let calib_cache = (0..rng.below(3))
+                .map(|_| {
+                    let p = vec![rng.below(4) as f32 * 0.25, 0.1];
+                    (p, rng.below(2) as f32)
+                })
+                .collect();
+            LevelState {
+                model: snap(if l == 0 { "lr" } else { "tfm_base" }, shard + l),
+                calib: snap("mlp", shard + l + 1),
+                train_chunks: rng.below(20) as u64,
+                calib_chunks: rng.below(20) as u64,
+                train_sends: rng.below(5) as u64,
+                pending: rng.below(8),
+                calib_pending: rng.below(8),
+                cache,
+                calib_cache,
+            }
+        })
+        .collect();
+    let sync_staged = (0..rng.below(3))
+        .map(|_| {
+            let y = rng.below(2);
+            (feat(rng), y)
+        })
+        .collect();
+    ShardState {
+        shard,
+        cursor: 10 + rng.below(100) as u64,
+        rng_s: [1 + shard as u64, 2, 3, 4 + rng.below(9) as u64],
+        rng_cached: None,
+        betas: (0..n_levels).map(|l| 0.9 - l as f64 * 0.05 - shard as f64 * 0.1).collect(),
+        threshold_scale: 1.0,
+        probe_seq: rng.below(10) as u64,
+        sync_staged,
+        served,
+        shed: rng.below(5),
+        correct: served / 2,
+        llm_calls: rng.below(50) as u64,
+        handled: (0..n_levels + 1).map(|_| rng.below(50)).collect(),
+        levels,
+    }
+}
+
+/// The merge-rule contract for one (old topology, M) pair.
+fn merge_holds(old: &[ShardState], m: usize) -> bool {
+    let new = reshard_states(old, m);
+    if new.len() != m {
+        return false;
+    }
+    let min_cursor = old.iter().map(|s| s.cursor).min().unwrap();
+    let auth = &old[0];
+    for (k, s) in new.iter().enumerate() {
+        // Labeling + global cursor + authority-seeded learner state.
+        if s.shard != k || s.cursor != min_cursor {
+            return false;
+        }
+        if s.betas != auth.betas || s.rng_s != auth.rng_s || s.probe_seq != auth.probe_seq
+        {
+            return false;
+        }
+        for (l, al) in s.levels.iter().zip(&auth.levels) {
+            if l.model != al.model
+                || l.calib != al.calib
+                || l.train_chunks != al.train_chunks
+                || l.calib_chunks != al.calib_chunks
+                || l.pending != al.pending
+            {
+                return false;
+            }
+        }
+        // Counters conserve onto new shard 0 only.
+        if k > 0 && (s.served != 0 || s.llm_calls != 0 || s.handled.iter().any(|&h| h > 0))
+        {
+            return false;
+        }
+    }
+    // Conservation of every total the reports aggregate: served, shed,
+    // correct, expert calls, handled, staged sync annotations, replay
+    // cache entries, calibration cache entries.
+    let tot = |xs: &[ShardState]| {
+        (
+            xs.iter().map(|s| s.served).sum::<usize>(),
+            xs.iter().map(|s| s.shed).sum::<usize>(),
+            xs.iter().map(|s| s.correct).sum::<usize>(),
+            xs.iter().map(|s| s.llm_calls).sum::<u64>(),
+            xs.iter().map(|s| s.handled.iter().sum::<usize>()).sum::<usize>(),
+            xs.iter().map(|s| s.sync_staged.len()).sum::<usize>(),
+            xs.iter().flat_map(|s| &s.levels).map(|l| l.cache.len()).sum::<usize>(),
+            xs.iter().flat_map(|s| &s.levels).map(|l| l.calib_cache.len()).sum::<usize>(),
+        )
+    };
+    if tot(old) != tot(&new) {
+        return false;
+    }
+    // Determinism: same input, same output.
+    reshard_states(old, m) == new
+}
+
+#[test]
+fn prop_reshard_merge_rules_hold_for_random_topologies() {
+    let pl = Pipeline::default();
+    prop::check_seeded("reshard-merge", 16, |rng| {
+        let n = 1 + rng.below(3);
+        let m = 1 + rng.below(5);
+        let n_levels = 1 + rng.below(2);
+        let old: Vec<ShardState> =
+            (0..n).map(|s| rand_state(rng, &pl, s, n_levels)).collect();
+        merge_holds(&old, m)
+    });
+}
+
+/// Sorted `(file name, bytes)` listing of a checkpoint directory.
+fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| {
+            (e.file_name().to_string_lossy().into_owned(), fs::read(e.path()).unwrap())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn prop_reshard_on_disk_is_deterministic_and_strict_loadable() {
+    let pl = Pipeline::default();
+    prop::check_seeded("reshard-disk", 4, |rng| {
+        let n = 1 + rng.below(3);
+        let m = 1 + rng.below(4);
+        let old: Vec<ShardState> = (0..n).map(|s| rand_state(rng, &pl, s, 2)).collect();
+        let src = tmpdir("prop-src");
+        let sink = CkptSink::create(&src, n).unwrap();
+        for s in &old {
+            sink.deposit(s.shard, s).unwrap();
+        }
+        let d1 = tmpdir("prop-dst1");
+        let d2 = tmpdir("prop-dst2");
+        let s1 = reshard::reshard(&src, &d1, m).unwrap();
+        let s2 = reshard::reshard(&src, &d2, m).unwrap();
+        // Resharding the same manifest twice is byte-identical, and the
+        // output is itself a strict-restorable v2 checkpoint equal to
+        // the pure in-memory merge.
+        let ok = s1 == s2
+            && dir_bytes(&d1) == dir_bytes(&d2)
+            && ckpt::load_latest(&d1, ResumeMode::Strict, m).unwrap().unwrap()
+                == reshard_states(&old, m);
+        for d in [&src, &d1, &d2] {
+            let _ = fs::remove_dir_all(d);
+        }
+        ok
+    });
+}
+
+// --- committed v1 fixture + guard rails ------------------------------------
+
+#[test]
+fn committed_v1_fixture_restores_under_strict_resume() {
+    // A byte-frozen checkpoint directory as a v1 build wrote it (no
+    // `epochs` array in the manifest): strict resume must restore it,
+    // and `ocl reshard` must accept it directly — the v1→v2 migration
+    // path is "reshard (or just resume) the old directory".
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/../tests/fixtures/ckpt_v1");
+    assert_eq!(ckpt::latest_manifest_shards(fixture).unwrap(), 1);
+    let states = ckpt::load_latest(fixture, ResumeMode::Strict, 1)
+        .expect("v1 fixture must strict-load")
+        .expect("fixture holds a manifest");
+    assert_eq!(states.len(), 1);
+    let s = &states[0];
+    assert_eq!(s.shard, 0);
+    assert_eq!(s.cursor, 100);
+    assert_eq!(s.served, 100);
+    assert_eq!(s.betas, vec![0.5, 0.25]);
+    assert_eq!(s.rng_s, [1, 2, 3, 4]);
+    assert_eq!(s.levels.len(), 2);
+    assert_eq!(s.levels[0].train_chunks, 12);
+    assert_eq!(s.levels[0].calib_cache.len(), 1);
+
+    let dst = tmpdir("v1-reshard");
+    let summary = reshard::reshard(fixture, &dst, 2).unwrap();
+    assert_eq!((summary.from_shards, summary.to_shards), (1, 2));
+    assert_eq!(summary.served_total, 100);
+    assert_eq!(summary.cursor, 100);
+    let restored = ckpt::load_latest(&dst, ResumeMode::Strict, 2).unwrap().unwrap();
+    assert_eq!(restored[0].betas, s.betas, "authority β survives the migration");
+    assert_eq!(restored[1].betas, s.betas);
+    let _ = fs::remove_dir_all(&dst);
+}
+
+#[test]
+fn reshard_rejects_degenerate_requests() {
+    // Zero target shard count (checked before touching the source).
+    let empty = tmpdir("guard-empty");
+    let err = reshard::reshard(&empty, tmpdir("guard-z"), 0).unwrap_err();
+    assert!(err.to_string().contains("target shard count"), "{err}");
+
+    // Source without a manifest.
+    fs::create_dir_all(&empty).unwrap();
+    let err = reshard::reshard(&empty, tmpdir("guard-n"), 1).unwrap_err();
+    assert!(err.to_string().contains("manifest"), "{err}");
+
+    // Occupied destination: resharding into a live checkpoint
+    // directory would interleave two topologies.
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/../tests/fixtures/ckpt_v1");
+    let dst = tmpdir("guard-occupied");
+    reshard::reshard(fixture, &dst, 2).unwrap();
+    let err = reshard::reshard(fixture, &dst, 3).unwrap_err();
+    assert!(err.to_string().contains("already holds"), "{err}");
+    let _ = fs::remove_dir_all(&empty);
+    let _ = fs::remove_dir_all(&dst);
+}

@@ -12,9 +12,10 @@
 //!   must report `complete == true` (no truncation). This is the CI
 //!   `loom` job.
 
-use ocl::mc::models::{BarrierSpec, GateSpec, SlotSpec};
+use ocl::mc::models::{BarrierSpec, GateSpec, ScaleSpec, SlotSpec};
 use ocl::mc::{Explorer, Violation};
 use ocl::serve::barrier::ExportOutcome::{AuthorityDead, TimedOut, Written};
+use ocl::serve::scale::ScalePolicy;
 use ocl::serve::AdmissionGate;
 
 /// Exhaustive under `--cfg loom`; generously bounded otherwise.
@@ -170,6 +171,60 @@ fn barrier_meta_unresolved_death_wedges_admission() {
         Violation::Deadlock { trace } => assert!(!trace.is_empty()),
         Violation::Final { msg, .. } => assert!(msg.contains("wedged"), "{msg}"),
         Violation::Invariant { msg, .. } => panic!("unexpected invariant failure: {msg}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Autoscaler: bounds, authority pinning, busy-victim refusal
+// ---------------------------------------------------------------------------
+
+/// Twitchy hysteresis (streaks of 1, no cooldown) so every explored
+/// schedule exercises real scale events, not holds.
+fn scale_policy(min: usize, max: usize) -> ScalePolicy {
+    ScalePolicy {
+        min_replicas: min,
+        max_replicas: max,
+        up_depth: 1,
+        down_depth: 0,
+        up_after: 1,
+        down_after: 1,
+        cooldown: 0,
+    }
+}
+
+#[test]
+fn scale_stays_inside_bounds_and_keeps_the_authority() {
+    let (jobs, sweeps) = if cfg!(loom) { (2, 5) } else { (2, 4) };
+    let spec =
+        ScaleSpec { jobs, sweeps, policy: scale_policy(1, 2), remove_authority: false };
+    assert_covered("scale 1..2", explorer().explore(&spec));
+}
+
+#[test]
+fn scale_with_slack_ceiling_never_strands_jobs() {
+    let spec =
+        ScaleSpec { jobs: 1, sweeps: 6, policy: scale_policy(1, 3), remove_authority: false };
+    assert_covered("scale 1..3", explorer().explore(&spec));
+}
+
+/// Meta-test: a scale-down victim rule that picks the *first* idle
+/// replica — instead of the highest-index replica only — can remove
+/// worker 0 (e.g. grow under load, the job drains on worker 0, then
+/// an idle sweep shrinks). The checker must report the authority
+/// removal with a reproducing schedule.
+#[test]
+fn scale_meta_authority_removal_is_caught() {
+    let spec =
+        ScaleSpec { jobs: 1, sweeps: 6, policy: scale_policy(1, 2), remove_authority: true };
+    let v = Explorer::exhaustive()
+        .explore(&spec)
+        .expect_err("first-idle victim selection must eventually remove worker 0");
+    match v {
+        Violation::Invariant { msg, trace } => {
+            assert!(msg.contains("authority"), "unexpected failure: {msg}");
+            assert!(!trace.is_empty(), "a reproducing schedule must be reported");
+        }
+        other => panic!("expected an authority-removal violation, got {other}"),
     }
 }
 

@@ -471,6 +471,132 @@ fn front_topology_admission_gates_are_per_process() {
 
 // --- multi-process crash test ----------------------------------------------
 
+/// One shard process of a 2-shard `--front` deployment, durable over
+/// the shared checkpoint directory.
+fn spawn_shard(addr: &str, k: usize, dir: &std::path::Path, resume: &str) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_ocl"));
+    let dir = dir.to_string_lossy().to_string();
+    let ks = k.to_string();
+    cmd.args([
+        "serve",
+        "--listen",
+        addr,
+        "--benchmark",
+        "imdb",
+        "--expert",
+        "gpt35",
+        "--seed",
+        "35",
+        "--scale",
+        "0.02",
+        "--shards",
+        "2",
+        "--shard-id",
+        ks.as_str(),
+        "--ckpt-dir",
+        dir.as_str(),
+        "--ckpt-every",
+        "8",
+        "--resume",
+        resume,
+    ]);
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    cmd.spawn().expect("spawn ocl serve shard")
+}
+
+/// Rolling restart (DESIGN.md §14): a 2-shard `--front` topology over
+/// real sockets keeps serving while shard 1 is SIGKILLed mid-stream
+/// and strict-resumed *on the same address*. The front buffers the
+/// dead shard's traffic, reconnects, replays the unanswered gap over
+/// the new connection, and the response registry dedups the overlap —
+/// so the client sees every id exactly once and the merged accounting
+/// still covers the whole stream.
+#[test]
+fn rolling_restart_of_one_shard_loses_nothing_while_the_peer_serves() {
+    let n = 360;
+    let b = Benchmark::build_sized(BenchmarkId::Imdb, 35, n);
+    let dir = tmpdir("rolling");
+
+    let addr0 = free_addr();
+    let addr1 = free_addr();
+    let mut shard0 = spawn_shard(&addr0, 0, &dir, "off");
+    let mut shard1 = spawn_shard(&addr1, 1, &dir, "off");
+
+    let front_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let front_addr = front_listener.local_addr().unwrap().to_string();
+    let peers = vec![addr0.clone(), addr1.clone()];
+    let front = std::thread::spawn(move || net::run_front(&peers, front_listener));
+
+    let client = Client::connect_retry(&front_addr, Duration::from_secs(60)).unwrap();
+    assert_eq!(client.cursor(), 0, "fresh deployment announces cursor 0");
+    // Paced arrivals so the kill lands mid-submission.
+    let submit = load::drive_from(
+        b.samples.clone(),
+        load::Arrival::Poisson { rate: 150.0 },
+        7,
+        client.request_sender(),
+        0,
+    );
+
+    // Wait for a committed manifest (both shards deposited), then
+    // SIGKILL shard 1 — no drain, no goodbye.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let committed = std::fs::read_dir(&dir).ok().and_then(|rd| {
+            rd.flatten()
+                .find(|e| e.file_name().to_string_lossy().starts_with("manifest-"))
+        });
+        if committed.is_some() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no manifest within 60s");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    shard1.kill().expect("SIGKILL shard 1");
+    shard1.wait().expect("reap shard 1");
+
+    // Rolling replacement: same address, strict resume from the shared
+    // checkpoint directory. The front reconnects and replays the gap.
+    let mut shard1b = spawn_shard(&addr1, 1, &dir, "strict");
+
+    assert_eq!(submit.join().unwrap(), n, "the client never noticed the restart");
+    let (responses, wire_report) = client.finish().unwrap();
+    let merged = front.join().unwrap().expect("front must merge both shard reports");
+    assert!(shard0.wait().unwrap().success(), "shard 0 exits cleanly");
+    assert!(shard1b.wait().unwrap().success(), "restarted shard 1 exits cleanly");
+
+    // Zero lost, zero duplicated: every id answered exactly once.
+    assert_eq!(responses.len(), n, "a response for every request");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate ids leaked through the restart");
+    assert_eq!(ids.first(), Some(&0));
+    assert_eq!(ids.last(), Some(&((n - 1) as u64)));
+
+    let served = merged.get("served").and_then(Json::as_usize).unwrap();
+    let shed = merged.get("shed").and_then(Json::as_usize).unwrap();
+    assert_eq!(served + shed, n, "merged accounting covers the whole stream");
+    assert!(
+        merged.get("reconnects").and_then(Json::as_usize).unwrap() >= 1,
+        "the front must have re-attached the restarted shard"
+    );
+    // The restarted shard continued from its checkpoint — and said so —
+    // while the untouched peer neither resumed nor stopped serving.
+    let per_shard = merged.get("per_shard").and_then(Json::as_arr).unwrap();
+    assert_eq!(per_shard.len(), 2);
+    assert_eq!(per_shard[1].get("resumed").and_then(Json::as_bool), Some(true));
+    assert_eq!(per_shard[0].get("resumed").and_then(Json::as_bool), Some(false));
+    assert!(per_shard[0].get("served").and_then(Json::as_usize).unwrap() > 0);
+    // The client's final report frame is the merged front report.
+    assert_eq!(
+        wire_report.expect("front report frame").to_string_compact(),
+        merged.to_string_compact(),
+        "wire report must round-trip the merged front report exactly"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn spawn_serve(addr: &str, ckpt: Option<(&std::path::Path, &str)>) -> Child {
     let mut cmd = Command::new(env!("CARGO_BIN_EXE_ocl"));
     cmd.args([
